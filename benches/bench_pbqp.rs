@@ -1,0 +1,47 @@
+//! PBQP solver benchmarks — the paper's claim that the solver stage is
+//! sub-second even for large networks (§2.1, Table 4 includes it).
+
+mod harness;
+
+use harness::Bench;
+use primsel::networks;
+use primsel::pbqp;
+use primsel::selection;
+use primsel::simulator::{machine, Simulator};
+
+fn main() {
+    let mut b = Bench::new();
+    let sim = Simulator::new(machine::intel_i9_9900k());
+
+    // synthetic chains (VGG-like) of growing length
+    for n in [8usize, 64, 256, 1024] {
+        let mut rng = primsel::simulator::noise::SplitMix64::new(n as u64);
+        let node_costs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..31).map(|_| rng.next_f64() * 10.0).collect()).collect();
+        let mut g = pbqp::Graph::new(node_costs);
+        for u in 0..n - 1 {
+            let cost: Vec<f64> = (0..31 * 31).map(|_| rng.next_f64()).collect();
+            g.add_edge(u, u + 1, cost);
+        }
+        b.run(&format!("pbqp/chain_{n}x31"), 2, 10, || {
+            let _ = pbqp::solve(&g);
+        });
+    }
+
+    // the six selection networks (real graph shapes incl. inception fan-out)
+    for net in networks::selection_networks() {
+        let prob = selection::build_problem(&net, &sim).unwrap();
+        b.run(&format!("pbqp/{}", net.name), 2, 20, || {
+            let _ = pbqp::solve(&prob.graph);
+        });
+    }
+
+    // densenet201: the highest-degree graph in the zoo
+    let net = networks::densenet(201);
+    let prob = selection::build_problem(&net, &sim).unwrap();
+    b.run("pbqp/densenet201", 1, 10, || {
+        let _ = pbqp::solve(&prob.graph);
+    });
+
+    b.finish("pbqp");
+}

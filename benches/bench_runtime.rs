@@ -1,0 +1,74 @@
+//! PJRT runtime benchmarks: the paper's Table 4 "Perf. Model Inf." column
+//! lives or dies on predict latency; train_step throughput bounds the
+//! experiment-suite wall-clock. Requires `make artifacts`.
+
+mod harness;
+
+use harness::Bench;
+use primsel::perfmodel::params::init_params;
+use primsel::runtime::{literal_f32, scalar_f32, Runtime};
+
+fn main() {
+    let Ok(rt) = Runtime::open_default() else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let mut b = Bench::new();
+
+    for kind in ["nn1", "nn2"] {
+        let spec = rt.manifest.models[kind].clone();
+        let params = init_params(&rt, &spec, 1).unwrap();
+
+        for bsz in [rt.manifest.predict_batches.0, rt.manifest.predict_batches.1] {
+            let exe = rt.load(&spec.files[&format!("predict_b{bsz}")]).unwrap();
+            let x = literal_f32(
+                &vec![0.1f32; bsz * spec.in_dim],
+                &[bsz as i64, spec.in_dim as i64],
+            )
+            .unwrap();
+            let mut inputs = Vec::new();
+            params.push_literals(&mut inputs).unwrap();
+            inputs.push(x);
+            b.run(&format!("runtime/predict_{kind}_b{bsz}"), 3, 50, || {
+                let _ = rt.execute(&exe, &inputs).unwrap();
+            });
+        }
+
+        // one Adam step at the training batch size
+        let exe = rt.load(&spec.files["train_step"]).unwrap();
+        let bsz = spec.train_batch;
+        let mut inputs = Vec::new();
+        params.push_literals(&mut inputs).unwrap();
+        let zeros = primsel::perfmodel::ParamStore::zeros_like(&spec);
+        zeros.push_literals(&mut inputs).unwrap();
+        zeros.push_literals(&mut inputs).unwrap();
+        inputs.push(scalar_f32(0.0));
+        inputs.push(
+            literal_f32(&vec![0.1f32; bsz * spec.in_dim], &[bsz as i64, spec.in_dim as i64])
+                .unwrap(),
+        );
+        inputs.push(
+            literal_f32(&vec![0.0f32; bsz * spec.out_dim], &[bsz as i64, spec.out_dim as i64])
+                .unwrap(),
+        );
+        inputs.push(
+            literal_f32(&vec![1.0f32; bsz * spec.out_dim], &[bsz as i64, spec.out_dim as i64])
+                .unwrap(),
+        );
+        inputs.push(scalar_f32(1e-3));
+        inputs.push(scalar_f32(0.0));
+        b.run(&format!("runtime/train_step_{kind}_b{bsz}"), 2, 20, || {
+            let _ = rt.execute(&exe, &inputs).unwrap();
+        });
+    }
+
+    // artifact compile cost (cold load): parse + compile one kernel module
+    if let Some(e) = rt.manifest.prim_grid.first().cloned() {
+        b.run("runtime/compile_kernel_artifact", 0, 5, || {
+            let fresh = Runtime::open_default().unwrap();
+            let _ = fresh.load(&e.file).unwrap();
+        });
+    }
+
+    b.finish("runtime");
+}

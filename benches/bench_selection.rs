@@ -1,0 +1,55 @@
+//! End-to-end selection benchmarks (Table 4's headline comparison): the
+//! full model-driven pipeline — batched PJRT prediction + PBQP — per
+//! network, against the simulated profiling wall-clock it replaces.
+//! Requires `make artifacts` and trained models (runs training on first
+//! use; cached under artifacts/trained/).
+
+mod harness;
+
+use harness::Bench;
+use primsel::experiments::{model_source, Workbench};
+use primsel::networks;
+use primsel::perfmodel::predictor::DltPredictor;
+use primsel::perfmodel::Predictor;
+use primsel::runtime::Runtime;
+use primsel::selection;
+
+fn main() {
+    let Ok(rt) = Runtime::open_default() else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let mut wb = Workbench::new(rt);
+    wb.max_epochs = 60; // enough for a usable model if not cached yet
+
+    let nn2 = wb.nn2_params("intel").unwrap();
+    let dltp = wb.dlt_nn2_params("intel").unwrap();
+    let (sx, sy) = wb.prim_standardizers("intel").unwrap();
+    let (dx, dy) = wb.dlt_standardizers("intel").unwrap();
+    let sim = wb.platform("intel").unwrap().sim.clone();
+    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy).unwrap();
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy).unwrap();
+
+    let mut b = Bench::new();
+    for net in networks::selection_networks() {
+        let _ = model_source(&net, &prim, &dlt).unwrap(); // warm executables
+        b.run(&format!("selection/model_pipeline_{}", net.name), 1, 10, || {
+            let source = model_source(&net, &prim, &dlt).unwrap();
+            let _ = selection::select(&net, &source).unwrap();
+        });
+        b.run(&format!("selection/profiled_{}", net.name), 1, 10, || {
+            let _ = selection::select(&net, &sim).unwrap();
+        });
+        // the thing the model replaces: exhaustive profiling wall-clock
+        let profiling_ms: f64 = net
+            .layers
+            .iter()
+            .map(|cfg| sim.profiling_wallclock_ms(cfg))
+            .sum();
+        println!(
+            "selection/simulated_profiling_{:<24} would take {profiling_ms:>12.1} ms on-device",
+            net.name
+        );
+    }
+    b.finish("selection");
+}

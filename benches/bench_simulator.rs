@@ -1,0 +1,42 @@
+//! Platform-simulator benchmarks: the substrate must be fast enough that
+//! "profiling" three platforms over ~6k configurations is interactive
+//! (it stands in for hours of device time — Table 4's right columns).
+
+mod harness;
+
+use harness::Bench;
+use primsel::dataset;
+use primsel::layers::ConvConfig;
+use primsel::simulator::{machine, Simulator};
+
+fn main() {
+    let mut b = Bench::new();
+    let sims: Vec<Simulator> = machine::all().into_iter().map(Simulator::new).collect();
+    let cfg = ConvConfig::new(256, 256, 28, 1, 3);
+
+    for sim in &sims {
+        b.run(&format!("simulator/layer_row_{}", sim.name()), 10, 200, || {
+            let _ = sim.profile_layer(&cfg);
+        });
+    }
+
+    let configs = dataset::enumerate_configs(dataset::MAX_CONFIGS, 1);
+    b.run("simulator/enumerate_configs", 1, 10, || {
+        let _ = dataset::enumerate_configs(dataset::MAX_CONFIGS, 1);
+    });
+    b.run(
+        &format!("simulator/full_dataset_{}_configs", configs.len()),
+        1,
+        5,
+        || {
+            let _ = dataset::profile_prim_dataset(&sims[0], &configs);
+        },
+    );
+
+    let pairs = dataset::dlt_pairs(&configs);
+    b.run(&format!("simulator/dlt_dataset_{}_pairs", pairs.len()), 1, 10, || {
+        let _ = dataset::profile_dlt_dataset(&sims[0], &pairs);
+    });
+
+    b.finish("simulator");
+}

@@ -1,0 +1,51 @@
+//! Tiny bench harness (criterion is not available offline): warms up,
+//! runs timed iterations, prints median/mean/min like criterion's summary
+//! line, and writes a CSV row per benchmark to results/bench.csv.
+
+use std::time::Instant;
+
+pub struct Bench {
+    rows: Vec<(String, f64, f64, f64)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` runs; report ms.
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times[0];
+        println!("{name:<44} median {median:>10.4} ms  mean {mean:>10.4} ms  min {min:>10.4} ms  ({iters} iters)");
+        self.rows.push((name.to_string(), median, mean, min));
+    }
+
+    /// Append results to results/bench.csv.
+    pub fn finish(&self, suite: &str) {
+        std::fs::create_dir_all("results").ok();
+        let mut out = String::from("suite,name,median_ms,mean_ms,min_ms\n");
+        for (name, med, mean, min) in &self.rows {
+            out.push_str(&format!("{suite},{name},{med},{mean},{min}\n"));
+        }
+        let path = format!("results/bench_{suite}.csv");
+        std::fs::write(path, out).ok();
+    }
+}

@@ -1,0 +1,59 @@
+//! Optimise every network in the zoo on one platform (Table-4 style
+//! sweep): model-driven selection time vs simulated profiling time, plus
+//! the achieved speedup over naive single-family baselines.
+//!
+//! Run: `cargo run --release --example optimize_zoo [-- platform]`
+
+use primsel::experiments::{model_source, Workbench};
+use primsel::networks;
+use primsel::perfmodel::predictor::DltPredictor;
+use primsel::perfmodel::Predictor;
+use primsel::primitives::Family;
+use primsel::report::{fmt_time_ms, Table};
+use primsel::runtime::Runtime;
+use primsel::selection;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let platform = std::env::args().nth(1).unwrap_or_else(|| "intel".into());
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+
+    let nn2 = wb.nn2_params(&platform)?;
+    let dltp = wb.dlt_nn2_params(&platform)?;
+    let (sx, sy) = wb.prim_standardizers(&platform)?;
+    let (dx, dy) = wb.dlt_standardizers(&platform)?;
+    let sim = wb.platform(&platform)?.sim.clone();
+    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
+
+    let mut t = Table::new(
+        &format!("zoo optimisation on {platform}"),
+        &["network", "layers", "model+PBQP", "profiling (sim)", "speedup", "vs all-im2"],
+    );
+    for net in networks::zoo() {
+        let _ = model_source(&net, &prim, &dlt)?; // warm executables
+        let t0 = Instant::now();
+        let source = model_source(&net, &prim, &dlt)?;
+        let sel = selection::select(&net, &source)?;
+        let opt_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let profiling_ms: f64 = net
+            .layers
+            .iter()
+            .map(|cfg| sim.profiling_wallclock_ms(cfg))
+            .sum();
+        let t_sel = selection::evaluate(&net, &sel, &sim)?;
+        let base = selection::single_family_baseline(&net, &sim, Family::Im2)?;
+        t.row(vec![
+            net.name.clone(),
+            net.n_layers().to_string(),
+            fmt_time_ms(opt_ms),
+            fmt_time_ms(profiling_ms),
+            format!("{:.0}x", profiling_ms / opt_ms),
+            format!("{:.2}x faster", base.estimated_ms / t_sel),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Profile the real Pallas primitive kernels on this host via PJRT
+//! (median of 25 runs, paper §4.1.1) and check that the *measured*
+//! family ranking agrees qualitatively with the simulator's cost model
+//! (the grounding argument of DESIGN.md §3).
+//!
+//! Run: `cargo run --release --example profile_host [-- runs]`
+
+use primsel::layers::ConvConfig;
+use primsel::primitives::catalog;
+use primsel::profiler;
+use primsel::report::Table;
+use primsel::runtime::Runtime;
+use primsel::simulator::{machine, Simulator};
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(25);
+    let rt = Runtime::open_default()?;
+    println!(
+        "profiling {} kernels x {} runs (real execution, interpret-mode Pallas on CPU)...",
+        rt.manifest.prim_grid.len(),
+        runs
+    );
+    let ms = profiler::profile_grid(&rt, runs)?;
+
+    let mut t = Table::new(
+        "host kernel profile",
+        &["kernel", "config (c,im,k,f,s)", "median ms", "min..max", "GFLOP/s"],
+    );
+    for m in &ms {
+        t.row(vec![
+            m.kernel.clone(),
+            format!("({},{},{},{},{})", m.c, m.im, m.k, m.f, m.s),
+            format!("{:.3}", m.median_ms),
+            format!("{:.3}..{:.3}", m.min_ms, m.max_ms),
+            format!("{:.2}", m.gflops()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // rank agreement: for each config with >= 4 measured kernels, compare
+    // the measured fastest family against the simulator's fastest family
+    let sim = Simulator::noiseless(machine::intel_i9_9900k());
+    let mut agree = 0;
+    let mut total = 0;
+    let mut by_cfg: std::collections::BTreeMap<(u32, u32, u32, u32, u32), Vec<&profiler::Measurement>> =
+        Default::default();
+    for m in &ms {
+        by_cfg.entry((m.c, m.im, m.k, m.f, m.s)).or_default().push(m);
+    }
+    for ((c, im, k, f, s), group) in by_cfg {
+        if group.len() < 4 {
+            continue;
+        }
+        let cfg = ConvConfig::new(k, c, im, s, f);
+        let measured_best = &group
+            .iter()
+            .min_by(|a, b| a.median_ms.partial_cmp(&b.median_ms).unwrap())
+            .unwrap()
+            .kernel;
+        let sim_row = sim.profile_layer(&cfg);
+        let sim_best = sim_row
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.map(|t| (i, t)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| catalog()[i].kernel_id.to_string())
+            .unwrap_or_default();
+        total += 1;
+        // agreement at kernel-family granularity
+        let fam = |k: &str| k.split('_').next().unwrap_or(k).to_string();
+        if fam(measured_best) == fam(&sim_best) {
+            agree += 1;
+        }
+        println!(
+            "cfg ({c},{im},{k},{f},{s}): measured-best {measured_best}, simulator-best {sim_best}"
+        );
+    }
+    if total > 0 {
+        println!("\nfamily-rank agreement: {agree}/{total}");
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/host_profile.csv", t.to_csv())?;
+    Ok(())
+}

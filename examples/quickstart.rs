@@ -1,0 +1,126 @@
+//! End-to-end driver (DESIGN.md §7): the full paper pipeline on a real
+//! workload, proving all three layers compose.
+//!
+//! 1. Profile the ARM platform (simulated substrate) into a dataset.
+//! 2. Train the NN2 performance model by driving the AOT `train_step`
+//!    HLO artifact (L2+L1: JAX MLP over Pallas dense kernels) via PJRT.
+//! 3. Predict per-primitive costs for every GoogLeNet layer in one
+//!    batched PJRT call, plus the DLT edge costs.
+//! 4. PBQP-select the optimal primitive per layer.
+//! 5. Report model-vs-profiled selection quality, and validate against
+//!    *real measured* Pallas kernel executions on this host.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use primsel::experiments::{model_source, Workbench};
+use primsel::networks;
+use primsel::perfmodel::predictor::DltPredictor;
+use primsel::perfmodel::Predictor;
+use primsel::primitives::{catalog, Family};
+use primsel::profiler;
+use primsel::report::Table;
+use primsel::runtime::Runtime;
+use primsel::selection;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+
+    // ---- steps 1+2: profile (simulated ARM) + train NN2 over PJRT ----
+    println!("[1/5] profiling ARM (simulated) + training NN2 via AOT train_step...");
+    let t0 = Instant::now();
+    let nn2 = wb.nn2_params("arm")?;
+    let dltp = wb.dlt_nn2_params("arm")?;
+    println!("      ready in {:.1?} (cached under artifacts/trained/)", t0.elapsed());
+
+    // ---- step 3: batched prediction for all GoogLeNet layers ----
+    let net = networks::googlenet();
+    let (sx, sy) = wb.prim_standardizers("arm")?;
+    let (dx, dy) = wb.dlt_standardizers("arm")?;
+    let sim = wb.platform("arm")?.sim.clone();
+    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
+    let _warm = model_source(&net, &prim, &dlt)?;
+    let t0 = Instant::now();
+    let source = model_source(&net, &prim, &dlt)?;
+    let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "[2/5] predicted {} layer cost rows + DLT edges in {predict_ms:.1} ms (batched PJRT)",
+        net.n_layers()
+    );
+
+    // ---- step 4: PBQP selection ----
+    let t0 = Instant::now();
+    let sel_model = selection::select(&net, &source)?;
+    let pbqp_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("[3/5] PBQP selection in {pbqp_ms:.2} ms");
+
+    // ---- step 5a: quality vs profiled-optimal + single-family baselines ----
+    let sel_prof = selection::select(&net, &sim)?;
+    let t_model = selection::evaluate(&net, &sel_model, &sim)?;
+    let t_prof = selection::evaluate(&net, &sel_prof, &sim)?;
+    let mut t = Table::new(
+        "GoogLeNet on ARM: network inference time by strategy",
+        &["strategy", "time (ms)", "vs profiled-optimal"],
+    );
+    t.row(vec![
+        "profiled-optimal (paper [1])".into(),
+        format!("{t_prof:.2}"),
+        "1.000x".into(),
+    ]);
+    t.row(vec![
+        "perf-model selection (ours)".into(),
+        format!("{t_model:.2}"),
+        format!("{:.4}x", t_model / t_prof),
+    ]);
+    for fam in [Family::Im2, Family::Kn2, Family::Direct] {
+        let base = selection::single_family_baseline(&net, &sim, fam)?;
+        t.row(vec![
+            format!("all-{} baseline", fam.name()),
+            format!("{:.2}", base.estimated_ms),
+            format!("{:.3}x", base.estimated_ms / t_prof),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "[4/5] inference-time increase from using the model: {:.3}% (paper: <= 1.1%)",
+        (t_model / t_prof - 1.0) * 100.0
+    );
+
+    // ---- step 5b: ground a sample with REAL kernel executions ----
+    println!("[5/5] validating primitive rankings with real Pallas kernels on this host...");
+    let measurements = profiler::profile_grid(&wb.rt, 7)?;
+    let mut by_cfg: std::collections::BTreeMap<(u32, u32, u32, u32, u32), Vec<(String, f64)>> =
+        Default::default();
+    for m in &measurements {
+        by_cfg
+            .entry((m.c, m.im, m.k, m.f, m.s))
+            .or_default()
+            .push((m.kernel.clone(), m.median_ms));
+    }
+    let mut t = Table::new(
+        "real measured kernel times (median, this host)",
+        &["config (c,im,k,f,s)", "fastest kernel", "ms", "slowest kernel", "ms"],
+    );
+    for (cfg, mut v) in by_cfg {
+        v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let (fast, slow) = (v.first().unwrap().clone(), v.last().unwrap().clone());
+        t.row(vec![
+            format!("{cfg:?}"),
+            fast.0,
+            format!("{:.3}", fast.1),
+            slow.0,
+            format!("{:.3}", slow.1),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("quickstart complete: selected primitives for {} layers;", net.n_layers());
+    println!(
+        "  example selections: layer 0 -> {}, layer 10 -> {}, layer 56 -> {}",
+        catalog()[sel_model.primitive[0]].name,
+        catalog()[sel_model.primitive[10]].name,
+        catalog()[sel_model.primitive[56]].name,
+    );
+    Ok(())
+}

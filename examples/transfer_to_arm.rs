@@ -1,0 +1,85 @@
+//! Transfer-learning walkthrough (paper §4.4 / Figure 9): pre-train on
+//! Intel, then adapt to ARM three ways — direct, factor-corrected, and
+//! fine-tuned on 1% of ARM data — and compare against native training.
+//!
+//! Run: `cargo run --release --example transfer_to_arm`
+
+use primsel::dataset;
+use primsel::experiments::Workbench;
+use primsel::perfmodel::metrics::mdrae_all;
+use primsel::perfmodel::transfer::factor_correction;
+use primsel::perfmodel::Predictor;
+use primsel::report::Table;
+use primsel::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+    wb.max_epochs = 120; // walkthrough speed
+
+    println!("pre-training the Intel NN2 model (cached if already trained)...");
+    let intel = wb.nn2_params("intel")?;
+
+    let (xs, targets, _, _) = wb.prim_test_data("arm")?;
+    let (isx, isy) = wb.prim_standardizers("intel")?;
+
+    // 1) direct application
+    let direct = Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
+    let md_direct = mdrae_all(&direct.predict_raw(&xs)?, &targets);
+
+    // 2) factor correction from 1% of ARM profiles
+    let factors = {
+        let pd = wb.platform("arm")?;
+        let idx = dataset::fraction(&pd.prim_split.train, 0.01, 7);
+        let cal = pd.prim.subset(&idx);
+        let cxs: Vec<Vec<f64>> = cal.features().iter().map(|f| f.to_vec()).collect();
+        let ctargets = cal.targets.clone();
+        let pred = Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
+        factor_correction(&pred, &cxs, &ctargets)?
+    };
+    let mut corrected =
+        Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
+    corrected.factors = factors;
+    let md_factor = mdrae_all(&corrected.predict_raw(&xs)?, &targets);
+
+    // 3) fine-tune on 1% of ARM data (lr/10, same AOT artifacts)
+    println!("fine-tuning on 1% of ARM profiles...");
+    let idx = {
+        let pd = wb.platform("arm")?;
+        dataset::fraction(&pd.prim_split.train, 0.01, 7)
+    };
+    let tuned = wb.finetune(intel.clone(), "arm", &idx)?;
+    let (asx, asy) = wb.prim_standardizers("arm")?;
+    let tuned_pred = Predictor::new(&wb.rt, "nn2", tuned, asx.clone(), asy.clone())?;
+    let md_tuned = mdrae_all(&tuned_pred.predict_raw(&xs)?, &targets);
+
+    // 4) native full-data reference
+    println!("training native ARM model for reference...");
+    let native = wb.nn2_params("arm")?;
+    let native_pred = Predictor::new(&wb.rt, "nn2", native, asx, asy)?;
+    let md_native = mdrae_all(&native_pred.predict_raw(&xs)?, &targets);
+
+    let mut t = Table::new(
+        "Intel -> ARM transfer: MdRAE on the ARM test set",
+        &["approach", "target data used", "MdRAE"],
+    );
+    t.row(vec!["Intel model, direct".into(), "none".into(), format!("{:.0}%", md_direct * 100.0)]);
+    t.row(vec![
+        "Intel + factor correction".into(),
+        "1% (scale only)".into(),
+        format!("{:.0}%", md_factor * 100.0),
+    ]);
+    t.row(vec![
+        "Intel + fine-tune (lr/10)".into(),
+        "1%".into(),
+        format!("{:.1}%", md_tuned * 100.0),
+    ]);
+    t.row(vec![
+        "native ARM (all data)".into(),
+        "100%".into(),
+        format!("{:.1}%", md_native * 100.0),
+    ]);
+    println!("{}", t.render());
+    println!("expected shape (paper fig 8/9): direct >> factor > fine-tune > native");
+    Ok(())
+}

@@ -1,0 +1,238 @@
+"""AOT export: lower every L2/L1 computation to HLO text for the rust runtime.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to --out (default ../artifacts):
+  {kind}_init.hlo.txt            seed:i32 -> flat params
+  {kind}_train_step.hlo.txt      params,m,v,t,x,y,mask,lr,wd -> params,m,v,t,loss
+  {kind}_train_epoch.hlo.txt     scan over EPOCH_BATCHES batches in one module
+  {kind}_predict_b{B}.hlo.txt    params, x:(B,in) -> (B,out)
+  prim_{kernel}_c{c}_im{im}_k{k}_f{f}_s{s}.hlo.txt    x,w -> out
+  dltk_{src}_{dst}_c{c}_im{im}.hlo.txt                x -> y
+  manifest.json                  shapes/order contract for the rust side
+
+Run via `make artifacts`; python never executes at request time.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import model
+from . import kernels
+from .kernels import ref
+
+# Fixed number of batches baked into the train_epoch artifact. The zoo
+# enumeration yields ~6.2k configs -> 80% train split -> 5 batches of 1024
+# with padding; matching this exactly lets the rust trainer run one PJRT
+# call per epoch (scan) instead of one per step (see EXPERIMENTS.md §Perf).
+EPOCH_BATCHES = 5
+
+# The measured-profile grid: real Pallas kernel executions the rust
+# profiler times on the host CPU (grounding the simulator's cost shapes).
+PRIM_GRID = [
+    # (c, im, k, f, s)
+    (16, 32, 32, 3, 1),
+    (32, 16, 64, 3, 1),
+    (64, 14, 128, 3, 1),
+    (16, 32, 32, 5, 1),
+    (32, 28, 64, 1, 1),
+    (64, 14, 128, 1, 2),
+    (16, 32, 32, 3, 2),
+    (8, 64, 16, 7, 2),
+    (32, 28, 64, 5, 1),
+    (3, 64, 16, 3, 1),
+]
+
+DLT_GRID = [(16, 32), (64, 14), (32, 28), (8, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_model_kind(kind, out_dir, manifest):
+    in_dim, hidden, out_dim = model.MODEL_KINDS[kind]
+    sizes = model.layer_sizes(in_dim, hidden, out_dim)
+    param_shapes = []
+    for i in range(len(sizes) - 1):
+        param_shapes.append((sizes[i], sizes[i + 1]))  # W
+        param_shapes.append((sizes[i + 1],))           # b
+    flat_specs = [f32(s) for s in param_shapes]
+    n_layers = len(sizes) - 1
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params = model.init_params(key, in_dim, hidden, out_dim)
+        return tuple(model.flatten_params(params))
+
+    def unflatten(flat):
+        return model.unflatten_params(list(flat))
+
+    def step_fn(*args):
+        p = unflatten(args[:2 * n_layers])
+        m = unflatten(args[2 * n_layers:4 * n_layers])
+        v = unflatten(args[4 * n_layers:6 * n_layers])
+        t, x, y, mask, lr, wd = args[6 * n_layers:]
+        p, m, v, t, loss = model.train_step(p, m, v, t, x, y, mask, lr, wd)
+        return tuple(model.flatten_params(p) + model.flatten_params(m)
+                     + model.flatten_params(v) + [t, loss])
+
+    def epoch_fn(*args):
+        p = unflatten(args[:2 * n_layers])
+        m = unflatten(args[2 * n_layers:4 * n_layers])
+        v = unflatten(args[4 * n_layers:6 * n_layers])
+        t, xs, ys, masks, lr, wd = args[6 * n_layers:]
+        p, m, v, t, loss = model.train_epoch(p, m, v, t, xs, ys, masks, lr, wd)
+        return tuple(model.flatten_params(p) + model.flatten_params(m)
+                     + model.flatten_params(v) + [t, loss])
+
+    def predict_fn(*args):
+        p = unflatten(args[:2 * n_layers])
+        x = args[2 * n_layers]
+        return (model.apply(p, x),)
+
+    B = C.TRAIN_BATCH
+    scalar = f32(())
+    state_specs = flat_specs * 3  # params, m, v
+    files = {}
+
+    path = os.path.join(out_dir, f"{kind}_init.hlo.txt")
+    lower_to_file(init_fn, [jax.ShapeDtypeStruct((), jnp.int32)], path)
+    files["init"] = os.path.basename(path)
+
+    step_args = state_specs + [scalar, f32((B, in_dim)), f32((B, out_dim)),
+                               f32((B, out_dim)), scalar, scalar]
+    path = os.path.join(out_dir, f"{kind}_train_step.hlo.txt")
+    lower_to_file(step_fn, step_args, path)
+    files["train_step"] = os.path.basename(path)
+
+    nb = EPOCH_BATCHES
+    epoch_args = state_specs + [scalar, f32((nb, B, in_dim)),
+                                f32((nb, B, out_dim)), f32((nb, B, out_dim)),
+                                scalar, scalar]
+    path = os.path.join(out_dir, f"{kind}_train_epoch.hlo.txt")
+    lower_to_file(epoch_fn, epoch_args, path)
+    files["train_epoch"] = os.path.basename(path)
+
+    for b in (C.PREDICT_BATCH_SMALL, C.PREDICT_BATCH_LARGE):
+        path = os.path.join(out_dir, f"{kind}_predict_b{b}.hlo.txt")
+        lower_to_file(predict_fn, flat_specs + [f32((b, in_dim))], path)
+        files[f"predict_b{b}"] = os.path.basename(path)
+
+    manifest["models"][kind] = {
+        "in_dim": in_dim,
+        "out_dim": out_dim,
+        "hidden": list(hidden),
+        "param_shapes": [list(s) for s in param_shapes],
+        "train_batch": B,
+        "epoch_batches": nb,
+        "files": files,
+    }
+
+
+def export_prim_grid(out_dir, manifest):
+    entries = []
+    for (c, im, k, f, s) in PRIM_GRID:
+        for name, (fn, layout, ok) in kernels.REGISTRY.items():
+            if not ok(f, s, im):
+                continue
+            o = ref.out_size(im, f, s)
+            fname = f"prim_{name}_c{c}_im{im}_k{k}_f{f}_s{s}.hlo.txt"
+
+            def wrapped(x, w, _fn=fn, _s=s):
+                return (_fn(x, w, _s),)
+
+            lower_to_file(
+                wrapped, [f32((c, im, im)), f32((k, c, f, f))],
+                os.path.join(out_dir, fname),
+            )
+            flops = 2.0 * k * c * f * f * o * o
+            entries.append({
+                "kernel": name, "c": c, "im": im, "k": k, "f": f, "s": s,
+                "out_layout": layout, "flops": flops, "file": fname,
+            })
+    manifest["prim_grid"] = entries
+
+
+def export_dlt_grid(out_dir, manifest):
+    entries = []
+    for (c, im) in DLT_GRID:
+        for src in ref.LAYOUTS:
+            for dst in ref.LAYOUTS:
+                if src == dst:
+                    continue
+                fname = f"dltk_{src}_{dst}_c{c}_im{im}.hlo.txt"
+                shape = {
+                    "chw": (c, im, im), "hcw": (im, c, im), "hwc": (im, im, c)
+                }[src]
+
+                def wrapped(x, _src=src, _dst=dst):
+                    return (kernels.dlt_kernel(x, _src, _dst),)
+
+                lower_to_file(wrapped, [f32(shape)],
+                              os.path.join(out_dir, fname))
+                entries.append({
+                    "src": src, "dst": dst, "c": c, "im": im,
+                    "bytes": 4 * c * im * im, "file": fname,
+                })
+    manifest["dlt_grid"] = entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-prims", action="store_true",
+                    help="models only (faster dev cycle)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "n_primitives": C.N_PRIMITIVES,
+        "n_layouts": C.N_LAYOUTS,
+        "prim_features": C.PRIM_FEATURES,
+        "dlt_features": C.DLT_FEATURES,
+        "predict_batches": [C.PREDICT_BATCH_SMALL, C.PREDICT_BATCH_LARGE],
+        "models": {},
+    }
+    for kind in model.MODEL_KINDS:
+        print(f"lowering {kind} ...", flush=True)
+        export_model_kind(kind, args.out, manifest)
+    if not args.skip_prims:
+        print("lowering primitive grid ...", flush=True)
+        export_prim_grid(args.out, manifest)
+        print("lowering dlt grid ...", flush=True)
+        export_dlt_grid(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    n = len([f for f in os.listdir(args.out) if f.endswith(".hlo.txt")])
+    print(f"wrote {n} HLO artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

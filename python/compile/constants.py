@@ -1,0 +1,27 @@
+"""Shared constants between the python compile path and the rust coordinator.
+
+The rust side has its own authoritative catalog (rust/src/primitives/catalog.rs);
+aot.py writes artifacts/manifest.json so rust can cross-check these at load
+time.  Keep the two in sync — the manifest check fails loudly otherwise.
+"""
+
+# Number of modeled convolutional primitives (rows of the NN2 output).
+# Must match rust/src/primitives/catalog.rs::CATALOG.len().
+N_PRIMITIVES = 31
+
+# Number of data layouts (CHW, HCW, HWC) -> 9 directed DLT costs.
+N_LAYOUTS = 3
+N_DLT = N_LAYOUTS * N_LAYOUTS
+
+# Input feature dimensions of the performance models.
+PRIM_FEATURES = 5  # (k, c, im, s, f), log-standardised
+DLT_FEATURES = 2   # (c, im), log-standardised
+
+# MLP architectures (paper Table 3).
+NN1_HIDDEN = [16, 64, 64, 16]
+NN2_HIDDEN = [128, 512, 512, 128]
+
+# Batch shapes baked into the AOT artifacts.
+TRAIN_BATCH = 1024   # paper Table 3 batch size
+PREDICT_BATCH_LARGE = 1024  # test-set evaluation
+PREDICT_BATCH_SMALL = 64    # one CNN's layer configs at once

@@ -1,0 +1,52 @@
+"""L1: Pallas kernels for the paper's convolutional primitive families.
+
+`REGISTRY` maps a *kernel id* (one representative implementation per
+primitive-family variant) to `(fn, out_layout, constraint)` where
+`fn(x_chw, w, s) -> out` in `out_layout`, and `constraint(f, s, im)` says
+whether the kernel applies (paper §3.2.1: some R_i are undefined).
+
+The rust catalog (rust/src/primitives/catalog.rs) maps each of the 31
+modeled primitives onto one of these kernel ids.
+"""
+
+from . import conv1x1, direct, dlt, im2col, kn2, mec, ref, winograd
+from .dlt import dlt as dlt_kernel
+from .mlp import dense
+
+
+def _any(f, s, im):
+    return f <= im
+
+
+def _stride1(f, s, im):
+    return s == 1 and f <= im
+
+
+def _wino(r):
+    def ok(f, s, im):
+        return s == 1 and f == r and im >= r
+    return ok
+
+
+def _one_by_one(f, s, im):
+    return f == 1
+
+
+# kernel id -> (fn, out_layout, applicability)
+REGISTRY = {
+    "direct_sum2d": (direct.direct_sum2d, "chw", _any),
+    "im2col_copy": (im2col.im2col_copy, "chw", _any),
+    "im2col_scan": (im2col.im2col_scan, "chw", _any),
+    "im2row_copy": (im2col.im2row_copy, "hwc", _any),
+    "im2row_scan": (im2col.im2row_scan, "hwc", _any),
+    "kn2row": (kn2.kn2row, "chw", _stride1),
+    "kn2col": (kn2.kn2col, "hwc", _stride1),
+    "winograd_2x2_3x3": (winograd.winograd_2x2_3x3, "chw", _wino(3)),
+    "winograd_3x3_3x3": (winograd.winograd_3x3_3x3, "chw", _wino(3)),
+    "winograd_4x4_3x3": (winograd.winograd_4x4_3x3, "chw", _wino(3)),
+    "winograd_2x2_5x5": (winograd.winograd_2x2_5x5, "chw", _wino(5)),
+    "winograd_4x4_5x5": (winograd.winograd_4x4_5x5, "chw", _wino(5)),
+    "conv1x1_ki": (conv1x1.conv1x1_ki, "chw", _one_by_one),
+    "conv1x1_ik": (conv1x1.conv1x1_ik, "hwc", _one_by_one),
+    "mec_col": (mec.mec_col, "hwc", _any),
+}

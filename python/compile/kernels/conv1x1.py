@@ -1,0 +1,29 @@
+"""conv-1x1 primitive family: a 1×1 convolution is a single channel gemm.
+
+The paper's eight conv-1x1-gemm-* variants differ in operand transposes
+(`ab/atb/abt/atbt`) and output ordering (`ik/ki`); functionally they share
+this kernel (one MXU gemm over the strided image), differing only in the
+simulator's layout-dependent cost terms.
+"""
+
+import jax.numpy as jnp
+
+from .gemm import gemm
+
+
+def conv1x1_ki(x, w, s: int):
+    """CHW output (`ki` ordering). x: (c, im, im), w: (k, c, 1, 1)."""
+    k = w.shape[0]
+    xs = x[:, ::s, ::s]
+    c, o, _ = xs.shape
+    out = gemm(w.reshape(k, c), xs.reshape(c, o * o))
+    return out.reshape(k, o, o)
+
+
+def conv1x1_ik(x, w, s: int):
+    """HWC output (`ik` ordering)."""
+    k = w.shape[0]
+    xs = x[:, ::s, ::s]
+    c, o, _ = xs.shape
+    out = gemm(xs.reshape(c, o * o).T, w.reshape(k, c).T)  # (o*o, k)
+    return out.reshape(o, o, k)

@@ -1,0 +1,45 @@
+"""direct-sum2d: the naive six-loop convolution as a Pallas kernel.
+
+The paper's direct family walks (k, oh, ow) outputs and (c, fh, fw) inputs.
+TPU mapping: grid over output channels k; each program holds the full input
+image in VMEM and accumulates the f*f shifted strided slices on the VPU —
+the inner (c, oh, ow) arithmetic is dense vector work, no MXU use (which is
+exactly why direct is usually the slowest family on matmul hardware).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _direct_kernel(x_ref, w_ref, o_ref, *, f: int, s: int, o: int):
+    x = x_ref[...]          # (c, im, im)
+    wk = w_ref[...]         # (1, c, f, f)
+    acc = jnp.zeros((o, o), jnp.float32)
+    for fh in range(f):
+        for fw in range(f):
+            sl = x[:, fh : fh + (o - 1) * s + 1 : s, fw : fw + (o - 1) * s + 1 : s]
+            acc = acc + jnp.sum(sl * wk[0, :, fh, fw][:, None, None], axis=0)
+    o_ref[...] = acc[None]
+
+
+def direct_sum2d(x, w, s: int):
+    """x: (c, im, im) CHW, w: (k, c, f, f) -> (k, o, o) CHW."""
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = ref.out_size(im, f, s)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_direct_kernel, f=f, s=s, o=o),
+        out_shape=jax.ShapeDtypeStruct((k, o, o), jnp.float32),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((c, im, im), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, c, f, f), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, o), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,38 @@
+"""Data-layout transformation (DLT) kernels: CHW ↔ HCW ↔ HWC transposes.
+
+The paper's solver charges an edge cost whenever consecutive layers pick
+primitives with mismatched output/input layouts; these are the kernels that
+perform those nine directed transformations.  TPU mapping: a grid over the
+leading dimension; each program re-permutes one slab in VMEM (pure VPU
+shuffle work, bandwidth-bound — exactly why the simulator models DLT cost
+from bytes moved).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _transpose_kernel(x_ref, o_ref, *, perm):
+    o_ref[...] = jnp.transpose(x_ref[...], perm)
+
+
+def dlt(x, src: str, dst: str):
+    """Transform x from layout src to layout dst (both in ref.LAYOUTS)."""
+    assert src in ref.LAYOUTS and dst in ref.LAYOUTS
+    if src == dst:
+        return x
+    # permutation taking src axes order to dst axes order
+    sperm = ref._PERM_FROM_CHW[src]
+    dperm = ref._PERM_FROM_CHW[dst]
+    perm = tuple(sperm.index(ax) for ax in dperm)
+    out_shape = tuple(x.shape[i] for i in perm)
+    return pl.pallas_call(
+        functools.partial(_transpose_kernel, perm=perm),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,53 @@
+"""Shared blocked Pallas matmul used by the gemm-based primitive families.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles M×N across
+programs; each program streams a (bm, K) × (K, bn) product through the MXU
+with both operand tiles resident in VMEM.  K is kept as a single block —
+for the paper's layer shapes the reduction dim (c·f·f ≤ 2048·121) times a
+128-wide tile fits VMEM comfortably at the block sizes chosen here.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-friendly 128x128 output tiles.
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.named_call, name="pallas_gemm")
+def gemm(x, y, *, bm: int = BM, bn: int = BN):
+    """Blocked matmul x @ y via a Pallas grid over output tiles.
+
+    x: (M, K), y: (K, N) -> (M, N).  Handles non-divisible M/N via Pallas'
+    automatic block padding.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, y)

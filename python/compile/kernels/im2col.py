@@ -1,0 +1,107 @@
+"""im2col / im2row primitive families as Pallas kernels.
+
+copy variants materialise the full patch matrix (c*f*f, o*o) in HBM via a
+patch-extraction kernel (grid over (fh, fw) kernel offsets), then run one
+big MXU gemm.  scan variants never materialise the patch matrix: a grid
+over kernel offsets accumulates one strided-slice gemm per offset into the
+output — trading the patch-matrix footprint for f*f smaller gemms (this is
+the paper's distinction: copy is memory-hungry/fast, scan leaner).
+
+Output layout: `ki`-ordered variants produce CHW; `ik`-ordered produce HWC
+(the gemm result is written pixel-major).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .gemm import gemm
+
+
+def _patch_kernel(x_ref, p_ref, *, f: int, s: int, o: int):
+    fh = pl.program_id(0)
+    fw = pl.program_id(1)
+    x = x_ref[...]  # (c, im, im)
+    span = (o - 1) * s + 1
+    sl = jax.lax.dynamic_slice(x, (0, fh, fw), (x.shape[0], span, span))
+    sl = sl[:, ::s, ::s]  # (c, o, o)
+    p_ref[...] = sl.reshape(x.shape[0], 1, 1, o * o)
+
+
+def _im2col_patches(x, f: int, s: int):
+    """Materialise patches as (c, f, f, o*o); reshape = (c*f*f, o*o)."""
+    c, im, _ = x.shape
+    o = ref.out_size(im, f, s)
+    p = pl.pallas_call(
+        functools.partial(_patch_kernel, f=f, s=s, o=o),
+        out_shape=jax.ShapeDtypeStruct((c, f, f, o * o), jnp.float32),
+        grid=(f, f),
+        in_specs=[pl.BlockSpec((c, im, im), lambda i, j: (0, 0, 0))],
+        out_specs=pl.BlockSpec((c, 1, 1, o * o), lambda i, j: (0, i, j, 0)),
+        interpret=True,
+    )(x)
+    return p.reshape(c * f * f, o * o)
+
+
+def im2col_copy(x, w, s: int):
+    """im2col copy variant, CHW output (`ki` ordering)."""
+    k, c, f, _ = w.shape
+    o = ref.out_size(x.shape[1], f, s)
+    p = _im2col_patches(x, f, s)          # (c*f*f, o*o)
+    out = gemm(w.reshape(k, c * f * f), p)
+    return out.reshape(k, o, o)
+
+
+def im2row_copy(x, w, s: int):
+    """im2row copy variant, HWC output (`ik` ordering)."""
+    k, c, f, _ = w.shape
+    o = ref.out_size(x.shape[1], f, s)
+    p = _im2col_patches(x, f, s)          # (c*f*f, o*o)
+    out = gemm(p.T, w.reshape(k, c * f * f).T)  # (o*o, k)
+    return out.reshape(o, o, k)
+
+
+def _scan_step_kernel(x_ref, w_ref, o_ref, *, f: int, s: int, o: int):
+    """One (fh, fw) offset: strided-slice the image, gemm, accumulate."""
+    fh = pl.program_id(0)
+    fw = pl.program_id(1)
+    x = x_ref[...]           # (c, im, im)
+    wk = w_ref[...]          # (k, c, 1, 1) slice at (fh, fw)
+    c = x.shape[0]
+    span = (o - 1) * s + 1
+    sl = jax.lax.dynamic_slice(x, (0, fh, fw), (c, span, span))[:, ::s, ::s]
+    g = jnp.dot(wk[:, :, 0, 0], sl.reshape(c, o * o),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(fh == 0, fw == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += g.reshape(o_ref.shape)
+
+
+def im2col_scan(x, w, s: int):
+    """im2col scan variant: accumulate f*f offset gemms; CHW output."""
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = ref.out_size(im, f, s)
+    return pl.pallas_call(
+        functools.partial(_scan_step_kernel, f=f, s=s, o=o),
+        out_shape=jax.ShapeDtypeStruct((k, o, o), jnp.float32),
+        grid=(f, f),
+        in_specs=[
+            pl.BlockSpec((c, im, im), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((k, c, 1, 1), lambda i, j: (0, 0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((k, o, o), lambda i, j: (0, 0, 0)),
+        interpret=True,
+    )(x, w)
+
+
+def im2row_scan(x, w, s: int):
+    """im2row scan variant; HWC output."""
+    out = im2col_scan(x, w, s)
+    return jnp.transpose(out, (1, 2, 0))

@@ -1,0 +1,67 @@
+"""kn2row / kn2col primitive family as Pallas kernels (stride-1 only).
+
+The kn2 trick (Anderson et al. [2]): a f×f convolution is the sum of f*f
+1×1 convolutions of the *whole* image, each shifted by its kernel offset.
+Each 1×1 conv is a (k×c)·(c×im²) gemm — no patch matrix at all, the
+memory-efficiency the paper highlights.  TPU mapping: grid over (fh, fw);
+each program runs one MXU gemm and accumulates the offset-shifted window
+into the output held in VMEM.  The paper notes kn2 degrades for s>1; the
+catalog marks stride>1 as inapplicable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kn2_kernel(x_ref, w_ref, o_ref, *, f: int, im: int, o: int, col: bool):
+    fh = pl.program_id(0)
+    fw = pl.program_id(1)
+    x = x_ref[...]                       # (c, im, im)
+    wk = w_ref[...][:, :, 0, 0]          # (k, c)
+    c = x.shape[0]
+    g = jnp.dot(wk, x.reshape(c, im * im),
+                preferred_element_type=jnp.float32).reshape(-1, im, im)
+    win = jax.lax.dynamic_slice(g, (0, fh, fw), (g.shape[0], o, o))
+
+    @pl.when(jnp.logical_and(fh == 0, fw == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if col:
+        o_ref[...] += jnp.transpose(win, (1, 2, 0))
+    else:
+        o_ref[...] += win
+
+
+def _kn2(x, w, s: int, col: bool):
+    assert s == 1, "kn2 primitives are stride-1 only"
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = ref.out_size(im, f, 1)
+    out_shape = (o, o, k) if col else (k, o, o)
+    return pl.pallas_call(
+        functools.partial(_kn2_kernel, f=f, im=im, o=o, col=col),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        grid=(f, f),
+        in_specs=[
+            pl.BlockSpec((c, im, im), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((k, c, 1, 1), lambda i, j: (0, 0, i, j)),
+        ],
+        out_specs=pl.BlockSpec(out_shape, lambda i, j: (0, 0, 0)),
+        interpret=True,
+    )(x, w)
+
+
+def kn2row(x, w, s: int):
+    """kn2row: CHW output."""
+    return _kn2(x, w, s, col=False)
+
+
+def kn2col(x, w, s: int):
+    """kn2col: HWC output."""
+    return _kn2(x, w, s, col=True)

@@ -1,0 +1,66 @@
+"""MEC — memory-efficient convolution (Cho & Brand) as a Pallas kernel.
+
+MEC lowers the image over the *width* dimension only, into
+L: (o, im, c*f) — a factor f smaller than the im2col patch matrix — and
+then performs one small gemm per output row over a sliding height window
+of L.  TPU mapping: the width-lowering is a (f,)-grid extraction kernel;
+the per-row gemms are a (o,)-grid kernel, each staging a (o, f, c*f) VMEM
+window and contracting on the MXU.  Low VMEM footprint is the family's
+defining property, mirroring the paper's low-memory claim.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lower_kernel(x_ref, l_ref, *, f: int, s: int, o: int):
+    fw = pl.program_id(0)
+    x = x_ref[...]  # (c, im, im)
+    c, im, _ = x.shape
+    span = (o - 1) * s + 1
+    sl = jax.lax.dynamic_slice(x, (0, 0, fw), (c, im, span))[:, :, ::s]
+    # L[ow, h, c, fw] slice for this fw
+    l_ref[...] = jnp.transpose(sl, (2, 1, 0))[:, :, :, None]
+
+
+def _row_kernel(l_ref, w_ref, o_ref, *, f: int, s: int):
+    oh = pl.program_id(0)
+    l = l_ref[...]          # (o, im, c*f)
+    wflat = w_ref[...]      # (f, c*f, k)
+    win = jax.lax.dynamic_slice(
+        l, (0, oh * s, 0), (l.shape[0], f, l.shape[2])
+    )  # (ow, fh, c*f)
+    o_ref[...] = jnp.einsum("wfe,fek->wk", win, wflat)[None]
+
+
+def mec_col(x, w, s: int):
+    """mec-col: HWC output. x: (c, im, im), w: (k, c, f, f)."""
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = ref.out_size(im, f, s)
+    L = pl.pallas_call(
+        functools.partial(_lower_kernel, f=f, s=s, o=o),
+        out_shape=jax.ShapeDtypeStruct((o, im, c, f), jnp.float32),
+        grid=(f,),
+        in_specs=[pl.BlockSpec((c, im, im), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((o, im, c, 1), lambda i: (0, 0, 0, i)),
+        interpret=True,
+    )(x).reshape(o, im, c * f)
+    wflat = jnp.transpose(w, (2, 1, 3, 0)).reshape(f, c * f, k)
+    out = pl.pallas_call(
+        functools.partial(_row_kernel, f=f, s=s),
+        out_shape=jax.ShapeDtypeStruct((o, o, k), jnp.float32),
+        grid=(o,),
+        in_specs=[
+            pl.BlockSpec((o, im, c * f), lambda i: (0, 0, 0)),
+            pl.BlockSpec((f, c * f, k), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o, k), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(L, wflat)
+    return out  # (oh, ow, k) HWC

@@ -1,0 +1,79 @@
+"""Fused dense layer (x @ W + b, optional ReLU) as a Pallas kernel.
+
+This is the compute body of the paper's performance models (NN1/NN2): five
+stacked dense layers.  TPU mapping: output-tile grid; each program computes
+one (bm, bn) tile with the full reduction in VMEM on the MXU, adds the bias
+broadcast and applies ReLU on the VPU — a classic fused epilogue, so the
+activation never round-trips to HBM between matmul and nonlinearity.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 512
+BN = 512
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _dense_fwd_impl(x, w, b, relu: bool):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = min(BM, m)
+    bn = min(BN, n)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense(x, w, b, relu: bool):
+    return _dense_fwd_impl(x, w, b, relu)
+
+
+def _dense_vjp_fwd(x, w, b, relu: bool):
+    y = _dense_fwd_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _dense_vjp_bwd(relu: bool, res, gy):
+    """Backward pass stays on the Pallas gemm kernel (MXU in both passes)."""
+    from .gemm import gemm
+
+    x, w, y = res
+    if relu:
+        gy = gy * (y > 0.0).astype(gy.dtype)
+    gx = gemm(gy, w.T)
+    gw = gemm(x.T, gy)
+    gb = jnp.sum(gy, axis=0)
+    return gx, gw, gb
+
+
+_dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)
+
+
+def dense(x, w, b, *, relu: bool):
+    """Fused dense layer; differentiable (custom VJP over Pallas gemms).
+
+    x: (B, in), w: (in, out), b: (out,) -> (B, out).
+    """
+    return _dense(x, w, b, relu)

@@ -1,0 +1,215 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+All convolutions are single-image (no batch dimension), VALID padding:
+    out[k, oh, ow] = sum_{c, fh, fw} x[c, oh*s + fh, ow*s + fw] * w[k, c, fh, fw]
+with output spatial size o = (im - f) // s + 1.
+
+Layout conventions (the paper's three data layouts, section 3.2.2):
+    CHW: (c, h, w)   HCW: (h, c, w)   HWC: (h, w, c)
+Reference conv consumes/produces CHW; layout adapters are separate oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def out_size(im: int, f: int, s: int) -> int:
+    """VALID-padding output spatial size."""
+    assert f <= im, f"kernel {f} larger than image {im}"
+    return (im - f) // s + 1
+
+
+def conv2d(x, w, s: int):
+    """Reference convolution. x: (c, im, im) CHW; w: (k, c, f, f); stride s.
+
+    Returns (k, o, o) CHW. Uses lax.conv_general_dilated as the gold standard.
+    """
+    c, im, _ = x.shape
+    k, c2, f, _ = w.shape
+    assert c == c2, (x.shape, w.shape)
+    lhs = x[None]  # NCHW with N=1
+    out = jax.lax.conv_general_dilated(
+        lhs, w, window_strides=(s, s), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def im2col_matrix(x, f: int, s: int):
+    """Patch matrix P: (c*f*f, o*o) with P[(c,fh,fw), (oh,ow)] = x[c, oh*s+fh, ow*s+fw]."""
+    c, im, _ = x.shape
+    o = out_size(im, f, s)
+    patches = []
+    for fh in range(f):
+        for fw in range(f):
+            sl = x[:, fh : fh + (o - 1) * s + 1 : s, fw : fw + (o - 1) * s + 1 : s]
+            patches.append(sl.reshape(c, o * o))
+    p = jnp.stack(patches, axis=1)  # (c, f*f, o*o)
+    return p.reshape(c * f * f, o * o)
+
+
+def im2row_matrix(x, f: int, s: int):
+    """Row patch matrix: (o*o, c*f*f) — transpose of im2col_matrix."""
+    return im2col_matrix(x, f, s).T
+
+
+def conv2d_im2col(x, w, s: int):
+    """im2col reference: gemm over the patch matrix; CHW output."""
+    k, c, f, _ = w.shape
+    o = out_size(x.shape[1], f, s)
+    p = im2col_matrix(x, f, s)              # (c*f*f, o*o)
+    wm = w.reshape(k, c * f * f)            # (k, c*f*f)
+    return (wm @ p).reshape(k, o, o)
+
+
+def conv2d_kn2row(x, w, s: int):
+    """kn2row reference: f*f shifted 1x1 gemms accumulated (stride 1 only)."""
+    assert s == 1
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = out_size(im, f, s)
+    acc = jnp.zeros((k, o, o), x.dtype)
+    xm = x.reshape(c, im * im)
+    for fh in range(f):
+        for fw in range(f):
+            g = (w[:, :, fh, fw] @ xm).reshape(k, im, im)
+            acc = acc + g[:, fh : fh + o, fw : fw + o]
+    return acc
+
+
+def winograd_matrices(m: int, r: int):
+    """Toom-Cook construction of Winograd F(m, r) transform matrices.
+
+    Returns float64 numpy (AT: m x a, G: a x r, BT: a x a), a = m + r - 1,
+    such that for 1-D correlation  y = AT @ [ (G @ g) * (BT @ d) ].
+    Interpolation points follow the wincnn convention: 0, 1, -1, 2, -2, ...
+
+    Derivation (transpose trick): the minimal linear convolution of length-m
+    and length-r sequences is  s = Va^-1 [(Er g) * (Em d)]  via Toom-Cook on
+    a-1 finite points plus the point at infinity.  Correlation with data
+    length a is the transpose of the convolution-by-g map, which yields
+    AT = Em^T, G = Er, BT = Va^-T.
+    """
+    import numpy as np
+
+    a = m + r - 1
+    pts = [0.0]
+    mag = 1
+    while len(pts) < a - 1:
+        for cand in (float(mag), float(-mag), 1.0 / (mag + 1), -1.0 / (mag + 1)):
+            if len(pts) < a - 1 and cand not in pts:
+                pts.append(cand)
+        mag += 1
+    pts = np.array(pts[: a - 1], dtype=np.float64)
+
+    def eval_matrix(cols):
+        """Evaluation matrix of a degree-(cols-1) polynomial at pts + infinity."""
+        mat = np.zeros((a, cols))
+        for i in range(a - 1):
+            mat[i] = pts[i] ** np.arange(cols)
+        mat[a - 1, cols - 1] = 1.0  # the point at infinity picks the top coeff
+        return mat
+
+    Va = eval_matrix(a)
+    Em = eval_matrix(m)
+    Er = eval_matrix(r)
+    AT = Em.T.copy()                   # m x a
+    G = Er                             # a x r
+    BT = np.linalg.inv(Va).T.copy()    # a x a
+    return AT, G, BT
+
+
+def conv2d_winograd(x, w, m: int):
+    """2-D Winograd F(m x m, r x r) reference (stride 1)."""
+    c, im, _ = x.shape
+    k, _, r, _ = w.shape
+    o = out_size(im, r, 1)
+    ATn, Gn, BTn = winograd_matrices(m, r)
+    a = m + r - 1
+    AT = jnp.asarray(ATn, x.dtype)
+    G = jnp.asarray(Gn, x.dtype)
+    BT = jnp.asarray(BTn, x.dtype)
+
+    tiles = -(-o // m)  # ceil
+    pad = (tiles - 1) * m + a - im
+    xp = jnp.pad(x, ((0, 0), (0, max(pad, 0)), (0, max(pad, 0))))
+
+    U = jnp.einsum("ar,kcrq,bq->abkc", G, w, G)          # filter transform
+    idx = [int(i) * m for i in range(tiles)]
+    d = jnp.stack([
+        jnp.stack([
+            jax.lax.dynamic_slice(xp, (0, i, j), (c, a, a))
+            for j in idx], axis=0)
+        for i in idx], axis=0)                            # (t, t, c, a, a)
+    V = jnp.einsum("ar,ijcrq,bq->abijc", BT, d, BT)       # input transform
+    M = jnp.einsum("abkc,abijc->abijk", U, V)             # element-wise gemm
+    Y = jnp.einsum("ma,abijk,nb->ijkmn", AT, M, AT)       # output transform
+    out = jnp.transpose(Y, (2, 0, 3, 1, 4)).reshape(k, tiles * m, tiles * m)
+    return out[:, :o, :o]
+
+
+def conv2d_1x1(x, w, s: int):
+    """1x1 convolution reference: channel gemm on (optionally) strided input."""
+    k = w.shape[0]
+    xs = x[:, ::s, ::s]
+    c, o, _ = xs.shape
+    return (w.reshape(k, c) @ xs.reshape(c, o * o)).reshape(k, o, o)
+
+
+def conv2d_mec_col(x, w, s: int):
+    """MEC (memory-efficient convolution) reference, column-lowering variant.
+
+    Lowers over the width dimension only into L: (o, im, c*f), then performs
+    one small gemm per output row. Numerically identical to conv2d.
+    """
+    c, im, _ = x.shape
+    k, _, f, _ = w.shape
+    o = out_size(im, f, s)
+    cols = []
+    for fw in range(f):
+        cols.append(x[:, :, fw : fw + (o - 1) * s + 1 : s])  # (c, im, o)
+    L = jnp.stack(cols, axis=1)                               # (c, f, im, o)
+    L = jnp.transpose(L, (3, 2, 0, 1)).reshape(o, im, c * f)  # (ow, h, c*fw)
+    wflat = jnp.transpose(w, (2, 1, 3, 0)).reshape(f, c * f, k)  # (fh, (c,fw), k)
+    rows = []
+    for oh in range(o):
+        sl = L[:, oh * s : oh * s + f, :]          # (ow, fh, c*fw)
+        rows.append(jnp.einsum("wfe,fek->wk", sl, wflat))
+    out = jnp.stack(rows, axis=0)                  # (oh, ow, k)
+    return jnp.transpose(out, (2, 0, 1))
+
+
+# ---------------------------------------------------------------------------
+# layout adapters (the three paper layouts)
+
+LAYOUTS = ("chw", "hcw", "hwc")
+
+_PERM_FROM_CHW = {"chw": (0, 1, 2), "hcw": (1, 0, 2), "hwc": (1, 2, 0)}
+
+
+def to_layout(x_chw, layout: str):
+    return jnp.transpose(x_chw, _PERM_FROM_CHW[layout])
+
+
+def from_layout(x, layout: str):
+    perm = _PERM_FROM_CHW[layout]
+    inv = [perm.index(i) for i in range(3)]
+    return jnp.transpose(x, tuple(inv))
+
+
+def dlt(x, src: str, dst: str):
+    """Data-layout transformation oracle."""
+    return to_layout(from_layout(x, src), dst)
+
+
+# ---------------------------------------------------------------------------
+# performance-model MLP oracle
+
+def mlp_apply(params, x):
+    """params: list of (W, b); ReLU between hidden layers, linear head."""
+    h = x
+    for i, (wt, b) in enumerate(params):
+        h = h @ wt + b
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h

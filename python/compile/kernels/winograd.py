@@ -1,0 +1,97 @@
+"""Winograd F(m×m, r×r) convolution as a Pallas kernel (stride-1, r ∈ {3,5}).
+
+Structure (Lavin & Gray): filter transform U = G w G^T (done once per call,
+plain jnp — it is weight preparation, not the hot loop), then per input
+tile: input transform V = B^T d B, element-wise channel gemms M = U·V, and
+output transform Y = A^T M A.
+
+TPU mapping: the grid walks the (tiles × tiles) output tiling; each program
+stages one (c, a, a) input tile in VMEM, performs the a² batched (k×c)·(c)
+contractions on the MXU and the two small transform matmuls on the VPU.
+The `-vec-N` variants of the paper map to the lane-width of the tile batch;
+they share this kernel and differ only in the simulator cost model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _wino_kernel(xp_ref, u_ref, bt_ref, at_ref, o_ref, *, c, a, m, k):
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    xp = xp_ref[...]
+    u = u_ref[...]        # (a, a, k, c)
+    bt = bt_ref[...]      # (a, a)
+    at = at_ref[...]      # (m, a)
+    d = jax.lax.dynamic_slice(xp, (0, ti * m, tj * m), (c, a, a))
+    v = jnp.einsum("ar,crq,bq->abc", bt, d, bt)          # input transform
+    mm = jnp.einsum("abkc,abc->abk", u, v)               # MXU contractions
+    y = jnp.einsum("ma,abk,nb->kmn", at, mm, at)         # output transform
+    o_ref[...] = y[None]
+
+
+def _winograd(x, w, m: int):
+    c, im, _ = x.shape
+    k, _, r, _ = w.shape
+    o = ref.out_size(im, r, 1)
+    a = m + r - 1
+    ATn, Gn, BTn = ref.winograd_matrices(m, r)
+    at = jnp.asarray(ATn, jnp.float32)
+    g = jnp.asarray(Gn, jnp.float32)
+    bt = jnp.asarray(BTn, jnp.float32)
+
+    tiles = -(-o // m)
+    pad = (tiles - 1) * m + a - im
+    xp = jnp.pad(x, ((0, 0), (0, max(pad, 0)), (0, max(pad, 0))))
+    u = jnp.einsum("ar,kcrq,bq->abkc", g, w, g)  # filter transform (prep)
+
+    imp = xp.shape[1]
+    # output tile rows are indexed by the flat tile id i * tiles + j
+    out = pl.pallas_call(
+        functools.partial(_wino_kernel, c=c, a=a, m=m, k=k),
+        out_shape=jax.ShapeDtypeStruct((tiles * tiles, k, m, m), jnp.float32),
+        grid=(tiles, tiles),
+        in_specs=[
+            pl.BlockSpec((c, imp, imp), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((a, a, k, c), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((a, a), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, a), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, k, m, m), lambda i, j, _t=tiles: (i * _t + j, 0, 0, 0)
+        ),
+        interpret=True,
+    )(xp, u, bt, at)
+    y = out.reshape(tiles, tiles, k, m, m)
+    y = jnp.transpose(y, (2, 0, 3, 1, 4)).reshape(k, tiles * m, tiles * m)
+    return y[:, :o, :o]
+
+
+def winograd_2x2_3x3(x, w, s: int):
+    assert s == 1 and w.shape[2] == 3
+    return _winograd(x, w, 2)
+
+
+def winograd_3x3_3x3(x, w, s: int):
+    assert s == 1 and w.shape[2] == 3
+    return _winograd(x, w, 3)
+
+
+def winograd_4x4_3x3(x, w, s: int):
+    assert s == 1 and w.shape[2] == 3
+    return _winograd(x, w, 4)
+
+
+def winograd_2x2_5x5(x, w, s: int):
+    assert s == 1 and w.shape[2] == 5
+    return _winograd(x, w, 2)
+
+
+def winograd_4x4_5x5(x, w, s: int):
+    assert s == 1 and w.shape[2] == 5
+    return _winograd(x, w, 4)

@@ -1,0 +1,139 @@
+"""L2: the paper's performance models (NN1 / NN2 / DLT variants) in JAX.
+
+Architecture (paper Table 3):
+    NN1: in -> 16 -> 64 -> 64 -> 16 -> 1        (one model per primitive)
+    NN2: in -> 128 -> 512 -> 512 -> 128 -> n    (one model for all primitives)
+ReLU between layers, linear head.  The dense layers are the Pallas `dense`
+kernel from kernels/mlp.py, so the whole model lowers into one HLO module.
+
+Training follows the paper §3.3: masked MSE on log-standardised targets
+(undefined R_i are masked out of the loss *and* the gradients — achieved
+here simply by multiplying the squared error by the 0/1 mask, which zeroes
+the corresponding cotangents), Adam, runtime lr / weight-decay scalars so
+the same AOT artifact serves both initial training and fine-tuning (the
+paper lowers lr by 10x for fine-tuning).
+
+Everything here is lowered once by aot.py; python never runs at request
+time.  Parameter pytrees are flattened in a fixed order (W0,b0,...,W4,b4)
+recorded in artifacts/manifest.json for the rust ParamStore.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels.mlp import dense
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def layer_sizes(in_dim: int, hidden: list, out_dim: int):
+    return [in_dim] + list(hidden) + [out_dim]
+
+
+def init_params(key, in_dim: int, hidden: list, out_dim: int):
+    """He-initialised parameter list [(W, b), ...]."""
+    sizes = layer_sizes(in_dim, hidden, out_dim)
+    params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / sizes[i])
+        b = jnp.zeros((sizes[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def apply(params, x):
+    """Forward pass on the Pallas dense kernel; x: (B, in) -> (B, out)."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = dense(h, w, b, relu=(i < len(params) - 1))
+    return h
+
+
+def masked_mse(params, x, y, mask):
+    """Paper §3.3 loss: squared error only over defined labels."""
+    pred = apply(params, x)
+    se = (pred - y) ** 2 * mask
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_opt(params):
+    m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for (w, b) in params]
+    v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for (w, b) in params]
+    return m, v
+
+
+def train_step(params, m, v, t, x, y, mask, lr, wd):
+    """One masked-MSE Adam step with decoupled weight decay.
+
+    t is the 1-based step counter (float32 scalar); lr/wd are runtime
+    scalars.  Returns (params', m', v', t+1, loss).
+    """
+    loss, grads = jax.value_and_grad(masked_mse)(params, x, y, mask)
+    t = t + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+
+    new_params, new_m, new_v = [], [], []
+    for (p, g, mi, vi) in zip(params, grads, m, v):
+        layer_p, layer_m, layer_v = [], [], []
+        for (pj, gj, mj, vj) in zip(p, g, mi, vi):
+            mj = ADAM_B1 * mj + (1.0 - ADAM_B1) * gj
+            vj = ADAM_B2 * vj + (1.0 - ADAM_B2) * gj * gj
+            upd = (mj / bc1) / (jnp.sqrt(vj / bc2) + ADAM_EPS)
+            pj = pj - lr * (upd + wd * pj)
+            layer_p.append(pj)
+            layer_m.append(mj)
+            layer_v.append(vj)
+        new_params.append(tuple(layer_p))
+        new_m.append(tuple(layer_m))
+        new_v.append(tuple(layer_v))
+    return new_params, new_m, new_v, t, loss
+
+
+def train_epoch(params, m, v, t, xs, ys, masks, lr, wd):
+    """lax.scan over a fixed number of batches inside one HLO module.
+
+    xs: (nb, B, in), ys/masks: (nb, B, out).  One PJRT call per epoch
+    instead of per step — the L2 perf optimisation from DESIGN.md §9.
+    """
+    def step(carry, batch):
+        params, m, v, t = carry
+        x, y, mask = batch
+        params, m, v, t, loss = train_step(params, m, v, t, x, y, mask, lr, wd)
+        return (params, m, v, t), loss
+
+    (params, m, v, t), losses = jax.lax.scan(
+        step, (params, m, v, t), (xs, ys, masks)
+    )
+    return params, m, v, t, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# model-kind registry used by aot.py
+
+MODEL_KINDS = {
+    # name:     (in_dim, hidden, out_dim)
+    "nn2": (C.PRIM_FEATURES, C.NN2_HIDDEN, C.N_PRIMITIVES),
+    "nn1": (C.PRIM_FEATURES, C.NN1_HIDDEN, 1),
+    "dlt_nn2": (C.DLT_FEATURES, C.NN2_HIDDEN, C.N_DLT),
+    "dlt_nn1": (C.DLT_FEATURES, C.NN1_HIDDEN, 1),
+}
+
+
+def flatten_params(params):
+    """Deterministic flat order: W0, b0, W1, b1, ..."""
+    flat = []
+    for (w, b) in params:
+        flat.append(w)
+        flat.append(b)
+    return flat
+
+
+def unflatten_params(flat):
+    assert len(flat) % 2 == 0
+    return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]

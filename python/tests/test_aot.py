@@ -1,0 +1,72 @@
+"""AOT artifact sanity: manifest contract the rust side relies on."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as fh:
+        return json.load(fh)
+
+
+def test_manifest_constants():
+    from compile import constants as C
+    m = manifest()
+    assert m["n_primitives"] == C.N_PRIMITIVES
+    assert m["prim_features"] == C.PRIM_FEATURES
+    assert m["dlt_features"] == C.DLT_FEATURES
+
+
+def test_model_files_exist_and_parse():
+    m = manifest()
+    assert set(m["models"]) == {"nn1", "nn2", "dlt_nn1", "dlt_nn2"}
+    for kind, spec in m["models"].items():
+        assert len(spec["param_shapes"]) == 10  # 5 layers x (W, b)
+        for fname in spec["files"].values():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), fname
+            head = open(path).read(200)
+            assert "HloModule" in head, fname
+
+
+def test_param_shapes_consistent():
+    from compile import model
+    m = manifest()
+    for kind, spec in m["models"].items():
+        in_dim, hidden, out_dim = model.MODEL_KINDS[kind]
+        sizes = model.layer_sizes(in_dim, hidden, out_dim)
+        shapes = spec["param_shapes"]
+        for i in range(len(sizes) - 1):
+            assert shapes[2 * i] == [sizes[i], sizes[i + 1]]
+            assert shapes[2 * i + 1] == [sizes[i + 1]]
+
+
+def test_prim_grid_entries():
+    import compile.kernels as K
+    m = manifest()
+    assert len(m["prim_grid"]) > 50
+    for e in m["prim_grid"]:
+        assert e["kernel"] in K.REGISTRY
+        assert os.path.exists(os.path.join(ART, e["file"]))
+        fn, layout, ok = K.REGISTRY[e["kernel"]]
+        assert ok(e["f"], e["s"], e["im"])
+        assert e["out_layout"] == layout
+        assert e["flops"] > 0
+
+
+def test_dlt_grid_entries():
+    m = manifest()
+    # 4 (c, im) pairs x 6 directed non-identity transforms
+    assert len(m["dlt_grid"]) == 24
+    for e in m["dlt_grid"]:
+        assert e["src"] != e["dst"]
+        assert os.path.exists(os.path.join(ART, e["file"]))

@@ -1,0 +1,124 @@
+"""Edge-case and structural tests beyond the hypothesis sweeps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.kernels as K
+from compile.kernels import ref
+
+
+def case(c, im, k, f, s, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, im, im)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, c, f, f)).astype(np.float32))
+    return x, w
+
+
+@pytest.mark.parametrize("name", sorted(K.REGISTRY))
+def test_minimum_image(name):
+    """im == f: a single 1x1 output position."""
+    fn, layout, ok = K.REGISTRY[name]
+    for f in (1, 3, 5):
+        if not ok(f, 1, f):
+            continue
+        x, w = case(2, f, 3, f, 1)
+        gold = ref.to_layout(ref.conv2d(x, w, 1), layout)
+        got = fn(x, w, 1)
+        assert got.shape == gold.shape
+        np.testing.assert_allclose(got, gold, rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", sorted(K.REGISTRY))
+def test_single_channel_single_kernel(name):
+    fn, layout, ok = K.REGISTRY[name]
+    f = 3 if ok(3, 1, 8) else 1
+    if not ok(f, 1, 8):
+        return
+    x, w = case(1, 8, 1, f, 1)
+    gold = ref.to_layout(ref.conv2d(x, w, 1), layout)
+    np.testing.assert_allclose(fn(x, w, 1), gold, rtol=5e-3, atol=5e-3)
+
+
+def test_winograd_partial_tiles():
+    """Output size not divisible by the Winograd tile m."""
+    for (m, name) in [(2, "winograd_2x2_3x3"), (4, "winograd_4x4_3x3")]:
+        fn, layout, ok = K.REGISTRY[name]
+        for im in (7, 9, 10, 13):
+            o = im - 2
+            if o % m == 0:
+                continue  # want the ragged case
+            x, w = case(3, im, 2, 3, 1, seed=im)
+            gold = ref.conv2d(x, w, 1)
+            np.testing.assert_allclose(fn(x, w, 1), gold, rtol=5e-3, atol=5e-3)
+
+
+def test_stride_larger_than_kernel():
+    """s=4 with f=3: strided windows skip input columns entirely."""
+    for name in ("im2col_copy", "im2col_scan", "mec_col", "direct_sum2d"):
+        fn, layout, ok = K.REGISTRY[name]
+        assert ok(3, 4, 16)
+        x, w = case(2, 16, 3, 3, 4)
+        gold = ref.to_layout(ref.conv2d(x, w, 4), layout)
+        np.testing.assert_allclose(fn(x, w, 4), gold, rtol=5e-3, atol=5e-3)
+
+
+def test_large_channel_small_image():
+    """Deep-network tail shapes: c >> im (e.g. 256 x 7 x 7)."""
+    x, w = case(128, 7, 32, 3, 1)
+    fn, layout, _ = K.REGISTRY["im2col_copy"]
+    gold = ref.to_layout(ref.conv2d(x, w, 1), layout)
+    np.testing.assert_allclose(fn(x, w, 1), gold, rtol=2e-2, atol=2e-2)
+
+
+def test_dlt_all_nine_directed_pairs():
+    rng = np.random.default_rng(1)
+    x_chw = jnp.asarray(rng.normal(size=(4, 6, 6)).astype(np.float32))
+    for src in ref.LAYOUTS:
+        x = ref.to_layout(x_chw, src)
+        for dst in ref.LAYOUTS:
+            got = K.dlt_kernel(x, src, dst)
+            np.testing.assert_allclose(got, ref.dlt(x, src, dst))
+            if src == dst:
+                assert got is x  # identity is free
+
+
+def test_kernels_are_jittable():
+    """Every kernel must lower under jax.jit (the AOT path requirement)."""
+    for name, (fn, layout, ok) in K.REGISTRY.items():
+        f = 3 if ok(3, 1, 8) else (1 if ok(1, 1, 8) else 5)
+        if not ok(f, 1, 8):
+            continue
+        x, w = case(2, 8, 3, f, 1)
+        jitted = jax.jit(lambda a, b, _fn=fn: _fn(a, b, 1))
+        got = jitted(x, w)
+        gold = ref.to_layout(ref.conv2d(x, w, 1), layout)
+        np.testing.assert_allclose(got, gold, rtol=5e-3, atol=5e-3)
+
+
+def test_hlo_text_export_round_trip():
+    """The aot lowering path must produce parseable HLO text."""
+    from compile import aot
+
+    def fn(x, w):
+        return (K.REGISTRY["kn2row"][0](x, w, 1),)
+
+    spec = jax.ShapeDtypeStruct((2, 8, 8), jnp.float32)
+    wspec = jax.ShapeDtypeStruct((3, 2, 3, 3), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, wspec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[3,6,6]" in text.replace(" ", "")
+
+
+def test_mlp_dense_relu_boundary():
+    """ReLU must clamp exactly at zero (fused epilogue correctness)."""
+    from compile.kernels.mlp import dense
+    x = jnp.array([[1.0, -1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    y = dense(x, w, b, relu=True)
+    np.testing.assert_allclose(y, [[1.0, 0.0]])
+    y2 = dense(x, w, b, relu=False)
+    np.testing.assert_allclose(y2, [[1.0, -1.0]])

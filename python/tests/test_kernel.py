@@ -1,0 +1,108 @@
+"""Kernel-vs-oracle correctness: the CORE signal of the L1 layer.
+
+Every Pallas kernel in compile.kernels.REGISTRY is swept against the
+pure-jnp oracle in ref.py with hypothesis-generated layer configurations
+(shapes, kernel sizes, strides) from the paper's Table 1 ranges (scaled to
+test-size images).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand_case(c, im, k, f, s, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, im, im)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, c, f, f)).astype(np.float32))
+    return x, w
+
+
+config_strategy = st.tuples(
+    st.integers(1, 8),            # c
+    st.integers(7, 24),           # im
+    st.integers(1, 8),            # k
+    st.sampled_from([1, 3, 5, 7]),  # f
+    st.sampled_from([1, 2, 4]),   # s
+    st.integers(0, 10_000),       # seed
+)
+
+
+@pytest.mark.parametrize("name", sorted(K.REGISTRY))
+@settings(**SETTINGS)
+@given(cfg=config_strategy)
+def test_kernel_matches_oracle(name, cfg):
+    c, im, k, f, s, seed = cfg
+    fn, layout, ok = K.REGISTRY[name]
+    if not ok(f, s, im):
+        return
+    x, w = rand_case(c, im, k, f, s, seed)
+    gold = ref.to_layout(ref.conv2d(x, w, s), layout)
+    got = fn(x, w, s)
+    assert got.shape == gold.shape
+    np.testing.assert_allclose(got, gold, rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", sorted(K.REGISTRY))
+def test_kernel_applicability_consistent(name):
+    """Applicable kernels must run; constraint must reject f > im."""
+    fn, layout, ok = K.REGISTRY[name]
+    assert not ok(9, 1, 7)  # f > im never applicable
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 6), im=st.integers(4, 16),
+    src=st.sampled_from(ref.LAYOUTS), dst=st.sampled_from(ref.LAYOUTS),
+    seed=st.integers(0, 1000),
+)
+def test_dlt_kernel(c, im, src, dst, seed):
+    rng = np.random.default_rng(seed)
+    x_chw = jnp.asarray(rng.normal(size=(c, im, im)).astype(np.float32))
+    x = ref.to_layout(x_chw, src)
+    got = K.dlt_kernel(x, src, dst)
+    gold = ref.dlt(x, src, dst)
+    np.testing.assert_allclose(got, gold)
+    # round trip restores the original
+    back = K.dlt_kernel(got, dst, src)
+    np.testing.assert_allclose(back, x)
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (3, 3), (4, 3), (2, 5), (4, 5)])
+def test_winograd_matrices_exact(m, r):
+    """AT[(G g) * (BT d)] == correlate(d, g) for random vectors."""
+    AT, G, BT = ref.winograd_matrices(m, r)
+    rng = np.random.default_rng(m * 10 + r)
+    for _ in range(5):
+        g = rng.normal(size=r)
+        d = rng.normal(size=m + r - 1)
+        y = AT @ ((G @ g) * (BT @ d))
+        gold = np.correlate(d, g, mode="valid")
+        np.testing.assert_allclose(y, gold, rtol=1e-8, atol=1e-8)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 48), k=st.integers(1, 40), n=st.integers(1, 140),
+    seed=st.integers(0, 1000),
+)
+def test_gemm_kernel(m, k, n, seed):
+    from compile.kernels.gemm import gemm
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    np.testing.assert_allclose(gemm(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_out_size():
+    assert ref.out_size(7, 3, 1) == 5
+    assert ref.out_size(7, 3, 2) == 3
+    assert ref.out_size(224, 7, 2) == 109
+    with pytest.raises(AssertionError):
+        ref.out_size(3, 5, 1)

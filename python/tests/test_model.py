@@ -1,0 +1,139 @@
+"""L2 performance-model tests: gradients, masking, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def small_model(seed=0, in_dim=5, out_dim=3):
+    key = jax.random.PRNGKey(seed)
+    return model.init_params(key, in_dim, [16, 32], out_dim)
+
+
+def batch(seed, b=16, in_dim=5, out_dim=3, mask_p=0.3):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (b, in_dim))
+    y = jax.random.normal(k2, (b, out_dim))
+    mask = (jax.random.uniform(k3, (b, out_dim)) > mask_p).astype(jnp.float32)
+    return x, y, mask
+
+
+def test_apply_matches_oracle():
+    p = small_model()
+    x, _, _ = batch(1)
+    np.testing.assert_allclose(
+        model.apply(p, x), ref.mlp_apply(p, x), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_grads_match_oracle(seed):
+    p = small_model(seed)
+    x, y, mask = batch(seed + 1)
+
+    def oracle(p):
+        pred = ref.mlp_apply(p, x)
+        se = (pred - y) ** 2 * mask
+        return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    l1, g1 = jax.value_and_grad(model.masked_mse)(p, x, y, mask)
+    l2, g2 = jax.value_and_grad(oracle)(p)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    for (a, b), (c, d) in zip(g1, g2):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(b, d, rtol=1e-3, atol=1e-5)
+
+
+def test_masked_labels_do_not_influence_training():
+    """Poisoning masked-out labels with garbage must not change the step."""
+    p = small_model()
+    m, v = model.init_opt(p)
+    x, y, mask = batch(7)
+    y_poison = jnp.where(mask > 0, y, 1e6)
+    out1 = model.train_step(p, m, v, jnp.float32(0), x, y, mask, 0.01, 0.0)
+    out2 = model.train_step(p, m, v, jnp.float32(0), x, y_poison, mask, 0.01, 0.0)
+    for (w1, b1), (w2, b2) in zip(out1[0], out2[0]):
+        np.testing.assert_allclose(w1, w2)
+        np.testing.assert_allclose(b1, b2)
+    np.testing.assert_allclose(out1[4], out2[4])
+
+
+def test_all_masked_batch_is_finite():
+    p = small_model()
+    m, v = model.init_opt(p)
+    x, y, _ = batch(3)
+    mask = jnp.zeros_like(y)
+    p2, _, _, _, loss = model.train_step(p, m, v, jnp.float32(0), x, y, mask, 0.01, 0.0)
+    assert jnp.isfinite(loss)
+    for (w, b) in p2:
+        assert jnp.all(jnp.isfinite(w)) and jnp.all(jnp.isfinite(b))
+
+
+def test_training_descends():
+    p = small_model()
+    m, v = model.init_opt(p)
+    t = jnp.float32(0)
+    x, y, mask = batch(11)
+    first = None
+    for _ in range(50):
+        p, m, v, t, loss = model.train_step(p, m, v, t, x, y, mask, 0.01, 0.0)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.5
+
+
+def test_train_epoch_equals_steps():
+    """One scanned epoch must equal the same batches applied step-by-step."""
+    p = small_model()
+    m, v = model.init_opt(p)
+    t = jnp.float32(0)
+    xs, ys, masks = [], [], []
+    for i in range(3):
+        x, y, mask = batch(20 + i)
+        xs.append(x); ys.append(y); masks.append(mask)
+    xs, ys, masks = jnp.stack(xs), jnp.stack(ys), jnp.stack(masks)
+
+    pe, me, ve, te, _ = model.train_epoch(p, m, v, t, xs, ys, masks, 0.01, 1e-5)
+    ps, ms, vs, ts = p, m, v, t
+    for i in range(3):
+        ps, ms, vs, ts, _ = model.train_step(
+            ps, ms, vs, ts, xs[i], ys[i], masks[i], 0.01, 1e-5)
+    assert float(te) == float(ts) == 3.0
+    for (w1, b1), (w2, b2) in zip(pe, ps):
+        np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-6)
+
+
+def test_weight_decay_shrinks_params():
+    p = small_model()
+    m, v = model.init_opt(p)
+    x, y, mask = batch(5)
+    mask = jnp.zeros_like(mask)  # no data signal: only decay acts
+    p2, *_ = model.train_step(p, m, v, jnp.float32(0), x, y, mask, 0.1, 0.5)
+    for (w1, _), (w2, _) in zip(p, p2):
+        assert float(jnp.linalg.norm(w2)) < float(jnp.linalg.norm(w1))
+
+
+def test_flatten_round_trip():
+    p = small_model()
+    flat = model.flatten_params(p)
+    assert len(flat) == 2 * len(p)
+    p2 = model.unflatten_params(flat)
+    for (w1, b1), (w2, b2) in zip(p, p2):
+        assert w1 is w2 and b1 is b2
+
+
+def test_model_kinds_shapes():
+    from compile import constants as C
+    for kind, (in_dim, hidden, out_dim) in model.MODEL_KINDS.items():
+        sizes = model.layer_sizes(in_dim, hidden, out_dim)
+        assert sizes[0] == in_dim and sizes[-1] == out_dim
+        assert len(sizes) == 6  # paper Table 3: five dense layers
+    assert model.MODEL_KINDS["nn2"][2] == C.N_PRIMITIVES
+    assert model.MODEL_KINDS["dlt_nn2"][2] == C.N_DLT

@@ -1,0 +1,348 @@
+//! Profiler datasets (paper §3.2): layer-configuration enumeration from
+//! the network zoo, simulated/measured profiling into training data,
+//! log-standardisation, deterministic splits and fixed-shape batching for
+//! the AOT training artifacts.
+
+mod persist;
+mod standardize;
+
+pub use standardize::Standardizer;
+
+use crate::layers::{ranges, ConvConfig};
+use crate::networks;
+use crate::primitives::{catalog, Layout};
+use crate::simulator::noise::SplitMix64;
+use crate::simulator::Simulator;
+use std::collections::BTreeSet;
+
+/// Maximum dataset size: 80% of this fits the 7-batch AOT train_epoch
+/// artifact exactly (7 * 1024 / 0.8).
+pub const MAX_CONFIGS: usize = 8960;
+
+/// The primitive running-time dataset: `(k,c,im,s,f) -> (R_1..R_N)`.
+#[derive(Debug, Clone)]
+pub struct PrimDataset {
+    pub configs: Vec<ConvConfig>,
+    /// targets[i][p] = median execution time in ms; None = undefined.
+    pub targets: Vec<Vec<Option<f64>>>,
+}
+
+/// The DLT dataset: `(c, im) -> R_{3x3}` (ms; diagonal zero).
+#[derive(Debug, Clone)]
+pub struct DltDataset {
+    pub pairs: Vec<(u32, u32)>,
+    pub targets: Vec<[[f64; 3]; 3]>,
+}
+
+/// Index split (deterministic, seeded): 80/10/10 train/val/test.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Extract the unique `(c, k, im)` triplets from the zoo (paper: 475).
+pub fn zoo_triplets() -> Vec<(u32, u32, u32)> {
+    let mut set = BTreeSet::new();
+    for n in networks::zoo() {
+        set.extend(n.triplets());
+    }
+    set.into_iter().collect()
+}
+
+/// Cross triplets with all (f, s) pairs, filter impossible configs
+/// (f > im), and cap at `max_n` via seeded subsampling (paper §3.2.1).
+pub fn enumerate_configs(max_n: usize, seed: u64) -> Vec<ConvConfig> {
+    let mut configs = Vec::new();
+    for (c, k, im) in zoo_triplets() {
+        for &f in &ranges::KERNEL_SIZES {
+            for &s in &ranges::STRIDES {
+                let cfg = ConvConfig::new(k, c, im, s, f);
+                if cfg.is_valid() {
+                    configs.push(cfg);
+                }
+            }
+        }
+    }
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut configs);
+    configs.truncate(max_n);
+    configs
+}
+
+/// Profile all configs on a simulator into a primitive dataset.
+pub fn profile_prim_dataset(sim: &Simulator, configs: &[ConvConfig]) -> PrimDataset {
+    let targets = configs.iter().map(|cfg| sim.profile_layer(cfg)).collect();
+    PrimDataset { configs: configs.to_vec(), targets }
+}
+
+/// Unique (c, im) pairs occurring in the config set, for the DLT dataset.
+pub fn dlt_pairs(configs: &[ConvConfig]) -> Vec<(u32, u32)> {
+    let set: BTreeSet<(u32, u32)> = configs.iter().map(|c| (c.c, c.im)).collect();
+    set.into_iter().collect()
+}
+
+/// Profile the DLT dataset on a simulator.
+pub fn profile_dlt_dataset(sim: &Simulator, pairs: &[(u32, u32)]) -> DltDataset {
+    let targets = pairs.iter().map(|&(c, im)| sim.dlt_matrix(c, im)).collect();
+    DltDataset { pairs: pairs.to_vec(), targets }
+}
+
+impl PrimDataset {
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// Count of defined data points per primitive (paper Table 2).
+    pub fn points_per_primitive(&self) -> Vec<usize> {
+        let n_prims = catalog().len();
+        let mut counts = vec![0usize; n_prims];
+        for row in &self.targets {
+            for (p, t) in row.iter().enumerate() {
+                if t.is_some() {
+                    counts[p] += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Feature matrix rows: raw (k, c, im, s, f).
+    pub fn features(&self) -> Vec<[f64; 5]> {
+        self.configs.iter().map(|c| c.features()).collect()
+    }
+
+    /// Select a subset by indices.
+    pub fn subset(&self, idx: &[usize]) -> PrimDataset {
+        PrimDataset {
+            configs: idx.iter().map(|&i| self.configs[i]).collect(),
+            targets: idx.iter().map(|&i| self.targets[i].clone()).collect(),
+        }
+    }
+}
+
+impl DltDataset {
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Flatten targets to 9 outputs per row (row-major src x dst),
+    /// identity entries marked undefined (they are skipped at runtime).
+    pub fn flat_targets(&self) -> Vec<Vec<Option<f64>>> {
+        self.targets
+            .iter()
+            .map(|m| {
+                let mut row = Vec::with_capacity(9);
+                for src in Layout::ALL {
+                    for dst in Layout::ALL {
+                        let v = m[src.index()][dst.index()];
+                        row.push(if src == dst { None } else { Some(v) });
+                    }
+                }
+                row
+            })
+            .collect()
+    }
+
+    pub fn features(&self) -> Vec<[f64; 2]> {
+        self.pairs.iter().map(|&(c, im)| [c as f64, im as f64]).collect()
+    }
+
+    pub fn subset(&self, idx: &[usize]) -> DltDataset {
+        DltDataset {
+            pairs: idx.iter().map(|&i| self.pairs[i]).collect(),
+            targets: idx.iter().map(|&i| self.targets[i]).collect(),
+        }
+    }
+}
+
+/// Deterministic 80/10/10 split of `n` indices.
+pub fn split(n: usize, seed: u64) -> Split {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut idx);
+    let n_train = n * 8 / 10;
+    let n_val = n / 10;
+    Split {
+        train: idx[..n_train].to_vec(),
+        val: idx[n_train..n_train + n_val].to_vec(),
+        test: idx[n_train + n_val..].to_vec(),
+    }
+}
+
+/// A fraction of the training indices (paper §4.4 transfer experiments),
+/// sampled uniformly at random with `seed`.
+pub fn fraction(train: &[usize], frac: f64, seed: u64) -> Vec<usize> {
+    let mut idx = train.to_vec();
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut idx);
+    let n = ((idx.len() as f64 * frac).round() as usize).max(1);
+    idx.truncate(n);
+    idx
+}
+
+/// Fixed-shape f32 batches with per-element masks for the AOT trainer.
+///
+/// `xs`: normalised features, `ys`: normalised targets with None =
+/// undefined. Rows are padded to a multiple of `batch` with zero masks.
+pub struct Batches {
+    pub n_batches: usize,
+    pub batch: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// (n_batches * batch * in_dim) row-major.
+    pub x: Vec<f32>,
+    /// (n_batches * batch * out_dim).
+    pub y: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+pub fn make_batches(
+    xs: &[Vec<f64>],
+    ys: &[Vec<Option<f64>>],
+    std_x: &Standardizer,
+    std_y: &Standardizer,
+    batch: usize,
+) -> Batches {
+    assert_eq!(xs.len(), ys.len());
+    let in_dim = std_x.dim();
+    let out_dim = std_y.dim();
+    let n = xs.len();
+    let n_batches = n.div_ceil(batch).max(1);
+    let total = n_batches * batch;
+    let mut x = vec![0.0f32; total * in_dim];
+    let mut y = vec![0.0f32; total * out_dim];
+    let mut mask = vec![0.0f32; total * out_dim];
+    for i in 0..n {
+        let xf = std_x.forward(&xs[i]);
+        for (j, v) in xf.iter().enumerate() {
+            x[i * in_dim + j] = *v as f32;
+        }
+        for (j, t) in ys[i].iter().enumerate() {
+            if let Some(v) = t {
+                y[i * out_dim + j] = std_y.forward_one(j, *v) as f32;
+                mask[i * out_dim + j] = 1.0;
+            }
+        }
+    }
+    Batches { n_batches, batch, in_dim, out_dim, x, y, mask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::machine;
+
+    #[test]
+    fn triplets_scale_like_paper() {
+        let t = zoo_triplets();
+        // paper: 475 unique triplets; our zoo should land in the hundreds
+        assert!(t.len() >= 300 && t.len() <= 1200, "{}", t.len());
+    }
+
+    #[test]
+    fn enumerate_filters_invalid() {
+        let configs = enumerate_configs(MAX_CONFIGS, 1);
+        assert!(!configs.is_empty());
+        assert!(configs.len() <= MAX_CONFIGS);
+        for c in &configs {
+            assert!(c.f <= c.im);
+        }
+    }
+
+    #[test]
+    fn enumerate_is_deterministic() {
+        assert_eq!(enumerate_configs(100, 7), enumerate_configs(100, 7));
+        assert_ne!(enumerate_configs(100, 7), enumerate_configs(100, 8));
+    }
+
+    #[test]
+    fn split_proportions_and_disjoint() {
+        let s = split(1000, 3);
+        assert_eq!(s.train.len(), 800);
+        assert_eq!(s.val.len(), 100);
+        assert_eq!(s.test.len(), 100);
+        let mut all: Vec<usize> =
+            s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        all.sort();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fraction_sizes() {
+        let train: Vec<usize> = (0..2500).collect();
+        assert_eq!(fraction(&train, 0.01, 1).len(), 25);
+        assert_eq!(fraction(&train, 0.001, 1).len(), 3);
+        assert!(fraction(&train, 0.0001, 1).len() >= 1);
+    }
+
+    #[test]
+    fn profiled_dataset_shapes() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let configs = enumerate_configs(50, 2);
+        let ds = profile_prim_dataset(&sim, &configs);
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.targets[0].len(), catalog().len());
+        let counts = ds.points_per_primitive();
+        // direct/im2/mec defined everywhere
+        assert_eq!(counts[0], 50);
+    }
+
+    #[test]
+    fn table2_structure() {
+        // always-applicable families have more points than stride-1-only,
+        // which have more than the f-specific families (paper Table 2)
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let configs = enumerate_configs(800, 4);
+        let ds = profile_prim_dataset(&sim, &configs);
+        let counts = ds.points_per_primitive();
+        let idx = |name: &str| crate::primitives::index_of(name).unwrap();
+        let direct = counts[idx("direct-sum2d")];
+        let kn2 = counts[idx("kn2row")];
+        let wino3 = counts[idx("winograd-2x2-3x3")];
+        let wino5 = counts[idx("winograd-2x2-5x5")];
+        assert!(direct > kn2, "{direct} {kn2}");
+        assert!(kn2 > wino3, "{kn2} {wino3}");
+        assert!(wino3 > 0 && wino5 > 0);
+    }
+
+    #[test]
+    fn batches_pad_with_zero_mask() {
+        let xs = vec![vec![1.0, 2.0]; 5];
+        let ys: Vec<Vec<Option<f64>>> =
+            vec![vec![Some(1.0), None]; 5];
+        let sx = Standardizer::fit(&xs, false);
+        let sy = Standardizer::fit_masked(&ys, true);
+        let b = make_batches(&xs, &ys, &sx, &sy, 4);
+        assert_eq!(b.n_batches, 2);
+        // rows 5..8 fully masked
+        for i in 5..8 {
+            for j in 0..2 {
+                assert_eq!(b.mask[i * 2 + j], 0.0);
+            }
+        }
+        // col 1 masked everywhere
+        assert_eq!(b.mask[0 * 2 + 1], 0.0);
+        assert_eq!(b.mask[0 * 2], 1.0);
+    }
+
+    #[test]
+    fn dlt_dataset_flat_targets() {
+        let sim = Simulator::new(machine::amd_a10_7850k());
+        let ds = profile_dlt_dataset(&sim, &[(16, 28), (64, 56)]);
+        let flat = ds.flat_targets();
+        assert_eq!(flat[0].len(), 9);
+        // diagonal (0, 4, 8) undefined
+        assert!(flat[0][0].is_none() && flat[0][4].is_none() && flat[0][8].is_none());
+        assert!(flat[0][1].is_some());
+    }
+}

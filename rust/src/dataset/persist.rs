@@ -1,0 +1,162 @@
+//! Dataset persistence: CSV save/load so profiled datasets (simulated or
+//! real-device) can be shipped between machines — the paper's "factory
+//! profiling once" deployment story needs the dataset to be an artifact.
+
+use super::{DltDataset, PrimDataset};
+use crate::layers::ConvConfig;
+use crate::primitives::catalog;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+impl PrimDataset {
+    /// CSV: header `k,c,im,s,f,<primitive names...>`; undefined = empty.
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("k,c,im,s,f");
+        for p in catalog() {
+            out.push(',');
+            out.push_str(p.name);
+        }
+        out.push('\n');
+        for (cfg, row) in self.configs.iter().zip(&self.targets) {
+            out.push_str(&format!("{},{},{},{},{}", cfg.k, cfg.c, cfg.im, cfg.s, cfg.f));
+            for t in row {
+                out.push(',');
+                if let Some(t) = t {
+                    out.push_str(&format!("{t:.9e}"));
+                }
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load_csv(path: &Path) -> Result<PrimDataset> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty csv")?;
+        let cols: Vec<&str> = header.split(',').collect();
+        ensure!(cols.len() == 5 + catalog().len(), "column count mismatch");
+        for (c, p) in cols[5..].iter().zip(catalog()) {
+            ensure!(*c == p.name, "catalog order changed: {c} != {}", p.name);
+        }
+        let mut configs = Vec::new();
+        let mut targets = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != cols.len() {
+                bail!("row {ln}: {} fields", f.len());
+            }
+            configs.push(ConvConfig::new(
+                f[0].parse()?,
+                f[1].parse()?,
+                f[2].parse()?,
+                f[3].parse()?,
+                f[4].parse()?,
+            ));
+            targets.push(
+                f[5..]
+                    .iter()
+                    .map(|s| if s.is_empty() { Ok(None) } else { s.parse().map(Some) })
+                    .collect::<std::result::Result<Vec<Option<f64>>, _>>()?,
+            );
+        }
+        Ok(PrimDataset { configs, targets })
+    }
+}
+
+impl DltDataset {
+    /// CSV: `c,im,<9 directed costs row-major>` (identity entries 0).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("c,im");
+        for src in crate::primitives::Layout::ALL {
+            for dst in crate::primitives::Layout::ALL {
+                out.push_str(&format!(",{}_{}", src.name(), dst.name()));
+            }
+        }
+        out.push('\n');
+        for (&(c, im), m) in self.pairs.iter().zip(&self.targets) {
+            out.push_str(&format!("{c},{im}"));
+            for row in m {
+                for v in row {
+                    out.push_str(&format!(",{v:.9e}"));
+                }
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load_csv(path: &Path) -> Result<DltDataset> {
+        let text = std::fs::read_to_string(path)?;
+        let mut pairs = Vec::new();
+        let mut targets = Vec::new();
+        for line in text.lines().skip(1) {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            ensure!(f.len() == 11, "bad dlt row");
+            pairs.push((f[0].parse()?, f[1].parse()?));
+            let mut m = [[0.0; 3]; 3];
+            for i in 0..3 {
+                for j in 0..3 {
+                    m[i][j] = f[2 + i * 3 + j].parse()?;
+                }
+            }
+            targets.push(m);
+        }
+        Ok(DltDataset { pairs, targets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset;
+    use crate::simulator::{machine, Simulator};
+
+    #[test]
+    fn prim_round_trip() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let configs = dataset::enumerate_configs(40, 5);
+        let ds = dataset::profile_prim_dataset(&sim, &configs);
+        let path = std::env::temp_dir().join("primsel_prim.csv");
+        ds.save_csv(&path).unwrap();
+        let back = PrimDataset::load_csv(&path).unwrap();
+        assert_eq!(back.configs, ds.configs);
+        for (a, b) in back.targets.iter().zip(&ds.targets) {
+            for (x, y) in a.iter().zip(b) {
+                match (x, y) {
+                    (Some(x), Some(y)) => assert!((x - y).abs() < 1e-9 * y.abs()),
+                    (None, None) => {}
+                    _ => panic!("mask mismatch"),
+                }
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn dlt_round_trip() {
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let ds = dataset::profile_dlt_dataset(&sim, &[(8, 14), (64, 28)]);
+        let path = std::env::temp_dir().join("primsel_dlt.csv");
+        ds.save_csv(&path).unwrap();
+        let back = DltDataset::load_csv(&path).unwrap();
+        assert_eq!(back.pairs, ds.pairs);
+        let (a, b) = (back.targets[1][0][2], ds.targets[1][0][2]);
+        assert!((a - b).abs() < 1e-8 * b.abs(), "{a} vs {b}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_reordered_catalog() {
+        let path = std::env::temp_dir().join("primsel_bad.csv");
+        std::fs::write(&path, "k,c,im,s,f,wrong-name\n").unwrap();
+        assert!(PrimDataset::load_csv(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,137 @@
+//! Log-standardisation (paper §3.3): `x̃ = (log x − mean) / std`,
+//! fitted per column, applied to both model inputs and targets.
+
+/// Per-column (log-)standardiser.
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub log: bool,
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Fit on dense rows. `log` applies the paper's log transform first.
+    pub fn fit(rows: &[Vec<f64>], log: bool) -> Self {
+        let dim = rows.first().map_or(0, |r| r.len());
+        let masked: Vec<Vec<Option<f64>>> = rows
+            .iter()
+            .map(|r| r.iter().map(|&v| Some(v)).collect())
+            .collect();
+        Self::fit_masked_dim(&masked, log, dim)
+    }
+
+    /// Fit on rows with undefined entries (ignored in the statistics).
+    pub fn fit_masked(rows: &[Vec<Option<f64>>], log: bool) -> Self {
+        let dim = rows.first().map_or(0, |r| r.len());
+        Self::fit_masked_dim(rows, log, dim)
+    }
+
+    fn fit_masked_dim(rows: &[Vec<Option<f64>>], log: bool, dim: usize) -> Self {
+        let mut sum = vec![0.0; dim];
+        let mut sum2 = vec![0.0; dim];
+        let mut count = vec![0usize; dim];
+        for row in rows {
+            for (j, v) in row.iter().enumerate() {
+                if let Some(v) = v {
+                    let z = if log { v.max(1e-12).ln() } else { *v };
+                    sum[j] += z;
+                    sum2[j] += z * z;
+                    count[j] += 1;
+                }
+            }
+        }
+        let mean: Vec<f64> = (0..dim)
+            .map(|j| if count[j] > 0 { sum[j] / count[j] as f64 } else { 0.0 })
+            .collect();
+        let std: Vec<f64> = (0..dim)
+            .map(|j| {
+                if count[j] > 1 {
+                    let var = sum2[j] / count[j] as f64 - mean[j] * mean[j];
+                    var.max(1e-12).sqrt()
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Self { log, mean, std }
+    }
+
+    pub fn forward_one(&self, j: usize, v: f64) -> f64 {
+        let z = if self.log { v.max(1e-12).ln() } else { v };
+        (z - self.mean[j]) / self.std[j]
+    }
+
+    pub fn inverse_one(&self, j: usize, t: f64) -> f64 {
+        let z = t * self.std[j] + self.mean[j];
+        if self.log {
+            z.exp()
+        } else {
+            z
+        }
+    }
+
+    pub fn forward(&self, row: &[f64]) -> Vec<f64> {
+        row.iter().enumerate().map(|(j, &v)| self.forward_one(j, v)).collect()
+    }
+
+    pub fn inverse(&self, row: &[f64]) -> Vec<f64> {
+        row.iter().enumerate().map(|(j, &t)| self.inverse_one(j, t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let rows = vec![vec![1.0, 10.0], vec![2.0, 100.0], vec![3.0, 1000.0]];
+        for log in [false, true] {
+            let s = Standardizer::fit(&rows, log);
+            for row in &rows {
+                let t = s.forward(row);
+                let back = s.inverse(&t);
+                for (a, b) in back.iter().zip(row) {
+                    assert!((a - b).abs() < 1e-9 * b.abs().max(1.0), "{a} {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn standardised_moments() {
+        let rows: Vec<Vec<f64>> = (1..=100).map(|i| vec![i as f64]).collect();
+        let s = Standardizer::fit(&rows, true);
+        let ts: Vec<f64> = rows.iter().map(|r| s.forward(r)[0]).collect();
+        let mean = ts.iter().sum::<f64>() / ts.len() as f64;
+        let var = ts.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / ts.len() as f64;
+        assert!(mean.abs() < 1e-10);
+        assert!((var - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_fit_ignores_undefined() {
+        let rows = vec![
+            vec![Some(1.0), None],
+            vec![Some(3.0), Some(5.0)],
+            vec![None, Some(5.0)],
+        ];
+        let s = Standardizer::fit_masked(&rows, false);
+        assert!((s.mean[0] - 2.0).abs() < 1e-12);
+        assert!((s.mean[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_compresses_magnitude() {
+        // the paper's motivation: wide-magnitude times become comparable
+        let rows = vec![vec![1e-3], vec![1.0], vec![1e3]];
+        let s = Standardizer::fit(&rows, true);
+        let t: Vec<f64> = rows.iter().map(|r| s.forward(r)[0]).collect();
+        assert!((t[0] + t[2]).abs() < 1e-9); // symmetric in log space
+        assert!(t[1].abs() < 1e-9);
+    }
+}

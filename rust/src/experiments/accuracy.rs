@@ -1,0 +1,138 @@
+//! Figures 4–6: performance-model estimation accuracy (MdRAE).
+
+use super::workbench::column_standardizer;
+use super::Workbench;
+use crate::perfmodel::metrics::{mdrae_per_column, median};
+use crate::perfmodel::predictor::DltPredictor;
+use crate::perfmodel::Predictor;
+use crate::primitives::{catalog, Layout};
+use crate::report::Table;
+use anyhow::Result;
+
+/// Figure 4: MdRAE of Lin / NN1 / NN2 per primitive, Intel test set.
+pub fn fig4(wb: &mut Workbench) -> Result<Vec<Table>> {
+    // phase 1: everything that mutates the workbench (training / caching)
+    let lin = wb.lin_model("intel")?;
+    let nn1_params = wb.nn1_params_all("intel")?;
+    let nn2_params = wb.nn2_params("intel")?;
+    let (xs, targets, sx, sy) = wb.prim_test_data("intel")?;
+
+    // phase 2: inference only (borrows wb.rt immutably)
+    let lin_md = mdrae_per_column(&lin.predict_raw(&xs), &targets);
+
+    let nn2 = Predictor::new(&wb.rt, "nn2", nn2_params, sx.clone(), sy.clone())?;
+    let nn2_md = mdrae_per_column(&nn2.predict_raw(&xs)?, &targets);
+
+    let mut nn1_md = Vec::with_capacity(catalog().len());
+    for (p, params) in nn1_params.into_iter().enumerate() {
+        let sy1 = column_standardizer(&sy, p);
+        let m = Predictor::new(&wb.rt, "nn1", params, sx.clone(), sy1)?;
+        let preds = m.predict_raw(&xs)?;
+        let actual: Vec<Vec<Option<f64>>> =
+            targets.iter().map(|row| vec![row[p]]).collect();
+        nn1_md.push(mdrae_per_column(&preds, &actual)[0]);
+    }
+
+    let mut t = Table::new(
+        "Figure 4 — MdRAE per primitive on the Intel test set",
+        &["primitive", "Lin", "NN1", "NN2"],
+    );
+    for (i, prim) in catalog().iter().enumerate() {
+        t.row(vec![
+            prim.name.into(),
+            format!("{:.1}%", lin_md[i] * 100.0),
+            format!("{:.1}%", nn1_md[i] * 100.0),
+            format!("{:.1}%", nn2_md[i] * 100.0),
+        ]);
+    }
+    let summary =
+        |v: &[f64]| median(&v.iter().copied().filter(|x| x.is_finite()).collect::<Vec<_>>());
+    t.row(vec![
+        "MEDIAN".into(),
+        format!("{:.1}%", summary(&lin_md) * 100.0),
+        format!("{:.1}%", summary(&nn1_md) * 100.0),
+        format!("{:.1}%", summary(&nn2_md) * 100.0),
+    ]);
+    Ok(vec![t])
+}
+
+/// Figure 5: MdRAE of NN2 on the AMD and ARM test sets.
+pub fn fig5(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let mut per_platform = Vec::new();
+    for platform in ["amd", "arm"] {
+        let params = wb.nn2_params(platform)?;
+        let (xs, targets, sx, sy) = wb.prim_test_data(platform)?;
+        let nn2 = Predictor::new(&wb.rt, "nn2", params, sx, sy)?;
+        let md = mdrae_per_column(&nn2.predict_raw(&xs)?, &targets);
+        per_platform.push(md);
+    }
+    let mut t = Table::new(
+        "Figure 5 — NN2 MdRAE per primitive on AMD / ARM test sets",
+        &["primitive", "AMD", "ARM"],
+    );
+    for (i, prim) in catalog().iter().enumerate() {
+        t.row(vec![
+            prim.name.into(),
+            format!("{:.1}%", per_platform[0][i] * 100.0),
+            format!("{:.1}%", per_platform[1][i] * 100.0),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Figure 6: MdRAE of the DLT-cost models (Lin / NN1 / NN2) on Intel.
+pub fn fig6(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let dlt_nn1 = wb.dlt_nn1_params_all("intel")?;
+    let dlt_nn2 = wb.dlt_nn2_params("intel")?;
+    let (pairs, actuals, sx, sy) = wb.dlt_test_data("intel")?;
+
+    // Lin fit needs the training split: grab it in a scoped mutable borrow
+    let lin = {
+        let pd = wb.platform("intel")?;
+        let train = pd.dlt.subset(&pd.dlt_split.train);
+        let txs: Vec<Vec<f64>> = train.features().iter().map(|f| f.to_vec()).collect();
+        crate::perfmodel::LinModel::fit(&txs, &train.flat_targets(), sx.clone(), sy.clone())?
+    };
+    let xs: Vec<Vec<f64>> =
+        pairs.iter().map(|&(c, im)| vec![c as f64, im as f64]).collect();
+    let lin_md = mdrae_per_column(&lin.predict_raw(&xs), &actuals);
+
+    let nn2 = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_nn2, sx.clone(), sy.clone())?;
+    let mats = nn2.predict_pairs(&pairs)?;
+    let preds: Vec<Vec<f64>> =
+        mats.iter().map(|m| m.iter().flatten().copied().collect()).collect();
+    let nn2_md = mdrae_per_column(&preds, &actuals);
+
+    let mut nn1_md = Vec::with_capacity(9);
+    for (p, params) in dlt_nn1.into_iter().enumerate() {
+        let sy1 = column_standardizer(&sy, p);
+        let m = Predictor::new(&wb.rt, "dlt_nn1", params, sx.clone(), sy1)?;
+        let preds = m.predict_raw(&xs)?;
+        let actual: Vec<Vec<Option<f64>>> =
+            actuals.iter().map(|row| vec![row[p]]).collect();
+        nn1_md.push(mdrae_per_column(&preds, &actual)[0]);
+    }
+
+    let mut labels = Vec::new();
+    for src in Layout::ALL {
+        for dst in Layout::ALL {
+            labels.push(format!("{}->{}", src.name(), dst.name()));
+        }
+    }
+    let mut t = Table::new(
+        "Figure 6 — DLT-cost MdRAE on the Intel test set",
+        &["transformation", "Lin", "NN1", "NN2"],
+    );
+    for i in 0..9 {
+        if i % 4 == 0 {
+            continue; // identity transforms are skipped (cost zero)
+        }
+        t.row(vec![
+            labels[i].clone(),
+            format!("{:.1}%", lin_md[i] * 100.0),
+            format!("{:.1}%", nn1_md[i] * 100.0),
+            format!("{:.1}%", nn2_md[i] * 100.0),
+        ]);
+    }
+    Ok(vec![t])
+}

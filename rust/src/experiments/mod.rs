@@ -1,0 +1,49 @@
+//! Experiment regenerators — one per table/figure of the paper's
+//! evaluation (see DESIGN.md §6 for the index). Each experiment prints a
+//! table whose rows/series mirror the paper's artefact and dumps a CSV
+//! next to it under `results/`.
+
+mod accuracy;
+mod quality;
+mod speed;
+mod tables;
+mod transfer;
+mod workbench;
+
+pub use quality::model_source;
+pub use workbench::Workbench;
+
+use crate::report::Table;
+use anyhow::Result;
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "table1", "table2", "table3", "fig4", "fig5", "fig6", "table4", "fig7",
+    "fig8", "fig9", "fig10", "table5",
+];
+
+/// Run one experiment by id. Returns the rendered tables.
+pub fn run(id: &str, wb: &mut Workbench) -> Result<Vec<Table>> {
+    let tables = match id {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(wb)?,
+        "table3" => tables::table3(),
+        "fig4" => accuracy::fig4(wb)?,
+        "fig5" => accuracy::fig5(wb)?,
+        "fig6" => accuracy::fig6(wb)?,
+        "table4" => speed::table4(wb)?,
+        "fig7" => quality::fig7(wb)?,
+        "fig8" => transfer::fig8(wb)?,
+        "fig9" => transfer::fig9(wb, "fig9", &[0.01, 0.025, 0.05, 0.10, 0.25])?,
+        "fig10" => transfer::fig9(wb, "fig10", &[0.001])?,
+        "table5" => transfer::table5(wb)?,
+        _ => anyhow::bail!("unknown experiment id {id} (known: {ALL_IDS:?})"),
+    };
+    // persist CSVs
+    std::fs::create_dir_all("results").ok();
+    for (i, t) in tables.iter().enumerate() {
+        let path = format!("results/{id}_{i}.csv");
+        std::fs::write(&path, t.to_csv()).ok();
+    }
+    Ok(tables)
+}

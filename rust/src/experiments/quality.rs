@@ -1,0 +1,85 @@
+//! Figure 7: inference-time increase of networks optimised with the
+//! performance model vs optimised with profiled ("measured") costs.
+
+use super::Workbench;
+use crate::networks::{self, Network};
+use crate::perfmodel::predictor::DltPredictor;
+use crate::perfmodel::Predictor;
+use crate::report::Table;
+use crate::selection::{self, TableSource};
+use anyhow::Result;
+
+/// Build a TableSource for a network from the two predictors (step ii of
+/// the paper's pipeline): one batched call for all layers, one for all
+/// edge tensors.
+pub fn model_source(
+    net: &Network,
+    prim: &Predictor,
+    dlt: &DltPredictor,
+) -> Result<TableSource> {
+    let rows = prim.predict_configs(&net.layers)?;
+    let mut keys: Vec<(u32, u32)> = net
+        .edges
+        .iter()
+        .map(|&(u, v)| (net.layers[u].k, net.layers[v].im))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    let mats = dlt.predict_pairs(&keys)?;
+    Ok(TableSource {
+        prim: rows,
+        dlt_keys: keys,
+        dlt_mats: mats,
+        configs: net.layers.clone(),
+    })
+}
+
+/// The relative inference-time increase of model-driven selection vs
+/// profile-driven selection, evaluated under measured (simulated) costs.
+pub fn increase_for(
+    wb: &mut Workbench,
+    net: &Network,
+    platform: &str,
+) -> Result<f64> {
+    let nn2_params = wb.nn2_params(platform)?;
+    let dlt_params = wb.dlt_nn2_params(platform)?;
+    let (sx, sy) = wb.prim_standardizers(platform)?;
+    let (dx, dy) = wb.dlt_standardizers(platform)?;
+    let sim = wb.platform(platform)?.sim.clone();
+
+    let prim = Predictor::new(&wb.rt, "nn2", nn2_params, sx, sy)?;
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
+    let source = model_source(net, &prim, &dlt)?;
+
+    let sel_model = selection::select(net, &source)?;
+    let sel_profiled = selection::select(net, &sim)?;
+    let t_model = selection::evaluate(net, &sel_model, &sim)?;
+    let t_profiled = selection::evaluate(net, &sel_profiled, &sim)?;
+    Ok(t_model / t_profiled - 1.0)
+}
+
+/// Figure 7 over the six selection networks and the three platforms.
+pub fn fig7(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let nets = networks::selection_networks();
+    let mut t = Table::new(
+        "Figure 7 — relative inference-time increase (model- vs profile-optimised)",
+        &["network", "Intel", "AMD", "ARM"],
+    );
+    let mut worst: f64 = 0.0;
+    for net in &nets {
+        let mut cells = vec![net.name.clone()];
+        for platform in ["intel", "amd", "arm"] {
+            let inc = increase_for(wb, net, platform)?;
+            worst = worst.max(inc);
+            cells.push(format!("{:.2}%", inc * 100.0));
+        }
+        t.row(cells);
+    }
+    t.row(vec![
+        "paper bound".into(),
+        "<= 1.1%".into(),
+        format!("(our worst: {:.2}%)", worst * 100.0),
+        "".into(),
+    ]);
+    Ok(vec![t])
+}

@@ -1,0 +1,63 @@
+//! Table 4: total time to optimise each CNN — performance-model inference
+//! (milliseconds, wall-clock measured on this host through PJRT) vs the
+//! profiling approach (simulated device wall-clock: 25 runs per applicable
+//! primitive per layer, paper §4.1.1/§5.2).
+
+use super::quality::model_source;
+use super::Workbench;
+use crate::networks;
+use crate::perfmodel::predictor::DltPredictor;
+use crate::perfmodel::Predictor;
+use crate::report::{fmt_time_ms, Table};
+use crate::selection;
+use anyhow::Result;
+use std::time::Instant;
+
+pub fn table4(wb: &mut Workbench) -> Result<Vec<Table>> {
+    // model inference is timed with the Intel-trained models (as the paper
+    // produces estimates on the Intel platform)
+    let nn2_params = wb.nn2_params("intel")?;
+    let dlt_params = wb.dlt_nn2_params("intel")?;
+    let (sx, sy) = wb.prim_standardizers("intel")?;
+    let (dx, dy) = wb.dlt_standardizers("intel")?;
+    let sims: Vec<_> = ["intel", "amd", "arm"]
+        .iter()
+        .map(|p| wb.platform(p).map(|pd| pd.sim.clone()))
+        .collect::<Result<_>>()?;
+
+    let prim = Predictor::new(&wb.rt, "nn2", nn2_params, sx, sy)?;
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
+
+    let mut t = Table::new(
+        "Table 4 — time to optimise a CNN: perf-model vs profiling",
+        &["CNN", "Perf. Model Inf.", "Intel prof.", "AMD prof.", "ARM prof.", "speedup vs ARM"],
+    );
+    for net in networks::selection_networks() {
+        // warm the predict executables so we time inference, not compile
+        let _ = model_source(&net, &prim, &dlt)?;
+        let t0 = Instant::now();
+        let source = model_source(&net, &prim, &dlt)?;
+        let _sel = selection::select(&net, &source)?;
+        let model_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut prof_ms = Vec::new();
+        for sim in &sims {
+            let total: f64 = net
+                .layers
+                .iter()
+                .map(|cfg| sim.profiling_wallclock_ms(cfg))
+                .sum();
+            prof_ms.push(total);
+        }
+        let speedup = prof_ms[2] / model_ms;
+        t.row(vec![
+            net.name.clone(),
+            fmt_time_ms(model_ms),
+            fmt_time_ms(prof_ms[0]),
+            fmt_time_ms(prof_ms[1]),
+            fmt_time_ms(prof_ms[2]),
+            format!("{speedup:.0}x"),
+        ]);
+    }
+    Ok(vec![t])
+}

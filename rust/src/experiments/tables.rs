@@ -1,0 +1,110 @@
+//! Tables 1–3: parameter ranges, dataset sizes, hyper-parameters.
+
+use super::Workbench;
+use crate::perfmodel::hparams_for;
+use crate::primitives::{catalog, Family};
+use crate::report::Table;
+use anyhow::Result;
+
+/// Table 1: common parameter values for convolutional layers.
+pub fn table1() -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 1 — common parameter values (paper ranges)",
+        &["parameter", "meaning", "common range"],
+    );
+    t.row(vec!["k".into(), "#kernels".into(), "1 to 2048".into()]);
+    t.row(vec!["c".into(), "#channels".into(), "1 to 2048".into()]);
+    t.row(vec!["im".into(), "image size".into(), "7 to 299".into()]);
+    t.row(vec!["s".into(), "stride".into(), "1, 2 or 4".into()]);
+    t.row(vec!["f".into(), "kernel size".into(), "1 to 11 (odd)".into()]);
+    vec![t]
+}
+
+/// Table 2: datapoints per primitive group (paper: 4665 / 1974 / 419 / 417).
+pub fn table2(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let pd = wb.platform("intel")?;
+    let counts = pd.prim.points_per_primitive();
+    let cat = catalog();
+
+    // the paper groups by applicability class
+    let group_count = |fam: Family| -> usize {
+        cat.iter()
+            .enumerate()
+            .filter(|(_, p)| p.family == fam)
+            .map(|(i, _)| counts[i])
+            .max()
+            .unwrap_or(0)
+    };
+    let mut t = Table::new(
+        "Table 2 — datapoints per primitive group (ours vs paper)",
+        &["primitives", "# data points (ours)", "paper"],
+    );
+    t.row(vec![
+        "direct, mec, im2".into(),
+        format!("{}", group_count(Family::Direct)),
+        "4665".into(),
+    ]);
+    t.row(vec![
+        "kn2".into(),
+        format!("{}", group_count(Family::Kn2)),
+        "1974".into(),
+    ]);
+    t.row(vec![
+        "wino3, conv-1x1".into(),
+        format!(
+            "{} / {}",
+            group_count(Family::Wino3),
+            group_count(Family::Conv1x1)
+        ),
+        "419".into(),
+    ]);
+    t.row(vec![
+        "wino5".into(),
+        format!("{}", group_count(Family::Wino5)),
+        "417".into(),
+    ]);
+    t.row(vec![
+        "total configs".into(),
+        format!("{}", pd.prim.len()),
+        "~4665".into(),
+    ]);
+
+    let mut t2 = Table::new(
+        "Table 2b — per-primitive datapoint counts",
+        &["primitive", "# points"],
+    );
+    for (i, p) in cat.iter().enumerate() {
+        t2.row(vec![p.name.into(), format!("{}", counts[i])]);
+    }
+    Ok(vec![t, t2])
+}
+
+/// Table 3: hyper-parameters used for the neural performance models.
+pub fn table3() -> Vec<Table> {
+    let n1 = hparams_for("nn1");
+    let n2 = hparams_for("nn2");
+    let mut t = Table::new(
+        "Table 3 — performance-model hyper-parameters",
+        &["setting", "NN1", "NN2"],
+    );
+    t.row(vec!["optimizer".into(), "Adam".into(), "Adam".into()]);
+    t.row(vec!["learning rate".into(), format!("{}", n1.lr), format!("{}", n2.lr)]);
+    t.row(vec![
+        "weight decay".into(),
+        format!("{}", n1.weight_decay),
+        format!("{:e}", n2.weight_decay),
+    ]);
+    t.row(vec!["batch size".into(), format!("{}", n1.batch), format!("{}", n2.batch)]);
+    t.row(vec![
+        "iterations".into(),
+        "early stopping".into(),
+        "early stopping".into(),
+    ]);
+    t.row(vec!["non-linearity".into(), "ReLU".into(), "ReLU".into()]);
+    t.row(vec![
+        "architecture".into(),
+        "5x16x64x64x16x1".into(),
+        "5x128x512x512x128xn".into(),
+    ]);
+    vec![t]
+}

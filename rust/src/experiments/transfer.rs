@@ -1,0 +1,230 @@
+//! Figures 8–10 and Table 5: transfer learning across platforms.
+
+use super::quality::model_source;
+use super::Workbench;
+use crate::networks;
+use crate::perfmodel::metrics::{mdrae_all, mdrae_per_column};
+use crate::perfmodel::predictor::DltPredictor;
+use crate::perfmodel::transfer::factor_correction;
+use crate::perfmodel::{ParamStore, Predictor};
+use crate::primitives::{catalog, Family};
+use crate::report::Table;
+use crate::selection;
+use anyhow::Result;
+
+/// Evaluate a primitive-model parameter set on a target platform:
+/// (MdRAE on the target test set, GoogLeNet inference increase).
+/// `std_from` names the platform whose standardisers the params were
+/// trained under ("intel" for direct transfer, the target otherwise).
+fn eval_on_target(
+    wb: &mut Workbench,
+    params: ParamStore,
+    std_from: &str,
+    target: &str,
+    factors: Option<Vec<f64>>,
+) -> Result<(f64, f64)> {
+    let (sx, sy) = wb.prim_standardizers(std_from)?;
+    let (xs, targets, _, _) = wb.prim_test_data(target)?;
+    let dlt_params = wb.dlt_nn2_params(target)?;
+    let (dx, dy) = wb.dlt_standardizers(target)?;
+    let sim = wb.platform(target)?.sim.clone();
+
+    let mut prim = Predictor::new(&wb.rt, "nn2", params, sx, sy)?;
+    if let Some(f) = factors {
+        prim.factors = f;
+    }
+    let md = mdrae_all(&prim.predict_raw(&xs)?, &targets);
+
+    // GoogLeNet selection quality (the paper's §4.4 target network)
+    let net = networks::googlenet();
+    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
+    let source = model_source(&net, &prim, &dlt)?;
+    let sel_model = selection::select(&net, &source)?;
+    let sel_prof = selection::select(&net, &sim)?;
+    let t_model = selection::evaluate(&net, &sel_model, &sim)?;
+    let t_prof = selection::evaluate(&net, &sel_prof, &sim)?;
+    Ok((md, t_model / t_prof - 1.0))
+}
+
+/// Figure 8: Intel model applied to AMD/ARM — directly, factor-corrected
+/// (1% of target samples), and a natively trained model.
+pub fn fig8(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let intel = wb.nn2_params("intel")?;
+    let mut ta = Table::new(
+        "Figure 8a — primitive-estimation MdRAE on target platforms",
+        &["target", "Intel direct", "Factor Intel (1%)", "native NN2"],
+    );
+    let mut tb = Table::new(
+        "Figure 8b — GoogLeNet inference increase vs profiled-optimal",
+        &["target", "Intel direct", "Factor Intel (1%)", "native NN2"],
+    );
+    for target in ["amd", "arm"] {
+        // factor correction from 1% of the target's training data
+        let (sx, sy) = wb.prim_standardizers("intel")?;
+        let factors = {
+            let pd = wb.platform(target)?;
+            let idx = crate::dataset::fraction(&pd.prim_split.train, 0.01, 77);
+            let cal = pd.prim.subset(&idx);
+            let xs: Vec<Vec<f64>> =
+                cal.features().iter().map(|f| f.to_vec()).collect();
+            let targets = cal.targets.clone();
+            let pred = Predictor::new(&wb.rt, "nn2", intel.clone(), sx, sy)?;
+            factor_correction(&pred, &xs, &targets)?
+        };
+
+        let (md_direct, inc_direct) =
+            eval_on_target(wb, intel.clone(), "intel", target, None)?;
+        let (md_factor, inc_factor) =
+            eval_on_target(wb, intel.clone(), "intel", target, Some(factors))?;
+        let native = wb.nn2_params(target)?;
+        let (md_native, inc_native) = eval_on_target(wb, native, target, target, None)?;
+
+        ta.row(vec![
+            target.into(),
+            format!("{:.0}%", md_direct * 100.0),
+            format!("{:.0}%", md_factor * 100.0),
+            format!("{:.1}%", md_native * 100.0),
+        ]);
+        tb.row(vec![
+            target.into(),
+            format!("{:.1}%", inc_direct * 100.0),
+            format!("{:.1}%", inc_factor * 100.0),
+            format!("{:.2}%", inc_native * 100.0),
+        ]);
+    }
+    Ok(vec![ta, tb])
+}
+
+/// Figures 9/10: scratch vs fine-tuned models at training-data fractions.
+pub fn fig9(wb: &mut Workbench, _id: &str, fractions: &[f64]) -> Result<Vec<Table>> {
+    let intel = wb.nn2_params("intel")?;
+    let repeats = wb.repeats;
+    let mut t = Table::new(
+        "Figures 9/10 — predictive + selection performance vs data fraction",
+        &["target", "fraction", "mode", "MdRAE (mean)", "GoogLeNet incr (mean)"],
+    );
+    for target in ["amd", "arm"] {
+        // reference: native model on all training data (the dotted line)
+        let native = wb.nn2_params(target)?;
+        let (md_full, inc_full) = eval_on_target(wb, native, target, target, None)?;
+        t.row(vec![
+            target.into(),
+            "100%".into(),
+            "native-full".into(),
+            format!("{:.1}%", md_full * 100.0),
+            format!("{:.2}%", inc_full * 100.0),
+        ]);
+        for &frac in fractions {
+            for mode in ["scratch", "finetune"] {
+                let mut mds = Vec::new();
+                let mut incs = Vec::new();
+                for rep in 0..repeats {
+                    let idx = {
+                        let pd = wb.platform(target)?;
+                        crate::dataset::fraction(
+                            &pd.prim_split.train,
+                            frac,
+                            1000 + rep as u64,
+                        )
+                    };
+                    let params = if mode == "scratch" {
+                        wb.train_scratch(target, &idx, 500 + rep as i32)?
+                    } else {
+                        wb.finetune(intel.clone(), target, &idx)?
+                    };
+                    let (md, inc) = eval_on_target(wb, params, target, target, None)?;
+                    mds.push(md);
+                    incs.push(inc);
+                }
+                let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+                t.row(vec![
+                    target.into(),
+                    format!("{:.1}%", frac * 100.0),
+                    mode.into(),
+                    format!("{:.1}%", mean(&mds) * 100.0),
+                    format!("{:.2}%", mean(&incs) * 100.0),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 5: cross-family transferability. Fine-tune the Intel model on
+/// AMD data from one family only; evaluate per family; normalise rows so
+/// the diagonal is 1.
+pub fn table5(wb: &mut Workbench) -> Result<Vec<Table>> {
+    let intel = wb.nn2_params("intel")?;
+    let fams = Family::ALL;
+    let fam_cols: Vec<Vec<usize>> = fams
+        .iter()
+        .map(|f| {
+            catalog()
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.family == *f)
+                .map(|(i, _)| i)
+                .collect()
+        })
+        .collect();
+
+    // MdRAE matrix: rows = fine-tune family, cols = eval family
+    let mut raw = vec![vec![f64::NAN; fams.len()]; fams.len()];
+    for (fi, cols) in fam_cols.iter().enumerate() {
+        // fine-tune on AMD data restricted to this family's columns
+        let (tb, vb) = {
+            let pd = wb.platform("amd")?;
+            let tb = family_batches(pd, &pd.prim_split.train, cols);
+            let vb = family_batches(pd, &pd.prim_split.val, cols);
+            (tb, vb)
+        };
+        let params = wb.finetune_custom(intel.clone(), &tb, &vb)?;
+        let (xs, targets, _, _) = wb.prim_test_data("amd")?;
+        let (sx, sy) = wb.prim_standardizers("amd")?;
+        let pred = Predictor::new(&wb.rt, "nn2", params, sx, sy)?;
+        let per_col = mdrae_per_column(&pred.predict_raw(&xs)?, &targets);
+        for (fj, cols_j) in fam_cols.iter().enumerate() {
+            let vals: Vec<f64> = cols_j
+                .iter()
+                .map(|&c| per_col[c])
+                .filter(|v| v.is_finite())
+                .collect();
+            raw[fi][fj] = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
+        }
+    }
+
+    let mut t = Table::new(
+        "Table 5 — cross-family transfer (rows normalised to diagonal = 1)",
+        &["tuned on \\ eval", "direct", "im2", "kn2", "wino3", "wino5", "c1x1", "mec"],
+    );
+    for (fi, fam) in fams.iter().enumerate() {
+        let mut cells = vec![fam.name().to_string()];
+        for fj in 0..fams.len() {
+            let norm = raw[fi][fj] / raw[fj][fj].max(1e-12);
+            cells.push(format!("{norm:.0}"));
+        }
+        t.row(cells);
+    }
+    Ok(vec![t])
+}
+
+/// Batches keeping only the given target columns unmasked.
+fn family_batches(
+    pd: &super::workbench::PlatformData,
+    idx: &[usize],
+    cols: &[usize],
+) -> crate::dataset::Batches {
+    let sub = pd.prim.subset(idx);
+    let xs: Vec<Vec<f64>> = sub.features().iter().map(|f| f.to_vec()).collect();
+    let ys: Vec<Vec<Option<f64>>> = sub
+        .targets
+        .iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(j, v)| if cols.contains(&j) { *v } else { None })
+                .collect()
+        })
+        .collect();
+    crate::dataset::make_batches(&xs, &ys, &pd.std_x, &pd.std_y, 1024)
+}

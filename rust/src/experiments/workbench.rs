@@ -1,0 +1,355 @@
+//! The Workbench: shared state for the experiment suite — per-platform
+//! datasets, trained models (disk-cached under `artifacts/trained/`),
+//! and the standardisers that travel with them.
+
+use crate::dataset::{self, Batches, DltDataset, PrimDataset, Split, Standardizer};
+use crate::perfmodel::{
+    self, hparams_for, LinModel, ParamStore, Predictor, TrainOpts, Trainer,
+};
+use crate::perfmodel::predictor::DltPredictor;
+use crate::runtime::Runtime;
+use crate::simulator::{machine, Simulator};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+pub const DATASET_SEED: u64 = 20200612;
+pub const SPLIT_SEED: u64 = 42;
+
+/// One platform's profiled data, ready for training.
+pub struct PlatformData {
+    pub sim: Simulator,
+    pub prim: PrimDataset,
+    pub prim_split: Split,
+    pub dlt: DltDataset,
+    pub dlt_split: Split,
+    pub std_x: Standardizer,
+    pub std_y: Standardizer,
+    pub dlt_std_x: Standardizer,
+    pub dlt_std_y: Standardizer,
+}
+
+impl PlatformData {
+    pub fn build(platform: &str) -> Result<Self> {
+        let sim = Simulator::new(
+            machine::by_name(platform)
+                .ok_or_else(|| anyhow::anyhow!("unknown platform {platform}"))?,
+        );
+        let configs = dataset::enumerate_configs(dataset::MAX_CONFIGS, DATASET_SEED);
+        let prim = dataset::profile_prim_dataset(&sim, &configs);
+        let prim_split = dataset::split(prim.len(), SPLIT_SEED);
+        let pairs = dataset::dlt_pairs(&configs);
+        let dlt = dataset::profile_dlt_dataset(&sim, &pairs);
+        let dlt_split = dataset::split(dlt.len(), SPLIT_SEED);
+
+        // standardisers are fitted on the training split only
+        let train = prim.subset(&prim_split.train);
+        let xs: Vec<Vec<f64>> = train.features().iter().map(|f| f.to_vec()).collect();
+        let std_x = Standardizer::fit(&xs, true);
+        let std_y = Standardizer::fit_masked(&train.targets, true);
+
+        let dtrain = dlt.subset(&dlt_split.train);
+        let dxs: Vec<Vec<f64>> = dtrain.features().iter().map(|f| f.to_vec()).collect();
+        let dlt_std_x = Standardizer::fit(&dxs, true);
+        let dlt_std_y = Standardizer::fit_masked(&dtrain.flat_targets(), true);
+
+        Ok(Self { sim, prim, prim_split, dlt, dlt_split, std_x, std_y, dlt_std_x, dlt_std_y })
+    }
+
+    /// Batches for a set of indices into the primitive dataset.
+    pub fn prim_batches(&self, idx: &[usize], batch: usize) -> Batches {
+        let sub = self.prim.subset(idx);
+        let xs: Vec<Vec<f64>> = sub.features().iter().map(|f| f.to_vec()).collect();
+        dataset::make_batches(&xs, &sub.targets, &self.std_x, &self.std_y, batch)
+    }
+
+    /// Batches for the DLT dataset.
+    pub fn dlt_batches(&self, idx: &[usize], batch: usize) -> Batches {
+        let sub = self.dlt.subset(idx);
+        let xs: Vec<Vec<f64>> = sub.features().iter().map(|f| f.to_vec()).collect();
+        dataset::make_batches(&xs, &sub.flat_targets(), &self.dlt_std_x, &self.dlt_std_y, batch)
+    }
+}
+
+/// Shared experiment state.
+pub struct Workbench {
+    pub rt: Runtime,
+    data: HashMap<String, PlatformData>,
+    /// Repeats for the sampled-fraction experiments (paper: 25).
+    pub repeats: usize,
+    /// Epoch caps (lowered for quick runs via CLI flag).
+    pub max_epochs: usize,
+}
+
+impl Workbench {
+    pub fn new(rt: Runtime) -> Self {
+        Self { rt, data: HashMap::new(), repeats: 3, max_epochs: 200 }
+    }
+
+    pub fn platform(&mut self, name: &str) -> Result<&PlatformData> {
+        if !self.data.contains_key(name) {
+            eprintln!("[workbench] profiling platform {name} (simulated)...");
+            self.data.insert(name.to_string(), PlatformData::build(name)?);
+        }
+        Ok(&self.data[name])
+    }
+
+    /// Owned copy of a platform's test split (features, masked targets)
+    /// plus its standardisers — avoids holding a borrow of the workbench
+    /// while PJRT predictors (which borrow `self.rt`) are alive.
+    pub fn prim_test_data(
+        &mut self,
+        platform: &str,
+    ) -> Result<(Vec<Vec<f64>>, Vec<Vec<Option<f64>>>, Standardizer, Standardizer)> {
+        let pd = self.platform(platform)?;
+        let test = pd.prim.subset(&pd.prim_split.test);
+        let xs: Vec<Vec<f64>> = test.features().iter().map(|f| f.to_vec()).collect();
+        Ok((xs, test.targets, pd.std_x.clone(), pd.std_y.clone()))
+    }
+
+    /// Owned DLT test data: (pairs, flat targets, std_x, std_y).
+    #[allow(clippy::type_complexity)]
+    pub fn dlt_test_data(
+        &mut self,
+        platform: &str,
+    ) -> Result<(Vec<(u32, u32)>, Vec<Vec<Option<f64>>>, Standardizer, Standardizer)> {
+        let pd = self.platform(platform)?;
+        let test = pd.dlt.subset(&pd.dlt_split.test);
+        let flat = test.flat_targets();
+        Ok((test.pairs, flat, pd.dlt_std_x.clone(), pd.dlt_std_y.clone()))
+    }
+
+    /// Owned standardisers for a platform's primitive dataset.
+    pub fn prim_standardizers(&mut self, platform: &str) -> Result<(Standardizer, Standardizer)> {
+        let pd = self.platform(platform)?;
+        Ok((pd.std_x.clone(), pd.std_y.clone()))
+    }
+
+    /// Owned standardisers for a platform's DLT dataset.
+    pub fn dlt_standardizers(&mut self, platform: &str) -> Result<(Standardizer, Standardizer)> {
+        let pd = self.platform(platform)?;
+        Ok((pd.dlt_std_x.clone(), pd.dlt_std_y.clone()))
+    }
+
+    fn cache_path(&self, tag: &str) -> PathBuf {
+        let dir = PathBuf::from("artifacts/trained");
+        std::fs::create_dir_all(&dir).ok();
+        dir.join(format!("{tag}.bin"))
+    }
+
+    fn opts(&self, kind: &str) -> TrainOpts {
+        let mut hp = hparams_for(kind);
+        hp.max_epochs = self.max_epochs;
+        TrainOpts { hp, verbose_every: 0 }
+    }
+
+    /// Train (or load cached) the NN2 primitive model for a platform.
+    pub fn nn2_params(&mut self, platform: &str) -> Result<ParamStore> {
+        let path = self.cache_path(&format!("{platform}_nn2"));
+        if path.exists() {
+            return ParamStore::load(&path);
+        }
+        eprintln!("[workbench] training nn2 on {platform}...");
+        let opts = self.opts("nn2");
+        let pd = self.platform(platform)?;
+        let tb = pd.prim_batches(&pd.prim_split.train, 1024);
+        let vb = pd.prim_batches(&pd.prim_split.val, 1024);
+        let trainer = Trainer::new(&self.rt, "nn2")?;
+        let res = trainer.train(trainer.init(7)?, &tb, &vb, opts)?;
+        eprintln!(
+            "[workbench] nn2/{platform}: {} epochs, val loss {:.5}",
+            res.epochs_run, res.best_val_loss
+        );
+        res.params.save(&path)?;
+        Ok(res.params)
+    }
+
+    /// Train (or load cached) the NN2 DLT model for a platform.
+    pub fn dlt_nn2_params(&mut self, platform: &str) -> Result<ParamStore> {
+        let path = self.cache_path(&format!("{platform}_dlt_nn2"));
+        if path.exists() {
+            return ParamStore::load(&path);
+        }
+        eprintln!("[workbench] training dlt_nn2 on {platform}...");
+        let opts = self.opts("dlt_nn2");
+        let pd = self.platform(platform)?;
+        let tb = pd.dlt_batches(&pd.dlt_split.train, 1024);
+        let vb = pd.dlt_batches(&pd.dlt_split.val, 1024);
+        let trainer = Trainer::new(&self.rt, "dlt_nn2")?;
+        let res = trainer.train(trainer.init(11)?, &tb, &vb, opts)?;
+        res.params.save(&path)?;
+        Ok(res.params)
+    }
+
+    /// A ready NN2 predictor for a platform.
+    pub fn nn2_predictor(&mut self, platform: &str) -> Result<Predictor<'_>> {
+        let params = self.nn2_params(platform)?;
+        let pd = &self.data[platform];
+        let (sx, sy) = (pd.std_x.clone(), pd.std_y.clone());
+        Predictor::new(&self.rt, "nn2", params, sx, sy)
+    }
+
+    /// A ready NN2 DLT predictor for a platform.
+    pub fn dlt_predictor(&mut self, platform: &str) -> Result<DltPredictor<'_>> {
+        let params = self.dlt_nn2_params(platform)?;
+        let pd = &self.data[platform];
+        let (sx, sy) = (pd.dlt_std_x.clone(), pd.dlt_std_y.clone());
+        DltPredictor::new(&self.rt, "dlt_nn2", params, sx, sy)
+    }
+
+    /// Train (or load) all 31 per-primitive NN1 models for a platform.
+    pub fn nn1_params_all(&mut self, platform: &str) -> Result<Vec<ParamStore>> {
+        let n = crate::primitives::catalog().len();
+        let mut out = Vec::with_capacity(n);
+        let mut missing = Vec::new();
+        for p in 0..n {
+            let path = self.cache_path(&format!("{platform}_nn1_{p}"));
+            if path.exists() {
+                out.push(Some(ParamStore::load(&path)?));
+            } else {
+                out.push(None);
+                missing.push(p);
+            }
+        }
+        if !missing.is_empty() {
+            eprintln!(
+                "[workbench] training {} nn1 models on {platform}...",
+                missing.len()
+            );
+            let mut opts = self.opts("nn1");
+            opts.hp.max_epochs = opts.hp.max_epochs.min(120);
+            opts.hp.patience = 8;
+            self.platform(platform)?;
+            let trainer = Trainer::new(&self.rt, "nn1")?;
+            for p in missing {
+                let pd = &self.data[platform];
+                let tb = single_column_batches(pd, &pd.prim_split.train, p);
+                let vb = single_column_batches(pd, &pd.prim_split.val, p);
+                let res = trainer.train(trainer.init(100 + p as i32)?, &tb, &vb, opts)?;
+                let path = self.cache_path(&format!("{platform}_nn1_{p}"));
+                res.params.save(&path)?;
+                out[p] = Some(res.params);
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// Train (or load) the 9 per-transformation NN1 DLT models.
+    pub fn dlt_nn1_params_all(&mut self, platform: &str) -> Result<Vec<ParamStore>> {
+        let n = 9;
+        let mut out = Vec::with_capacity(n);
+        let mut missing = Vec::new();
+        for p in 0..n {
+            let path = self.cache_path(&format!("{platform}_dlt_nn1_{p}"));
+            if path.exists() {
+                out.push(Some(ParamStore::load(&path)?));
+            } else {
+                out.push(None);
+                missing.push(p);
+            }
+        }
+        if !missing.is_empty() {
+            eprintln!("[workbench] training {} dlt_nn1 models on {platform}...", missing.len());
+            let mut opts = self.opts("dlt_nn1");
+            opts.hp.max_epochs = opts.hp.max_epochs.min(120);
+            opts.hp.patience = 8;
+            self.platform(platform)?;
+            let trainer = Trainer::new(&self.rt, "dlt_nn1")?;
+            for p in missing {
+                let pd = &self.data[platform];
+                let tb = single_dlt_column_batches(pd, &pd.dlt_split.train, p);
+                let vb = single_dlt_column_batches(pd, &pd.dlt_split.val, p);
+                let res = trainer.train(trainer.init(300 + p as i32)?, &tb, &vb, opts)?;
+                let path = self.cache_path(&format!("{platform}_dlt_nn1_{p}"));
+                res.params.save(&path)?;
+                out[p] = Some(res.params);
+            }
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// The Lin baseline for a platform (closed form; not cached).
+    pub fn lin_model(&mut self, platform: &str) -> Result<LinModel> {
+        let pd = self.platform(platform)?;
+        let train = pd.prim.subset(&pd.prim_split.train);
+        let xs: Vec<Vec<f64>> = train.features().iter().map(|f| f.to_vec()).collect();
+        LinModel::fit(&xs, &train.targets, pd.std_x.clone(), pd.std_y.clone())
+    }
+
+    /// Fine-tune params on a subset of a platform's training data
+    /// (lr/10, paper §4.4). Returns the tuned parameters.
+    pub fn finetune(
+        &mut self,
+        start: ParamStore,
+        platform: &str,
+        idx: &[usize],
+    ) -> Result<ParamStore> {
+        let mut opts = TrainOpts { hp: perfmodel::finetune_hparams("nn2"), verbose_every: 0 };
+        opts.hp.max_epochs = opts.hp.max_epochs.min(self.max_epochs);
+        let pd = self.platform(platform)?;
+        let tb = pd.prim_batches(idx, 1024);
+        let vb = pd.prim_batches(&pd.prim_split.val, 1024);
+        let trainer = Trainer::new(&self.rt, "nn2")?;
+        Ok(trainer.train(start, &tb, &vb, opts)?.params)
+    }
+
+    /// Fine-tune with caller-supplied batches (e.g. family-restricted
+    /// masks for Table 5).
+    pub fn finetune_custom(
+        &mut self,
+        start: ParamStore,
+        tb: &Batches,
+        vb: &Batches,
+    ) -> Result<ParamStore> {
+        let mut opts =
+            TrainOpts { hp: perfmodel::finetune_hparams("nn2"), verbose_every: 0 };
+        opts.hp.max_epochs = opts.hp.max_epochs.min(self.max_epochs);
+        let trainer = Trainer::new(&self.rt, "nn2")?;
+        Ok(trainer.train(start, tb, vb, opts)?.params)
+    }
+
+    /// Train NN2 from scratch on a subset (the paper's scratch baseline).
+    pub fn train_scratch(
+        &mut self,
+        platform: &str,
+        idx: &[usize],
+        seed: i32,
+    ) -> Result<ParamStore> {
+        let opts = self.opts("nn2");
+        let pd = self.platform(platform)?;
+        let tb = pd.prim_batches(idx, 1024);
+        let vb = pd.prim_batches(&pd.prim_split.val, 1024);
+        let trainer = Trainer::new(&self.rt, "nn2")?;
+        Ok(trainer.train(trainer.init(seed)?, &tb, &vb, opts)?.params)
+    }
+}
+
+/// Batches with only column `p` as the target (for NN1 training).
+fn single_column_batches(pd: &PlatformData, idx: &[usize], p: usize) -> Batches {
+    let sub = pd.prim.subset(idx);
+    let xs: Vec<Vec<f64>> = sub.features().iter().map(|f| f.to_vec()).collect();
+    let ys: Vec<Vec<Option<f64>>> =
+        sub.targets.iter().map(|row| vec![row[p]]).collect();
+    // a single-column standardiser sliced from the full one
+    let std_y1 = Standardizer {
+        log: pd.std_y.log,
+        mean: vec![pd.std_y.mean[p]],
+        std: vec![pd.std_y.std[p]],
+    };
+    dataset::make_batches(&xs, &ys, &pd.std_x, &std_y1, 1024)
+}
+
+/// Batches with only DLT column `p` as target (for DLT NN1 training).
+fn single_dlt_column_batches(pd: &PlatformData, idx: &[usize], p: usize) -> Batches {
+    let sub = pd.dlt.subset(idx);
+    let xs: Vec<Vec<f64>> = sub.features().iter().map(|f| f.to_vec()).collect();
+    let ys: Vec<Vec<Option<f64>>> =
+        sub.flat_targets().iter().map(|row| vec![row[p]]).collect();
+    let std_y1 = column_standardizer(&pd.dlt_std_y, p);
+    dataset::make_batches(&xs, &ys, &pd.dlt_std_x, &std_y1, 1024)
+}
+
+/// Slice a one-column standardiser out of the platform's target scaler.
+pub fn column_standardizer(sy: &Standardizer, p: usize) -> Standardizer {
+    Standardizer { log: sy.log, mean: vec![sy.mean[p]], std: vec![sy.std[p]] }
+}

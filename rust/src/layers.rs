@@ -1,0 +1,134 @@
+//! Convolutional layer configurations and the paper's parameter ranges
+//! (Table 1): `k` #kernels, `c` #channels, `im` square input size,
+//! `s` stride, `f` (odd) kernel size.
+
+
+/// One convolutional layer configuration `(k, c, im, s, f)`.
+///
+/// The paper assumes square inputs (`im = w = h`) and VALID padding; the
+/// output spatial size is `(im - f) / s + 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvConfig {
+    /// Number of kernels (output channels), 1..=2048.
+    pub k: u32,
+    /// Number of input channels, 1..=2048.
+    pub c: u32,
+    /// Input width/height, 7..=299.
+    pub im: u32,
+    /// Stride, one of {1, 2, 4}.
+    pub s: u32,
+    /// Kernel size, odd, 1..=11.
+    pub f: u32,
+}
+
+/// Paper Table 1 common parameter ranges.
+pub mod ranges {
+    pub const K: (u32, u32) = (1, 2048);
+    pub const C: (u32, u32) = (1, 2048);
+    pub const IM: (u32, u32) = (7, 299);
+    pub const STRIDES: [u32; 3] = [1, 2, 4];
+    pub const KERNEL_SIZES: [u32; 6] = [1, 3, 5, 7, 9, 11];
+}
+
+impl ConvConfig {
+    pub fn new(k: u32, c: u32, im: u32, s: u32, f: u32) -> Self {
+        Self { k, c, im, s, f }
+    }
+
+    /// VALID-padding output spatial size; `None` if `f > im`.
+    pub fn out_size(&self) -> Option<u32> {
+        if self.f > self.im {
+            return None;
+        }
+        Some((self.im - self.f) / self.s + 1)
+    }
+
+    /// Whether this configuration is possible at all (paper filters f > im).
+    pub fn is_valid(&self) -> bool {
+        self.f <= self.im && self.s >= 1 && self.k >= 1 && self.c >= 1
+    }
+
+    /// Whether every field lies in the paper's Table 1 common ranges.
+    pub fn in_common_ranges(&self) -> bool {
+        use ranges::*;
+        self.is_valid()
+            && (K.0..=K.1).contains(&self.k)
+            && (C.0..=C.1).contains(&self.c)
+            && (IM.0..=IM.1).contains(&self.im)
+            && STRIDES.contains(&self.s)
+            && KERNEL_SIZES.contains(&self.f)
+    }
+
+    /// MACs needed for direct computation of this layer (2x for FLOPs).
+    pub fn macs(&self) -> f64 {
+        let o = self.out_size().unwrap_or(0) as f64;
+        self.k as f64 * self.c as f64 * (self.f as f64).powi(2) * o * o
+    }
+
+    /// Input tensor element count (c * im * im).
+    pub fn input_elems(&self) -> u64 {
+        self.c as u64 * self.im as u64 * self.im as u64
+    }
+
+    /// Output tensor element count (k * o * o).
+    pub fn output_elems(&self) -> u64 {
+        let o = self.out_size().unwrap_or(0) as u64;
+        self.k as u64 * o * o
+    }
+
+    /// Weight element count (k * c * f * f).
+    pub fn weight_elems(&self) -> u64 {
+        self.k as u64 * self.c as u64 * (self.f as u64).pow(2)
+    }
+
+    /// The `(c, k, im)` triplet the paper crosses with (f, s) pairs.
+    pub fn triplet(&self) -> (u32, u32, u32) {
+        (self.c, self.k, self.im)
+    }
+
+    /// Model input features `[k, c, im, s, f]` (order fixed; must match
+    /// python/compile and the dataset writer).
+    pub fn features(&self) -> [f64; 5] {
+        [
+            self.k as f64,
+            self.c as f64,
+            self.im as f64,
+            self.s as f64,
+            self.f as f64,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_size_valid_padding() {
+        assert_eq!(ConvConfig::new(1, 1, 7, 1, 3).out_size(), Some(5));
+        assert_eq!(ConvConfig::new(1, 1, 7, 2, 3).out_size(), Some(3));
+        assert_eq!(ConvConfig::new(1, 1, 224, 2, 7).out_size(), Some(109));
+        assert_eq!(ConvConfig::new(1, 1, 3, 1, 5).out_size(), None);
+    }
+
+    #[test]
+    fn validity() {
+        assert!(ConvConfig::new(64, 64, 56, 1, 3).in_common_ranges());
+        assert!(!ConvConfig::new(64, 64, 56, 3, 3).in_common_ranges()); // stride 3
+        assert!(!ConvConfig::new(64, 64, 56, 1, 4).in_common_ranges()); // even f
+        assert!(!ConvConfig::new(64, 64, 5, 1, 7).is_valid()); // f > im
+    }
+
+    #[test]
+    fn macs_match_formula() {
+        let c = ConvConfig::new(2, 3, 8, 1, 3);
+        // o = 6; macs = 2*3*9*36
+        assert_eq!(c.macs(), 2.0 * 3.0 * 9.0 * 36.0);
+    }
+
+    #[test]
+    fn features_order_is_kcimsf() {
+        let c = ConvConfig::new(1, 2, 3, 4, 3);
+        assert_eq!(c.features(), [1.0, 2.0, 3.0, 4.0, 3.0]);
+    }
+}

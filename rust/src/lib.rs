@@ -1,0 +1,35 @@
+//! # primsel — CNN primitive selection via learned performance models
+//!
+//! Rust reimplementation of *"Optimising the Performance of Convolutional
+//! Neural Networks across Computing Systems using Transfer Learning"*
+//! (Mulder, Radu, Dubach, 2020) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** — the convolutional primitives themselves are Pallas kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2** — the performance models (NN1/NN2 MLPs) are JAX functions
+//!   (`python/compile/model.py`), likewise AOT-lowered: `init`,
+//!   `train_step`, `train_epoch` and `predict` each ship as one HLO module.
+//! * **L3** — this crate: the coordinator that owns datasets, training
+//!   loops (driving the AOT artifacts over PJRT), the PBQP selection
+//!   solver, the platform simulators, profiling, transfer learning and the
+//!   paper's full experiment suite. Python never runs at request time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod config;
+pub mod dataset;
+pub mod experiments;
+pub mod layers;
+pub mod linalg;
+pub mod networks;
+pub mod pbqp;
+pub mod perfmodel;
+pub mod primitives;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod selection;
+pub mod simulator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,206 @@
+//! Minimal dense linear algebra: just enough for the paper's linear
+//! regression baseline (ordinary least squares via normal equations and
+//! Cholesky) — no external BLAS.
+
+/// Column-major-free, row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// self^T * self (Gram matrix), k x k for an n x k input.
+    pub fn gram(&self) -> Matrix {
+        let k = self.cols;
+        let mut g = Matrix::zeros(k, k);
+        for row in self.data.chunks(k) {
+            for i in 0..k {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..k {
+                    g.data[i * k + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..k {
+            for j in 0..i {
+                g.data[i * k + j] = g.data[j * k + i];
+            }
+        }
+        g
+    }
+
+    /// self^T * y for a length-n vector y.
+    pub fn t_mul_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows);
+        let k = self.cols;
+        let mut out = vec![0.0; k];
+        for (row, &yi) in self.data.chunks(k).zip(y) {
+            for j in 0..k {
+                out[j] += row[j] * yi;
+            }
+        }
+        out
+    }
+
+    /// self * x for a length-cols vector x.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        self.data
+            .chunks(self.cols)
+            .map(|row| row.iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+}
+
+/// Cholesky factorisation of a symmetric positive-definite matrix
+/// (in-place lower triangle). Returns None if not SPD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L L^T x = b given the Cholesky factor L.
+pub fn cholesky_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    x
+}
+
+/// Ordinary least squares with ridge damping: argmin |X w - y|^2 + λ|w|^2.
+/// Returns the weight vector (length = X.cols).
+pub fn least_squares(x: &Matrix, y: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    let mut g = x.gram();
+    for i in 0..g.rows {
+        let v = g.get(i, i) + ridge;
+        g.set(i, i, v);
+    }
+    let l = cholesky(&g)?;
+    Some(cholesky_solve(&l, &x.t_mul_vec(y)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_known() {
+        let a = Matrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!((l.get(0, 0) - 2.0).abs() < 1e-12);
+        assert!((l.get(1, 0) - 1.0).abs() < 1e-12);
+        assert!((l.get(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_round_trip() {
+        let a = Matrix::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let l = cholesky(&a).unwrap();
+        let x = cholesky_solve(&l, &[1.0, 2.0, 3.0]);
+        let b = a.mul_vec(&x);
+        for (bi, want) in b.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((bi - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_fit() {
+        // y = 3 x0 - 2 x1 + 1
+        let rows: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let x0 = i as f64;
+                let x1 = (i * i % 7) as f64;
+                vec![x0, x1, 1.0]
+            })
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| 3.0 * r[0] - 2.0 * r[1] + 1.0).collect();
+        let x = Matrix::from_rows(&rows);
+        let w = least_squares(&x, &y, 1e-9).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-6);
+        assert!((w[1] + 2.0).abs() < 1e-6);
+        assert!((w[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = x.gram();
+        assert_eq!(g.get(0, 1), g.get(1, 0));
+        assert!((g.get(0, 0) - 35.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,249 @@
+//! primsel — CNN primitive selection via learned performance models.
+//!
+//! Subcommands:
+//!   exp --id <table1|...|fig10|all> [--repeats N] [--max-epochs N]
+//!       regenerate a paper table/figure (results/ gets the CSVs)
+//!   select --network <name> --platform <intel|amd|arm> [--source model|profile]
+//!       run the full Figure-2 pipeline on one network
+//!   profile [--runs N]
+//!       time the real Pallas kernel artifacts on this host via PJRT
+//!   train --platform <p> --kind <nn1|nn2|dlt_nn1|dlt_nn2>
+//!       (re)train a performance model and cache it
+//!   networks | catalog
+//!       list the zoo / the primitive catalog
+
+use anyhow::{bail, Result};
+use primsel::experiments::{self, Workbench};
+use primsel::perfmodel::predictor::DltPredictor;
+use primsel::perfmodel::Predictor;
+use primsel::primitives::catalog;
+use primsel::report::Table;
+use primsel::runtime::Runtime;
+use primsel::{networks, profiler, selection};
+use std::collections::HashMap;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "exp" => cmd_exp(&flags),
+        "select" => cmd_select(&flags),
+        "profile" => cmd_profile(&flags),
+        "train" => cmd_train(&flags),
+        "networks" => cmd_networks(),
+        "catalog" => cmd_catalog(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `primsel help`)"),
+    }
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn print_usage() {
+    println!(
+        "primsel — CNN primitive selection via performance modeling\n\
+         \n\
+         usage: primsel <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 exp --id <id|all> [--repeats N] [--max-epochs N]   regenerate paper artefacts\n\
+         \x20 select --network <name> --platform <p> [--source model|profile]\n\
+         \x20 profile [--runs N]                                  time real kernels on this host\n\
+         \x20 train --platform <p> --kind <kind>                  (re)train a model\n\
+         \x20 networks                                            list the network zoo\n\
+         \x20 catalog                                             list the 31 primitives\n\
+         \n\
+         experiment ids: {}",
+        experiments::ALL_IDS.join(", ")
+    );
+}
+
+fn cmd_exp(flags: &HashMap<String, String>) -> Result<()> {
+    let id = flags.get("id").map(String::as_str).unwrap_or("all");
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+    if let Some(r) = flags.get("repeats") {
+        wb.repeats = r.parse()?;
+    }
+    if let Some(m) = flags.get("max-epochs") {
+        wb.max_epochs = m.parse()?;
+    }
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        eprintln!("=== running {id} ===");
+        for table in experiments::run(id, &mut wb)? {
+            println!("{}", table.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_select(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags
+        .get("network")
+        .map(String::as_str)
+        .unwrap_or("googlenet");
+    let platform = flags.get("platform").map(String::as_str).unwrap_or("intel");
+    let source = flags.get("source").map(String::as_str).unwrap_or("model");
+    let net = networks::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {name} (see `primsel networks`)"))?;
+
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+    let sim = wb.platform(platform)?.sim.clone();
+
+    let sel = if source == "model" {
+        let nn2 = wb.nn2_params(platform)?;
+        let dltp = wb.dlt_nn2_params(platform)?;
+        let (sx, sy) = wb.prim_standardizers(platform)?;
+        let (dx, dy) = wb.dlt_standardizers(platform)?;
+        let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
+        let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
+        let src = experiments::model_source(&net, &prim, &dlt)?;
+        selection::select(&net, &src)?
+    } else {
+        selection::select(&net, &sim)?
+    };
+
+    let measured = selection::evaluate(&net, &sel, &sim)?;
+    let mut t = Table::new(
+        &format!("selection for {name} on {platform} (source: {source})"),
+        &["layer", "config (k,c,im,s,f)", "primitive"],
+    );
+    for (i, cfg) in net.layers.iter().enumerate() {
+        t.row(vec![
+            format!("{i}"),
+            format!("({},{},{},{},{})", cfg.k, cfg.c, cfg.im, cfg.s, cfg.f),
+            catalog()[sel.primitive[i]].name.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "estimated: {:.3} ms | measured-on-{platform}: {measured:.3} ms",
+        sel.estimated_ms
+    );
+    Ok(())
+}
+
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    let runs: usize = flags
+        .get("runs")
+        .map(|r| r.parse())
+        .transpose()?
+        .unwrap_or(25);
+    let rt = Runtime::open_default()?;
+    println!(
+        "profiling {} kernel artifacts, {} runs each...",
+        rt.manifest.prim_grid.len(),
+        runs
+    );
+    let measurements = profiler::profile_grid(&rt, runs)?;
+    let mut t = Table::new(
+        "host measurements (real Pallas kernels via PJRT)",
+        &["kernel", "c", "im", "k", "f", "s", "median ms", "GFLOP/s"],
+    );
+    for m in &measurements {
+        t.row(vec![
+            m.kernel.clone(),
+            m.c.to_string(),
+            m.im.to_string(),
+            m.k.to_string(),
+            m.f.to_string(),
+            m.s.to_string(),
+            format!("{:.3}", m.median_ms),
+            format!("{:.2}", m.gflops()),
+        ]);
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/host_profile.csv", t.to_csv())?;
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let platform = flags.get("platform").map(String::as_str).unwrap_or("intel");
+    let kind = flags.get("kind").map(String::as_str).unwrap_or("nn2");
+    let rt = Runtime::open_default()?;
+    let mut wb = Workbench::new(rt);
+    if let Some(m) = flags.get("max-epochs") {
+        wb.max_epochs = m.parse()?;
+    }
+    match kind {
+        "nn2" => {
+            wb.nn2_params(platform)?;
+        }
+        "dlt_nn2" => {
+            wb.dlt_nn2_params(platform)?;
+        }
+        "nn1" => {
+            wb.nn1_params_all(platform)?;
+        }
+        "dlt_nn1" => {
+            wb.dlt_nn1_params_all(platform)?;
+        }
+        other => bail!("unknown kind {other}"),
+    }
+    println!("trained + cached {kind} for {platform} (artifacts/trained/)");
+    Ok(())
+}
+
+fn cmd_networks() -> Result<()> {
+    let mut t = Table::new("network zoo", &["name", "conv layers", "edges", "GMACs"]);
+    for n in networks::zoo() {
+        t.row(vec![
+            n.name.clone(),
+            n.n_layers().to_string(),
+            n.edges.len().to_string(),
+            format!("{:.2}", n.total_macs() / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_catalog() -> Result<()> {
+    let mut t = Table::new(
+        "primitive catalog (31 primitives, 7 families)",
+        &["#", "name", "family", "in", "out", "kernel (L1 Pallas)"],
+    );
+    for (i, p) in catalog().iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            p.name.into(),
+            p.family.name().into(),
+            p.in_layout.name().into(),
+            p.out_layout.name().into(),
+            p.kernel_id.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

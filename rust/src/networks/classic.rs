@@ -1,0 +1,80 @@
+//! AlexNet and the VGG family — the classic chain CNNs.
+
+use super::{Builder, Network};
+
+/// AlexNet (Krizhevsky et al. 2012), torchvision layout: 5 conv layers.
+pub fn alexnet() -> Network {
+    let mut b = Builder::new("alexnet", 224, 3);
+    b.conv(64, 11, 4); // 224 -> 56 grid (pool to 27 below)
+    b.pool(2); // 28 -> pools land at 27-ish; nominal halving
+    b.conv(192, 5, 1);
+    b.pool(2);
+    b.conv(384, 3, 1);
+    b.conv(256, 3, 1);
+    b.conv(256, 3, 1);
+    b.build()
+}
+
+/// VGG-n for n in {11, 13, 16, 19} (Simonyan & Zisserman 2014).
+/// All convs 3x3 stride 1; five stages separated by 2x2 max pools.
+pub fn vgg(n: u32) -> Network {
+    // convs per stage
+    let per_stage: [usize; 5] = match n {
+        11 => [1, 1, 2, 2, 2],
+        13 => [2, 2, 2, 2, 2],
+        16 => [2, 2, 3, 3, 3],
+        19 => [2, 2, 4, 4, 4],
+        _ => panic!("unknown VGG depth {n}"),
+    };
+    let widths = [64u32, 128, 256, 512, 512];
+    let mut b = Builder::new(&format!("vgg{n}"), 224, 3);
+    for (stage, &count) in per_stage.iter().enumerate() {
+        for _ in 0..count {
+            b.conv(widths[stage], 3, 1);
+        }
+        if stage < 4 {
+            b.pool(2);
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_depths() {
+        assert_eq!(vgg(11).n_layers(), 8);
+        assert_eq!(vgg(13).n_layers(), 10);
+        assert_eq!(vgg(16).n_layers(), 13);
+        assert_eq!(vgg(19).n_layers(), 16);
+    }
+
+    #[test]
+    fn vgg_channel_flow() {
+        let v = vgg(11);
+        assert_eq!(v.layers[0].c, 3);
+        assert_eq!(v.layers[0].k, 64);
+        assert_eq!(v.layers[1].c, 64);
+        assert_eq!(v.layers[1].k, 128);
+        // final stage at 14x14, 512 channels
+        let last = v.layers.last().unwrap();
+        assert_eq!(last.k, 512);
+        assert_eq!(last.im, 14);
+    }
+
+    #[test]
+    fn alexnet_first_layer() {
+        let a = alexnet();
+        assert_eq!(a.layers[0].f, 11);
+        assert_eq!(a.layers[0].s, 4);
+        assert_eq!(a.layers[0].c, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn vgg_rejects_unknown_depth() {
+        vgg(12);
+    }
+}

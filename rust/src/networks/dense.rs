@@ -1,0 +1,89 @@
+//! DenseNet family. Dense connectivity is bounded to the next two layers
+//! in the selection graph (full dense fan-out would charge the same DLT
+//! many times over; two hops preserves the high-degree structure that
+//! exercises the PBQP RN heuristic without distorting total edge cost).
+
+use super::{Builder, Network};
+
+/// DenseNet-n for n in {121, 161, 169, 201} (Huang et al. 2017).
+pub fn densenet(n: u32) -> Network {
+    let (blocks, growth, init): ([usize; 4], u32, u32) = match n {
+        121 => ([6, 12, 24, 16], 32, 64),
+        161 => ([6, 12, 36, 24], 48, 96),
+        169 => ([6, 12, 32, 32], 32, 64),
+        201 => ([6, 12, 48, 32], 32, 64),
+        _ => panic!("unknown DenseNet depth {n}"),
+    };
+    let mut b = Builder::new(&format!("densenet{n}"), 224, 3);
+    b.conv(init, 7, 2); // 112
+    b.pool(2); // 56
+    let mut channels = init;
+    for (stage, &count) in blocks.iter().enumerate() {
+        for _ in 0..count {
+            // dense layer: 1x1 bottleneck (4*growth) then 3x3 growth
+            let before = b.last();
+            set_channels(&mut b, channels);
+            b.conv(4 * growth, 1, 1);
+            let out = b.conv(growth, 3, 1);
+            // dense connectivity: concat feeds later layers; bound to 2 hops
+            if let Some(src) = before {
+                if out >= 2 {
+                    b.skip(src, out);
+                }
+            }
+            channels += growth;
+        }
+        if stage < 3 {
+            // transition: 1x1 halving + 2x2 pool
+            set_channels(&mut b, channels);
+            channels /= 2;
+            b.conv(channels, 1, 1);
+            b.pool(2);
+        }
+    }
+    b.build()
+}
+
+/// The concat of a dense block means the next conv consumes the
+/// accumulated channel count, not just the previous layer's k.
+/// Capped at the paper's Table 1 common range (c <= 2048): DenseNet-161's
+/// deepest concats exceed it, and the paper's triplet pool excludes such
+/// outliers by construction.
+fn set_channels(b: &mut Builder, channels: u32) {
+    b.force_channels(channels.min(2048));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet121_layers() {
+        let d = densenet(121);
+        // 1 stem + (6+12+24+16) dense layers x 2 convs + 3 transitions
+        assert_eq!(d.n_layers(), 1 + 58 * 2 + 3);
+    }
+
+    #[test]
+    fn channel_growth() {
+        let d = densenet(121);
+        // inside block 1, input channels grow by 32 per dense layer
+        assert_eq!(d.layers[1].c, 64);
+        assert_eq!(d.layers[3].c, 96);
+        assert_eq!(d.layers[5].c, 128);
+    }
+
+    #[test]
+    fn densenet161_wider() {
+        let d = densenet(161);
+        assert!(d.layers.iter().any(|l| l.k == 192)); // 4 * growth 48
+    }
+
+    #[test]
+    fn transitions_halve() {
+        let d = densenet(121);
+        // after block 1 (6 layers): 64 + 6*32 = 256 -> transition to 128
+        let trans = d.layers.iter().find(|l| l.c == 256 && l.f == 1).unwrap();
+        assert_eq!(trans.k, 128);
+    }
+}

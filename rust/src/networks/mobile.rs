@@ -1,0 +1,138 @@
+//! The mobile-oriented architectures of Table 7: SqueezeNet, MobileNet v1
+//! and ShuffleNet v2 — sources of small-channel / depthwise triplets.
+
+use super::{Builder, Network};
+
+/// SqueezeNet (Iandola et al. 2017). `v1_0` selects 1.0 vs 1.1.
+pub fn squeezenet(v1_0: bool) -> Network {
+    let name = if v1_0 { "squeezenet1_0" } else { "squeezenet1_1" };
+    let mut b = Builder::new(name, 224, 3);
+    if v1_0 {
+        b.conv(96, 7, 2); // 112
+    } else {
+        b.conv(64, 3, 2);
+    }
+    b.pool(2); // 56
+    // fire modules: (squeeze, expand1x1, expand3x3)
+    let fires: [(u32, u32, u32); 8] = [
+        (16, 64, 64),
+        (16, 64, 64),
+        (32, 128, 128),
+        (32, 128, 128),
+        (48, 192, 192),
+        (48, 192, 192),
+        (64, 256, 256),
+        (64, 256, 256),
+    ];
+    for (i, &(sq, e1, e3)) in fires.iter().enumerate() {
+        b.conv(sq, 1, 1);
+        b.parallel(&[&[(e1, 1, 1)], &[(e3, 3, 1)]]);
+        // pools at different places for 1.0 vs 1.1
+        let pool_after = if v1_0 { [2usize, 6].contains(&i) } else { [0usize, 2].contains(&i) };
+        if pool_after {
+            b.pool(2);
+        }
+    }
+    b.conv(1000, 1, 1); // classifier conv
+    b.build()
+}
+
+/// MobileNet v1 (Howard et al. 2017): depthwise-separable chain.
+pub fn mobilenet_v1() -> Network {
+    let mut b = Builder::new("mobilenet", 224, 3);
+    b.conv(32, 3, 2); // 112
+    // (pointwise-out, stride of the depthwise)
+    let blocks: [(u32, u32); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (k, s) in blocks {
+        b.dwconv(3, s); // depthwise 3x3 (modelled c = k)
+        b.conv(k, 1, 1); // pointwise
+    }
+    b.build()
+}
+
+/// ShuffleNet v2 (Zhang et al. 2017) at scales 0_5, 1_0, 1_5, 2_0.
+pub fn shufflenet_v2(scale: &str) -> Network {
+    let (stages, final_k): ([u32; 3], u32) = match scale {
+        "0_5" => ([48, 96, 192], 1024),
+        "1_0" => ([116, 232, 464], 1024),
+        "1_5" => ([176, 352, 704], 1024),
+        "2_0" => ([244, 488, 976], 2048),
+        _ => panic!("unknown shufflenet scale {scale}"),
+    };
+    let repeats = [4usize, 8, 4];
+    let mut b = Builder::new(&format!("shufflenet_v2_x{scale}"), 224, 3);
+    b.conv(24, 3, 2); // 112
+    b.pool(2); // 56
+    for (stage, (&width, &count)) in stages.iter().zip(&repeats).enumerate() {
+        let _ = stage;
+        for unit in 0..count {
+            let s = if unit == 0 { 2 } else { 1 };
+            // shuffle unit main branch: 1x1 -> dw3x3 -> 1x1 (half width each
+            // branch; modelled at branch width)
+            let half = width / 2;
+            b.conv(half, 1, 1);
+            b.dwconv(3, s);
+            b.conv(half, 1, 1);
+        }
+        b.force_channels(width);
+    }
+    b.conv(final_k, 1, 1);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squeezenet_variants_differ() {
+        let a = squeezenet(true);
+        let c = squeezenet(false);
+        assert_ne!(a.layers[0].k, c.layers[0].k);
+        assert!(a.n_layers() >= 25);
+    }
+
+    #[test]
+    fn fire_module_branches() {
+        let s = squeezenet(true);
+        // squeeze layer (k=16) fans out to two expands
+        let sq_idx = s.layers.iter().position(|l| l.k == 16).unwrap();
+        let consumers = s.edges.iter().filter(|(a, _)| *a == sq_idx).count();
+        assert_eq!(consumers, 2);
+    }
+
+    #[test]
+    fn mobilenet_depthwise_modelling() {
+        let m = mobilenet_v1();
+        // depthwise layers have c == k
+        let dw: Vec<_> = m.layers.iter().filter(|l| l.f == 3 && l.c == l.k).collect();
+        assert!(dw.len() >= 13);
+        assert!(m.layers.iter().any(|l| l.k == 1024));
+    }
+
+    #[test]
+    fn shufflenet_scales() {
+        assert!(shufflenet_v2("0_5").layers.iter().any(|l| l.k == 24));
+        assert!(shufflenet_v2("2_0").layers.iter().any(|l| l.k == 2048));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shufflenet_bad_scale() {
+        shufflenet_v2("9_9");
+    }
+}

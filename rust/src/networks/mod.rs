@@ -1,0 +1,324 @@
+//! The network zoo (paper Table 7): conv-layer graphs for all the
+//! architectures the paper extracts its `(c, k, im)` triplets from, plus
+//! the six networks used in the selection experiments (§4.3).
+//!
+//! A [`Network`] is a DAG over convolutional layers only (the paper
+//! optimises conv layers, which take >90% of inference time [27]); edges
+//! carry data-layout-transformation costs in the PBQP graph. Non-conv ops
+//! (pooling, concat, residual add) are modelled by their effect on the
+//! spatial size / channel count and by the dataflow edges they induce.
+
+mod classic;
+mod dense;
+mod inception;
+mod mobile;
+mod resnet;
+
+use crate::layers::ConvConfig;
+use std::collections::BTreeSet;
+
+pub use classic::{alexnet, vgg};
+pub use dense::densenet;
+pub use inception::{googlenet, inception_v3};
+pub use mobile::{mobilenet_v1, shufflenet_v2, squeezenet};
+pub use resnet::{resnet, resnext};
+
+/// A convolutional network as a DAG of conv layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<ConvConfig>,
+    /// Dataflow edges (producer, consumer), producer < consumer.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Network {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// All `(c, k, im)` triplets occurring in this network.
+    pub fn triplets(&self) -> BTreeSet<(u32, u32, u32)> {
+        self.layers.iter().map(|l| l.triplet()).collect()
+    }
+
+    /// Total MACs of the network's conv layers.
+    pub fn total_macs(&self) -> f64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Degree of each node in the (undirected) selection graph.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.layers.len()];
+        for &(a, b) in &self.edges {
+            d[a] += 1;
+            d[b] += 1;
+        }
+        d
+    }
+
+    fn validate(self) -> Self {
+        for l in &self.layers {
+            debug_assert!(l.is_valid(), "{}: invalid layer {l:?}", self.name);
+        }
+        for &(a, b) in &self.edges {
+            debug_assert!(a < b && b < self.layers.len(), "{}: bad edge", self.name);
+        }
+        self
+    }
+}
+
+/// Incremental graph builder tracking spatial size and channel flow.
+pub(crate) struct Builder {
+    name: String,
+    layers: Vec<ConvConfig>,
+    edges: Vec<(usize, usize)>,
+    /// Nodes whose outputs feed the next added layer.
+    frontier: Vec<usize>,
+    /// Current spatial size (input resolution of the next layer).
+    im: u32,
+    /// Current channel count.
+    c: u32,
+}
+
+impl Builder {
+    pub fn new(name: &str, input_im: u32, input_c: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            layers: Vec::new(),
+            edges: Vec::new(),
+            frontier: Vec::new(),
+            im: input_im,
+            c: input_c,
+        }
+    }
+
+    pub fn im(&self) -> u32 {
+        self.im
+    }
+
+    #[allow(dead_code)] // symmetric accessor kept for builder completeness
+    pub fn channels(&self) -> u32 {
+        self.c
+    }
+
+    pub fn last(&self) -> Option<usize> {
+        self.frontier.last().copied()
+    }
+
+    /// Add a conv layer consuming the current frontier.
+    /// SAME-padding flow: the next layer sees `ceil(im / s)`.
+    pub fn conv(&mut self, k: u32, f: u32, s: u32) -> usize {
+        let id = self.layers.len();
+        self.layers.push(ConvConfig::new(k, self.c, self.im, s, f));
+        for &p in &self.frontier {
+            self.edges.push((p, id));
+        }
+        self.frontier = vec![id];
+        self.c = k;
+        self.im = self.im.div_ceil(s);
+        id
+    }
+
+    /// Depthwise conv modelled as a conv with c = k = current channels.
+    pub fn dwconv(&mut self, f: u32, s: u32) -> usize {
+        let k = self.c;
+        self.conv(k, f, s)
+    }
+
+    /// Pooling: spatial reduction only.
+    pub fn pool(&mut self, s: u32) {
+        self.im = self.im.div_ceil(s);
+    }
+
+    /// Override the channel count seen by the next layer (dense-block
+    /// concatenation accumulates channels beyond the previous layer's k).
+    pub fn force_channels(&mut self, c: u32) {
+        self.c = c;
+    }
+
+    /// Explicit extra dataflow edge (e.g. residual shortcut).
+    pub fn skip(&mut self, from: usize, to: usize) {
+        if from < to {
+            self.edges.push((from, to));
+        }
+    }
+
+    /// A conv layer on a side branch (e.g. a ResNet projection shortcut):
+    /// explicit config, fed from `from`, joining the dataflow at `join`.
+    /// Does not change the main-path frontier/channel state.
+    pub fn side_conv(
+        &mut self,
+        from: Option<usize>,
+        join: usize,
+        k: u32,
+        c: u32,
+        im: u32,
+        f: u32,
+        s: u32,
+    ) -> usize {
+        let id = self.layers.len();
+        self.layers.push(ConvConfig::new(k, c, im, s, f));
+        if let Some(src) = from {
+            self.edges.push((src, id));
+        }
+        // the join node consumes the side branch's output
+        if join < id {
+            self.edges.push((join, id));
+        }
+        id
+    }
+
+    /// Run `branches` in parallel from the current frontier and concat.
+    /// Each branch is a list of (k, f, s) convs. Returns ending channel sum.
+    pub fn parallel(&mut self, branches: &[&[(u32, u32, u32)]]) -> u32 {
+        let entry_frontier = self.frontier.clone();
+        let entry_c = self.c;
+        let entry_im = self.im;
+        let mut ends = Vec::new();
+        let mut out_c = 0;
+        let mut out_im = entry_im;
+        for branch in branches {
+            self.frontier = entry_frontier.clone();
+            self.c = entry_c;
+            self.im = entry_im;
+            for &(k, f, s) in *branch {
+                self.conv(k, f, s);
+            }
+            if let Some(&e) = self.frontier.last() {
+                ends.push(e);
+            }
+            out_c += self.c;
+            out_im = self.im;
+        }
+        self.frontier = ends;
+        self.c = out_c;
+        self.im = out_im;
+        out_c
+    }
+
+    pub fn build(self) -> Network {
+        Network { name: self.name, layers: self.layers, edges: self.edges }.validate()
+    }
+}
+
+/// The full zoo used for triplet extraction (paper Table 7).
+pub fn zoo() -> Vec<Network> {
+    let mut nets = vec![
+        alexnet(),
+        vgg(11),
+        vgg(13),
+        vgg(16),
+        vgg(19),
+        googlenet(),
+        inception_v3(),
+        squeezenet(true),
+        squeezenet(false),
+        mobilenet_v1(),
+    ];
+    for n in [18, 34, 50, 101, 152] {
+        nets.push(resnet(n));
+    }
+    for n in [121, 161, 169, 201] {
+        nets.push(densenet(n));
+    }
+    nets.push(resnext(50));
+    nets.push(resnext(101));
+    for scale in ["0_5", "1_0", "1_5", "2_0"] {
+        nets.push(shufflenet_v2(scale));
+    }
+    nets
+}
+
+/// The six networks of the selection experiments (paper §4.3).
+pub fn selection_networks() -> Vec<Network> {
+    vec![alexnet(), vgg(11), vgg(19), googlenet(), resnet(18), resnet(34)]
+}
+
+/// Look up a network by name (CLI entry point).
+pub fn by_name(name: &str) -> Option<Network> {
+    zoo().into_iter().find(|n| n.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_large() {
+        let z = zoo();
+        assert!(z.len() >= 20, "zoo has {} networks", z.len());
+        for n in &z {
+            assert!(n.n_layers() >= 5, "{} too small", n.name);
+            assert!(!n.edges.is_empty(), "{} has no edges", n.name);
+        }
+    }
+
+    #[test]
+    fn triplet_pool_is_diverse() {
+        let mut triplets = BTreeSet::new();
+        for n in zoo() {
+            triplets.extend(n.triplets());
+        }
+        // paper: 475 unique triplets across the pool
+        assert!(
+            triplets.len() >= 300,
+            "only {} unique triplets",
+            triplets.len()
+        );
+    }
+
+    #[test]
+    fn selection_networks_present() {
+        let names: Vec<_> = selection_networks().iter().map(|n| n.name.clone()).collect();
+        assert_eq!(
+            names,
+            ["alexnet", "vgg11", "vgg19", "googlenet", "resnet18", "resnet34"]
+        );
+    }
+
+    #[test]
+    fn layer_counts_plausible() {
+        assert_eq!(alexnet().n_layers(), 5);
+        assert_eq!(vgg(11).n_layers(), 8);
+        assert_eq!(vgg(19).n_layers(), 16);
+        assert!(googlenet().n_layers() >= 55); // 57 convs
+        assert_eq!(resnet(18).n_layers(), 20); // stem + 16 convs + 3 projections
+        assert!(resnet(50).n_layers() >= 50);
+        assert!(densenet(121).n_layers() >= 115);
+    }
+
+    #[test]
+    fn googlenet_has_branchy_nodes() {
+        let g = googlenet();
+        let max_deg = g.degrees().into_iter().max().unwrap();
+        assert!(max_deg >= 4, "inception fan-out should give degree >= 4");
+    }
+
+    #[test]
+    fn resnet_has_skip_edges() {
+        let r = resnet(18);
+        // more edges than a pure chain
+        assert!(r.edges.len() > r.n_layers() - 1);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("googlenet").is_some());
+        assert!(by_name("GoogLeNet").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_layers_in_paper_ranges() {
+        // the zoo is the *source* of the paper's Table 1 ranges
+        for n in zoo() {
+            for l in &n.layers {
+                assert!(l.k <= 2048 && l.c <= 2048, "{}: {l:?}", n.name);
+                assert!(l.im <= 299, "{}: {l:?}", n.name);
+                assert!(l.f <= 11 && l.f % 2 == 1, "{}: {l:?}", n.name);
+                assert!([1, 2, 4].contains(&l.s), "{}: {l:?}", n.name);
+            }
+        }
+    }
+}

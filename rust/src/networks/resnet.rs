@@ -1,0 +1,120 @@
+//! ResNet and ResNeXt families, with residual-shortcut edges in the
+//! selection graph (the add requires consistent layouts, so the shortcut
+//! carries a DLT edge cost).
+
+use super::{Builder, Network};
+
+/// ResNet-n for n in {18, 34, 50, 101, 152} (He et al. 2016).
+pub fn resnet(n: u32) -> Network {
+    let (blocks, bottleneck): ([usize; 4], bool) = match n {
+        18 => ([2, 2, 2, 2], false),
+        34 => ([3, 4, 6, 3], false),
+        50 => ([3, 4, 6, 3], true),
+        101 => ([3, 4, 23, 3], true),
+        152 => ([3, 8, 36, 3], true),
+        _ => panic!("unknown ResNet depth {n}"),
+    };
+    build_resnet(&format!("resnet{n}"), blocks, bottleneck, 64, 1)
+}
+
+/// ResNeXt (Xie et al. 2016): 50 => 32x4d, 101 => 32x8d.
+/// Grouped 3x3 convs are modelled at their full width (the group count
+/// affects cost, which the simulator folds into the channel dimensions).
+pub fn resnext(n: u32) -> Network {
+    let (blocks, width_mult) = match n {
+        50 => ([3usize, 4, 6, 3], 2),  // 32 groups x 4d = width 128 at stage 1
+        101 => ([3, 4, 23, 3], 4),     // 32 groups x 8d = width 256
+        _ => panic!("unknown ResNeXt depth {n}"),
+    };
+    build_resnet(&format!("resnext{n}"), blocks, true, 64, width_mult)
+}
+
+fn build_resnet(
+    name: &str,
+    blocks: [usize; 4],
+    bottleneck: bool,
+    base: u32,
+    width_mult: u32,
+) -> Network {
+    let mut b = Builder::new(name, 224, 3);
+    b.conv(base, 7, 2); // 112
+    b.pool(2); // 56
+    let expansion = if bottleneck { 4 } else { 1 };
+    let mut in_ch = base;
+    for (stage, &count) in blocks.iter().enumerate() {
+        let width = base << stage; // 64, 128, 256, 512
+        let out_ch = width * expansion;
+        for block in 0..count {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let block_in = b.last();
+            let block_im = b.im();
+            let block_out;
+            if bottleneck {
+                let mid = width * width_mult;
+                b.conv(mid, 1, 1);
+                b.conv(mid, 3, stride);
+                block_out = b.conv(out_ch, 1, 1);
+            } else {
+                b.conv(width, 3, stride);
+                block_out = b.conv(width, 3, 1);
+            }
+            if in_ch != out_ch || stride != 1 {
+                // 1x1 projection shortcut: a real conv layer on the side
+                // branch, feeding the residual add at block_out
+                b.side_conv(block_in, block_out, out_ch, in_ch, block_im, 1, stride);
+            } else if let Some(src) = block_in {
+                // identity shortcut: layouts must agree across the add
+                b.skip(src, block_out);
+            }
+            in_ch = out_ch;
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_structure() {
+        let r = resnet(18);
+        
+        assert_eq!(r.n_layers(), 20); // 1 stem + 16 + 3 projections
+        assert_eq!(r.layers[0].f, 7);
+        // stage widths double
+        assert!(r.layers.iter().any(|l| l.k == 512));
+    }
+
+    #[test]
+    fn resnet50_is_bottleneck() {
+        let r = resnet(50);
+        assert_eq!(r.n_layers(), 1 + 16 * 3 + 4); // stem + bottlenecks + 4 projections
+        // bottleneck expansion: some layer outputs 2048 channels
+        assert!(r.layers.iter().any(|l| l.k == 2048));
+    }
+
+    #[test]
+    fn resnext_wider_3x3() {
+        let x = resnext(50);
+        let r = resnet(50);
+        let max_3x3_x = x.layers.iter().filter(|l| l.f == 3).map(|l| l.k).max();
+        let max_3x3_r = r.layers.iter().filter(|l| l.f == 3).map(|l| l.k).max();
+        assert!(max_3x3_x > max_3x3_r);
+    }
+
+    #[test]
+    fn skip_edges_present() {
+        let r = resnet(34);
+        let chain_edges = r.n_layers() - 1;
+        assert!(r.edges.len() > chain_edges);
+    }
+
+    #[test]
+    fn strides_flow_spatial() {
+        let r = resnet(18);
+        // first stage at 56, last at 7
+        assert!(r.layers.iter().any(|l| l.im == 56));
+        assert!(r.layers.iter().any(|l| l.im == 7));
+    }
+}

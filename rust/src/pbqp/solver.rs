@@ -1,0 +1,388 @@
+//! The reduction-based PBQP solver.
+//!
+//! Working representation: a mutable adjacency list of dense edge
+//! matrices. Reductions eliminate nodes onto a stack; back-propagation
+//! resolves choices in reverse elimination order.
+
+use super::{Graph, INF};
+use std::collections::HashMap;
+
+/// A solved assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub choice: Vec<usize>,
+    pub cost: f64,
+}
+
+/// Records how an eliminated node's choice is recovered.
+enum Elim {
+    /// R0: choice independent of any neighbour.
+    Free { node: usize },
+    /// RI: choice depends on one neighbour's choice.
+    OneDep { node: usize, dep: usize, table: Vec<usize> },
+    /// RII: choice depends on two neighbours.
+    TwoDep { node: usize, dep_a: usize, dep_b: usize, table: Vec<usize>, cols_b: usize },
+    /// RN: choice fixed heuristically during reduction.
+    Fixed { node: usize, choice: usize },
+}
+
+struct Work {
+    costs: Vec<Vec<f64>>,
+    /// adj[u] -> map of neighbour v to edge matrix oriented (u rows, v cols).
+    adj: Vec<HashMap<usize, Vec<f64>>>,
+    alive: Vec<bool>,
+}
+
+impl Work {
+    fn from_graph(g: &Graph) -> Self {
+        let n = g.n_nodes();
+        let mut adj: Vec<HashMap<usize, Vec<f64>>> = vec![HashMap::new(); n];
+        for e in &g.edges {
+            let ru = g.node_costs[e.u].len();
+            let rv = g.node_costs[e.v].len();
+            // merge parallel edges by summing
+            let fwd = adj[e.u].entry(e.v).or_insert_with(|| vec![0.0; ru * rv]);
+            for i in 0..ru * rv {
+                fwd[i] += e.cost[i];
+            }
+            let mut transposed = vec![0.0; ru * rv];
+            for i in 0..ru {
+                for j in 0..rv {
+                    transposed[j * ru + i] = e.cost[i * rv + j];
+                }
+            }
+            let bwd = adj[e.v].entry(e.u).or_insert_with(|| vec![0.0; ru * rv]);
+            for i in 0..ru * rv {
+                bwd[i] += transposed[i];
+            }
+        }
+        Self { costs: g.node_costs.clone(), adj, alive: vec![true; n] }
+    }
+
+    fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    fn remove_edge(&mut self, u: usize, v: usize) -> Vec<f64> {
+        self.adj[v].remove(&u);
+        self.adj[u].remove(&v).expect("edge exists")
+    }
+
+    fn add_or_merge_edge(&mut self, u: usize, v: usize, mat: Vec<f64>) {
+        let ru = self.costs[u].len();
+        let rv = self.costs[v].len();
+        let fwd = self.adj[u].entry(v).or_insert_with(|| vec![0.0; ru * rv]);
+        for i in 0..ru * rv {
+            fwd[i] += mat[i];
+        }
+        let mut transposed = vec![0.0; ru * rv];
+        for i in 0..ru {
+            for j in 0..rv {
+                transposed[j * ru + i] = mat[i * rv + j];
+            }
+        }
+        let bwd = self.adj[v].entry(u).or_insert_with(|| vec![0.0; rv * ru]);
+        for i in 0..ru * rv {
+            bwd[i] += transposed[i];
+        }
+    }
+}
+
+/// Solve a PBQP instance. Exact on graphs that reduce fully with R0–RII
+/// (trees, chains, series-parallel); heuristic (RN) otherwise.
+pub fn solve(g: &Graph) -> Solution {
+    let n = g.n_nodes();
+    if n == 0 {
+        return Solution { choice: vec![], cost: 0.0 };
+    }
+    let mut w = Work::from_graph(g);
+    let mut stack: Vec<Elim> = Vec::with_capacity(n);
+
+    loop {
+        // lowest-degree-first elimination
+        let mut next: Option<(usize, usize)> = None; // (degree, node)
+        for u in 0..n {
+            if !w.alive[u] {
+                continue;
+            }
+            let d = w.degree(u);
+            if next.map_or(true, |(bd, _)| d < bd) {
+                next = Some((d, u));
+            }
+            if d == 0 {
+                break;
+            }
+        }
+        let Some((deg, u)) = next else { break };
+        match deg {
+            0 => reduce_r0(&mut w, u, &mut stack),
+            1 => reduce_ri(&mut w, u, &mut stack),
+            2 => reduce_rii(&mut w, u, &mut stack),
+            _ => reduce_rn(&mut w, u, &mut stack),
+        }
+        w.alive[u] = false;
+    }
+
+    // back-propagate
+    let mut choice = vec![usize::MAX; n];
+    let mut cost_accum = 0.0;
+    for elim in stack.iter().rev() {
+        match elim {
+            Elim::Free { node } => {
+                let (i, c) = argmin(&w.costs[*node]);
+                choice[*node] = i;
+                cost_accum += c;
+            }
+            Elim::OneDep { node, dep, table } => {
+                choice[*node] = table[choice[*dep]];
+            }
+            Elim::TwoDep { node, dep_a, dep_b, table, cols_b } => {
+                choice[*node] = table[choice[*dep_a] * cols_b + choice[*dep_b]];
+            }
+            Elim::Fixed { node, choice: c } => {
+                choice[*node] = *c;
+            }
+        }
+    }
+    let _ = cost_accum;
+    let cost = g.cost_of(&choice);
+    Solution { choice, cost }
+}
+
+fn argmin(v: &[f64]) -> (usize, f64) {
+    let mut best = 0;
+    for i in 1..v.len() {
+        if v[i] < v[best] {
+            best = i;
+        }
+    }
+    (best, v[best])
+}
+
+fn reduce_r0(_w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
+    stack.push(Elim::Free { node: u });
+}
+
+/// RI: fold node u (degree 1) into its neighbour v:
+/// v_cost[j] += min_i (u_cost[i] + edge[i][j]).
+fn reduce_ri(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
+    let (&v, _) = w.adj[u].iter().next().unwrap();
+    let mat = w.remove_edge(u, v); // u rows, v cols
+    let ru = w.costs[u].len();
+    let rv = w.costs[v].len();
+    let mut table = vec![0usize; rv];
+    for j in 0..rv {
+        let mut best_i = 0;
+        let mut best = f64::INFINITY;
+        for i in 0..ru {
+            let c = w.costs[u][i] + mat[i * rv + j];
+            if c < best {
+                best = c;
+                best_i = i;
+            }
+        }
+        w.costs[v][j] += best;
+        table[j] = best_i;
+    }
+    stack.push(Elim::OneDep { node: u, dep: v, table });
+}
+
+/// RII: fold node u (degree 2, neighbours a and b) into a new a–b edge:
+/// delta[j][k] = min_i (u_cost[i] + e_a[i][j] + e_b[i][k]).
+fn reduce_rii(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
+    let neighbours: Vec<usize> = w.adj[u].keys().copied().collect();
+    let (a, b) = (neighbours[0], neighbours[1]);
+    let mat_a = w.remove_edge(u, a); // u rows, a cols
+    let mat_b = w.remove_edge(u, b); // u rows, b cols
+    let ru = w.costs[u].len();
+    let ra = w.costs[a].len();
+    let rb = w.costs[b].len();
+    let mut delta = vec![0.0; ra * rb];
+    let mut table = vec![0usize; ra * rb];
+    for j in 0..ra {
+        for k in 0..rb {
+            let mut best_i = 0;
+            let mut best = f64::INFINITY;
+            for i in 0..ru {
+                let c = w.costs[u][i] + mat_a[i * ra + j] + mat_b[i * rb + k];
+                if c < best {
+                    best = c;
+                    best_i = i;
+                }
+            }
+            delta[j * rb + k] = best;
+            table[j * rb + k] = best_i;
+        }
+    }
+    w.add_or_merge_edge(a, b, delta);
+    stack.push(Elim::TwoDep { node: u, dep_a: a, dep_b: b, table, cols_b: rb });
+}
+
+/// RN heuristic for degree >= 3: pick the locally best choice
+/// (node cost + sum over neighbours of the best-case edge+neighbour cost),
+/// commit it, and push the chosen row of each edge into the neighbour.
+fn reduce_rn(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
+    let neighbours: Vec<usize> = w.adj[u].keys().copied().collect();
+    let ru = w.costs[u].len();
+    let mut best_i = 0;
+    let mut best = f64::INFINITY;
+    for i in 0..ru {
+        if w.costs[u][i] >= INF {
+            continue;
+        }
+        let mut c = w.costs[u][i];
+        for &v in &neighbours {
+            let rv = w.costs[v].len();
+            let mat = &w.adj[u][&v];
+            let mut m = f64::INFINITY;
+            for j in 0..rv {
+                let e = mat[i * rv + j] + w.costs[v][j];
+                if e < m {
+                    m = e;
+                }
+            }
+            c += m;
+        }
+        if c < best {
+            best = c;
+            best_i = i;
+        }
+    }
+    for &v in &neighbours {
+        let mat = w.remove_edge(u, v);
+        let rv = w.costs[v].len();
+        for j in 0..rv {
+            w.costs[v][j] += mat[best_i * rv + j];
+        }
+    }
+    stack.push(Elim::Fixed { node: u, choice: best_i });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::noise::SplitMix64;
+
+    fn random_graph(rng: &mut SplitMix64, n: usize, max_choices: usize, edge_p: f64) -> Graph {
+        let node_costs: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let c = 1 + (rng.next_u64() as usize) % max_choices;
+                (0..c).map(|_| rng.next_f64() * 10.0).collect()
+            })
+            .collect();
+        let mut g = Graph::new(node_costs);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.next_f64() < edge_p {
+                    let len = g.node_costs[u].len() * g.node_costs[v].len();
+                    let cost: Vec<f64> = (0..len).map(|_| rng.next_f64() * 5.0).collect();
+                    g.add_edge(u, v, cost);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn exact_on_chains() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..30 {
+            let n = 2 + (rng.next_u64() as usize) % 6;
+            let node_costs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.next_f64() * 10.0).collect())
+                .collect();
+            let mut g = Graph::new(node_costs);
+            for u in 0..n - 1 {
+                let cost: Vec<f64> = (0..9).map(|_| rng.next_f64() * 5.0).collect();
+                g.add_edge(u, u + 1, cost);
+            }
+            let sol = solve(&g);
+            let exact = g.brute_force();
+            assert!(
+                (sol.cost - exact.cost).abs() < 1e-9,
+                "chain not exact: {} vs {}",
+                sol.cost,
+                exact.cost
+            );
+        }
+    }
+
+    #[test]
+    fn exact_on_trees() {
+        let mut rng = SplitMix64::new(23);
+        for _ in 0..20 {
+            let n = 3 + (rng.next_u64() as usize) % 6;
+            let node_costs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..2).map(|_| rng.next_f64() * 10.0).collect())
+                .collect();
+            let mut g = Graph::new(node_costs);
+            for v in 1..n {
+                let u = (rng.next_u64() as usize) % v;
+                let cost: Vec<f64> = (0..4).map(|_| rng.next_f64() * 5.0).collect();
+                g.add_edge(u, v, cost);
+            }
+            let sol = solve(&g);
+            let exact = g.brute_force();
+            assert!((sol.cost - exact.cost).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn near_optimal_on_random_graphs() {
+        // RN is a heuristic; require the known-good bound on small graphs
+        let mut rng = SplitMix64::new(5);
+        let mut total_gap = 0.0;
+        for _ in 0..25 {
+            let g = random_graph(&mut rng, 6, 3, 0.5);
+            let sol = solve(&g);
+            let exact = g.brute_force();
+            assert!(sol.cost >= exact.cost - 1e-9);
+            total_gap += (sol.cost - exact.cost) / exact.cost.max(1e-9);
+        }
+        assert!(total_gap / 25.0 < 0.05, "mean RN gap {}", total_gap / 25.0);
+    }
+
+    #[test]
+    fn solution_choice_is_valid() {
+        let mut rng = SplitMix64::new(9);
+        let g = random_graph(&mut rng, 10, 4, 0.3);
+        let sol = solve(&g);
+        assert_eq!(sol.choice.len(), 10);
+        for (u, &c) in sol.choice.iter().enumerate() {
+            assert!(c < g.node_costs[u].len());
+        }
+        assert!((g.cost_of(&sol.choice) - sol.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_node() {
+        let g = Graph::new(vec![vec![3.0, 1.0, 2.0]]);
+        let sol = solve(&g);
+        assert_eq!(sol.choice, vec![1]);
+        assert_eq!(sol.cost, 1.0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::new(vec![]);
+        assert_eq!(solve(&g).cost, 0.0);
+    }
+
+    #[test]
+    fn parallel_edges_merge() {
+        let mut g = Graph::new(vec![vec![0.0, 0.0], vec![0.0, 0.0]]);
+        g.add_edge(0, 1, vec![1.0, 0.0, 0.0, 1.0]);
+        g.add_edge(0, 1, vec![1.0, 0.0, 0.0, 1.0]);
+        let sol = solve(&g);
+        assert_eq!(sol.cost, 0.0); // mismatched choices are free
+        assert_ne!(sol.choice[0], sol.choice[1]);
+    }
+
+    #[test]
+    fn respects_infinite_costs() {
+        let mut g = Graph::new(vec![vec![INF, 1.0], vec![1.0, INF]]);
+        g.add_edge(0, 1, vec![0.0; 4]);
+        let sol = solve(&g);
+        assert_eq!(sol.choice, vec![1, 0]);
+    }
+}

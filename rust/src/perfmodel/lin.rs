@@ -1,0 +1,145 @@
+//! The paper's linear-regression baseline ("Lin"): ordinary least squares
+//! per output column on the same log-standardised features/targets as the
+//! neural models, fitted in closed form (normal equations + Cholesky) —
+//! no PJRT involvement.
+
+use crate::dataset::Standardizer;
+use crate::linalg::{least_squares, Matrix};
+use anyhow::{ensure, Result};
+
+/// Per-output linear model on log-standardised features (+ bias).
+#[derive(Debug, Clone)]
+pub struct LinModel {
+    pub std_x: Standardizer,
+    pub std_y: Standardizer,
+    /// weights[j] has in_dim + 1 coefficients (bias last).
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl LinModel {
+    /// Fit on raw features and masked raw targets.
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[Vec<Option<f64>>],
+        std_x: Standardizer,
+        std_y: Standardizer,
+    ) -> Result<LinModel> {
+        ensure!(!xs.is_empty(), "empty training set");
+        let out_dim = ys[0].len();
+        let in_dim = xs[0].len();
+        let xn: Vec<Vec<f64>> = xs.iter().map(|x| std_x.forward(x)).collect();
+        let mut weights = Vec::with_capacity(out_dim);
+        for j in 0..out_dim {
+            let mut rows = Vec::new();
+            let mut targets = Vec::new();
+            for (x, y) in xn.iter().zip(ys) {
+                if let Some(v) = y[j] {
+                    let mut r = x.clone();
+                    r.push(1.0); // bias
+                    rows.push(r);
+                    targets.push(std_y.forward_one(j, v));
+                }
+            }
+            if rows.is_empty() {
+                weights.push(vec![0.0; in_dim + 1]);
+                continue;
+            }
+            let m = Matrix::from_rows(&rows);
+            let w = least_squares(&m, &targets, 1e-8)
+                .ok_or_else(|| anyhow::anyhow!("singular normal equations"))?;
+            weights.push(w);
+        }
+        Ok(LinModel { std_x, std_y, weights })
+    }
+
+    /// Predict denormalised outputs (ms) for raw feature rows.
+    pub fn predict_raw(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter()
+            .map(|x| {
+                let xn = self.std_x.forward(x);
+                self.weights
+                    .iter()
+                    .enumerate()
+                    .map(|(j, w)| {
+                        let mut t = w[w.len() - 1];
+                        for (xi, wi) in xn.iter().zip(w) {
+                            t += xi * wi;
+                        }
+                        self.std_y.inverse_one(j, t)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Lin must fit a pure power law exactly: t = k^2 * c / im is linear in
+    /// log space.
+    #[test]
+    fn fits_power_laws_exactly() {
+        let mut xs = Vec::new();
+        let mut ys: Vec<Vec<Option<f64>>> = Vec::new();
+        for k in [1.0f64, 2.0, 4.0, 8.0] {
+            for c in [1.0f64, 3.0, 9.0] {
+                for im in [2.0f64, 4.0] {
+                    xs.push(vec![k, c, im]);
+                    ys.push(vec![Some(k * k * c / im)]);
+                }
+            }
+        }
+        let sx = Standardizer::fit(&xs, true);
+        let sy = Standardizer::fit_masked(&ys, true);
+        let m = LinModel::fit(&xs, &ys, sx, sy).unwrap();
+        let preds = m.predict_raw(&xs);
+        for (p, y) in preds.iter().zip(&ys) {
+            let actual = y[0].unwrap();
+            assert!((p[0] - actual).abs() / actual < 1e-6, "{} vs {actual}", p[0]);
+        }
+    }
+
+    /// ... and must fail to fit a non-multiplicative law (the paper's
+    /// motivation for neural models): cache-knee-style piecewise behaviour.
+    #[test]
+    fn cannot_fit_piecewise_behaviour() {
+        let mut xs = Vec::new();
+        let mut ys: Vec<Vec<Option<f64>>> = Vec::new();
+        for i in 1..=40 {
+            let k = i as f64;
+            xs.push(vec![k]);
+            // knee at k = 20: slope changes 10x
+            let t = if k <= 20.0 { k } else { 20.0 + (k - 20.0) * 10.0 };
+            ys.push(vec![Some(t)]);
+        }
+        let sx = Standardizer::fit(&xs, true);
+        let sy = Standardizer::fit_masked(&ys, true);
+        let m = LinModel::fit(&xs, &ys, sx, sy).unwrap();
+        let preds = m.predict_raw(&xs);
+        let pairs: Vec<(f64, f64)> = preds
+            .iter()
+            .zip(&ys)
+            .map(|(p, y)| (p[0], y[0].unwrap()))
+            .collect();
+        let err = super::super::metrics::mdrae(&pairs);
+        assert!(err > 0.05, "linear model should struggle: MdRAE {err}");
+    }
+
+    #[test]
+    fn masked_columns_do_not_break_fit() {
+        let xs = vec![vec![1.0], vec![2.0], vec![4.0]];
+        let ys = vec![
+            vec![Some(2.0), None],
+            vec![Some(4.0), None],
+            vec![Some(8.0), Some(1.0)],
+        ];
+        let sx = Standardizer::fit(&xs, true);
+        let sy = Standardizer::fit_masked(&ys, true);
+        let m = LinModel::fit(&xs, &ys, sx, sy).unwrap();
+        let p = m.predict_raw(&xs);
+        assert!((p[0][0] - 2.0).abs() < 1e-6);
+        assert!(p[0][1].is_finite());
+    }
+}

@@ -1,0 +1,112 @@
+//! Evaluation metrics: the paper's MdRAE (median relative absolute error,
+//! §3.3) plus helpers used across the experiment suite.
+
+/// Relative absolute error |ŷ - y| / y.
+pub fn rae(pred: f64, actual: f64) -> f64 {
+    (pred - actual).abs() / actual.abs().max(1e-12)
+}
+
+/// Median of a slice (copies; n log n).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// MdRAE over (pred, actual) pairs.
+pub fn mdrae(pairs: &[(f64, f64)]) -> f64 {
+    let raes: Vec<f64> = pairs.iter().map(|&(p, a)| rae(p, a)).collect();
+    median(&raes)
+}
+
+/// Per-output-column MdRAE for masked prediction matrices.
+/// `preds[i][j]`, `actuals[i][j]` with None = undefined. Columns with no
+/// defined points yield NaN.
+pub fn mdrae_per_column(
+    preds: &[Vec<f64>],
+    actuals: &[Vec<Option<f64>>],
+) -> Vec<f64> {
+    let cols = actuals.first().map_or(0, |r| r.len());
+    let mut out = Vec::with_capacity(cols);
+    for j in 0..cols {
+        let pairs: Vec<(f64, f64)> = preds
+            .iter()
+            .zip(actuals)
+            .filter_map(|(p, a)| a[j].map(|av| (p[j], av)))
+            .collect();
+        out.push(mdrae(&pairs));
+    }
+    out
+}
+
+/// Overall MdRAE across all defined cells.
+pub fn mdrae_all(preds: &[Vec<f64>], actuals: &[Vec<Option<f64>>]) -> f64 {
+    let mut pairs = Vec::new();
+    for (p, a) in preds.iter().zip(actuals) {
+        for (j, av) in a.iter().enumerate() {
+            if let Some(av) = av {
+                pairs.push((p[j], *av));
+            }
+        }
+    }
+    mdrae(&pairs)
+}
+
+/// Geometric mean (for speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rae_basics() {
+        assert_eq!(rae(1.1, 1.0), 0.10000000000000009);
+        assert_eq!(rae(0.9, 1.0), 0.09999999999999998);
+        assert_eq!(rae(2.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn mdrae_is_robust_to_outliers() {
+        // one terrible prediction must not dominate the median
+        let pairs = [(1.0, 1.0), (2.0, 2.0), (100.0, 1.0), (3.0, 3.0), (4.0, 4.0)];
+        assert_eq!(mdrae(&pairs), 0.0);
+    }
+
+    #[test]
+    fn per_column_masks() {
+        let preds = vec![vec![1.0, 5.0], vec![2.0, 7.0]];
+        let actuals = vec![
+            vec![Some(1.0), None],
+            vec![Some(4.0), Some(7.0)],
+        ];
+        let m = mdrae_per_column(&preds, &actuals);
+        assert!((m[0] - 0.25).abs() < 1e-12); // median of {0, 0.5}
+        assert_eq!(m[1], 0.0);
+    }
+
+    #[test]
+    fn geomean_matches_hand() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! The paper's performance models on the rust side: training loops that
+//! drive the AOT `train_step`/`train_epoch` artifacts over PJRT, batched
+//! predictors over the `predict` artifacts, the linear-regression
+//! baseline, evaluation metrics (MdRAE) and transfer learning (factor
+//! correction + fine-tuning).
+
+pub mod lin;
+pub mod metrics;
+pub mod params;
+pub mod predictor;
+pub mod trainer;
+pub mod transfer;
+
+pub use lin::LinModel;
+pub use metrics::mdrae;
+pub use params::ParamStore;
+pub use predictor::Predictor;
+pub use trainer::{TrainOpts, TrainResult, Trainer};
+
+/// Hyper-parameters (paper Table 3).
+#[derive(Debug, Clone, Copy)]
+pub struct HParams {
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub batch: usize,
+    /// Early stopping: halt when validation loss hasn't improved for this
+    /// many epochs.
+    pub patience: usize,
+    pub max_epochs: usize,
+}
+
+/// Table 3 values for a model kind ("nn1", "nn2", "dlt_nn1", "dlt_nn2").
+pub fn hparams_for(kind: &str) -> HParams {
+    match kind {
+        "nn1" | "dlt_nn1" => HParams {
+            lr: 0.003,
+            weight_decay: 0.0,
+            batch: 1024,
+            patience: 12,
+            max_epochs: 300,
+        },
+        "nn2" | "dlt_nn2" => HParams {
+            lr: 0.001,
+            weight_decay: 1e-5,
+            batch: 1024,
+            patience: 12,
+            max_epochs: 300,
+        },
+        _ => panic!("unknown model kind {kind}"),
+    }
+}
+
+/// Fine-tuning lowers the learning rate by 10x (paper Table 3 caption).
+pub fn finetune_hparams(kind: &str) -> HParams {
+    let mut h = hparams_for(kind);
+    h.lr /= 10.0;
+    h.max_epochs = 150;
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        assert_eq!(hparams_for("nn1").lr, 0.003);
+        assert_eq!(hparams_for("nn2").lr, 0.001);
+        assert_eq!(hparams_for("nn2").weight_decay, 1e-5);
+        assert_eq!(hparams_for("nn1").weight_decay, 0.0);
+        assert_eq!(hparams_for("nn2").batch, 1024);
+    }
+
+    #[test]
+    fn finetune_lowers_lr_10x() {
+        assert!((finetune_hparams("nn2").lr - 0.0001).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! ParamStore: flat model parameters (W0, b0, ..., W4, b4) with binary
+//! save/load so trained models persist across runs (and benches reuse
+//! pre-trained weights).
+
+use crate::runtime::{literal_f32, to_f32_vec, ModelSpec, Runtime};
+use anyhow::{ensure, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PRIMSEL1";
+
+/// Flat parameter tensors in the manifest's fixed order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    pub shapes: Vec<Vec<usize>>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    pub fn new(shapes: Vec<Vec<usize>>, tensors: Vec<Vec<f32>>) -> Self {
+        assert_eq!(shapes.len(), tensors.len());
+        for (s, t) in shapes.iter().zip(&tensors) {
+            assert_eq!(s.iter().product::<usize>(), t.len());
+        }
+        Self { shapes, tensors }
+    }
+
+    /// Zero-initialised parameters for a model spec (Adam m/v state).
+    pub fn zeros_like(spec: &ModelSpec) -> Self {
+        let shapes = spec.param_shapes.clone();
+        let tensors = shapes
+            .iter()
+            .map(|s| vec![0.0f32; s.iter().product()])
+            .collect();
+        Self { shapes, tensors }
+    }
+
+    /// From PJRT output literals.
+    pub fn from_literals(spec: &ModelSpec, lits: &[xla::Literal]) -> Result<Self> {
+        ensure!(lits.len() == spec.param_shapes.len(), "literal count");
+        let tensors = lits.iter().map(to_f32_vec).collect::<Result<Vec<_>>>()?;
+        Ok(Self::new(spec.param_shapes.clone(), tensors))
+    }
+
+    /// To PJRT input literals (appends to `out`).
+    pub fn push_literals(&self, out: &mut Vec<xla::Literal>) -> Result<()> {
+        for (shape, data) in self.shapes.iter().zip(&self.tensors) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            out.push(literal_f32(data, &dims)?);
+        }
+        Ok(())
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Binary save: magic, tensor count, then (ndim, dims..., data) each.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (shape, data) in self.shapes.iter().zip(&self.tensors) {
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "bad param file magic");
+        let count = read_u32(&mut f)? as usize;
+        let mut shapes = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            shapes.push(shape);
+            tensors.push(data);
+        }
+        Ok(Self::new(shapes, tensors))
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Initialise parameters by running the model's `init` artifact.
+pub fn init_params(rt: &Runtime, spec: &ModelSpec, seed: i32) -> Result<ParamStore> {
+    let exe = rt.load(&spec.files["init"])?;
+    let out = rt.execute(&exe, &[crate::runtime::scalar_i32(seed)])?;
+    ParamStore::from_literals(spec, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = ParamStore::new(
+            vec![vec![2, 3], vec![3]],
+            vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![0.1, 0.2, 0.3]],
+        );
+        let dir = std::env::temp_dir().join("primsel_test_params.bin");
+        p.save(&dir).unwrap();
+        let q = ParamStore::load(&dir).unwrap();
+        assert_eq!(p, q);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("primsel_test_garbage.bin");
+        std::fs::write(&dir, b"not a param file").unwrap();
+        assert!(ParamStore::load(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        ParamStore::new(vec![vec![2, 2]], vec![vec![1.0]]);
+    }
+}

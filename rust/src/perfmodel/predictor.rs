@@ -1,0 +1,121 @@
+//! Batched predictors: turn layer configurations into denormalised
+//! per-primitive execution-time estimates via the AOT `predict` artifacts
+//! (step ii of the paper's Figure 2 pipeline — the whole network's layers
+//! go through the model in one batch).
+
+use super::params::ParamStore;
+use super::trainer::Trainer;
+use crate::dataset::{Batches, Standardizer};
+use crate::layers::ConvConfig;
+use crate::primitives::{catalog, Layout};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// A trained primitive-cost model ready for inference.
+pub struct Predictor<'rt> {
+    trainer: Trainer<'rt>,
+    pub params: ParamStore,
+    pub std_x: Standardizer,
+    pub std_y: Standardizer,
+    /// Per-output multiplicative correction (transfer §4.4); 1.0 = none.
+    pub factors: Vec<f64>,
+}
+
+impl<'rt> Predictor<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        kind: &str,
+        params: ParamStore,
+        std_x: Standardizer,
+        std_y: Standardizer,
+    ) -> Result<Self> {
+        let trainer = Trainer::new(rt, kind)?;
+        let out_dim = trainer.spec().out_dim;
+        Ok(Self { trainer, params, std_x, std_y, factors: vec![1.0; out_dim] })
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.trainer.spec().out_dim
+    }
+
+    /// Predict the full primitive-cost matrix for `configs` (ms).
+    /// Inapplicable primitives are None, mirroring the profiler.
+    pub fn predict_configs(&self, configs: &[ConvConfig]) -> Result<Vec<Vec<Option<f64>>>> {
+        let xs: Vec<Vec<f64>> = configs.iter().map(|c| c.features().to_vec()).collect();
+        let raw = self.predict_raw(&xs)?;
+        Ok(configs
+            .iter()
+            .zip(raw)
+            .map(|(cfg, row)| {
+                catalog()
+                    .iter()
+                    .zip(row)
+                    .map(|(p, v)| if p.applicable(cfg) { Some(v) } else { None })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Predict denormalised outputs (ms) for raw feature rows.
+    pub fn predict_raw(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let spec = self.trainer.spec();
+        let ys: Vec<Vec<Option<f64>>> = vec![vec![None; spec.out_dim]; xs.len()];
+        let b = crate::dataset::make_batches(xs, &ys, &self.std_x, &self.std_y, spec.train_batch.min(1024));
+        let preds = self.trainer.predict_normalised(&self.params, &b)?;
+        let mut out = Vec::with_capacity(xs.len());
+        for i in 0..xs.len() {
+            let row: Vec<f64> = (0..spec.out_dim)
+                .map(|j| {
+                    self.std_y.inverse_one(j, preds[i * spec.out_dim + j] as f64)
+                        * self.factors[j]
+                })
+                .collect();
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    /// Batches-level loss passthrough (for validation during experiments).
+    pub fn eval_loss(&self, b: &Batches) -> Result<f64> {
+        self.trainer.eval_loss(&self.params, b)
+    }
+}
+
+/// A trained DLT-cost model: predicts the 3x3 layout-transform matrix.
+pub struct DltPredictor<'rt> {
+    inner: Predictor<'rt>,
+}
+
+impl<'rt> DltPredictor<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        kind: &str,
+        params: ParamStore,
+        std_x: Standardizer,
+        std_y: Standardizer,
+    ) -> Result<Self> {
+        Ok(Self { inner: Predictor::new(rt, kind, params, std_x, std_y)? })
+    }
+
+    /// Predict DLT matrices for (c, im) pairs; identity entries are 0.
+    pub fn predict_pairs(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>> {
+        let xs: Vec<Vec<f64>> =
+            pairs.iter().map(|&(c, im)| vec![c as f64, im as f64]).collect();
+        let raw = self.inner.predict_raw(&xs)?;
+        Ok(raw
+            .into_iter()
+            .map(|row| {
+                let mut m = [[0.0; 3]; 3];
+                for src in Layout::ALL {
+                    for dst in Layout::ALL {
+                        if src != dst {
+                            m[src.index()][dst.index()] =
+                                row[src.index() * 3 + dst.index()];
+                        }
+                    }
+                }
+                m
+            })
+            .collect())
+    }
+}

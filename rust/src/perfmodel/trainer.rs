@@ -1,0 +1,236 @@
+//! The training loop: rust drives the AOT `train_step` / `train_epoch`
+//! artifacts over PJRT. Early stopping monitors validation loss (paper
+//! §4.2); the learning rate and weight decay are runtime scalars, so the
+//! same artifacts serve both from-scratch training and fine-tuning.
+
+use super::params::ParamStore;
+use super::HParams;
+use crate::dataset::Batches;
+use crate::runtime::{literal_f32, scalar_f32, to_f32_vec, ModelSpec, Runtime};
+use anyhow::{ensure, Result};
+
+/// Training options.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOpts {
+    pub hp: HParams,
+    /// Log every n epochs (0 = silent).
+    pub verbose_every: usize,
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub params: ParamStore,
+    pub epochs_run: usize,
+    pub final_train_loss: f64,
+    pub best_val_loss: f64,
+    /// (epoch, train_loss, val_loss) log.
+    pub history: Vec<(usize, f64, f64)>,
+}
+
+/// Drives one model kind's artifacts.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    spec: ModelSpec,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, kind: &str) -> Result<Self> {
+        let spec = rt
+            .manifest
+            .models
+            .get(kind)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown model kind {kind}"))?;
+        Ok(Self { rt, spec })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Fresh parameters from the `init` artifact.
+    pub fn init(&self, seed: i32) -> Result<ParamStore> {
+        super::params::init_params(self.rt, &self.spec, seed)
+    }
+
+    /// Train from `start` params on `train` batches with early stopping on
+    /// `val` loss. Uses the scanned `train_epoch` artifact when the batch
+    /// count matches its baked size, per-batch `train_step` otherwise.
+    pub fn train(
+        &self,
+        start: ParamStore,
+        train: &Batches,
+        val: &Batches,
+        opts: TrainOpts,
+    ) -> Result<TrainResult> {
+        ensure!(train.in_dim == self.spec.in_dim, "in_dim mismatch");
+        ensure!(train.out_dim == self.spec.out_dim, "out_dim mismatch");
+        ensure!(train.batch == self.spec.train_batch, "batch mismatch");
+
+        let mut state = TrainState::fresh(&self.spec, start);
+        let mut best_val = f64::INFINITY;
+        let mut best_params = state.params.clone();
+        let mut since_best = 0usize;
+        let mut history = Vec::new();
+        let mut last_train_loss = f64::NAN;
+        let mut epochs_run = 0;
+
+        let use_epoch_artifact = train.n_batches == self.spec.epoch_batches
+            && self.spec.files.contains_key("train_epoch");
+
+        for epoch in 0..opts.hp.max_epochs {
+            last_train_loss = if use_epoch_artifact {
+                self.run_epoch_scanned(&mut state, train, &opts.hp)?
+            } else {
+                self.run_epoch_stepped(&mut state, train, &opts.hp)?
+            };
+            let val_loss = self.eval_loss(&state.params, val)?;
+            history.push((epoch, last_train_loss, val_loss));
+            epochs_run = epoch + 1;
+            if opts.verbose_every > 0 && epoch % opts.verbose_every == 0 {
+                eprintln!("epoch {epoch}: train {last_train_loss:.5} val {val_loss:.5}");
+            }
+            if val_loss < best_val - 1e-6 {
+                best_val = val_loss;
+                best_params = state.params.clone();
+                since_best = 0;
+            } else {
+                since_best += 1;
+                if since_best >= opts.hp.patience {
+                    break;
+                }
+            }
+        }
+
+        Ok(TrainResult {
+            params: best_params,
+            epochs_run,
+            final_train_loss: last_train_loss,
+            best_val_loss: best_val,
+            history,
+        })
+    }
+
+    fn run_epoch_stepped(
+        &self,
+        state: &mut TrainState,
+        b: &Batches,
+        hp: &HParams,
+    ) -> Result<f64> {
+        let exe = self.rt.load(&self.spec.files["train_step"])?;
+        let (bsz, idim, odim) = (b.batch, b.in_dim, b.out_dim);
+        let mut loss_sum = 0.0;
+        for bi in 0..b.n_batches {
+            let mut inputs = Vec::with_capacity(3 * state.params.tensors.len() + 6);
+            state.params.push_literals(&mut inputs)?;
+            state.m.push_literals(&mut inputs)?;
+            state.v.push_literals(&mut inputs)?;
+            inputs.push(scalar_f32(state.t));
+            let xr = &b.x[bi * bsz * idim..(bi + 1) * bsz * idim];
+            let yr = &b.y[bi * bsz * odim..(bi + 1) * bsz * odim];
+            let mr = &b.mask[bi * bsz * odim..(bi + 1) * bsz * odim];
+            inputs.push(literal_f32(xr, &[bsz as i64, idim as i64])?);
+            inputs.push(literal_f32(yr, &[bsz as i64, odim as i64])?);
+            inputs.push(literal_f32(mr, &[bsz as i64, odim as i64])?);
+            inputs.push(scalar_f32(hp.lr as f32));
+            inputs.push(scalar_f32(hp.weight_decay as f32));
+            let out = self.rt.execute(&exe, &inputs)?;
+            loss_sum += state.absorb(&self.spec, &out)?;
+        }
+        Ok(loss_sum / b.n_batches as f64)
+    }
+
+    fn run_epoch_scanned(
+        &self,
+        state: &mut TrainState,
+        b: &Batches,
+        hp: &HParams,
+    ) -> Result<f64> {
+        let exe = self.rt.load(&self.spec.files["train_epoch"])?;
+        let (nb, bsz, idim, odim) = (b.n_batches, b.batch, b.in_dim, b.out_dim);
+        let mut inputs = Vec::with_capacity(3 * state.params.tensors.len() + 6);
+        state.params.push_literals(&mut inputs)?;
+        state.m.push_literals(&mut inputs)?;
+        state.v.push_literals(&mut inputs)?;
+        inputs.push(scalar_f32(state.t));
+        inputs.push(literal_f32(&b.x, &[nb as i64, bsz as i64, idim as i64])?);
+        inputs.push(literal_f32(&b.y, &[nb as i64, bsz as i64, odim as i64])?);
+        inputs.push(literal_f32(&b.mask, &[nb as i64, bsz as i64, odim as i64])?);
+        inputs.push(scalar_f32(hp.lr as f32));
+        inputs.push(scalar_f32(hp.weight_decay as f32));
+        let out = self.rt.execute(&exe, &inputs)?;
+        state.absorb(&self.spec, &out)
+    }
+
+    /// Masked-MSE loss of `params` on batches (via the predict artifact).
+    pub fn eval_loss(&self, params: &ParamStore, b: &Batches) -> Result<f64> {
+        let preds = self.predict_normalised(params, b)?;
+        let mut se = 0.0;
+        let mut n = 0.0;
+        for i in 0..preds.len() {
+            if b.mask[i] > 0.0 {
+                let d = preds[i] as f64 - b.y[i] as f64;
+                se += d * d;
+                n += 1.0;
+            }
+        }
+        Ok(if n > 0.0 { se / n } else { 0.0 })
+    }
+
+    /// Raw (normalised-space) predictions for all rows in `b`.
+    pub fn predict_normalised(&self, params: &ParamStore, b: &Batches) -> Result<Vec<f32>> {
+        let (b_small, b_large) = self.rt.manifest.predict_batches;
+        let total = b.n_batches * b.batch;
+        let mut out = vec![0.0f32; total * b.out_dim];
+        let mut row = 0usize;
+        while row < total {
+            let remaining = total - row;
+            let bsz = if remaining >= b_large { b_large } else { b_small };
+            let exe = self.rt.load(&self.spec.files[&format!("predict_b{bsz}")])?;
+            let n_rows = bsz.min(remaining);
+            let mut x = vec![0.0f32; bsz * b.in_dim];
+            x[..n_rows * b.in_dim]
+                .copy_from_slice(&b.x[row * b.in_dim..(row + n_rows) * b.in_dim]);
+            let mut inputs = Vec::new();
+            params.push_literals(&mut inputs)?;
+            inputs.push(literal_f32(&x, &[bsz as i64, b.in_dim as i64])?);
+            let res = self.rt.execute(&exe, &inputs)?;
+            let y = to_f32_vec(&res[0])?;
+            out[row * b.out_dim..(row + n_rows) * b.out_dim]
+                .copy_from_slice(&y[..n_rows * b.out_dim]);
+            row += n_rows;
+        }
+        Ok(out)
+    }
+}
+
+/// Mutable Adam state across steps.
+struct TrainState {
+    params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    t: f32,
+}
+
+impl TrainState {
+    fn fresh(spec: &ModelSpec, params: ParamStore) -> Self {
+        Self {
+            params,
+            m: ParamStore::zeros_like(spec),
+            v: ParamStore::zeros_like(spec),
+            t: 0.0,
+        }
+    }
+
+    /// Consume a train_step/train_epoch output tuple; returns the loss.
+    fn absorb(&mut self, spec: &ModelSpec, out: &[xla::Literal]) -> Result<f64> {
+        let np = spec.param_shapes.len();
+        ensure!(out.len() == 3 * np + 2, "unexpected output arity {}", out.len());
+        self.params = ParamStore::from_literals(spec, &out[..np])?;
+        self.m = ParamStore::from_literals(spec, &out[np..2 * np])?;
+        self.v = ParamStore::from_literals(spec, &out[2 * np..3 * np])?;
+        self.t = to_f32_vec(&out[3 * np])?[0];
+        Ok(to_f32_vec(&out[3 * np + 1])?[0] as f64)
+    }
+}

@@ -1,0 +1,96 @@
+//! The static catalog of the 31 modeled primitives.
+//!
+//! Names follow triNNity (paper Table 6). Each entry records which Pallas
+//! kernel implements it (`kernel_id`, a key of python REGISTRY), its input
+//! and output layout contracts, and the variant knobs the simulator's cost
+//! model keys on (gemm transposes, copy-vs-scan, Winograd tile size and
+//! vector width).
+
+use super::{Family, GemmVariant, Layout};
+
+/// A catalog entry for one convolutional primitive.
+#[derive(Debug, Clone)]
+pub struct Primitive {
+    /// triNNity-style primitive name.
+    pub name: &'static str,
+    pub family: Family,
+    /// Pallas kernel id in python/compile/kernels REGISTRY.
+    pub kernel_id: &'static str,
+    pub in_layout: Layout,
+    pub out_layout: Layout,
+    /// GEMM operand transpose variant.
+    pub gemm: GemmVariant,
+    /// im2 family: copy (materialise patch matrix) vs scan (streamed).
+    pub copy: bool,
+    /// Winograd output tile size m (0 for non-winograd).
+    pub tile_m: u32,
+    /// Vectorisation width of the `-vec-N` variants (1 = scalar).
+    pub vec_width: u32,
+}
+
+const fn prim(
+    name: &'static str,
+    family: Family,
+    kernel_id: &'static str,
+    in_layout: Layout,
+    out_layout: Layout,
+    gemm: GemmVariant,
+    copy: bool,
+    tile_m: u32,
+    vec_width: u32,
+) -> Primitive {
+    Primitive { name, family, kernel_id, in_layout, out_layout, gemm, copy, tile_m, vec_width }
+}
+
+use Family as F;
+use GemmVariant as G;
+use Layout as L;
+
+/// Number of primitives — must match python/compile/constants.N_PRIMITIVES.
+pub const CATALOG_LEN: usize = 31;
+
+static CATALOG: [Primitive; CATALOG_LEN] = [
+    // --- direct (1)
+    prim("direct-sum2d", F::Direct, "direct_sum2d", L::Chw, L::Chw, G::Ab, false, 0, 1),
+    // --- im2 (10)
+    prim("im2col-copy-ab-ki", F::Im2, "im2col_copy", L::Chw, L::Chw, G::Ab, true, 0, 1),
+    prim("im2col-copy-atb-ik", F::Im2, "im2col_copy", L::Chw, L::Hwc, G::Atb, true, 0, 1),
+    prim("im2col-copy-atb-ki", F::Im2, "im2col_copy", L::Chw, L::Chw, G::Atb, true, 0, 1),
+    prim("im2col-copy-atbt-ik", F::Im2, "im2col_copy", L::Chw, L::Hwc, G::Atbt, true, 0, 1),
+    prim("im2col-scan-ab-ki", F::Im2, "im2col_scan", L::Chw, L::Chw, G::Ab, false, 0, 1),
+    prim("im2col-scan-atb-ik", F::Im2, "im2col_scan", L::Chw, L::Hwc, G::Atb, false, 0, 1),
+    prim("im2row-copy-ab-ik", F::Im2, "im2row_copy", L::Hwc, L::Hwc, G::Ab, true, 0, 1),
+    prim("im2row-copy-abt-ik", F::Im2, "im2row_copy", L::Hwc, L::Hwc, G::Abt, true, 0, 1),
+    prim("im2row-scan-ab-ik", F::Im2, "im2row_scan", L::Hwc, L::Hwc, G::Ab, false, 0, 1),
+    prim("im2row-scan-abt-ki", F::Im2, "im2row_scan", L::Hwc, L::Chw, G::Abt, false, 0, 1),
+    // --- kn2 (6)
+    prim("kn2col", F::Kn2, "kn2col", L::Hwc, L::Hwc, G::Ab, false, 0, 1),
+    prim("kn2col-as", F::Kn2, "kn2col", L::Hwc, L::Hwc, G::Ab, true, 0, 1),
+    prim("kn2row", F::Kn2, "kn2row", L::Chw, L::Chw, G::Ab, false, 0, 1),
+    prim("kn2row-aa-ab", F::Kn2, "kn2row", L::Chw, L::Chw, G::Ab, true, 0, 1),
+    prim("kn2row-aa-atb", F::Kn2, "kn2row", L::Chw, L::Chw, G::Atb, true, 0, 1),
+    prim("kn2row-as", F::Kn2, "kn2row", L::Chw, L::Chw, G::Atb, false, 0, 1),
+    // --- wino3 (5)
+    prim("winograd-2x2-3x3", F::Wino3, "winograd_2x2_3x3", L::Chw, L::Chw, G::Ab, false, 2, 1),
+    prim("winograd-2x2-3x3-vec-4", F::Wino3, "winograd_2x2_3x3", L::Chw, L::Chw, G::Ab, false, 2, 4),
+    prim("winograd-3x3-3x3", F::Wino3, "winograd_3x3_3x3", L::Chw, L::Chw, G::Ab, false, 3, 1),
+    prim("winograd-4x4-3x3", F::Wino3, "winograd_4x4_3x3", L::Chw, L::Chw, G::Ab, false, 4, 1),
+    prim("winograd-4x4-3x3-vec-8", F::Wino3, "winograd_4x4_3x3", L::Chw, L::Chw, G::Ab, false, 4, 8),
+    // --- wino5 (3)
+    prim("winograd-2x2-5x5", F::Wino5, "winograd_2x2_5x5", L::Chw, L::Chw, G::Ab, false, 2, 1),
+    prim("winograd-3x3-5x5-vec4", F::Wino5, "winograd_2x2_5x5", L::Chw, L::Chw, G::Ab, false, 3, 4),
+    prim("winograd-4x4-5x5-vec8", F::Wino5, "winograd_4x4_5x5", L::Chw, L::Chw, G::Ab, false, 4, 8),
+    // --- conv-1x1 (4)
+    prim("conv-1x1-gemm-ab-ik", F::Conv1x1, "conv1x1_ik", L::Hwc, L::Hwc, G::Ab, false, 0, 1),
+    prim("conv-1x1-gemm-ab-ki", F::Conv1x1, "conv1x1_ki", L::Chw, L::Chw, G::Ab, false, 0, 1),
+    prim("conv-1x1-gemm-atb-ik", F::Conv1x1, "conv1x1_ik", L::Hwc, L::Hwc, G::Atb, false, 0, 1),
+    prim("conv-1x1-gemm-atbt-ki", F::Conv1x1, "conv1x1_ki", L::Chw, L::Chw, G::Atbt, false, 0, 1),
+    // --- mec (2)
+    prim("mec-col", F::Mec, "mec_col", L::Hwc, L::Hwc, G::Ab, false, 0, 1),
+    prim("mec-row-partition", F::Mec, "mec_col", L::Hwc, L::Hwc, G::Abt, true, 0, 1),
+];
+
+/// The full primitive catalog, index-stable (NN2 output ordering).
+pub fn catalog() -> &'static [Primitive] {
+    &CATALOG
+}

@@ -1,0 +1,205 @@
+//! The convolutional primitive catalog (paper Table 6, 31 modeled
+//! primitives across the seven families of §3.1) with layout contracts and
+//! applicability predicates.
+
+mod catalog;
+
+pub use catalog::{catalog, Primitive, CATALOG_LEN};
+
+use crate::layers::ConvConfig;
+
+/// The paper's three data layouts (§3.2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// c × im × im
+    Chw,
+    /// im × c × im
+    Hcw,
+    /// im × im × c
+    Hwc,
+}
+
+impl Layout {
+    pub const ALL: [Layout; 3] = [Layout::Chw, Layout::Hcw, Layout::Hwc];
+
+    pub fn index(self) -> usize {
+        match self {
+            Layout::Chw => 0,
+            Layout::Hcw => 1,
+            Layout::Hwc => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Layout {
+        Self::ALL[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::Chw => "chw",
+            Layout::Hcw => "hcw",
+            Layout::Hwc => "hwc",
+        }
+    }
+}
+
+/// Primitive families (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Direct,
+    Im2,
+    Kn2,
+    Wino3,
+    Wino5,
+    Conv1x1,
+    Mec,
+}
+
+impl Family {
+    pub const ALL: [Family; 7] = [
+        Family::Direct,
+        Family::Im2,
+        Family::Kn2,
+        Family::Wino3,
+        Family::Wino5,
+        Family::Conv1x1,
+        Family::Mec,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Direct => "direct",
+            Family::Im2 => "im2",
+            Family::Kn2 => "kn2",
+            Family::Wino3 => "wino3",
+            Family::Wino5 => "wino5",
+            Family::Conv1x1 => "c1x1",
+            Family::Mec => "mec",
+        }
+    }
+}
+
+/// GEMM operand transpose variants (`ab`, `atb`, `abt`, `atbt` in the
+/// triNNity names). Functionally equivalent; they differ in cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmVariant {
+    Ab,
+    Atb,
+    Abt,
+    Atbt,
+}
+
+impl Primitive {
+    /// Whether the primitive can implement the given layer configuration
+    /// (paper §3.2.1: some `R_i` are undefined).
+    pub fn applicable(&self, cfg: &ConvConfig) -> bool {
+        if !cfg.is_valid() {
+            return false;
+        }
+        match self.family {
+            Family::Direct | Family::Im2 | Family::Mec => true,
+            // kn2's shifted-gemm trick needs unit stride (paper §3.1).
+            Family::Kn2 => cfg.s == 1,
+            Family::Wino3 => cfg.s == 1 && cfg.f == 3 && cfg.im >= 3,
+            Family::Wino5 => cfg.s == 1 && cfg.f == 5 && cfg.im >= 5,
+            Family::Conv1x1 => cfg.f == 1,
+        }
+    }
+}
+
+/// Number of primitives applicable to a config.
+pub fn applicable_count(cfg: &ConvConfig) -> usize {
+    catalog().iter().filter(|p| p.applicable(cfg)).count()
+}
+
+/// Find a primitive index by name.
+pub fn index_of(name: &str) -> Option<usize> {
+    catalog().iter().position(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_31_primitives() {
+        assert_eq!(catalog().len(), 31);
+        assert_eq!(catalog().len(), CATALOG_LEN);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = catalog().iter().map(|p| p.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), CATALOG_LEN);
+    }
+
+    #[test]
+    fn all_families_present() {
+        for fam in Family::ALL {
+            assert!(
+                catalog().iter().any(|p| p.family == fam),
+                "missing family {fam:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn applicability_rules() {
+        let any = ConvConfig::new(64, 64, 56, 1, 3);
+        let strided = ConvConfig::new(64, 64, 56, 2, 3);
+        let one = ConvConfig::new(64, 64, 56, 1, 1);
+        let five = ConvConfig::new(64, 64, 56, 1, 5);
+        for p in catalog() {
+            match p.family {
+                Family::Direct | Family::Im2 | Family::Mec => {
+                    assert!(p.applicable(&any) && p.applicable(&strided));
+                }
+                Family::Kn2 => {
+                    assert!(p.applicable(&any) && !p.applicable(&strided));
+                }
+                Family::Wino3 => {
+                    assert!(p.applicable(&any) && !p.applicable(&five));
+                    assert!(!p.applicable(&strided));
+                }
+                Family::Wino5 => {
+                    assert!(p.applicable(&five) && !p.applicable(&any));
+                }
+                Family::Conv1x1 => {
+                    assert!(p.applicable(&one) && !p.applicable(&any));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_config_has_a_primitive() {
+        // the "always applicable" families guarantee a non-empty choice set
+        for (s, f) in [(1u32, 3u32), (2, 5), (4, 7), (1, 1), (2, 11)] {
+            let cfg = ConvConfig::new(8, 8, 32, s, f);
+            assert!(applicable_count(&cfg) >= 3, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        for l in Layout::ALL {
+            assert_eq!(Layout::from_index(l.index()), l);
+        }
+    }
+
+    #[test]
+    fn kernel_ids_are_known() {
+        // kernel ids must match python/compile/kernels REGISTRY keys
+        let known = [
+            "direct_sum2d", "im2col_copy", "im2col_scan", "im2row_copy",
+            "im2row_scan", "kn2row", "kn2col", "winograd_2x2_3x3",
+            "winograd_3x3_3x3", "winograd_4x4_3x3", "winograd_2x2_5x5",
+            "winograd_4x4_5x5", "conv1x1_ki", "conv1x1_ik", "mec_col",
+        ];
+        for p in catalog() {
+            assert!(known.contains(&p.kernel_id), "{}", p.kernel_id);
+        }
+    }
+}

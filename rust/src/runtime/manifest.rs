@@ -1,0 +1,181 @@
+//! artifacts/manifest.json — the shape/order contract between the python
+//! compile path and this runtime.
+
+use crate::config::Json;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub n_primitives: usize,
+    pub n_layouts: usize,
+    pub prim_features: usize,
+    pub dlt_features: usize,
+    /// (small, large) predict batch sizes baked into the artifacts.
+    pub predict_batches: (usize, usize),
+    pub models: HashMap<String, ModelSpec>,
+    pub prim_grid: Vec<PrimGridEntry>,
+    pub dlt_grid: Vec<DltGridEntry>,
+}
+
+/// One performance-model kind (nn1 / nn2 / dlt_nn1 / dlt_nn2).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub hidden: Vec<usize>,
+    /// Flat tensor order: W0, b0, W1, b1, ...
+    pub param_shapes: Vec<Vec<usize>>,
+    pub train_batch: usize,
+    pub epoch_batches: usize,
+    /// artifact file names: init, train_step, train_epoch, predict_b{B}.
+    pub files: HashMap<String, String>,
+}
+
+impl ModelSpec {
+    pub fn n_params(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// One measured-profile-grid kernel artifact.
+#[derive(Debug, Clone)]
+pub struct PrimGridEntry {
+    pub kernel: String,
+    pub c: u32,
+    pub im: u32,
+    pub k: u32,
+    pub f: u32,
+    pub s: u32,
+    pub out_layout: String,
+    pub flops: f64,
+    pub file: String,
+}
+
+/// One DLT kernel artifact.
+#[derive(Debug, Clone)]
+pub struct DltGridEntry {
+    pub src: String,
+    pub dst: String,
+    pub c: u32,
+    pub im: u32,
+    pub bytes: u64,
+    pub file: String,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+
+        let mut models = HashMap::new();
+        for (name, spec) in j.get("models")?.as_obj()? {
+            let mut files = HashMap::new();
+            for (k, v) in spec.get("files")?.as_obj()? {
+                files.insert(k.clone(), v.as_str()?.to_string());
+            }
+            let param_shapes = spec
+                .get("param_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    s.as_arr().map(|dims| {
+                        dims.iter().map(|d| d.as_usize().unwrap()).collect()
+                    })
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    in_dim: spec.get("in_dim")?.as_usize()?,
+                    out_dim: spec.get("out_dim")?.as_usize()?,
+                    hidden: spec
+                        .get("hidden")?
+                        .as_arr()?
+                        .iter()
+                        .map(|h| h.as_usize().unwrap())
+                        .collect(),
+                    param_shapes,
+                    train_batch: spec.get("train_batch")?.as_usize()?,
+                    epoch_batches: spec.get("epoch_batches")?.as_usize()?,
+                    files,
+                },
+            );
+        }
+
+        let prim_grid = match j.get("prim_grid") {
+            Ok(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(PrimGridEntry {
+                        kernel: e.get("kernel")?.as_str()?.to_string(),
+                        c: e.get("c")?.as_usize()? as u32,
+                        im: e.get("im")?.as_usize()? as u32,
+                        k: e.get("k")?.as_usize()? as u32,
+                        f: e.get("f")?.as_usize()? as u32,
+                        s: e.get("s")?.as_usize()? as u32,
+                        out_layout: e.get("out_layout")?.as_str()?.to_string(),
+                        flops: e.get("flops")?.as_f64()?,
+                        file: e.get("file")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Err(_) => Vec::new(),
+        };
+
+        let dlt_grid = match j.get("dlt_grid") {
+            Ok(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(DltGridEntry {
+                        src: e.get("src")?.as_str()?.to_string(),
+                        dst: e.get("dst")?.as_str()?.to_string(),
+                        c: e.get("c")?.as_usize()? as u32,
+                        im: e.get("im")?.as_usize()? as u32,
+                        bytes: e.get("bytes")?.as_usize()? as u64,
+                        file: e.get("file")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Err(_) => Vec::new(),
+        };
+
+        let pb = j.get("predict_batches")?.as_arr()?;
+        Ok(Manifest {
+            n_primitives: j.get("n_primitives")?.as_usize()?,
+            n_layouts: j.get("n_layouts")?.as_usize()?,
+            prim_features: j.get("prim_features")?.as_usize()?,
+            dlt_features: j.get("dlt_features")?.as_usize()?,
+            predict_batches: (pb[0].as_usize()?, pb[1].as_usize()?),
+            models,
+            prim_grid,
+            dlt_grid,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        for dir in ["artifacts", "../artifacts"] {
+            let p = Path::new(dir).join("manifest.json");
+            if p.exists() {
+                let m = Manifest::load(&p).unwrap();
+                assert_eq!(m.models.len(), 4);
+                let nn2 = &m.models["nn2"];
+                assert_eq!(nn2.in_dim, 5);
+                assert_eq!(nn2.out_dim, m.n_primitives);
+                assert_eq!(nn2.param_shapes.len(), 10);
+                assert!(nn2.files.contains_key("train_step"));
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module touching the `xla` crate. Interchange is HLO
+//! *text* (xla_extension 0.5.1 rejects jax>=0.5 serialized protos — see
+//! /opt/xla-example/README.md); all artifacts are lowered with
+//! `return_tuple=True`, so every execution returns a tuple literal that we
+//! decompose.
+
+mod manifest;
+
+pub use manifest::{DltGridEntry, Manifest, ModelSpec, PrimGridEntry};
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A loaded-and-compiled artifact cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects manifest.json inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} — run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Self { client, dir, cache: RefCell::new(HashMap::new()), manifest })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in candidates {
+            if Path::new(c).join("manifest.json").exists() {
+                return Self::open(c);
+            }
+        }
+        Self::open("artifacts")
+    }
+
+    /// Load + compile an HLO text artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(wrap)
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(wrap)?);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 literals and decompose the result tuple.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        lit.to_tuple().map_err(wrap)
+    }
+
+    /// Number of artifacts compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// The xla crate has its own error type; flatten to anyhow.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Scalar i32 literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Flatten a literal back to f32s.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open_default().ok()
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.manifest.n_primitives, crate::primitives::CATALOG_LEN);
+        assert!(rt.manifest.models.contains_key("nn2"));
+        assert!(!rt.manifest.prim_grid.is_empty());
+    }
+
+    #[test]
+    fn load_compile_execute_predict() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.manifest.models["nn1"].clone();
+        // init params from seed, then predict on zeros
+        let init = rt.load(&spec.files["init"]).unwrap();
+        let params = rt.execute(&init, &[scalar_i32(42)]).unwrap();
+        assert_eq!(params.len(), spec.param_shapes.len());
+        let b = rt.manifest.predict_batches.0;
+        let predict = rt.load(&spec.files[&format!("predict_b{b}")]).unwrap();
+        let x = literal_f32(&vec![0.0; b * spec.in_dim], &[b as i64, spec.in_dim as i64])
+            .unwrap();
+        let mut inputs = params;
+        inputs.push(x);
+        let out = rt.execute(&predict, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = to_f32_vec(&out[0]).unwrap();
+        assert_eq!(y.len(), b * spec.out_dim);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = runtime() else { return };
+        let f = &rt.manifest.models["nn1"].files["init"].clone();
+        let a = rt.load(f).unwrap();
+        let n = rt.compiled_count();
+        let b = rt.load(f).unwrap();
+        assert_eq!(n, rt.compiled_count());
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,156 @@
+//! Memory-aware selection — the paper's §2.1 pointer to TASO [28, 29]:
+//! primitives differ hugely in workspace footprint (im2col materialises a
+//! c·f·f·o² patch matrix; kn2/mec exist *because* of it), so
+//! memory-constrained devices trade time for space. We expose the
+//! workspace model and a penalised PBQP objective
+//! `time + λ · max(0, workspace − budget)` per layer, reproducing TASO's
+//! trade-off curve shape (time rises as the budget tightens).
+
+use crate::layers::ConvConfig;
+use crate::networks::Network;
+use crate::pbqp;
+use crate::primitives::{catalog, Family, Primitive};
+use crate::selection::{CostSource, Selection};
+use anyhow::{ensure, Result};
+
+/// Workspace bytes a primitive needs beyond input/weights/output.
+pub fn workspace_bytes(prim: &Primitive, cfg: &ConvConfig) -> f64 {
+    const B: f64 = 4.0;
+    let Some(o) = cfg.out_size() else { return 0.0 };
+    let (k, c, im, o, f) =
+        (cfg.k as f64, cfg.c as f64, cfg.im as f64, o as f64, cfg.f as f64);
+    match prim.family {
+        // the full patch matrix (only the copy variants materialise it)
+        Family::Im2 => {
+            if prim.copy {
+                c * f * f * o * o * B
+            } else {
+                c * o * o * B // one offset slice in flight
+            }
+        }
+        // full-image product before the shifted accumulation
+        Family::Kn2 => k * im * im * B,
+        // U and V transform tensors
+        Family::Wino3 | Family::Wino5 => {
+            let m = prim.tile_m as f64;
+            let a = m + f - 1.0;
+            let tiles = (o / m).ceil().powi(2);
+            (a * a * k * c + a * a * tiles * c) * B
+        }
+        // MEC's defining property: the width-lowered L matrix, f× smaller
+        Family::Mec => o * im * c * f * B,
+        Family::Direct | Family::Conv1x1 => 0.0,
+    }
+}
+
+/// Peak workspace of an assignment across the network.
+pub fn peak_workspace(net: &Network, sel: &Selection) -> f64 {
+    net.layers
+        .iter()
+        .zip(&sel.primitive)
+        .map(|(cfg, &p)| workspace_bytes(&catalog()[p], cfg))
+        .fold(0.0, f64::max)
+}
+
+/// Select with a per-layer workspace budget: overshoot is charged at
+/// `lambda_ms_per_mb` in the PBQP objective (soft constraint, TASO-style).
+pub fn select_with_budget(
+    net: &Network,
+    costs: &dyn CostSource,
+    budget_bytes: f64,
+    lambda_ms_per_mb: f64,
+) -> Result<Selection> {
+    let cat = catalog();
+    let mut node_costs = Vec::with_capacity(net.n_layers());
+    let mut choices = Vec::with_capacity(net.n_layers());
+    for cfg in &net.layers {
+        let row = costs.layer_costs(cfg);
+        let mut ch = Vec::new();
+        let mut nc = Vec::new();
+        for (p, t) in row.iter().enumerate() {
+            if let Some(t) = t {
+                let over = (workspace_bytes(&cat[p], cfg) - budget_bytes).max(0.0);
+                ch.push(p);
+                nc.push(*t + over / (1024.0 * 1024.0) * lambda_ms_per_mb);
+            }
+        }
+        ensure!(!ch.is_empty(), "no applicable primitive for {cfg:?}");
+        node_costs.push(nc);
+        choices.push(ch);
+    }
+    let mut graph = pbqp::Graph::new(node_costs);
+    for &(u, v) in &net.edges {
+        let c = net.layers[u].k;
+        let im = net.layers[v].im;
+        let cu = &choices[u];
+        let cv = &choices[v];
+        let mut mat = Vec::with_capacity(cu.len() * cv.len());
+        for &pu in cu {
+            for &pv in cv {
+                mat.push(costs.dlt_cost(c, im, cat[pu].out_layout, cat[pv].in_layout));
+            }
+        }
+        graph.add_edge(u, v, mat);
+    }
+    let sol = pbqp::solve(&graph);
+    Ok(Selection {
+        primitive: sol
+            .choice
+            .iter()
+            .enumerate()
+            .map(|(u, &ci)| choices[u][ci])
+            .collect(),
+        estimated_ms: sol.cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::selection;
+    use crate::simulator::{machine, Simulator};
+
+    #[test]
+    fn im2col_copy_is_the_memory_hog() {
+        let cfg = ConvConfig::new(256, 256, 56, 1, 3);
+        let copy = catalog().iter().find(|p| p.name == "im2col-copy-ab-ki").unwrap();
+        let scan = catalog().iter().find(|p| p.name == "im2col-scan-ab-ki").unwrap();
+        let mec = catalog().iter().find(|p| p.name == "mec-col").unwrap();
+        let wc = workspace_bytes(copy, &cfg);
+        assert!(wc > workspace_bytes(scan, &cfg) * 5.0);
+        assert!(wc > workspace_bytes(mec, &cfg) * 2.0, "MEC must be leaner");
+    }
+
+    #[test]
+    fn tightening_budget_trades_time_for_space() {
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let net = networks::vgg(11);
+        let free = selection::select(&net, &sim).unwrap();
+        let free_peak = peak_workspace(&net, &free);
+        // budget at 10% of the unconstrained peak, steep penalty
+        let tight = select_with_budget(&net, &sim, free_peak * 0.1, 50.0).unwrap();
+        let tight_peak = peak_workspace(&net, &tight);
+        let tight_time = selection::evaluate(&net, &tight, &sim).unwrap();
+        assert!(tight_peak < free_peak, "{tight_peak} !< {free_peak}");
+        assert!(tight_time >= free.estimated_ms, "time cannot improve");
+    }
+
+    #[test]
+    fn infinite_budget_recovers_unconstrained() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let net = networks::alexnet();
+        let free = selection::select(&net, &sim).unwrap();
+        let same = select_with_budget(&net, &sim, f64::INFINITY, 50.0).unwrap();
+        assert_eq!(free.primitive, same.primitive);
+    }
+
+    #[test]
+    fn zero_lambda_ignores_budget() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let net = networks::alexnet();
+        let free = selection::select(&net, &sim).unwrap();
+        let same = select_with_budget(&net, &sim, 0.0, 0.0).unwrap();
+        assert!((same.estimated_ms - free.estimated_ms).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,280 @@
+//! Per-family analytical cost models.
+//!
+//! Every primitive's execution time is `max(compute, memory) + overhead`
+//! with family-specific traffic/efficiency terms. The models are
+//! deliberately *non-linear* in (k, c, im, s, f): cache-capacity knees,
+//! small-matrix gemm inefficiency, vectorisation remainders and transform
+//! overheads — exactly the structure that makes the paper's NN models beat
+//! linear regression, and that differs across the three machines.
+//!
+//! Times are in **milliseconds**.
+
+use super::machine::Machine;
+use crate::layers::ConvConfig;
+use crate::primitives::{Family, GemmVariant, Layout, Primitive};
+
+const BYTES: f64 = 4.0; // f32
+
+/// GEMM efficiency for an (m, n, k) product on `mach` with operand
+/// transposes `variant`.
+fn gemm_eff(mach: &Machine, m: f64, n: f64, variant: GemmVariant) -> f64 {
+    // small-matrix penalty: efficiency ramps up with the smallest dim
+    // relative to the SIMD width (vector-lane utilisation).
+    let lanes = mach.simd_lanes;
+    let min_dim = m.min(n);
+    let vec_util = (min_dim / lanes).min(1.0) * 0.5 + 0.5 * (n / lanes).min(1.0);
+    let transpose = match variant {
+        GemmVariant::Ab => 1.0,
+        GemmVariant::Atb | GemmVariant::Abt => mach.transpose_penalty,
+        GemmVariant::Atbt => mach.transpose_penalty * mach.transpose_penalty,
+    };
+    (mach.gemm_eff * vec_util * transpose).max(0.02)
+}
+
+/// Time of one (m, n, k) gemm, including the bandwidth bound for its
+/// working set (blocked: A + B + C plus one extra pass over B per m-block
+/// that spills the cache level). Small-gemm inefficiency appears as an
+/// additive pipeline-startup cost so the model stays monotone in work.
+fn gemm_ms(mach: &Machine, m: f64, n: f64, kk: f64, variant: GemmVariant) -> f64 {
+    let flops = 2.0 * m * n * kk;
+    let eff = gemm_eff(mach, m, n, variant);
+    let lanes = mach.simd_lanes;
+    // fixed pipeline-fill latency (independent of the achieved efficiency,
+    // so time stays monotone in the problem dimensions)
+    let startup = 2.0 * (64.0 * lanes * lanes * 32.0) / mach.peak_flops() * 1e3;
+    let compute = flops / (mach.peak_flops() * eff) * 1e3 + startup;
+    let ws = (m * kk + kk * n + m * n) * BYTES;
+    // if the working set spills a level, B is re-streamed per 128-row block
+    let spill_factor = if ws / 1024.0 > mach.l2_kb { 1.0 + (m / 128.0).min(4.0) } else { 1.0 };
+    let memory = mach.stream_ms(ws) * spill_factor;
+    compute.max(memory)
+}
+
+/// Execution time of `prim` on layer `cfg` for machine `mach`, in ms.
+/// Returns `None` when the primitive is inapplicable (undefined R_i).
+pub fn primitive_ms(mach: &Machine, prim: &Primitive, cfg: &ConvConfig) -> Option<f64> {
+    if !prim.applicable(cfg) {
+        return None;
+    }
+    let o = cfg.out_size()? as f64;
+    let (k, c, im, s, f) =
+        (cfg.k as f64, cfg.c as f64, cfg.im as f64, cfg.s as f64, cfg.f as f64);
+    let overhead = mach.call_overhead_us / 1e3;
+
+    let t = match prim.family {
+        Family::Direct => {
+            // scalar six-loop code: compute-bound at scalar ipc, with a
+            // locality knee when one image row-set exceeds L1.
+            let flops = 2.0 * cfg.macs();
+            let row_set = c * im * BYTES;
+            let locality = if row_set / 1024.0 <= mach.l1_kb { 1.0 } else { 2.2 };
+            flops * locality / mach.scalar_flops() * 1e3
+        }
+        Family::Im2 => {
+            let patch = c * f * f * o * o * BYTES;
+            let gemm = gemm_ms(mach, k, o * o, c * f * f, prim.gemm);
+            if prim.copy {
+                // materialise patch matrix: write + read back for the gemm
+                let copy = mach.stream_ms(patch * 2.0) + mach.stream_ms(c * im * im * BYTES);
+                copy + gemm
+            } else {
+                // scan: no patch matrix; f*f strided passes over the input,
+                // each a smaller gemm with strided-read inefficiency.
+                let strided = 1.0 + 0.15 * (s - 1.0);
+                let small = gemm_ms(mach, k, o * o, c, prim.gemm) * f * f * strided;
+                let reread = mach.stream_ms(c * im * im * BYTES) * f.min(3.0);
+                small + reread
+            }
+        }
+        Family::Kn2 => {
+            // f*f full-image gemms + shifted accumulation traffic
+            let g = gemm_ms(mach, k, im * im, c, prim.gemm) * f * f;
+            let acc = mach.stream_ms(k * o * o * BYTES * 2.0) * (f * f - 1.0);
+            // the -aa (accumulating add) variants trade gemm locality for
+            // extra accumulation passes
+            let aa = if prim.copy { 1.12 } else { 1.0 };
+            (g + acc) * aa
+        }
+        Family::Wino3 | Family::Wino5 => {
+            let m_t = prim.tile_m as f64;
+            let a = m_t + f - 1.0;
+            let tiles = (o / m_t).ceil().powi(2);
+            // input transform: 2 passes of (a x a)·(a x a) per tile-channel
+            let t_in = tiles * c * 2.0 * a * a * a * 2.0;
+            let t_out = tiles * k * (a * a * m_t + a * m_t * m_t) * 2.0;
+            // vectorised variants batch `vec_width` tiles through the VPU
+            let vec_eff = if prim.vec_width > 1 {
+                (prim.vec_width as f64).min(mach.simd_lanes) / mach.simd_lanes
+                    * mach.gemm_eff
+            } else {
+                mach.wino_scalar_eff
+            };
+            let transform = (t_in + t_out) / (mach.peak_flops() * vec_eff) * 1e3;
+            // a^2 batched gemms of (k x c) x (c x tiles)
+            let g = gemm_ms(mach, k, tiles, c, prim.gemm) * a * a;
+            // U + V working set pressure: spills add a memory term
+            let ws = (a * a * k * c + a * a * tiles * c) * BYTES;
+            let spill = mach.stream_ms(ws);
+            transform + g + spill
+        }
+        Family::Conv1x1 => {
+            let mut t = gemm_ms(mach, k, o * o, c, prim.gemm);
+            if cfg.s > 1 {
+                // strided subsample: sparse reads of the input
+                t += mach.stream_ms(c * im * im * BYTES) * 0.6;
+            }
+            t
+        }
+        Family::Mec => {
+            // width-lowered L: (o, im, c*f) copy + o row-gemms
+            let lower = mach.stream_ms(o * im * c * f * BYTES * 2.0);
+            let row = gemm_ms(mach, o, k, f * c * f, prim.gemm);
+            // per-row launches poorly amortised: overhead scales with o
+            let row_overhead = o * mach.call_overhead_us / 1e3 * 0.08;
+            let part = if prim.copy { 1.06 } else { 1.0 }; // row-partition variant
+            (lower + row * o + row_overhead) * part
+        }
+    };
+    Some(t + overhead)
+}
+
+/// Data-layout transformation cost `(c, im, src -> dst)` in ms.
+/// Zero for the identity; otherwise two passes over the tensor with a
+/// platform- and pair-dependent strided-access penalty.
+pub fn dlt_ms(mach: &Machine, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+    if src == dst {
+        return 0.0;
+    }
+    let bytes = c as f64 * (im as f64).powi(2) * BYTES;
+    // penalty depends on how hostile the permutation is to the cache line:
+    // chw<->hwc moves the channel stride across the whole tensor, the
+    // hcw middle layout is cheaper to reach from either side.
+    let pair_penalty = match (src, dst) {
+        (Layout::Chw, Layout::Hwc) | (Layout::Hwc, Layout::Chw) => 2.0,
+        (Layout::Hcw, _) | (_, Layout::Hcw) => 1.4,
+        _ => 1.0,
+    };
+    // scalar gather/scatter: worse on narrow-SIMD machines
+    let machine_penalty = 1.0 + 4.0 / mach.simd_lanes;
+    mach.stream_ms(bytes * 2.0) * pair_penalty * machine_penalty
+        + mach.call_overhead_us / 1e3 * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::catalog;
+    use crate::simulator::machine;
+
+    fn cfg(k: u32, c: u32, im: u32, s: u32, f: u32) -> ConvConfig {
+        ConvConfig::new(k, c, im, s, f)
+    }
+
+    #[test]
+    fn applicable_costs_are_positive_finite() {
+        let m = machine::intel_i9_9900k();
+        for p in catalog() {
+            for cc in [cfg(64, 64, 56, 1, 3), cfg(32, 16, 112, 2, 5), cfg(256, 256, 14, 1, 1)] {
+                if let Some(t) = primitive_ms(&m, p, &cc) {
+                    assert!(t.is_finite() && t > 0.0, "{} {cc:?} -> {t}", p.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inapplicable_is_none() {
+        let m = machine::intel_i9_9900k();
+        let wino = catalog().iter().find(|p| p.name == "winograd-2x2-3x3").unwrap();
+        assert!(primitive_ms(&m, wino, &cfg(8, 8, 32, 2, 3)).is_none());
+        assert!(primitive_ms(&m, wino, &cfg(8, 8, 32, 1, 5)).is_none());
+    }
+
+    #[test]
+    fn direct_slower_than_im2col_on_big_layers() {
+        let m = machine::intel_i9_9900k();
+        let direct = catalog().iter().find(|p| p.family == Family::Direct).unwrap();
+        let im2 = catalog().iter().find(|p| p.name == "im2col-copy-ab-ki").unwrap();
+        let cc = cfg(256, 256, 56, 1, 3);
+        let td = primitive_ms(&m, direct, &cc).unwrap();
+        let ti = primitive_ms(&m, im2, &cc).unwrap();
+        assert!(td > ti, "direct {td} should exceed im2col {ti}");
+    }
+
+    #[test]
+    fn winograd_wins_for_3x3_on_intel() {
+        // the vectorised winograd should beat im2col for a mid-size 3x3
+        let m = machine::intel_i9_9900k();
+        let wino =
+            catalog().iter().find(|p| p.name == "winograd-4x4-3x3-vec-8").unwrap();
+        let im2 = catalog().iter().find(|p| p.name == "im2col-copy-ab-ki").unwrap();
+        let cc = cfg(256, 256, 28, 1, 3);
+        let tw = primitive_ms(&m, wino, &cc).unwrap();
+        let ti = primitive_ms(&m, im2, &cc).unwrap();
+        assert!(tw < ti, "wino {tw} vs im2col {ti}");
+    }
+
+    #[test]
+    fn times_scale_with_work() {
+        let m = machine::arm_cortex_a73();
+        for p in catalog() {
+            let small = cfg(32, 32, 28, 1, 3);
+            let big = cfg(128, 128, 56, 1, 3);
+            if let (Some(a), Some(b)) =
+                (primitive_ms(&m, p, &small), primitive_ms(&m, p, &big))
+            {
+                assert!(b > a, "{}: {b} !> {a}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn platforms_rank_differently() {
+        // the relative ranking of primitives must differ across machines —
+        // the property that makes transfer learning non-trivial.
+        let cfgs = [cfg(64, 64, 56, 1, 3), cfg(128, 128, 28, 1, 3), cfg(512, 256, 14, 1, 3)];
+        let mut differs = false;
+        for cc in cfgs {
+            let rank = |m: &Machine| {
+                let mut v: Vec<(usize, f64)> = catalog()
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, p)| primitive_ms(m, p, &cc).map(|t| (i, t)))
+                    .collect();
+                v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                v.into_iter().map(|(i, _)| i).collect::<Vec<_>>()
+            };
+            let ri = rank(&machine::intel_i9_9900k());
+            let ra = rank(&machine::arm_cortex_a73());
+            if ri != ra {
+                differs = true;
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn dlt_identity_is_free() {
+        let m = machine::intel_i9_9900k();
+        for l in Layout::ALL {
+            assert_eq!(dlt_ms(&m, 64, 56, l, l), 0.0);
+        }
+    }
+
+    #[test]
+    fn dlt_cost_scales_with_tensor() {
+        let m = machine::amd_a10_7850k();
+        let small = dlt_ms(&m, 16, 28, Layout::Chw, Layout::Hwc);
+        let big = dlt_ms(&m, 256, 56, Layout::Chw, Layout::Hwc);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn arm_slower_than_intel() {
+        let im2 = catalog().iter().find(|p| p.name == "im2col-copy-ab-ki").unwrap();
+        let cc = cfg(128, 128, 28, 1, 3);
+        let ti = primitive_ms(&machine::intel_i9_9900k(), im2, &cc).unwrap();
+        let ta = primitive_ms(&machine::arm_cortex_a73(), im2, &cc).unwrap();
+        assert!(ta > ti * 2.0, "arm {ta} vs intel {ti}");
+    }
+}

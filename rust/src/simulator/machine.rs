@@ -1,0 +1,189 @@
+//! Analytical machine models for the paper's three testbeds.
+//!
+//! Each preset captures the microarchitectural parameters the primitive
+//! cost model keys on. Values are drawn from public spec sheets for the
+//! paper's exact parts: Intel Core i9-9900K @ 5.0 GHz (Coffee Lake, AVX2,
+//! 2 FMA ports), AMD A10-7850K @ 3.7 GHz (Steamroller, AVX, 1 FMA pipe,
+//! no L3) and ARM Cortex-A73 @ 2.36 GHz (NEON 128-bit, in a big.LITTLE
+//! SoC with a 2 MB shared L2, no L3).
+
+
+/// One simulated platform.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Core clock in GHz.
+    pub ghz: f64,
+    /// f32 SIMD lanes per vector unit (AVX2 = 8, AVX = 8, NEON = 4).
+    pub simd_lanes: f64,
+    /// FMA issue ports.
+    pub fma_ports: f64,
+    /// Scalar FLOP/cycle (non-vectorised code paths, e.g. direct-sum2d).
+    pub scalar_ipc: f64,
+    /// Cache capacities in KiB (l3 = 0 when absent).
+    pub l1_kb: f64,
+    pub l2_kb: f64,
+    pub l3_kb: f64,
+    /// Sustained bandwidths in GB/s per cache level and main memory.
+    pub bw_l1: f64,
+    pub bw_l2: f64,
+    pub bw_l3: f64,
+    pub bw_mem: f64,
+    /// Peak fraction a well-tuned large gemm achieves on this platform.
+    pub gemm_eff: f64,
+    /// Fixed per-primitive-call overhead in microseconds (loop setup,
+    /// packing bookkeeping; larger on the in-order-ish cores).
+    pub call_overhead_us: f64,
+    /// Relative penalty for transposed-operand gemm variants (atb/abt).
+    pub transpose_penalty: f64,
+    /// Efficiency of scalar (non `-vec`) winograd transforms.
+    pub wino_scalar_eff: f64,
+}
+
+impl Machine {
+    /// Peak f32 FLOP/s of vectorised FMA code.
+    pub fn peak_flops(&self) -> f64 {
+        self.ghz * 1e9 * self.simd_lanes * self.fma_ports * 2.0
+    }
+
+    /// Peak f32 FLOP/s of scalar code.
+    pub fn scalar_flops(&self) -> f64 {
+        self.ghz * 1e9 * self.scalar_ipc
+    }
+
+    /// Sustained bandwidth (GB/s) for a working set of `bytes`.
+    pub fn bandwidth_for(&self, bytes: f64) -> f64 {
+        let kb = bytes / 1024.0;
+        if kb <= self.l1_kb {
+            self.bw_l1
+        } else if kb <= self.l2_kb {
+            self.bw_l2
+        } else if self.l3_kb > 0.0 && kb <= self.l3_kb {
+            self.bw_l3
+        } else {
+            self.bw_mem
+        }
+    }
+
+    /// Time in ms to stream `bytes` through the level it fits in.
+    pub fn stream_ms(&self, bytes: f64) -> f64 {
+        bytes / (self.bandwidth_for(bytes) * 1e9) * 1e3
+    }
+}
+
+/// Intel Core i9-9900K @ 5.0 GHz — the paper's pre-training platform.
+pub fn intel_i9_9900k() -> Machine {
+    Machine {
+        name: "intel",
+        ghz: 5.0,
+        simd_lanes: 8.0,
+        fma_ports: 2.0,
+        scalar_ipc: 2.0,
+        l1_kb: 32.0,
+        l2_kb: 256.0,
+        l3_kb: 16384.0,
+        bw_l1: 400.0,
+        bw_l2: 150.0,
+        bw_l3: 60.0,
+        bw_mem: 25.0,
+        gemm_eff: 0.85,
+        call_overhead_us: 2.0,
+        transpose_penalty: 0.93,
+        wino_scalar_eff: 0.35,
+    }
+}
+
+/// AMD A10-7850K @ 3.7 GHz — Steamroller, no L3, one FMA pipe.
+pub fn amd_a10_7850k() -> Machine {
+    Machine {
+        name: "amd",
+        ghz: 3.7,
+        simd_lanes: 8.0,
+        fma_ports: 1.0,
+        scalar_ipc: 1.4,
+        l1_kb: 16.0,
+        l2_kb: 2048.0,
+        l3_kb: 0.0,
+        bw_l1: 160.0,
+        bw_l2: 60.0,
+        bw_l3: 0.0,
+        bw_mem: 13.0,
+        gemm_eff: 0.70,
+        call_overhead_us: 3.5,
+        transpose_penalty: 0.88,
+        wino_scalar_eff: 0.30,
+    }
+}
+
+/// ARM Cortex-A73 @ 2.36 GHz — NEON (4 f32 lanes), 2 MB shared L2.
+pub fn arm_cortex_a73() -> Machine {
+    Machine {
+        name: "arm",
+        ghz: 2.36,
+        simd_lanes: 4.0,
+        fma_ports: 1.0,
+        scalar_ipc: 1.0,
+        l1_kb: 64.0,
+        l2_kb: 2048.0,
+        l3_kb: 0.0,
+        bw_l1: 60.0,
+        bw_l2: 25.0,
+        bw_l3: 0.0,
+        bw_mem: 6.0,
+        gemm_eff: 0.60,
+        call_overhead_us: 6.0,
+        transpose_penalty: 0.80,
+        wino_scalar_eff: 0.22,
+    }
+}
+
+/// Look up a platform preset by name.
+pub fn by_name(name: &str) -> Option<Machine> {
+    match name.to_ascii_lowercase().as_str() {
+        "intel" => Some(intel_i9_9900k()),
+        "amd" => Some(amd_a10_7850k()),
+        "arm" => Some(arm_cortex_a73()),
+        _ => None,
+    }
+}
+
+/// All three paper platforms.
+pub fn all() -> Vec<Machine> {
+    vec![intel_i9_9900k(), amd_a10_7850k(), arm_cortex_a73()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_ordering_matches_parts() {
+        let (i, a, r) = (intel_i9_9900k(), amd_a10_7850k(), arm_cortex_a73());
+        assert!(i.peak_flops() > a.peak_flops());
+        assert!(a.peak_flops() > r.peak_flops());
+    }
+
+    #[test]
+    fn bandwidth_tiers_monotone() {
+        for m in all() {
+            assert!(m.bandwidth_for(1024.0) >= m.bandwidth_for(1024.0 * 1024.0));
+            assert!(
+                m.bandwidth_for(1024.0 * 1024.0)
+                    >= m.bandwidth_for(512.0 * 1024.0 * 1024.0)
+            );
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("Intel").is_some());
+        assert!(by_name("riscv").is_none());
+    }
+
+    #[test]
+    fn stream_time_positive_and_monotone() {
+        let m = intel_i9_9900k();
+        assert!(m.stream_ms(1e6) > 0.0);
+        assert!(m.stream_ms(2e6) > m.stream_ms(1e6));
+    }
+}

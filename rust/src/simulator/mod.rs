@@ -1,0 +1,151 @@
+//! The platform substrate: analytical machine models standing in for the
+//! paper's Intel / AMD / ARM testbeds (DESIGN.md §3 documents the
+//! substitution). A [`Simulator`] answers the same queries the paper's
+//! profiler answers — primitive execution time and DLT cost for a layer
+//! configuration — with platform-dependent non-linear behaviour plus
+//! median-of-25-style measurement noise.
+
+pub mod cost;
+pub mod machine;
+pub mod noise;
+
+pub use machine::Machine;
+
+use crate::layers::ConvConfig;
+use crate::primitives::{catalog, Layout};
+
+/// Noise level of the simulated median-of-25 measurements.
+pub const NOISE_SIGMA: f64 = 0.02;
+
+/// A simulated profiling target.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub machine: Machine,
+    /// Noise sigma (0.0 disables noise — useful for tests).
+    pub sigma: f64,
+}
+
+impl Simulator {
+    pub fn new(machine: Machine) -> Self {
+        Self { machine, sigma: NOISE_SIGMA }
+    }
+
+    pub fn noiseless(machine: Machine) -> Self {
+        Self { machine, sigma: 0.0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.machine.name
+    }
+
+    /// "Profile" primitive `idx` on `cfg`: ms, or None if inapplicable.
+    pub fn profile_primitive(&self, idx: usize, cfg: &ConvConfig) -> Option<f64> {
+        let prim = &catalog()[idx];
+        let base = cost::primitive_ms(&self.machine, prim, cfg)?;
+        Some(base * self.noise(&format!("{}/{}/{:?}", self.machine.name, prim.name, cfg)))
+    }
+
+    /// Profile all primitives for a layer (the dataset row).
+    pub fn profile_layer(&self, cfg: &ConvConfig) -> Vec<Option<f64>> {
+        (0..catalog().len()).map(|i| self.profile_primitive(i, cfg)).collect()
+    }
+
+    /// DLT cost in ms (zero on the identity).
+    pub fn profile_dlt(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+        let base = cost::dlt_ms(&self.machine, c, im, src, dst);
+        if base == 0.0 {
+            return 0.0;
+        }
+        base * self.noise(&format!(
+            "{}/dlt/{}/{}/{c}x{im}",
+            self.machine.name,
+            src.name(),
+            dst.name()
+        ))
+    }
+
+    /// The full 3x3 DLT matrix for a tensor (row = src, col = dst).
+    pub fn dlt_matrix(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        let mut m = [[0.0; 3]; 3];
+        for src in Layout::ALL {
+            for dst in Layout::ALL {
+                m[src.index()][dst.index()] = self.profile_dlt(c, im, src, dst);
+            }
+        }
+        m
+    }
+
+    /// Simulated wall-clock cost of *profiling* this layer exhaustively
+    /// (the paper's Table 4 "Profiling" column): 25 runs per applicable
+    /// primitive.
+    pub fn profiling_wallclock_ms(&self, cfg: &ConvConfig) -> f64 {
+        let runs = 25.0;
+        self.profile_layer(cfg)
+            .into_iter()
+            .flatten()
+            .map(|t| t * runs)
+            .sum()
+    }
+
+    fn noise(&self, key: &str) -> f64 {
+        if self.sigma == 0.0 {
+            1.0
+        } else {
+            noise::jitter(key, self.sigma)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> Simulator {
+        Simulator::new(machine::intel_i9_9900k())
+    }
+
+    #[test]
+    fn profile_layer_length_matches_catalog() {
+        let row = sim().profile_layer(&ConvConfig::new(64, 64, 56, 1, 3));
+        assert_eq!(row.len(), catalog().len());
+        assert!(row.iter().filter(|r| r.is_some()).count() >= 15);
+    }
+
+    #[test]
+    fn deterministic_measurements() {
+        let s = sim();
+        let cfg = ConvConfig::new(64, 64, 56, 1, 3);
+        assert_eq!(s.profile_primitive(1, &cfg), s.profile_primitive(1, &cfg));
+    }
+
+    #[test]
+    fn dlt_matrix_diag_zero() {
+        let m = sim().dlt_matrix(64, 56);
+        for i in 0..3 {
+            assert_eq!(m[i][i], 0.0);
+            for j in 0..3 {
+                if i != j {
+                    assert!(m[i][j] > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn profiling_wallclock_dwarfs_single_run() {
+        let s = sim();
+        let cfg = ConvConfig::new(128, 128, 28, 1, 3);
+        let single: f64 = s.profile_layer(&cfg).into_iter().flatten().sum();
+        assert!(s.profiling_wallclock_ms(&cfg) >= single * 20.0);
+    }
+
+    #[test]
+    fn noiseless_matches_cost_model() {
+        let s = Simulator::noiseless(machine::intel_i9_9900k());
+        let cfg = ConvConfig::new(64, 64, 56, 1, 3);
+        let direct = s.profile_primitive(0, &cfg).unwrap();
+        let expected =
+            cost::primitive_ms(&s.machine, &catalog()[0], &cfg).unwrap();
+        assert_eq!(direct, expected);
+    }
+}

@@ -1,0 +1,105 @@
+//! Deterministic measurement noise.
+//!
+//! The paper profiles each primitive 25 times and takes the median, so the
+//! residual noise in its datasets is small but non-zero. We reproduce that
+//! with a multiplicative log-normal jitter seeded from a hash of
+//! (platform, primitive, configuration) — the same query always returns
+//! the same "measurement", as a median-of-25 would.
+
+/// SplitMix64 — tiny, high-quality 64-bit mixer (public domain).
+#[derive(Debug, Clone)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = (self.next_u64() as usize) % (i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+/// FNV-1a hash of a byte string (stable across runs and platforms).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Multiplicative log-normal jitter factor with standard deviation `sigma`
+/// deterministically derived from `key`.
+pub fn jitter(key: &str, sigma: f64) -> f64 {
+    let mut rng = SplitMix64::new(fnv1a(key.as_bytes()));
+    // burn one draw to decorrelate from the raw hash
+    rng.next_u64();
+    (sigma * rng.next_normal()).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(jitter("intel/x/1", 0.03), jitter("intel/x/1", 0.03));
+        assert_ne!(jitter("intel/x/1", 0.03), jitter("intel/x/2", 0.03));
+    }
+
+    #[test]
+    fn jitter_near_one() {
+        for i in 0..200 {
+            let j = jitter(&format!("k{i}"), 0.03);
+            assert!(j > 0.8 && j < 1.25, "{j}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = SplitMix64::new(42);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = SplitMix64::new(7);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, sorted);
+    }
+}

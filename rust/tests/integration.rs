@@ -1,0 +1,161 @@
+//! Cross-module integration tests: AOT artifacts -> PJRT training ->
+//! prediction -> PBQP selection. These need `make artifacts` (they are
+//! skipped gracefully when artifacts are absent).
+
+use primsel::dataset::{self, Standardizer};
+use primsel::layers::ConvConfig;
+use primsel::networks;
+use primsel::perfmodel::{hparams_for, ParamStore, Predictor, TrainOpts, Trainer};
+use primsel::runtime::Runtime;
+use primsel::selection;
+use primsel::simulator::{machine, Simulator};
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open_default().ok()
+}
+
+/// NN1 (tiny MLP) must fit a small simulated dataset: loss decreases by
+/// an order of magnitude within a few epochs.
+#[test]
+fn training_reduces_loss_via_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let sim = Simulator::new(machine::intel_i9_9900k());
+    let configs = dataset::enumerate_configs(512, 3);
+    let ds = dataset::profile_prim_dataset(&sim, &configs);
+    let xs: Vec<Vec<f64>> = ds.features().iter().map(|f| f.to_vec()).collect();
+    // single-column dataset for the nn1 artifact (direct-sum2d, col 0)
+    let ys: Vec<Vec<Option<f64>>> = ds.targets.iter().map(|r| vec![r[0]]).collect();
+    let sx = Standardizer::fit(&xs, true);
+    let sy = Standardizer::fit_masked(&ys, true);
+    let b = dataset::make_batches(&xs, &ys, &sx, &sy, 1024);
+
+    let trainer = Trainer::new(&rt, "nn1").unwrap();
+    let mut hp = hparams_for("nn1");
+    hp.max_epochs = 40;
+    let res = trainer
+        .train(trainer.init(5).unwrap(), &b, &b, TrainOpts { hp, verbose_every: 0 })
+        .unwrap();
+    let first = res.history.first().unwrap().1;
+    assert!(
+        res.best_val_loss < first * 0.25,
+        "loss {first} -> {} after {} epochs",
+        res.best_val_loss,
+        res.epochs_run
+    );
+}
+
+/// A trained-enough NN1 predictor must beat a constant-mean predictor
+/// on held-out data, and its denormalised outputs must be positive ms.
+#[test]
+fn predictor_denormalises_sensibly() {
+    let Some(rt) = runtime() else { return };
+    let sim = Simulator::new(machine::amd_a10_7850k());
+    let configs = dataset::enumerate_configs(768, 9);
+    let ds = dataset::profile_prim_dataset(&sim, &configs);
+    let split = dataset::split(ds.len(), 1);
+    let train = ds.subset(&split.train);
+    let test = ds.subset(&split.test);
+    let xs: Vec<Vec<f64>> = train.features().iter().map(|f| f.to_vec()).collect();
+    let ys: Vec<Vec<Option<f64>>> = train.targets.iter().map(|r| vec![r[0]]).collect();
+    let sx = Standardizer::fit(&xs, true);
+    let sy = Standardizer::fit_masked(&ys, true);
+    let b = dataset::make_batches(&xs, &ys, &sx, &sy, 1024);
+    let trainer = Trainer::new(&rt, "nn1").unwrap();
+    let mut hp = hparams_for("nn1");
+    hp.max_epochs = 60;
+    let res = trainer
+        .train(trainer.init(2).unwrap(), &b, &b, TrainOpts { hp, verbose_every: 0 })
+        .unwrap();
+
+    let pred = Predictor::new(&rt, "nn1", res.params, sx, sy).unwrap();
+    let txs: Vec<Vec<f64>> = test.features().iter().map(|f| f.to_vec()).collect();
+    let preds = pred.predict_raw(&txs).unwrap();
+    let pairs: Vec<(f64, f64)> = preds
+        .iter()
+        .zip(&test.targets)
+        .filter_map(|(p, t)| t[0].map(|a| (p[0], a)))
+        .collect();
+    let md = primsel::perfmodel::mdrae(&pairs);
+    assert!(md < 0.30, "NN1 MdRAE too high: {md}");
+    for (p, _) in &pairs {
+        assert!(*p > 0.0, "negative predicted time");
+    }
+}
+
+/// Selection with a *predicted* cost table must produce a network time
+/// within a few percent of the profiled-optimal selection (paper fig 7
+/// allows 1.1%; we allow slack for the lightly-trained test model).
+#[test]
+fn predicted_selection_close_to_profiled() {
+    let Some(rt) = runtime() else { return };
+    // use a cached fully-trained model when available, else skip
+    let path = std::path::Path::new("artifacts/trained/intel_nn2.bin");
+    if !path.exists() {
+        return;
+    }
+    let params = ParamStore::load(path).unwrap();
+    let sim = Simulator::new(machine::intel_i9_9900k());
+    let configs = dataset::enumerate_configs(dataset::MAX_CONFIGS, 20200612);
+    let ds = dataset::profile_prim_dataset(&sim, &configs);
+    let split = dataset::split(ds.len(), 42);
+    let train = ds.subset(&split.train);
+    let xs: Vec<Vec<f64>> = train.features().iter().map(|f| f.to_vec()).collect();
+    let sx = Standardizer::fit(&xs, true);
+    let sy = Standardizer::fit_masked(&train.targets, true);
+    let pred = Predictor::new(&rt, "nn2", params, sx, sy).unwrap();
+
+    let net = networks::vgg(11);
+    let rows = pred.predict_configs(&net.layers).unwrap();
+    let mut keys: Vec<(u32, u32)> = net
+        .edges
+        .iter()
+        .map(|&(u, v)| (net.layers[u].k, net.layers[v].im))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    let mats: Vec<[[f64; 3]; 3]> =
+        keys.iter().map(|&(c, im)| sim.dlt_matrix(c, im)).collect();
+    let source = selection::TableSource {
+        prim: rows,
+        dlt_keys: keys,
+        dlt_mats: mats,
+        configs: net.layers.clone(),
+    };
+    let sel_model = selection::select(&net, &source).unwrap();
+    let sel_prof = selection::select(&net, &sim).unwrap();
+    let t_model = selection::evaluate(&net, &sel_model, &sim).unwrap();
+    let t_prof = selection::evaluate(&net, &sel_prof, &sim).unwrap();
+    let inc = t_model / t_prof - 1.0;
+    assert!(inc < 0.10, "predicted selection {:.2}% worse", inc * 100.0);
+    assert!(inc >= -1e-9);
+}
+
+/// The measured-grid profiler must return sane numbers for real kernels.
+#[test]
+fn host_profiler_smoke() {
+    let Some(mut rt) = runtime() else { return };
+    if rt.manifest.prim_grid.is_empty() {
+        return;
+    }
+    rt.manifest.prim_grid.truncate(3);
+    let ms = primsel::profiler::profile_grid(&rt, 3).unwrap();
+    assert_eq!(ms.len(), 3);
+    for m in ms {
+        assert!(m.median_ms > 0.0 && m.median_ms < 60_000.0);
+    }
+}
+
+/// Layout contract: every primitive's in/out layout matches its kernel's
+/// manifest output layout for grid entries.
+#[test]
+fn manifest_layouts_match_catalog() {
+    let Some(rt) = runtime() else { return };
+    for e in &rt.manifest.prim_grid {
+        let cfg = ConvConfig::new(e.k, e.c, e.im, e.s, e.f);
+        // at least one catalog primitive uses this kernel and applies here
+        let found = primsel::primitives::catalog()
+            .iter()
+            .any(|p| p.kernel_id == e.kernel && p.applicable(&cfg));
+        assert!(found, "orphan grid entry {e:?}");
+    }
+}

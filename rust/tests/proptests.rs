@@ -1,0 +1,219 @@
+//! Randomised property tests (proptest is unavailable offline; these use
+//! the in-tree SplitMix64 with fixed seeds, so failures are reproducible).
+
+use primsel::dataset::{self, Standardizer};
+use primsel::layers::ConvConfig;
+use primsel::pbqp::{self, Graph};
+use primsel::perfmodel::metrics;
+use primsel::primitives::{catalog, Layout};
+use primsel::selection;
+use primsel::simulator::noise::SplitMix64;
+use primsel::simulator::{machine, Simulator};
+
+const CASES: usize = 60;
+
+fn rand_cfg(rng: &mut SplitMix64) -> ConvConfig {
+    let k = 1 + (rng.next_u64() % 512) as u32;
+    let c = 1 + (rng.next_u64() % 512) as u32;
+    let im = 7 + (rng.next_u64() % 220) as u32;
+    let s = [1u32, 2, 4][(rng.next_u64() % 3) as usize];
+    let f = [1u32, 3, 5, 7, 9, 11][(rng.next_u64() % 6) as usize];
+    ConvConfig::new(k, c, im, s, f)
+}
+
+/// PBQP never reports a cost below the true optimum, and is exact on
+/// chain-reducible graphs.
+#[test]
+fn prop_pbqp_sound_and_chain_exact() {
+    let mut rng = SplitMix64::new(0xFACADE);
+    for case in 0..CASES {
+        let n = 2 + (rng.next_u64() % 5) as usize;
+        let chain = case % 2 == 0;
+        let node_costs: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let ch = 2 + (rng.next_u64() % 3) as usize;
+                (0..ch).map(|_| rng.next_f64() * 9.0).collect()
+            })
+            .collect();
+        let mut g = Graph::new(node_costs);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let connect = if chain { v == u + 1 } else { rng.next_f64() < 0.45 };
+                if connect {
+                    let len = g.node_costs[u].len() * g.node_costs[v].len();
+                    g.add_edge(u, v, (0..len).map(|_| rng.next_f64() * 4.0).collect());
+                }
+            }
+        }
+        let sol = pbqp::solve(&g);
+        let exact = g.brute_force();
+        assert!(sol.cost >= exact.cost - 1e-9, "solver under-reports");
+        assert!((g.cost_of(&sol.choice) - sol.cost).abs() < 1e-9, "inconsistent");
+        if chain {
+            assert!(
+                (sol.cost - exact.cost).abs() < 1e-9,
+                "case {case}: chain must be exact ({} vs {})",
+                sol.cost,
+                exact.cost
+            );
+        }
+    }
+}
+
+/// Splits partition the index set for arbitrary sizes and seeds.
+#[test]
+fn prop_split_partitions() {
+    let mut rng = SplitMix64::new(3);
+    for _ in 0..CASES {
+        let n = 1 + (rng.next_u64() % 3000) as usize;
+        let seed = rng.next_u64();
+        let s = dataset::split(n, seed);
+        let mut all: Vec<usize> =
+            s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "split must cover all {n} indices");
+        assert!(s.train.len() >= s.val.len());
+    }
+}
+
+/// Log-standardisation round-trips arbitrary positive data.
+#[test]
+fn prop_standardizer_round_trip() {
+    let mut rng = SplitMix64::new(17);
+    for _ in 0..CASES {
+        let n = 2 + (rng.next_u64() % 40) as usize;
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![(rng.next_f64() * 8.0 - 4.0).exp()])
+            .collect();
+        let s = Standardizer::fit(&rows, true);
+        for r in &rows {
+            let back = s.inverse(&s.forward(r));
+            assert!((back[0] - r[0]).abs() / r[0] < 1e-9);
+        }
+    }
+}
+
+/// Simulator invariants on random configs: defined costs are positive
+/// and finite; inapplicability matches the catalog predicate; more MACs
+/// with all else fixed never makes a primitive faster.
+#[test]
+fn prop_simulator_sanity() {
+    let mut rng = SplitMix64::new(23);
+    for sim in machine::all().into_iter().map(Simulator::noiseless) {
+        for _ in 0..CASES {
+            let cfg = rand_cfg(&mut rng);
+            let row = sim.profile_layer(&cfg);
+            for (p, t) in row.iter().enumerate() {
+                assert_eq!(t.is_some(), catalog()[p].applicable(&cfg));
+                if let Some(t) = t {
+                    assert!(t.is_finite() && *t > 0.0);
+                }
+            }
+            // doubling k must not make a primitive meaningfully faster
+            // (tiny gemms are latency-bound: equal time is physical), and
+            // scaling the whole problem 4x must strictly slow it down.
+            if cfg.k <= 1024 {
+                let big = ConvConfig { k: cfg.k * 2, ..cfg };
+                for (a, b) in row.iter().zip(sim.profile_layer(&big)) {
+                    if let (Some(a), Some(b)) = (a, b) {
+                        assert!(b > *a * 0.7, "k doubling sped up {a} -> {b}");
+                    }
+                }
+            }
+            if cfg.k <= 512 && cfg.c <= 512 {
+                let big = ConvConfig { k: cfg.k * 4, c: cfg.c * 4, ..cfg };
+                for (a, b) in row.iter().zip(sim.profile_layer(&big)) {
+                    if let (Some(a), Some(b)) = (a, b) {
+                        assert!(b > *a, "16x MACs must cost more");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// DLT costs are a symmetric-support matrix with zero diagonal and obey
+/// a loose triangle-style bound through the middle layout.
+#[test]
+fn prop_dlt_matrix_structure() {
+    let mut rng = SplitMix64::new(29);
+    let sim = Simulator::noiseless(machine::arm_cortex_a73());
+    for _ in 0..CASES {
+        let c = 1 + (rng.next_u64() % 512) as u32;
+        let im = 7 + (rng.next_u64() % 200) as u32;
+        let m = sim.dlt_matrix(c, im);
+        for (i, _) in Layout::ALL.iter().enumerate() {
+            assert_eq!(m[i][i], 0.0);
+            for j in 0..3 {
+                if i != j {
+                    assert!(m[i][j] > 0.0);
+                    // going via a third layout can't be free
+                    let k = 3 - i - j;
+                    assert!(m[i][k] + m[k][j] > 0.5 * m[i][j]);
+                }
+            }
+        }
+    }
+}
+
+/// evaluate() equals the PBQP objective for the solver's own choice on
+/// random subgraphs of the zoo.
+#[test]
+fn prop_selection_objective_consistency() {
+    let mut rng = SplitMix64::new(31);
+    let sim = Simulator::new(machine::amd_a10_7850k());
+    let nets = primsel::networks::zoo();
+    for _ in 0..12 {
+        let net = &nets[(rng.next_u64() as usize) % nets.len()];
+        let sel = selection::select(net, &sim).unwrap();
+        let ev = selection::evaluate(net, &sel, &sim).unwrap();
+        assert!(
+            (ev - sel.estimated_ms).abs() / ev.max(1e-9) < 1e-9,
+            "{}: {} vs {}",
+            net.name,
+            ev,
+            sel.estimated_ms
+        );
+    }
+}
+
+/// MdRAE is scale-invariant and zero iff predictions are exact.
+#[test]
+fn prop_mdrae_properties() {
+    let mut rng = SplitMix64::new(37);
+    for _ in 0..CASES {
+        let n = 1 + (rng.next_u64() % 50) as usize;
+        let pairs: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let a = rng.next_f64() * 10.0 + 0.1;
+                (a * (1.0 + rng.next_normal() * 0.1), a)
+            })
+            .collect();
+        let m = metrics::mdrae(&pairs);
+        assert!(m >= 0.0);
+        let scaled: Vec<(f64, f64)> =
+            pairs.iter().map(|&(p, a)| (p * 7.0, a * 7.0)).collect();
+        assert!((metrics::mdrae(&scaled) - m).abs() < 1e-12);
+        let exact: Vec<(f64, f64)> = pairs.iter().map(|&(_, a)| (a, a)).collect();
+        assert_eq!(metrics::mdrae(&exact), 0.0);
+    }
+}
+
+/// Fractions sample without replacement and respect requested sizes.
+#[test]
+fn prop_fraction_sampling() {
+    let mut rng = SplitMix64::new(41);
+    for _ in 0..CASES {
+        let n = 100 + (rng.next_u64() % 5000) as usize;
+        let train: Vec<usize> = (0..n).collect();
+        let frac = [0.001, 0.01, 0.1, 0.25][(rng.next_u64() % 4) as usize];
+        let idx = dataset::fraction(&train, frac, rng.next_u64());
+        let expect = ((n as f64 * frac).round() as usize).max(1);
+        assert_eq!(idx.len(), expect);
+        let mut sorted = idx.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), idx.len(), "no duplicates");
+    }
+}
