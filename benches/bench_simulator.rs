@@ -7,6 +7,7 @@ mod harness;
 use harness::Bench;
 use primsel::dataset;
 use primsel::layers::ConvConfig;
+use primsel::selection::CostCache;
 use primsel::simulator::{machine, Simulator};
 
 fn main() {
@@ -17,6 +18,19 @@ fn main() {
     for sim in &sims {
         b.run(&format!("simulator/layer_row_{}", sim.name()), 10, 200, || {
             let _ = sim.profile_layer(&cfg);
+        });
+    }
+
+    // the cost-query engine's steady state: repeat queries are hash hits
+    {
+        let cache = CostCache::new(&sims[0]);
+        let _ = cache.row(&cfg);
+        b.run("simulator/layer_row_cached_intel", 10, 200, || {
+            let _ = cache.row(&cfg);
+        });
+        let _ = cache.matrix(256, 28);
+        b.run("simulator/dlt_matrix_cached_intel", 10, 200, || {
+            let _ = cache.matrix(256, 28);
         });
     }
 

@@ -1,7 +1,11 @@
 //! Tiny bench harness (criterion is not available offline): warms up,
 //! runs timed iterations, prints median/mean/min like criterion's summary
-//! line, and writes a CSV row per benchmark to results/bench.csv.
+//! line, and writes the results to `results/bench_<suite>.csv` plus a
+//! machine-readable `results/bench_<suite>.json` so the BENCH_* perf
+//! trajectory can be tracked across PRs.
 
+use primsel::config::Json;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 pub struct Bench {
@@ -38,14 +42,31 @@ impl Bench {
         self.rows.push((name.to_string(), median, mean, min));
     }
 
-    /// Append results to results/bench.csv.
+    /// Write results/bench_<suite>.csv and results/bench_<suite>.json.
     pub fn finish(&self, suite: &str) {
         std::fs::create_dir_all("results").ok();
+
         let mut out = String::from("suite,name,median_ms,mean_ms,min_ms\n");
         for (name, med, mean, min) in &self.rows {
             out.push_str(&format!("{suite},{name},{med},{mean},{min}\n"));
         }
-        let path = format!("results/bench_{suite}.csv");
-        std::fs::write(path, out).ok();
+        std::fs::write(format!("results/bench_{suite}.csv"), out).ok();
+
+        let benches: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, med, mean, min)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("median_ms".to_string(), Json::Num(*med));
+                m.insert("mean_ms".to_string(), Json::Num(*mean));
+                m.insert("min_ms".to_string(), Json::Num(*min));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("suite".to_string(), Json::Str(suite.to_string()));
+        root.insert("benches".to_string(), Json::Arr(benches));
+        std::fs::write(format!("results/bench_{suite}.json"), Json::Obj(root).dump()).ok();
     }
 }

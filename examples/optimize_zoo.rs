@@ -11,7 +11,7 @@ use primsel::perfmodel::Predictor;
 use primsel::primitives::Family;
 use primsel::report::{fmt_time_ms, Table};
 use primsel::runtime::Runtime;
-use primsel::selection;
+use primsel::selection::{self, CostCache};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -31,6 +31,9 @@ fn main() -> anyhow::Result<()> {
         &format!("zoo optimisation on {platform}"),
         &["network", "layers", "model+PBQP", "profiling (sim)", "speedup", "vs all-im2"],
     );
+    // one cost cache across the whole zoo: repeated layer shapes are
+    // profiled once, and evaluation reuses the profiling sweep's rows
+    let measured = CostCache::new(&sim);
     for net in networks::zoo() {
         let _ = model_source(&net, &prim, &dlt)?; // warm executables
         let t0 = Instant::now();
@@ -38,13 +41,9 @@ fn main() -> anyhow::Result<()> {
         let sel = selection::select(&net, &source)?;
         let opt_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        let profiling_ms: f64 = net
-            .layers
-            .iter()
-            .map(|cfg| sim.profiling_wallclock_ms(cfg))
-            .sum();
-        let t_sel = selection::evaluate(&net, &sel, &sim)?;
-        let base = selection::single_family_baseline(&net, &sim, Family::Im2)?;
+        let profiling_ms = measured.network_profiling_wallclock_ms(&net);
+        let t_sel = selection::evaluate(&net, &sel, &measured)?;
+        let base = selection::single_family_baseline(&net, &measured, Family::Im2)?;
         t.row(vec![
             net.name.clone(),
             net.n_layers().to_string(),

@@ -71,9 +71,10 @@ pub fn enumerate_configs(max_n: usize, seed: u64) -> Vec<ConvConfig> {
     configs
 }
 
-/// Profile all configs on a simulator into a primitive dataset.
+/// Profile all configs on a simulator into a primitive dataset. Rows are
+/// independent, so the sweep fans out across cores (order-preserving).
 pub fn profile_prim_dataset(sim: &Simulator, configs: &[ConvConfig]) -> PrimDataset {
-    let targets = configs.iter().map(|cfg| sim.profile_layer(cfg)).collect();
+    let targets = crate::par::par_map(configs, |cfg| sim.profile_layer(cfg));
     PrimDataset { configs: configs.to_vec(), targets }
 }
 
@@ -83,9 +84,9 @@ pub fn dlt_pairs(configs: &[ConvConfig]) -> Vec<(u32, u32)> {
     set.into_iter().collect()
 }
 
-/// Profile the DLT dataset on a simulator.
+/// Profile the DLT dataset on a simulator (parallel, order-preserving).
 pub fn profile_dlt_dataset(sim: &Simulator, pairs: &[(u32, u32)]) -> DltDataset {
-    let targets = pairs.iter().map(|&(c, im)| sim.dlt_matrix(c, im)).collect();
+    let targets = crate::par::par_map(pairs, |&(c, im)| sim.dlt_matrix(c, im));
     DltDataset { pairs: pairs.to_vec(), targets }
 }
 
@@ -214,27 +215,48 @@ pub fn make_batches(
     batch: usize,
 ) -> Batches {
     assert_eq!(xs.len(), ys.len());
+    let mut b = make_inference_batches(xs, std_x, std_y.dim(), batch);
+    for (i, row) in ys.iter().enumerate() {
+        for (j, t) in row.iter().enumerate() {
+            if let Some(v) = t {
+                b.y[i * b.out_dim + j] = std_y.forward_one(j, *v) as f32;
+                b.mask[i * b.out_dim + j] = 1.0;
+            }
+        }
+    }
+    b
+}
+
+/// Inference-only fixed-shape batches: normalised features, zero targets
+/// and masks. `make_batches` is this plus a target/mask overlay, so the
+/// layouts cannot drift apart — the predictor's hot path reads only `x`
+/// and the shape fields and skips the dummy target matrix entirely.
+pub fn make_inference_batches(
+    xs: &[Vec<f64>],
+    std_x: &Standardizer,
+    out_dim: usize,
+    batch: usize,
+) -> Batches {
     let in_dim = std_x.dim();
-    let out_dim = std_y.dim();
     let n = xs.len();
     let n_batches = n.div_ceil(batch).max(1);
     let total = n_batches * batch;
     let mut x = vec![0.0f32; total * in_dim];
-    let mut y = vec![0.0f32; total * out_dim];
-    let mut mask = vec![0.0f32; total * out_dim];
-    for i in 0..n {
-        let xf = std_x.forward(&xs[i]);
+    for (i, row) in xs.iter().enumerate() {
+        let xf = std_x.forward(row);
         for (j, v) in xf.iter().enumerate() {
             x[i * in_dim + j] = *v as f32;
         }
-        for (j, t) in ys[i].iter().enumerate() {
-            if let Some(v) = t {
-                y[i * out_dim + j] = std_y.forward_one(j, *v) as f32;
-                mask[i * out_dim + j] = 1.0;
-            }
-        }
     }
-    Batches { n_batches, batch, in_dim, out_dim, x, y, mask }
+    Batches {
+        n_batches,
+        batch,
+        in_dim,
+        out_dim,
+        x,
+        y: vec![0.0f32; total * out_dim],
+        mask: vec![0.0f32; total * out_dim],
+    }
 }
 
 #[cfg(test)]
@@ -333,6 +355,40 @@ mod tests {
         // col 1 masked everywhere
         assert_eq!(b.mask[0 * 2 + 1], 0.0);
         assert_eq!(b.mask[0 * 2], 1.0);
+    }
+
+    #[test]
+    fn inference_batches_match_fully_masked_make_batches() {
+        // the inference-only constructor must be bit-identical to the old
+        // dummy-target flow it replaces
+        let xs: Vec<Vec<f64>> =
+            (1..=5).map(|i| vec![i as f64, (i * i) as f64]).collect();
+        let ys: Vec<Vec<Option<f64>>> = vec![vec![None; 3]; 5];
+        let sx = Standardizer::fit(&xs, true);
+        let sy = Standardizer::fit_masked(&ys, true);
+        let a = make_batches(&xs, &ys, &sx, &sy, 4);
+        let b = make_inference_batches(&xs, &sx, 3, 4);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.mask, b.mask);
+        assert_eq!(a.n_batches, b.n_batches);
+        assert_eq!((a.in_dim, a.out_dim, a.batch), (b.in_dim, b.out_dim, b.batch));
+    }
+
+    #[test]
+    fn parallel_profiling_matches_sequential() {
+        // par_map sweep must be order- and value-identical to a plain map
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let configs = enumerate_configs(200, 11);
+        let ds = profile_prim_dataset(&sim, &configs);
+        for (cfg, row) in ds.configs.iter().zip(&ds.targets) {
+            assert_eq!(*row, sim.profile_layer(cfg));
+        }
+        let pairs = dlt_pairs(&configs);
+        let dlt = profile_dlt_dataset(&sim, &pairs);
+        for (&(c, im), m) in dlt.pairs.iter().zip(&dlt.targets) {
+            assert_eq!(*m, sim.dlt_matrix(c, im));
+        }
     }
 
     #[test]

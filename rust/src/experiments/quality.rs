@@ -26,12 +26,7 @@ pub fn model_source(
     keys.sort();
     keys.dedup();
     let mats = dlt.predict_pairs(&keys)?;
-    Ok(TableSource {
-        prim: rows,
-        dlt_keys: keys,
-        dlt_mats: mats,
-        configs: net.layers.clone(),
-    })
+    Ok(TableSource::new(net.layers.clone(), rows, keys, mats))
 }
 
 /// The relative inference-time increase of model-driven selection vs
@@ -51,10 +46,13 @@ pub fn increase_for(
     let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
     let source = model_source(net, &prim, &dlt)?;
 
+    // one shared cost cache: select and both evaluations profile each
+    // distinct layer/edge tensor once
+    let measured = selection::CostCache::new(&sim);
     let sel_model = selection::select(net, &source)?;
-    let sel_profiled = selection::select(net, &sim)?;
-    let t_model = selection::evaluate(net, &sel_model, &sim)?;
-    let t_profiled = selection::evaluate(net, &sel_profiled, &sim)?;
+    let sel_profiled = selection::select(net, &measured)?;
+    let t_model = selection::evaluate(net, &sel_model, &measured)?;
+    let t_profiled = selection::evaluate(net, &sel_profiled, &measured)?;
     Ok(t_model / t_profiled - 1.0)
 }
 

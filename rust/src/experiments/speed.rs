@@ -6,10 +6,11 @@
 use super::quality::model_source;
 use super::Workbench;
 use crate::networks;
+use crate::par;
 use crate::perfmodel::predictor::DltPredictor;
 use crate::perfmodel::Predictor;
 use crate::report::{fmt_time_ms, Table};
-use crate::selection;
+use crate::selection::{self, CostCache};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -28,34 +29,35 @@ pub fn table4(wb: &mut Workbench) -> Result<Vec<Table>> {
     let prim = Predictor::new(&wb.rt, "nn2", nn2_params, sx, sy)?;
     let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
 
+    let nets = networks::selection_networks();
+
+    // simulated profiling wall-clock per (platform, network): one thread
+    // per platform, each sharing a cost cache across networks so every
+    // distinct layer config is profiled exactly once per platform
+    let prof_cols: Vec<Vec<f64>> = par::par_map_coarse(&sims, |sim| {
+        let cache = CostCache::new(sim);
+        nets.iter().map(|net| cache.network_profiling_wallclock_ms(net)).collect()
+    });
+
     let mut t = Table::new(
         "Table 4 — time to optimise a CNN: perf-model vs profiling",
         &["CNN", "Perf. Model Inf.", "Intel prof.", "AMD prof.", "ARM prof.", "speedup vs ARM"],
     );
-    for net in networks::selection_networks() {
+    for (ni, net) in nets.iter().enumerate() {
         // warm the predict executables so we time inference, not compile
-        let _ = model_source(&net, &prim, &dlt)?;
+        let _ = model_source(net, &prim, &dlt)?;
         let t0 = Instant::now();
-        let source = model_source(&net, &prim, &dlt)?;
-        let _sel = selection::select(&net, &source)?;
+        let source = model_source(net, &prim, &dlt)?;
+        let _sel = selection::select(net, &source)?;
         let model_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        let mut prof_ms = Vec::new();
-        for sim in &sims {
-            let total: f64 = net
-                .layers
-                .iter()
-                .map(|cfg| sim.profiling_wallclock_ms(cfg))
-                .sum();
-            prof_ms.push(total);
-        }
-        let speedup = prof_ms[2] / model_ms;
+        let speedup = prof_cols[2][ni] / model_ms;
         t.row(vec![
             net.name.clone(),
             fmt_time_ms(model_ms),
-            fmt_time_ms(prof_ms[0]),
-            fmt_time_ms(prof_ms[1]),
-            fmt_time_ms(prof_ms[2]),
+            fmt_time_ms(prof_cols[0][ni]),
+            fmt_time_ms(prof_cols[1][ni]),
+            fmt_time_ms(prof_cols[2][ni]),
             format!("{speedup:.0}x"),
         ]);
     }

@@ -35,14 +35,16 @@ fn eval_on_target(
     }
     let md = mdrae_all(&prim.predict_raw(&xs)?, &targets);
 
-    // GoogLeNet selection quality (the paper's §4.4 target network)
+    // GoogLeNet selection quality (the paper's §4.4 target network);
+    // one cache serves the profiled selection and both evaluations
     let net = networks::googlenet();
     let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
     let source = model_source(&net, &prim, &dlt)?;
+    let measured = selection::CostCache::new(&sim);
     let sel_model = selection::select(&net, &source)?;
-    let sel_prof = selection::select(&net, &sim)?;
-    let t_model = selection::evaluate(&net, &sel_model, &sim)?;
-    let t_prof = selection::evaluate(&net, &sel_prof, &sim)?;
+    let sel_prof = selection::select(&net, &measured)?;
+    let t_model = selection::evaluate(&net, &sel_model, &measured)?;
+    let t_prof = selection::evaluate(&net, &sel_prof, &measured)?;
     Ok((md, t_model / t_prof - 1.0))
 }
 

@@ -22,6 +22,7 @@ pub mod experiments;
 pub mod layers;
 pub mod linalg;
 pub mod networks;
+pub mod par;
 pub mod pbqp;
 pub mod perfmodel;
 pub mod primitives;

@@ -119,6 +119,8 @@ fn cmd_select(flags: &HashMap<String, String>) -> Result<()> {
     let rt = Runtime::open_default()?;
     let mut wb = Workbench::new(rt);
     let sim = wb.platform(platform)?.sim.clone();
+    // cost-query engine: selection + evaluation share one memoized cache
+    let measured_costs = selection::CostCache::new(&sim);
 
     let sel = if source == "model" {
         let nn2 = wb.nn2_params(platform)?;
@@ -130,10 +132,10 @@ fn cmd_select(flags: &HashMap<String, String>) -> Result<()> {
         let src = experiments::model_source(&net, &prim, &dlt)?;
         selection::select(&net, &src)?
     } else {
-        selection::select(&net, &sim)?
+        selection::select(&net, &measured_costs)?
     };
 
-    let measured = selection::evaluate(&net, &sel, &sim)?;
+    let measured = selection::evaluate(&net, &sel, &measured_costs)?;
     let mut t = Table::new(
         &format!("selection for {name} on {platform} (source: {source})"),
         &["layer", "config (k,c,im,s,f)", "primitive"],

@@ -1,0 +1,114 @@
+//! Scoped-thread data parallelism for the embarrassingly-parallel sweeps
+//! (dataset profiling, per-platform experiment columns, bench warmups).
+//!
+//! The API is deliberately rayon-shaped (`par_map` ≈
+//! `par_iter().map().collect()`), but the implementation is
+//! `std::thread::scope` fan-out over contiguous chunks: the build
+//! environment is offline, so the rayon dependency is gated out (see the
+//! commented dependency block in Cargo.toml — swapping these bodies for
+//! `items.par_iter().map(f).collect()` is a two-line change once a
+//! registry is reachable). For the sweep shapes we have — thousands of
+//! independent, similarly-sized items — static chunking is within noise
+//! of a work-stealing pool.
+
+use std::num::NonZeroUsize;
+
+/// Below this many items the spawn cost outweighs the win; run inline.
+const MIN_PAR_ITEMS: usize = 64;
+
+/// Number of worker threads to fan out across.
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Parallel map preserving input order: `out[i] = f(&items[i])`.
+///
+/// `f` runs concurrently from multiple threads; results are stitched back
+/// in order, so callers observe exactly the sequential result. Falls back
+/// to a plain sequential map for small inputs or single-core hosts.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = workers().min(n.div_ceil(MIN_PAR_ITEMS.max(1)));
+    if threads <= 1 || n < MIN_PAR_ITEMS {
+        return items.iter().map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("par_map worker panicked"));
+        }
+    });
+    out
+}
+
+/// Parallel map that always fans out (down to one item per thread) —
+/// for small item counts where each item is itself heavy, e.g. one
+/// platform sweep per thread.
+pub fn par_map_coarse<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            items.iter().map(|it| s.spawn(move || f(it))).collect();
+        for h in handles {
+            out.push(h.join().expect("par_map_coarse worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        assert_eq!(par_map(&items, |x| x * x + 1), seq);
+    }
+
+    #[test]
+    fn small_inputs_run_inline() {
+        let items = [1, 2, 3];
+        assert_eq!(par_map(&items, |x| x + 1), vec![2, 3, 4]);
+        let empty: [i32; 0] = [];
+        assert!(par_map(&empty, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn coarse_fan_out() {
+        let items = ["a", "bb", "ccc"];
+        assert_eq!(par_map_coarse(&items, |s| s.len()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shares_borrowed_state() {
+        // the closure may borrow outer state (the sweep pattern: one
+        // shared &Simulator, many configs)
+        let offset = 10u64;
+        let items: Vec<u64> = (0..500).collect();
+        let out = par_map(&items, |x| x + offset);
+        assert_eq!(out[499], 509);
+    }
+}

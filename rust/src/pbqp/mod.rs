@@ -11,6 +11,10 @@
 //! heuristic for nodes of degree ≥ 3, then back-propagates choices.
 //! Chain networks (VGG/AlexNet) solve exactly; branchy graphs
 //! (GoogLeNet/ResNet) use RN at the junctions, matching [9]/[1].
+//!
+//! Internally the working graph is a flat edge arena driven by
+//! degree-bucket worklists (see `solver.rs` for the representation notes);
+//! the public [`Graph`]/[`solve`] surface is unchanged.
 
 mod solver;
 

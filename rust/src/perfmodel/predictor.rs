@@ -59,8 +59,12 @@ impl<'rt> Predictor<'rt> {
     /// Predict denormalised outputs (ms) for raw feature rows.
     pub fn predict_raw(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
         let spec = self.trainer.spec();
-        let ys: Vec<Vec<Option<f64>>> = vec![vec![None; spec.out_dim]; xs.len()];
-        let b = crate::dataset::make_batches(xs, &ys, &self.std_x, &self.std_y, spec.train_batch.min(1024));
+        let b = crate::dataset::make_inference_batches(
+            xs,
+            &self.std_x,
+            spec.out_dim,
+            spec.train_batch.min(1024),
+        );
         let preds = self.trainer.predict_normalised(&self.params, &b)?;
         let mut out = Vec::with_capacity(xs.len());
         for i in 0..xs.len() {

@@ -1,0 +1,206 @@
+//! # The cost-query engine
+//!
+//! Every consumer of primitive/DLT costs — `build_problem`, `evaluate`,
+//! `single_family_baseline`, the memory-aware solver, the experiment
+//! sweeps and the benches — goes through [`CostSource`]. This module adds
+//! the caching layer between those consumers and the underlying source:
+//!
+//! * [`CostCache`] memoizes whole per-layer cost rows and whole 3x3 DLT
+//!   matrices keyed by `ConvConfig` / `(c, im)`. A simulator query behind
+//!   the cache is computed exactly once per distinct key; repeat queries
+//!   are hash lookups. Values are bit-identical to the uncached source
+//!   (the cache stores what the source returned — no re-derivation), a
+//!   property pinned by `rust/tests/proptests.rs`.
+//! * [`CostCache::table_for`] precomputes a dense per-network
+//!   [`TableSource`](super::TableSource): one row per distinct layer
+//!   config and one DLT matrix per distinct edge tensor. Selection,
+//!   evaluation and baselines over the table never touch the simulator
+//!   again, and table queries hand out *borrowed* rows (no per-query
+//!   clone) via `Cow::Borrowed`.
+//!
+//! Layering (paper Figure 2, steps ii–iv):
+//!
+//! ```text
+//!   build_problem / evaluate / baselines / experiments
+//!                |         (Cow<[Option<f64>]> rows, 3x3 DLT matrices)
+//!          CostCache  ── table_for ──► TableSource (dense, borrowed rows)
+//!                |
+//!      Simulator (integer-keyed noise)  ·  Predictor tables  ·  datasets
+//! ```
+//!
+//! The cache is single-threaded by design (interior `RefCell`s); the
+//! parallel sweeps in `dataset`/`experiments` shard work per thread and
+//! give each shard its own cache.
+
+use super::{CostSource, TableSource};
+use crate::layers::ConvConfig;
+use crate::networks::Network;
+use crate::primitives::Layout;
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A memoizing layer over any [`CostSource`].
+pub struct CostCache<'a> {
+    inner: &'a dyn CostSource,
+    rows: RefCell<HashMap<ConvConfig, Rc<[Option<f64>]>>>,
+    dlt: RefCell<HashMap<(u32, u32), [[f64; 3]; 3]>>,
+}
+
+impl<'a> CostCache<'a> {
+    pub fn new(inner: &'a dyn CostSource) -> Self {
+        Self {
+            inner,
+            rows: RefCell::new(HashMap::new()),
+            dlt: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// The memoized cost row for a layer config. A warm query is a hash
+    /// lookup plus a refcount bump — no allocation or copy; the row is
+    /// computed at most once.
+    pub fn row(&self, cfg: &ConvConfig) -> Rc<[Option<f64>]> {
+        if let Some(r) = self.rows.borrow().get(cfg) {
+            return Rc::clone(r);
+        }
+        let r: Rc<[Option<f64>]> = self.inner.layer_costs(cfg).into_owned().into();
+        self.rows.borrow_mut().insert(*cfg, Rc::clone(&r));
+        r
+    }
+
+    /// The memoized 3x3 DLT matrix for an edge tensor.
+    pub fn matrix(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        if let Some(m) = self.dlt.borrow().get(&(c, im)) {
+            return *m;
+        }
+        let m = self.inner.dlt_matrix3(c, im);
+        self.dlt.borrow_mut().insert((c, im), m);
+        m
+    }
+
+    /// Number of distinct layer rows materialised so far.
+    pub fn rows_cached(&self) -> usize {
+        self.rows.borrow().len()
+    }
+
+    /// Number of distinct DLT matrices materialised so far.
+    pub fn dlt_cached(&self) -> usize {
+        self.dlt.borrow().len()
+    }
+
+    /// Simulated Table-4 profiling wall-clock for a whole network (25
+    /// runs per applicable primitive per layer), summed over memoized
+    /// rows — the one place the "what profiling would cost" aggregation
+    /// lives.
+    pub fn network_profiling_wallclock_ms(&self, net: &Network) -> f64 {
+        net.layers
+            .iter()
+            .map(|cfg| crate::simulator::wallclock_from_row(&self.row(cfg)))
+            .sum()
+    }
+
+    /// Precompute the dense cost table for one network: every distinct
+    /// layer config profiled once, every distinct edge tensor's DLT
+    /// matrix computed once. Downstream `select`/`evaluate`/baseline
+    /// calls over the returned table never re-profile.
+    pub fn table_for(&self, net: &Network) -> TableSource {
+        let mut configs: Vec<ConvConfig> = Vec::with_capacity(net.n_layers());
+        let mut prim = Vec::with_capacity(net.n_layers());
+        for cfg in &net.layers {
+            configs.push(*cfg);
+            prim.push(self.row(cfg).to_vec());
+        }
+        let mut keys: Vec<(u32, u32)> = net
+            .edges
+            .iter()
+            .map(|&(u, v)| (net.layers[u].k, net.layers[v].im))
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let mats = keys.iter().map(|&(c, im)| self.matrix(c, im)).collect();
+        TableSource::new(configs, prim, keys, mats)
+    }
+}
+
+impl CostSource for CostCache<'_> {
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        // the Cow contract needs an owned row; the copy happens only at
+        // this trait boundary, inherent-path callers stay allocation-free
+        Cow::Owned(self.row(cfg).to_vec())
+    }
+
+    fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        self.matrix(c, im)[src.index()][dst.index()]
+    }
+
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        self.matrix(c, im)
+    }
+
+    fn is_memoized(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::simulator::{machine, Simulator};
+
+    #[test]
+    fn cached_rows_bit_identical_to_source() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let cache = CostCache::new(&sim);
+        let cfg = ConvConfig::new(64, 64, 56, 1, 3);
+        let direct = sim.profile_layer(&cfg);
+        assert_eq!(cache.row(&cfg).as_ref(), direct.as_slice());
+        // second query: cache hit, same shared allocation
+        let (a, b) = (cache.row(&cfg), cache.row(&cfg));
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+        assert_eq!(a.as_ref(), direct.as_slice());
+        assert_eq!(cache.rows_cached(), 1);
+        let m = cache.matrix(64, 28);
+        assert_eq!(m, sim.dlt_matrix(64, 28));
+        assert_eq!(cache.dlt_cached(), 1);
+    }
+
+    #[test]
+    fn table_for_deduplicates_queries() {
+        let sim = Simulator::new(machine::amd_a10_7850k());
+        let cache = CostCache::new(&sim);
+        let net = networks::vgg(16); // many repeated layer configs
+        let table = cache.table_for(&net);
+        assert!(cache.rows_cached() < net.n_layers());
+        // the table answers the same queries as the simulator
+        for cfg in &net.layers {
+            assert_eq!(table.layer_costs(cfg).as_ref(), sim.profile_layer(cfg).as_slice());
+        }
+        for &(u, v) in &net.edges {
+            let (c, im) = (net.layers[u].k, net.layers[v].im);
+            for src in Layout::ALL {
+                for dst in Layout::ALL {
+                    assert_eq!(table.dlt_cost(c, im, src, dst), sim.profile_dlt(c, im, src, dst));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_as_source_matches_inner() {
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let cache = CostCache::new(&sim);
+        let cfg = ConvConfig::new(32, 16, 112, 2, 5);
+        assert_eq!(cache.layer_costs(&cfg).as_ref(), sim.layer_costs(&cfg).as_ref());
+        assert_eq!(
+            cache.dlt_cost(16, 56, Layout::Chw, Layout::Hwc),
+            sim.dlt_cost(16, 56, Layout::Chw, Layout::Hwc)
+        );
+        assert_eq!(cache.dlt_cost(16, 56, Layout::Hwc, Layout::Hwc), 0.0);
+        assert!(cache.is_memoized());
+    }
+}

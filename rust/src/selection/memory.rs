@@ -10,7 +10,7 @@ use crate::layers::ConvConfig;
 use crate::networks::Network;
 use crate::pbqp;
 use crate::primitives::{catalog, Family, Primitive};
-use crate::selection::{CostSource, Selection};
+use crate::selection::{with_cache, CostSource, Selection};
 use anyhow::{ensure, Result};
 
 /// Workspace bytes a primitive needs beyond input/weights/output.
@@ -60,6 +60,17 @@ pub fn select_with_budget(
     budget_bytes: f64,
     lambda_ms_per_mb: f64,
 ) -> Result<Selection> {
+    with_cache(costs, |c: &dyn CostSource| {
+        select_with_budget_inner(net, c, budget_bytes, lambda_ms_per_mb)
+    })
+}
+
+fn select_with_budget_inner(
+    net: &Network,
+    costs: &dyn CostSource,
+    budget_bytes: f64,
+    lambda_ms_per_mb: f64,
+) -> Result<Selection> {
     let cat = catalog();
     let mut node_costs = Vec::with_capacity(net.n_layers());
     let mut choices = Vec::with_capacity(net.n_layers());
@@ -82,12 +93,13 @@ pub fn select_with_budget(
     for &(u, v) in &net.edges {
         let c = net.layers[u].k;
         let im = net.layers[v].im;
+        let m = costs.dlt_matrix3(c, im);
         let cu = &choices[u];
         let cv = &choices[v];
         let mut mat = Vec::with_capacity(cu.len() * cv.len());
         for &pu in cu {
             for &pv in cv {
-                mat.push(costs.dlt_cost(c, im, cat[pu].out_layout, cat[pv].in_layout));
+                mat.push(m[cat[pu].out_layout.index()][cat[pv].in_layout.index()]);
             }
         }
         graph.add_edge(u, v, mat);

@@ -1,67 +1,141 @@
 //! The primitive-selection engine (steps ii–iv of the paper's Figure 2):
 //! assemble the PBQP cost graph for a network from any cost source
 //! (profiled or predicted), solve it, and evaluate assignments.
+//!
+//! All cost consumers sit behind the cost-query engine (see [`cache`]):
+//! non-memoized sources are wrapped in a [`CostCache`] transparently, so
+//! `build_problem`, `evaluate` and `single_family_baseline` profile each
+//! distinct layer config and edge tensor at most once per call, and edge
+//! matrices are assembled from one 3x3 DLT matrix per edge instead of one
+//! cost query per primitive pair.
 
+pub mod cache;
 pub mod memory;
+
+pub use cache::CostCache;
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
 use crate::pbqp::{self, Graph};
 use crate::primitives::{catalog, Layout};
 use anyhow::{ensure, Result};
+use std::borrow::Cow;
+use std::collections::HashMap;
 
 /// A source of primitive and DLT costs — either the profiler/simulator
 /// ("measured", the paper's baseline flow) or a performance model
 /// ("predicted", the paper's contribution).
+///
+/// Rows are returned as `Cow`: dense table sources hand out borrows,
+/// computing sources hand out owned rows. `dlt_matrix3` exists so graph
+/// assembly can fetch a whole edge-tensor matrix in one query.
 pub trait CostSource {
     /// Per-primitive cost row for one layer (ms; None = inapplicable).
-    fn layer_costs(&self, cfg: &ConvConfig) -> Vec<Option<f64>>;
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]>;
+
     /// DLT cost for a (c, im) tensor between two layouts (ms).
     fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64;
+
+    /// The full 3x3 DLT matrix for a (c, im) tensor (row = src layout,
+    /// col = dst layout; zero diagonal).
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        let mut m = [[0.0; 3]; 3];
+        for src in Layout::ALL {
+            for dst in Layout::ALL {
+                if src != dst {
+                    m[src.index()][dst.index()] = self.dlt_cost(c, im, src, dst);
+                }
+            }
+        }
+        m
+    }
+
+    /// Whether queries are already O(1) lookups (dense tables, caches).
+    /// Non-memoized sources get wrapped in a [`CostCache`] by the solver
+    /// entry points.
+    fn is_memoized(&self) -> bool {
+        false
+    }
 }
 
 impl CostSource for crate::simulator::Simulator {
-    fn layer_costs(&self, cfg: &ConvConfig) -> Vec<Option<f64>> {
-        self.profile_layer(cfg)
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        Cow::Owned(self.profile_layer(cfg))
     }
 
     fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
         self.profile_dlt(c, im, src, dst)
     }
+
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        self.dlt_matrix(c, im)
+    }
 }
 
-/// Precomputed cost tables (e.g. from a Predictor): avoids borrowing
-/// the PJRT runtime inside the solver.
+/// Precomputed dense cost tables (from a Predictor or a [`CostCache`]):
+/// hash-indexed configs, borrowed rows, O(1) DLT lookups.
 pub struct TableSource {
-    /// Row per network layer, aligned with the network's layer order.
-    pub prim: Vec<Vec<Option<f64>>>,
-    /// dlt[(c, im)] -> 3x3 matrix lookup in insertion order.
-    pub dlt_keys: Vec<(u32, u32)>,
-    pub dlt_mats: Vec<[[f64; 3]; 3]>,
-    /// Layer configs (to find the row for a cfg).
-    pub configs: Vec<ConvConfig>,
+    /// Layer configs in insertion (network layer) order.
+    configs: Vec<ConvConfig>,
+    /// Row per config, aligned with `configs`.
+    prim: Vec<Vec<Option<f64>>>,
+    /// cfg -> row index (first occurrence wins for duplicate configs,
+    /// matching the old linear-scan semantics).
+    by_cfg: HashMap<ConvConfig, usize>,
+    /// (c, im) -> 3x3 DLT matrix.
+    dlt: HashMap<(u32, u32), [[f64; 3]; 3]>,
+}
+
+impl TableSource {
+    pub fn new(
+        configs: Vec<ConvConfig>,
+        prim: Vec<Vec<Option<f64>>>,
+        dlt_keys: Vec<(u32, u32)>,
+        dlt_mats: Vec<[[f64; 3]; 3]>,
+    ) -> Self {
+        assert_eq!(configs.len(), prim.len(), "row per config");
+        assert_eq!(dlt_keys.len(), dlt_mats.len(), "matrix per dlt key");
+        let mut by_cfg = HashMap::with_capacity(configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            by_cfg.entry(*cfg).or_insert(i);
+        }
+        let dlt = dlt_keys.into_iter().zip(dlt_mats).collect();
+        Self { configs, prim, by_cfg, dlt }
+    }
+
+    /// The configs this table covers, in insertion order.
+    pub fn configs(&self) -> &[ConvConfig] {
+        &self.configs
+    }
+
+    /// Borrowed row for a config, if present.
+    pub fn row(&self, cfg: &ConvConfig) -> Option<&[Option<f64>]> {
+        self.by_cfg.get(cfg).map(|&i| self.prim[i].as_slice())
+    }
+
+    fn dlt_lookup(&self, c: u32, im: u32) -> &[[f64; 3]; 3] {
+        self.dlt.get(&(c, im)).expect("dlt pair not in table")
+    }
 }
 
 impl CostSource for TableSource {
-    fn layer_costs(&self, cfg: &ConvConfig) -> Vec<Option<f64>> {
-        let i = self
-            .configs
-            .iter()
-            .position(|c| c == cfg)
-            .expect("config not in table");
-        self.prim[i].clone()
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        Cow::Borrowed(self.row(cfg).expect("config not in table"))
     }
 
     fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
         if src == dst {
             return 0.0;
         }
-        let i = self
-            .dlt_keys
-            .iter()
-            .position(|&k| k == (c, im))
-            .expect("dlt pair not in table");
-        self.dlt_mats[i][src.index()][dst.index()]
+        self.dlt_lookup(c, im)[src.index()][dst.index()]
+    }
+
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        *self.dlt_lookup(c, im)
+    }
+
+    fn is_memoized(&self) -> bool {
+        true
     }
 }
 
@@ -72,10 +146,29 @@ pub struct SelectionProblem {
     pub choices: Vec<Vec<usize>>,
 }
 
+/// Run `f` against a memoized view of `costs`: already-memoized sources
+/// pass through, everything else gets a transient [`CostCache`]. Every
+/// cost-consuming entry point funnels through this, so none can forget
+/// the wrap (or double-wrap).
+pub(crate) fn with_cache<R>(
+    costs: &dyn CostSource,
+    f: impl FnOnce(&dyn CostSource) -> R,
+) -> R {
+    if costs.is_memoized() {
+        f(costs)
+    } else {
+        f(&CostCache::new(costs))
+    }
+}
+
 /// Build the selection PBQP graph: node costs = primitive times, edge
 /// costs = DLT between the producer's output layout and the consumer's
 /// input layout, on the producer's output tensor.
 pub fn build_problem(net: &Network, costs: &dyn CostSource) -> Result<SelectionProblem> {
+    with_cache(costs, |c: &dyn CostSource| build_problem_inner(net, c))
+}
+
+fn build_problem_inner(net: &Network, costs: &dyn CostSource) -> Result<SelectionProblem> {
     let cat = catalog();
     let mut node_costs = Vec::with_capacity(net.n_layers());
     let mut choices = Vec::with_capacity(net.n_layers());
@@ -99,6 +192,7 @@ pub fn build_problem(net: &Network, costs: &dyn CostSource) -> Result<SelectionP
         // resolution)
         let c = net.layers[u].k;
         let im = net.layers[v].im;
+        let m = costs.dlt_matrix3(c, im);
         let cu = &choices[u];
         let cv = &choices[v];
         let mut mat = Vec::with_capacity(cu.len() * cv.len());
@@ -106,7 +200,7 @@ pub fn build_problem(net: &Network, costs: &dyn CostSource) -> Result<SelectionP
             let out_l = cat[pu].out_layout;
             for &pv in cv {
                 let in_l = cat[pv].in_layout;
-                mat.push(costs.dlt_cost(c, im, out_l, in_l));
+                mat.push(m[out_l.index()][in_l.index()]);
             }
         }
         graph.add_edge(u, v, mat);
@@ -140,6 +234,10 @@ pub fn select(net: &Network, costs: &dyn CostSource) -> Result<Selection> {
 /// source — used for the paper's Figure 7/8: optimise with predicted
 /// costs, evaluate with measured costs.
 pub fn evaluate(net: &Network, sel: &Selection, costs: &dyn CostSource) -> Result<f64> {
+    with_cache(costs, |c: &dyn CostSource| evaluate_inner(net, sel, c))
+}
+
+fn evaluate_inner(net: &Network, sel: &Selection, costs: &dyn CostSource) -> Result<f64> {
     let cat = catalog();
     let mut total = 0.0;
     for (u, cfg) in net.layers.iter().enumerate() {
@@ -166,6 +264,14 @@ pub fn single_family_baseline(
     costs: &dyn CostSource,
     family: crate::primitives::Family,
 ) -> Result<Selection> {
+    with_cache(costs, |c: &dyn CostSource| single_family_inner(net, c, family))
+}
+
+fn single_family_inner(
+    net: &Network,
+    costs: &dyn CostSource,
+    family: crate::primitives::Family,
+) -> Result<Selection> {
     let cat = catalog();
     let mut primitive = Vec::with_capacity(net.n_layers());
     for cfg in &net.layers {
@@ -187,7 +293,7 @@ pub fn single_family_baseline(
         primitive.push(pick);
     }
     let sel = Selection { primitive, estimated_ms: 0.0 };
-    let est = evaluate(net, &sel, costs)?;
+    let est = evaluate_inner(net, &sel, costs)?;
     Ok(Selection { estimated_ms: est, ..sel })
 }
 
@@ -271,5 +377,32 @@ mod tests {
         };
         let alt_cost = evaluate(&net, &alt, &s).unwrap();
         assert!(alt_cost > sel.estimated_ms);
+    }
+
+    #[test]
+    fn cached_and_uncached_selection_agree() {
+        // selecting through the cost-query engine must not change the
+        // result: same assignment, same objective, bit for bit
+        let s = sim();
+        for net in [networks::vgg(11), networks::googlenet()] {
+            let direct = select(&net, &s).unwrap();
+            let cache = CostCache::new(&s);
+            let via_cache = select(&net, &cache).unwrap();
+            let table = cache.table_for(&net);
+            let via_table = select(&net, &table).unwrap();
+            assert_eq!(direct.primitive, via_cache.primitive);
+            assert_eq!(direct.primitive, via_table.primitive);
+            assert_eq!(direct.estimated_ms, via_cache.estimated_ms);
+            assert_eq!(direct.estimated_ms, via_table.estimated_ms);
+            let ev = evaluate(&net, &direct, &table).unwrap();
+            assert_eq!(ev, evaluate(&net, &direct, &s).unwrap());
+        }
+    }
+
+    #[test]
+    fn table_source_missing_config_panics() {
+        let t = TableSource::new(vec![], vec![], vec![], vec![]);
+        let cfg = ConvConfig::new(1, 1, 7, 1, 1);
+        assert!(std::panic::catch_unwind(|| t.layer_costs(&cfg).len()).is_err());
     }
 }

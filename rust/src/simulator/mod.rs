@@ -4,6 +4,12 @@
 //! profiler answers — primitive execution time and DLT cost for a layer
 //! configuration — with platform-dependent non-linear behaviour plus
 //! median-of-25-style measurement noise.
+//!
+//! Noise keys are integer-hashed: every query folds
+//! `(machine salt, kind tag, primitive index / layout pair, packed config)`
+//! through [`noise::fnv1a_words`] instead of formatting a string per query
+//! (the old hot-path behaviour) — the cost-query engine in
+//! `selection::cache` leans on this being cheap.
 
 pub mod cost;
 pub mod machine;
@@ -17,21 +23,29 @@ use crate::primitives::{catalog, Layout};
 /// Noise level of the simulated median-of-25 measurements.
 pub const NOISE_SIGMA: f64 = 0.02;
 
+/// Domain tags keeping primitive and DLT noise streams disjoint.
+const TAG_PRIM: u64 = 0x505249;
+const TAG_DLT: u64 = 0x444c54;
+
 /// A simulated profiling target.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub machine: Machine,
     /// Noise sigma (0.0 disables noise — useful for tests).
     pub sigma: f64,
+    /// Per-machine noise salt (hash of the machine name, computed once at
+    /// construction so per-query keys are pure integer folds).
+    salt: u64,
 }
 
 impl Simulator {
     pub fn new(machine: Machine) -> Self {
-        Self { machine, sigma: NOISE_SIGMA }
+        let salt = noise::fnv1a(machine.name.as_bytes());
+        Self { machine, sigma: NOISE_SIGMA, salt }
     }
 
     pub fn noiseless(machine: Machine) -> Self {
-        Self { machine, sigma: 0.0 }
+        Self { sigma: 0.0, ..Self::new(machine) }
     }
 
     pub fn name(&self) -> &'static str {
@@ -42,7 +56,7 @@ impl Simulator {
     pub fn profile_primitive(&self, idx: usize, cfg: &ConvConfig) -> Option<f64> {
         let prim = &catalog()[idx];
         let base = cost::primitive_ms(&self.machine, prim, cfg)?;
-        Some(base * self.noise(&format!("{}/{}/{:?}", self.machine.name, prim.name, cfg)))
+        Some(base * self.noise(&[TAG_PRIM, idx as u64, pack_cfg(cfg)]))
     }
 
     /// Profile all primitives for a layer (the dataset row).
@@ -56,12 +70,8 @@ impl Simulator {
         if base == 0.0 {
             return 0.0;
         }
-        base * self.noise(&format!(
-            "{}/dlt/{}/{}/{c}x{im}",
-            self.machine.name,
-            src.name(),
-            dst.name()
-        ))
+        let pair = (src.index() * 3 + dst.index()) as u64;
+        base * self.noise(&[TAG_DLT, pair, (c as u64) << 32 | im as u64])
     }
 
     /// The full 3x3 DLT matrix for a tensor (row = src, col = dst).
@@ -77,23 +87,37 @@ impl Simulator {
 
     /// Simulated wall-clock cost of *profiling* this layer exhaustively
     /// (the paper's Table 4 "Profiling" column): 25 runs per applicable
-    /// primitive.
+    /// primitive. Profiles the layer once; callers that already hold the
+    /// row (a dataset, a [`crate::selection::CostCache`]) should use
+    /// [`wallclock_from_row`] instead of paying a second profile.
     pub fn profiling_wallclock_ms(&self, cfg: &ConvConfig) -> f64 {
-        let runs = 25.0;
-        self.profile_layer(cfg)
-            .into_iter()
-            .flatten()
-            .map(|t| t * runs)
-            .sum()
+        wallclock_from_row(&self.profile_layer(cfg))
     }
 
-    fn noise(&self, key: &str) -> f64 {
+    fn noise(&self, key: &[u64; 3]) -> f64 {
         if self.sigma == 0.0 {
             1.0
         } else {
-            noise::jitter(key, self.sigma)
+            let seed = noise::fnv1a_words(&[self.salt, key[0], key[1], key[2]]);
+            noise::jitter_seed(seed, self.sigma)
         }
     }
+}
+
+/// Pack a [`ConvConfig`] into one word for noise keying. Field widths
+/// cover the paper's Table 1 ranges (k, c ≤ 2048 → 12 bits; im ≤ 299 →
+/// 10; s ≤ 4 → 3; f ≤ 11 → 4) with headroom; packing is injective for
+/// any in-range config, so distinct configs get distinct noise streams.
+fn pack_cfg(cfg: &ConvConfig) -> u64 {
+    (cfg.k as u64) << 40 | (cfg.c as u64) << 20 | (cfg.im as u64) << 8 | (cfg.s as u64) << 4
+        | cfg.f as u64
+}
+
+/// The Table-4 profiling wall-clock implied by an already-profiled row:
+/// 25 runs per applicable primitive.
+pub fn wallclock_from_row(row: &[Option<f64>]) -> f64 {
+    const RUNS: f64 = 25.0;
+    row.iter().flatten().map(|t| t * RUNS).sum()
 }
 
 #[cfg(test)]
@@ -119,6 +143,43 @@ mod tests {
     }
 
     #[test]
+    fn noise_streams_are_distinct() {
+        // different primitives, configs and machines must decorrelate
+        let s = sim();
+        let a = ConvConfig::new(64, 64, 56, 1, 3);
+        let b = ConvConfig::new(64, 64, 56, 2, 3);
+        let base =
+            |idx: usize, cfg: &ConvConfig| cost::primitive_ms(&s.machine, &catalog()[idx], cfg);
+        let j = |idx: usize, cfg: &ConvConfig| {
+            s.profile_primitive(idx, cfg).unwrap() / base(idx, cfg).unwrap()
+        };
+        assert_ne!(j(0, &a), j(1, &a));
+        assert_ne!(j(0, &a), j(0, &b));
+        let arm = Simulator::new(machine::arm_cortex_a73());
+        let j_arm = arm.profile_primitive(0, &a).unwrap()
+            / cost::primitive_ms(&arm.machine, &catalog()[0], &a).unwrap();
+        assert_ne!(j(0, &a), j_arm);
+    }
+
+    #[test]
+    fn pack_cfg_injective_on_table1_ranges() {
+        let cfgs = [
+            ConvConfig::new(1, 1, 7, 1, 1),
+            ConvConfig::new(2048, 2048, 299, 4, 11),
+            ConvConfig::new(64, 64, 56, 1, 3),
+            ConvConfig::new(64, 64, 56, 1, 5),
+            ConvConfig::new(64, 64, 57, 1, 3),
+            ConvConfig::new(64, 65, 56, 1, 3),
+            ConvConfig::new(65, 64, 56, 1, 3),
+            ConvConfig::new(64, 64, 56, 2, 3),
+        ];
+        let mut packed: Vec<u64> = cfgs.iter().map(pack_cfg).collect();
+        packed.sort();
+        packed.dedup();
+        assert_eq!(packed.len(), cfgs.len());
+    }
+
+    #[test]
     fn dlt_matrix_diag_zero() {
         let m = sim().dlt_matrix(64, 56);
         for i in 0..3 {
@@ -135,8 +196,11 @@ mod tests {
     fn profiling_wallclock_dwarfs_single_run() {
         let s = sim();
         let cfg = ConvConfig::new(128, 128, 28, 1, 3);
-        let single: f64 = s.profile_layer(&cfg).into_iter().flatten().sum();
+        let row = s.profile_layer(&cfg);
+        let single: f64 = row.iter().flatten().sum();
         assert!(s.profiling_wallclock_ms(&cfg) >= single * 20.0);
+        // the row-based variant is exactly the cfg-based one
+        assert_eq!(wallclock_from_row(&row), s.profiling_wallclock_ms(&cfg));
     }
 
     #[test]

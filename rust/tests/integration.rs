@@ -115,12 +115,7 @@ fn predicted_selection_close_to_profiled() {
     keys.dedup();
     let mats: Vec<[[f64; 3]; 3]> =
         keys.iter().map(|&(c, im)| sim.dlt_matrix(c, im)).collect();
-    let source = selection::TableSource {
-        prim: rows,
-        dlt_keys: keys,
-        dlt_mats: mats,
-        configs: net.layers.clone(),
-    };
+    let source = selection::TableSource::new(net.layers.clone(), rows, keys, mats);
     let sel_model = selection::select(&net, &source).unwrap();
     let sel_prof = selection::select(&net, &sim).unwrap();
     let t_model = selection::evaluate(&net, &sel_model, &sim).unwrap();

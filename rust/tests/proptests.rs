@@ -6,7 +6,7 @@ use primsel::layers::ConvConfig;
 use primsel::pbqp::{self, Graph};
 use primsel::perfmodel::metrics;
 use primsel::primitives::{catalog, Layout};
-use primsel::selection;
+use primsel::selection::{self, CostCache, CostSource};
 use primsel::simulator::noise::SplitMix64;
 use primsel::simulator::{machine, Simulator};
 
@@ -57,6 +57,125 @@ fn prop_pbqp_sound_and_chain_exact() {
                 exact.cost
             );
         }
+    }
+}
+
+/// The rewritten work-graph (flat edge arena + degree buckets) must match
+/// brute force exactly on randomized R0–RII-reducible graphs: chains,
+/// trees and cycles, with parallel edges and ragged choice counts thrown
+/// in (parallel edges merge; a cycle reduces via RII onto an existing
+/// edge).
+#[test]
+fn prop_pbqp_workgraph_exact_on_reducible_graphs() {
+    let mut rng = SplitMix64::new(0xBEEFCAFE);
+    for case in 0..CASES {
+        let n = 3 + (rng.next_u64() % 5) as usize;
+        let node_costs: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let ch = 1 + (rng.next_u64() % 4) as usize;
+                (0..ch).map(|_| rng.next_f64() * 9.0).collect()
+            })
+            .collect();
+        let mut g = Graph::new(node_costs);
+        let shape = case % 3;
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        match shape {
+            0 => pairs.extend((0..n - 1).map(|u| (u, u + 1))), // chain
+            1 => {
+                // random tree
+                for v in 1..n {
+                    pairs.push(((rng.next_u64() as usize) % v, v));
+                }
+            }
+            _ => {
+                // single cycle: still fully RII-reducible
+                pairs.extend((0..n - 1).map(|u| (u, u + 1)));
+                pairs.push((0, n - 1));
+            }
+        }
+        for &(u, v) in &pairs {
+            let len = g.node_costs[u].len() * g.node_costs[v].len();
+            g.add_edge(u, v, (0..len).map(|_| rng.next_f64() * 5.0).collect());
+            if rng.next_f64() < 0.3 {
+                // parallel duplicate, sometimes flipped orientation
+                let (a, b) = if rng.next_f64() < 0.5 { (u, v) } else { (v, u) };
+                let len = g.node_costs[a].len() * g.node_costs[b].len();
+                g.add_edge(a, b, (0..len).map(|_| rng.next_f64() * 2.0).collect());
+            }
+        }
+        let sol = pbqp::solve(&g);
+        let exact = g.brute_force();
+        assert!(
+            (sol.cost - exact.cost).abs() < 1e-9,
+            "case {case} (shape {shape}): {} vs {}",
+            sol.cost,
+            exact.cost
+        );
+        assert!((g.cost_of(&sol.choice) - sol.cost).abs() < 1e-9);
+    }
+}
+
+/// Cached and uncached simulator costs are bit-identical: the cost-query
+/// engine memoizes, it never re-derives.
+#[test]
+fn prop_cost_cache_bit_identical() {
+    let mut rng = SplitMix64::new(0xCACE);
+    for sim in machine::all().into_iter().map(Simulator::new) {
+        let cache = CostCache::new(&sim);
+        let mut cfgs = Vec::new();
+        for _ in 0..CASES {
+            cfgs.push(rand_cfg(&mut rng));
+        }
+        // query twice (cold then hot) interleaved with direct queries
+        for pass in 0..2 {
+            for cfg in &cfgs {
+                assert_eq!(
+                    cache.row(cfg).as_ref(),
+                    sim.profile_layer(cfg).as_slice(),
+                    "pass {pass}: cached row must equal direct profile"
+                );
+                assert_eq!(cache.layer_costs(cfg).as_ref(), sim.profile_layer(cfg).as_slice());
+            }
+            for cfg in &cfgs {
+                let (c, im) = (cfg.c, cfg.im);
+                assert_eq!(cache.matrix(c, im), sim.dlt_matrix(c, im));
+                for src in Layout::ALL {
+                    for dst in Layout::ALL {
+                        assert_eq!(
+                            cache.dlt_cost(c, im, src, dst),
+                            sim.profile_dlt(c, im, src, dst)
+                        );
+                    }
+                }
+            }
+        }
+        assert!(cache.rows_cached() <= cfgs.len());
+    }
+}
+
+/// Dense per-network tables answer exactly like the live simulator, and
+/// selection through cache or table matches direct selection bit for bit.
+#[test]
+fn prop_table_source_matches_simulator() {
+    let sim = Simulator::new(machine::amd_a10_7850k());
+    let nets = primsel::networks::selection_networks();
+    for net in &nets {
+        let cache = CostCache::new(&sim);
+        let table = cache.table_for(net);
+        for cfg in &net.layers {
+            assert_eq!(table.layer_costs(cfg).as_ref(), sim.profile_layer(cfg).as_slice());
+        }
+        let direct = selection::select(net, &sim).unwrap();
+        let cached = selection::select(net, &cache).unwrap();
+        let tabled = selection::select(net, &table).unwrap();
+        assert_eq!(direct.primitive, cached.primitive, "{}", net.name);
+        assert_eq!(direct.primitive, tabled.primitive, "{}", net.name);
+        assert_eq!(direct.estimated_ms, cached.estimated_ms);
+        assert_eq!(direct.estimated_ms, tabled.estimated_ms);
+        assert_eq!(
+            selection::evaluate(net, &direct, &table).unwrap(),
+            selection::evaluate(net, &direct, &sim).unwrap()
+        );
     }
 }
 

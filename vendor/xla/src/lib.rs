@@ -1,0 +1,227 @@
+//! Offline in-tree stub of the `xla_extension` PJRT bindings.
+//!
+//! The build environment has no registry and no libxla, so this crate
+//! mirrors the API surface `primsel::runtime` uses. [`Literal`] is a real
+//! host-side tensor container (so literal construction, reshape and
+//! round-trips work and their tests pass); everything PJRT-backed —
+//! [`PjRtClient::cpu`] onward — returns [`Error::BackendUnavailable`],
+//! which `Runtime::open_default().ok()` turns into a graceful skip in
+//! every artifact-dependent test, bench and experiment.
+//!
+//! Swap back to the real bindings with
+//! `xla = { package = "xla_extension", version = "0.5.1" }`.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Error type matching the real crate's role (Display-able, wrapped by
+/// `primsel::runtime::wrap` into anyhow).
+#[derive(Debug)]
+pub enum Error {
+    BackendUnavailable(&'static str),
+    ShapeMismatch { expected: usize, got: usize },
+    NotATuple,
+    WrongElementType,
+    Io(PathBuf),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => write!(
+                f,
+                "{what}: PJRT backend unavailable (offline xla stub; link xla_extension for real execution)"
+            ),
+            Error::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected} elements, got {got}")
+            }
+            Error::NotATuple => write!(f, "literal is not a tuple"),
+            Error::WrongElementType => write!(f, "literal element type mismatch"),
+            Error::Io(p) => write!(f, "cannot read {p:?}"),
+        }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold (subset used by primsel).
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Elements;
+    fn unwrap(e: &Elements) -> Result<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Elements {
+        Elements::F32(data)
+    }
+    fn unwrap(e: &Elements) -> Result<Vec<Self>> {
+        match e {
+            Elements::F32(v) => Ok(v.clone()),
+            _ => Err(Error::WrongElementType),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Elements {
+        Elements::I32(data)
+    }
+    fn unwrap(e: &Elements) -> Result<Vec<Self>> {
+        match e {
+            Elements::I32(v) => Ok(v.clone()),
+            _ => Err(Error::WrongElementType),
+        }
+    }
+}
+
+/// A host tensor literal (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub dims: Vec<i64>,
+    pub elements: Elements,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], elements: T::wrap(vec![v]) }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], elements: T::wrap(data.to_vec()) }
+    }
+
+    /// Reshape, checking the element count.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let len = self.element_count();
+        if n as usize != len {
+            return Err(Error::ShapeMismatch { expected: n as usize, got: len });
+        }
+        Ok(Literal { dims: dims.to_vec(), elements: self.elements })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.elements {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+            Elements::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Flatten back to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.elements)
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.elements {
+            Elements::Tuple(v) => Ok(v),
+            _ => Err(Error::NotATuple),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub: retains the path only).
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    /// The real binding parses HLO text; the stub only checks readability
+    /// so missing-artifact setups fail the same way they would online.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if std::path::Path::new(path).exists() {
+            Ok(HloModuleProto { path: path.to_string() })
+        } else {
+            Err(Error::Io(PathBuf::from(path)))
+        }
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub — every caller
+/// treats that as "artifacts/backend absent" and skips.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::BackendUnavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (unreachable in the stub: no client can exist).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (unreachable in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::BackendUnavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_types() {
+        assert_eq!(Literal::scalar(5i32).to_vec::<i32>().unwrap(), vec![5]);
+        assert!(Literal::scalar(5i32).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
