@@ -11,8 +11,10 @@
 mod harness;
 
 use harness::Bench;
+use primsel::coordinator::{Coordinator, SelectionRequest};
 use primsel::experiments::{model_source, Workbench};
 use primsel::networks;
+use primsel::par;
 use primsel::perfmodel::predictor::DltPredictor;
 use primsel::perfmodel::Predictor;
 use primsel::runtime::Runtime;
@@ -55,6 +57,43 @@ fn main() {
             for (net, table) in nets.iter().zip(&tables) {
                 let _ = selection::select(net, table).unwrap();
             }
+        });
+    }
+    // multi-tenant serving shape: one warm shared cache. Uncontended =
+    // one thread re-selecting the zoo; contended = every worker doing
+    // that same zoo sweep concurrently against the same cache, so the
+    // delta between the rows is pure lock/sharing overhead per tenant.
+    {
+        let cache = CostCache::new(&sim);
+        for net in &nets {
+            let _ = selection::select(net, &cache).unwrap(); // warm rows
+        }
+        b.run("selection/shared_cache_uncontended", 1, 10, || {
+            for net in &nets {
+                let _ = selection::select(net, &cache).unwrap();
+            }
+        });
+        let tenants: Vec<usize> = (0..par::workers().clamp(2, 8)).collect();
+        println!("selection/shared_cache_contended: {} concurrent tenants", tenants.len());
+        b.run("selection/shared_cache_contended", 1, 10, || {
+            par::par_map_coarse(&tenants, |_| {
+                for net in &nets {
+                    let _ = selection::select(net, &cache).unwrap();
+                }
+            });
+        });
+    }
+    // the coordinator end-to-end: a mixed three-platform zoo batch
+    {
+        let coord = Coordinator::new();
+        let reqs: Vec<SelectionRequest> = ["intel", "amd", "arm"]
+            .iter()
+            .flat_map(|p| nets.iter().map(|n| SelectionRequest::new(n.clone(), p)))
+            .collect();
+        let _ = coord.submit_batch(&reqs).unwrap(); // warm all three caches
+        println!("selection/coordinator_batch: {} mixed requests", reqs.len());
+        b.run("selection/coordinator_batch", 1, 10, || {
+            let _ = coord.submit_batch(&reqs).unwrap();
         });
     }
     // the thing the model replaces: exhaustive profiling wall-clock

@@ -1,7 +1,7 @@
 //! Profile the real Pallas primitive kernels on this host via PJRT
 //! (median of 25 runs, paper §4.1.1) and check that the *measured*
 //! family ranking agrees qualitatively with the simulator's cost model
-//! (the grounding argument of DESIGN.md §3).
+//! (the grounding argument of ARCHITECTURE.md).
 //!
 //! Run: `cargo run --release --example profile_host [-- runs]`
 

@@ -1,5 +1,5 @@
-//! End-to-end driver (DESIGN.md §7): the full paper pipeline on a real
-//! workload, proving all three layers compose.
+//! End-to-end driver (ARCHITECTURE.md walks this flow): the full paper
+//! pipeline on a real workload, proving all three layers compose.
 //!
 //! 1. Profile the ARM platform (simulated substrate) into a dataset.
 //! 2. Train the NN2 performance model by driving the AOT `train_step`

@@ -1,1 +1,350 @@
-// paper's L3 coordination contribution
+//! # The multi-tenant selection service
+//!
+//! The paper's economics ("hours to just seconds", Table 4) only pay off
+//! at scale if one warm cost table serves *many* selection requests. This
+//! module is that serving layer: a [`Coordinator`] owns one long-lived,
+//! shared [`CostCache`] per platform and answers batches of selection
+//! requests — network × platform × [`Objective`] — concurrently over
+//! them.
+//!
+//! ```text
+//!              submit_batch(&[SelectionRequest])
+//!                             |
+//!                        Coordinator ── par::par_map_heavy ──► workers
+//!                        /         \                        (1 request
+//!              CostCache(intel)  CostCache(arm) …            per job)
+//!                        |             |
+//!                   Simulator / predictor tables (per platform)
+//! ```
+//!
+//! Every request for a platform routes through that platform's shared
+//! cache ([`CostCache`] is `Send + Sync`, sharded internally), so the
+//! first request to touch a layer config profiles it and every later
+//! request — same batch or a later one — gets a hash lookup. Results are
+//! bit-identical to solving each request alone with a fresh cache
+//! (pinned by `rust/tests/concurrency.rs`): sources are deterministic,
+//! and the cache stores exactly what the source returned.
+//!
+//! Platforms resolve on demand: a request naming `"intel"`, `"amd"` or
+//! `"arm"` gets a simulator-backed cache built from
+//! [`machine::by_name`](crate::simulator::machine::by_name); other cost
+//! sources — e.g. a predictor-built
+//! [`TableSource`](crate::selection::TableSource) for a trained platform
+//! model — can be attached under any name with [`Coordinator::register`].
+//!
+//! Each [`BatchReport`] carries per-platform [`CacheStats`] deltas, so a
+//! serving process can watch its hit rate climb as tenants repeat layer
+//! shapes — the `serve_zoo` example prints exactly that trajectory.
+
+use crate::networks::Network;
+use crate::par;
+use crate::selection::{self, memory, CacheStats, CostCache, CostSource, Selection};
+use crate::simulator::{machine, Simulator};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// What a tenant wants minimised.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Plain fastest network: the paper's PBQP objective.
+    MinTime,
+    /// Time plus a soft per-layer workspace penalty (TASO-style): layers
+    /// whose primitive overshoots `budget_bytes` are charged
+    /// `lambda_ms_per_mb` per overshot MiB in the PBQP objective.
+    MinTimeWithMemoryBudget {
+        budget_bytes: f64,
+        lambda_ms_per_mb: f64,
+    },
+}
+
+impl Objective {
+    /// Short human-readable tag for report tables.
+    pub fn tag(&self) -> String {
+        match self {
+            Objective::MinTime => "time".to_string(),
+            Objective::MinTimeWithMemoryBudget { budget_bytes, .. } => {
+                format!("time|{:.0}MiB", budget_bytes / (1024.0 * 1024.0))
+            }
+        }
+    }
+}
+
+/// One tenant request: optimise `network` for `platform` under
+/// `objective`.
+#[derive(Debug, Clone)]
+pub struct SelectionRequest {
+    pub network: Network,
+    pub platform: String,
+    pub objective: Objective,
+}
+
+impl SelectionRequest {
+    /// A plain min-time request.
+    pub fn new(network: Network, platform: &str) -> Self {
+        Self { network, platform: platform.to_string(), objective: Objective::MinTime }
+    }
+
+    /// Override the objective (builder style).
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+}
+
+/// The answer to one [`SelectionRequest`].
+#[derive(Debug, Clone)]
+pub struct SelectionReport {
+    pub network: String,
+    pub platform: String,
+    pub objective: Objective,
+    /// The chosen primitive per layer plus the objective value.
+    pub selection: Selection,
+    /// Plain network time of the chosen assignment under the platform's
+    /// cost source (no penalty terms), for like-for-like comparison
+    /// across objectives.
+    pub evaluated_ms: f64,
+    /// Peak per-layer workspace of the chosen assignment.
+    pub peak_workspace_bytes: f64,
+    /// Wall-clock this request spent inside its worker.
+    pub wall_ms: f64,
+}
+
+/// The answer to one [`Coordinator::submit_batch`] call.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// One report per request, in request order.
+    pub reports: Vec<SelectionReport>,
+    /// Per-platform cache hit/miss deltas over this batch's time window,
+    /// in order of first appearance in the request slice. Deltas are
+    /// computed from the caches' lifetime counters, so they are exact
+    /// when batches on this coordinator don't overlap; if another
+    /// `submit`/`submit_batch` runs concurrently on the same platform,
+    /// its traffic lands in the same window and is counted here too.
+    pub stats: Vec<(String, CacheStats)>,
+    /// Wall-clock of the whole batch (fan-out included).
+    pub wall_ms: f64,
+}
+
+/// The serving layer: per-platform shared caches plus batch fan-out.
+///
+/// ```
+/// use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
+/// use primsel::networks;
+///
+/// let coord = Coordinator::new();
+/// let batch = vec![
+///     SelectionRequest::new(networks::alexnet(), "intel"),
+///     SelectionRequest::new(networks::vgg(11), "arm"),
+///     SelectionRequest::new(networks::alexnet(), "intel").with_objective(
+///         Objective::MinTimeWithMemoryBudget {
+///             budget_bytes: 4.0 * 1024.0 * 1024.0,
+///             lambda_ms_per_mb: 10.0,
+///         },
+///     ),
+/// ];
+/// let report = coord.submit_batch(&batch).unwrap();
+/// assert_eq!(report.reports.len(), 3);
+/// for (req, rep) in batch.iter().zip(&report.reports) {
+///     assert_eq!(rep.network, req.network.name);
+///     assert_eq!(rep.selection.primitive.len(), req.network.n_layers());
+///     assert!(rep.evaluated_ms > 0.0);
+/// }
+/// // both intel requests shared one warm cache
+/// assert_eq!(report.stats[0].0, "intel");
+/// ```
+pub struct Coordinator {
+    platforms: RwLock<HashMap<String, Arc<CostCache<'static>>>>,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coordinator {
+    /// An empty coordinator; platform caches attach on first use.
+    pub fn new() -> Self {
+        Self { platforms: RwLock::new(HashMap::new()) }
+    }
+
+    /// Attach a custom cost source (predictor tables, a measured
+    /// profiler…) under `platform`. Replaces any existing cache for that
+    /// name, resetting its memoized rows and stats.
+    pub fn register(&self, platform: &str, source: Arc<dyn CostSource>) {
+        let cache = Arc::new(CostCache::new_shared(source));
+        self.platforms
+            .write()
+            .expect("platform map poisoned")
+            .insert(platform.to_string(), cache);
+    }
+
+    /// The shared cache serving `platform`, creating a simulator-backed
+    /// one on first use for the built-in platform names.
+    pub fn cache(&self, platform: &str) -> Result<Arc<CostCache<'static>>> {
+        if let Some(c) = self.platforms.read().expect("platform map poisoned").get(platform) {
+            return Ok(Arc::clone(c));
+        }
+        let m = machine::by_name(platform).ok_or_else(|| {
+            anyhow!("unknown platform {platform:?}: register() a source or use intel/amd/arm")
+        })?;
+        let cache = Arc::new(CostCache::new_shared(Arc::new(Simulator::new(m))));
+        let mut map = self.platforms.write().expect("platform map poisoned");
+        // a racing resolver may have inserted meanwhile; keep the winner
+        Ok(Arc::clone(map.entry(platform.to_string()).or_insert(cache)))
+    }
+
+    /// Solve a single request synchronously on the caller's thread
+    /// (through the platform's shared cache, so it still warms the cache
+    /// for everyone else).
+    pub fn submit(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        let cache = self.cache(&req.platform)?;
+        solve_one(&cache, req)
+    }
+
+    /// Solve a batch of requests concurrently: platforms are resolved up
+    /// front (so an unknown platform fails before any work is spawned),
+    /// then requests fan out one-per-job over [`par::par_map_heavy`],
+    /// every job routing through its platform's shared cache. Reports
+    /// come back in request order and are bit-identical to solving each
+    /// request alone. The returned [`BatchReport::stats`] deltas span
+    /// this batch's time window — see their field docs for what that
+    /// means when batches overlap.
+    pub fn submit_batch(&self, reqs: &[SelectionRequest]) -> Result<BatchReport> {
+        let t0 = Instant::now();
+        let caches: Vec<Arc<CostCache<'static>>> =
+            reqs.iter().map(|r| self.cache(&r.platform)).collect::<Result<_>>()?;
+
+        // distinct platforms in first-appearance order, with pre-batch
+        // counter snapshots for the per-batch stats delta
+        let mut seen: Vec<(String, Arc<CostCache<'static>>, CacheStats)> = Vec::new();
+        for (r, c) in reqs.iter().zip(&caches) {
+            if !seen.iter().any(|(name, _, _)| *name == r.platform) {
+                seen.push((r.platform.clone(), Arc::clone(c), c.stats()));
+            }
+        }
+
+        let idx: Vec<usize> = (0..reqs.len()).collect();
+        let results = par::par_map_heavy(&idx, |&i| solve_one(&caches[i], &reqs[i]));
+        let reports = results.into_iter().collect::<Result<Vec<_>>>()?;
+
+        let stats = seen
+            .into_iter()
+            .map(|(name, cache, before)| (name, cache.stats().since(&before)))
+            .collect();
+        Ok(BatchReport { reports, stats, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    }
+
+    /// Lifetime hit/miss totals per attached platform, sorted by name.
+    pub fn cache_stats(&self) -> Vec<(String, CacheStats)> {
+        let map = self.platforms.read().expect("platform map poisoned");
+        let mut out: Vec<(String, CacheStats)> =
+            map.iter().map(|(name, c)| (name.clone(), c.stats())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+fn solve_one(cache: &CostCache<'static>, req: &SelectionRequest) -> Result<SelectionReport> {
+    let t0 = Instant::now();
+    let selection = match req.objective {
+        Objective::MinTime => selection::select(&req.network, cache)?,
+        Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
+            memory::select_with_budget(&req.network, cache, budget_bytes, lambda_ms_per_mb)?
+        }
+    };
+    let evaluated_ms = selection::evaluate(&req.network, &selection, cache)?;
+    let peak_workspace_bytes = memory::peak_workspace(&req.network, &selection);
+    Ok(SelectionReport {
+        network: req.network.name.clone(),
+        platform: req.platform.clone(),
+        objective: req.objective,
+        selection,
+        evaluated_ms,
+        peak_workspace_bytes,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::simulator::{machine, Simulator};
+
+    #[test]
+    fn unknown_platform_is_an_error() {
+        let coord = Coordinator::new();
+        let req = SelectionRequest::new(networks::alexnet(), "riscv");
+        assert!(coord.submit(&req).is_err());
+        assert!(coord.submit_batch(&[req]).is_err());
+    }
+
+    #[test]
+    fn submit_matches_direct_selection() {
+        let coord = Coordinator::new();
+        let net = networks::vgg(11);
+        let rep = coord.submit(&SelectionRequest::new(net.clone(), "amd")).unwrap();
+        let sim = Simulator::new(machine::amd_a10_7850k());
+        let direct = selection::select(&net, &sim).unwrap();
+        assert_eq!(rep.selection.primitive, direct.primitive);
+        assert_eq!(rep.selection.estimated_ms, direct.estimated_ms);
+        assert_eq!(rep.evaluated_ms, selection::evaluate(&net, &direct, &sim).unwrap());
+        assert_eq!(rep.platform, "amd");
+    }
+
+    #[test]
+    fn register_overrides_builtin_resolution() {
+        let coord = Coordinator::new();
+        // "edge-tpu" is not a built-in name; registering any source
+        // makes it servable
+        let sim = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        coord.register("edge-tpu", sim);
+        let rep = coord.submit(&SelectionRequest::new(networks::alexnet(), "edge-tpu")).unwrap();
+        assert!(rep.evaluated_ms > 0.0);
+        let stats = coord.cache_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].0, "edge-tpu");
+        assert!(stats[0].1.lookups() > 0);
+    }
+
+    #[test]
+    fn batch_shares_one_cache_per_platform() {
+        let coord = Coordinator::new();
+        let net = networks::alexnet();
+        let reqs: Vec<SelectionRequest> =
+            (0..6).map(|_| SelectionRequest::new(net.clone(), "intel")).collect();
+        let batch = coord.submit_batch(&reqs).unwrap();
+        assert_eq!(batch.reports.len(), 6);
+        assert_eq!(batch.stats.len(), 1);
+        let (_, s) = &batch.stats[0];
+        // six identical networks share rows: every request's evaluate
+        // pass re-reads keys its build pass inserted, so hits can never
+        // fall below misses even under the worst cold-key races
+        assert!(s.row_hits >= s.row_misses, "{s:?}");
+        assert!(s.row_hits > 0, "{s:?}");
+        for w in batch.reports.windows(2) {
+            assert_eq!(w[0].selection.primitive, w[1].selection.primitive);
+            assert_eq!(w[0].evaluated_ms, w[1].evaluated_ms);
+        }
+    }
+
+    #[test]
+    fn memory_budget_objective_is_respected() {
+        let coord = Coordinator::new();
+        let net = networks::vgg(11);
+        let free = coord.submit(&SelectionRequest::new(net.clone(), "arm")).unwrap();
+        let tight = coord
+            .submit(&SelectionRequest::new(net, "arm").with_objective(
+                Objective::MinTimeWithMemoryBudget {
+                    budget_bytes: free.peak_workspace_bytes * 0.1,
+                    lambda_ms_per_mb: 50.0,
+                },
+            ))
+            .unwrap();
+        assert!(tight.peak_workspace_bytes < free.peak_workspace_bytes);
+        assert!(tight.evaluated_ms >= free.evaluated_ms);
+    }
+}

@@ -1,5 +1,5 @@
 //! Experiment regenerators — one per table/figure of the paper's
-//! evaluation (see DESIGN.md §6 for the index). Each experiment prints a
+//! evaluation (see `README.md` for the index). Each experiment prints a
 //! table whose rows/series mirror the paper's artefact and dumps a CSV
 //! next to it under `results/`.
 

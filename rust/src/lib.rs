@@ -14,9 +14,11 @@
 //!   solver, the platform simulators, profiling, transfer learning and the
 //!   paper's full experiment suite. Python never runs at request time.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! See `README.md` for the module map and `ARCHITECTURE.md` for the
+//! end-to-end dataflow and the shared-cache concurrency model.
 
 pub mod config;
+pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
 pub mod layers;

@@ -52,9 +52,11 @@ where
     out
 }
 
-/// Parallel map that always fans out (down to one item per thread) —
-/// for small item counts where each item is itself heavy, e.g. one
-/// platform sweep per thread.
+/// Parallel map that always fans out to exactly one thread per item —
+/// for small item counts where true all-at-once concurrency is the
+/// point (e.g. the contended-cache bench needs every tenant live at
+/// once, even on hosts with fewer cores than tenants). For bounded
+/// fan-out over a batch of heavy items, prefer [`par_map_heavy`].
 pub fn par_map_coarse<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -75,6 +77,48 @@ where
         }
     });
     out
+}
+
+/// Parallel map for batches of heavy, possibly uneven items (selection
+/// requests, per-network sweeps): always fans out — no `MIN_PAR_ITEMS`
+/// threshold — but bounds the fleet at [`workers()`] threads. Items are
+/// dealt round-robin (worker `w` takes `w, w + T, w + 2T, …`), so a run
+/// of expensive requests spreads across workers instead of landing in
+/// one contiguous chunk; results are stitched back in input order.
+pub fn par_map_heavy<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = workers().min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let f = &f;
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                s.spawn(move || {
+                    items
+                        .iter()
+                        .enumerate()
+                        .skip(w)
+                        .step_by(threads)
+                        .map(|(i, it)| (i, f(it)))
+                        .collect::<Vec<(usize, R)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par_map_heavy worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("every index visited")).collect()
 }
 
 #[cfg(test)]
@@ -100,6 +144,18 @@ mod tests {
     fn coarse_fan_out() {
         let items = ["a", "bb", "ccc"];
         assert_eq!(par_map_coarse(&items, |s| s.len()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn heavy_fan_out_preserves_order() {
+        // below MIN_PAR_ITEMS, where par_map would run inline — the heavy
+        // variant must still fan out and still stitch results in order
+        let items: Vec<u64> = (0..13).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        assert_eq!(par_map_heavy(&items, |x| x * 3 + 1), seq);
+        let empty: [u64; 0] = [];
+        assert!(par_map_heavy(&empty, |x| *x).is_empty());
+        assert_eq!(par_map_heavy(&[7u64], |x| x + 1), vec![8]);
     }
 
     #[test]

@@ -220,6 +220,19 @@ impl Work {
 
 /// Solve a PBQP instance. Exact on graphs that reduce fully with R0–RII
 /// (trees, chains, series-parallel); heuristic (RN) otherwise.
+///
+/// ```
+/// use primsel::pbqp::{solve, Graph};
+///
+/// // two nodes, two choices each; the edge penalises mismatched choices
+/// let mut g = Graph::new(vec![vec![1.0, 3.0], vec![4.0, 1.0]]);
+/// g.add_edge(0, 1, vec![0.0, 2.0, 2.0, 0.0]);
+///
+/// let sol = solve(&g);
+/// assert_eq!(g.cost_of(&sol.choice), sol.cost);
+/// // a single edge reduces exactly with RI: optimal by construction
+/// assert_eq!(sol.cost, g.brute_force().cost);
+/// ```
 pub fn solve(g: &Graph) -> Solution {
     let n = g.n_nodes();
     if n == 0 {

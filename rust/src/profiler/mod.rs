@@ -1,7 +1,7 @@
 //! Host profiler: times *real* executions of the Pallas primitive
 //! kernels (the AOT prim_grid artifacts) on this machine's CPU via PJRT —
 //! the measured counterpart that grounds the simulator substitution
-//! (DESIGN.md §3). Median of 25 runs, as in the paper (§4.1.1).
+//! (see `ARCHITECTURE.md`). Median of 25 runs, as in the paper (§4.1.1).
 
 use crate::runtime::{literal_f32, Runtime};
 use crate::simulator::noise::SplitMix64;

@@ -2,15 +2,17 @@
 //!
 //! Every consumer of primitive/DLT costs — `build_problem`, `evaluate`,
 //! `single_family_baseline`, the memory-aware solver, the experiment
-//! sweeps and the benches — goes through [`CostSource`]. This module adds
-//! the caching layer between those consumers and the underlying source:
+//! sweeps, the [`Coordinator`](crate::coordinator) and the benches — goes
+//! through [`CostSource`]. This module adds the caching layer between
+//! those consumers and the underlying source:
 //!
 //! * [`CostCache`] memoizes whole per-layer cost rows and whole 3x3 DLT
 //!   matrices keyed by `ConvConfig` / `(c, im)`. A simulator query behind
 //!   the cache is computed exactly once per distinct key; repeat queries
 //!   are hash lookups. Values are bit-identical to the uncached source
 //!   (the cache stores what the source returned — no re-derivation), a
-//!   property pinned by `rust/tests/proptests.rs`.
+//!   property pinned by `rust/tests/proptests.rs` and, for concurrent
+//!   access, `rust/tests/concurrency.rs`.
 //! * [`CostCache::table_for`] precomputes a dense per-network
 //!   [`TableSource`](super::TableSource): one row per distinct layer
 //!   config and one DLT matrix per distinct edge tensor. Selection,
@@ -18,75 +20,237 @@
 //!   again, and table queries hand out *borrowed* rows (no per-query
 //!   clone) via `Cow::Borrowed`.
 //!
-//! Layering (paper Figure 2, steps ii–iv):
+//! Layering (paper Figure 2, steps ii–iv; see `ARCHITECTURE.md` for the
+//! end-to-end version):
 //!
 //! ```text
-//!   build_problem / evaluate / baselines / experiments
+//!   Coordinator / build_problem / evaluate / baselines / experiments
 //!                |         (Cow<[Option<f64>]> rows, 3x3 DLT matrices)
 //!          CostCache  ── table_for ──► TableSource (dense, borrowed rows)
 //!                |
 //!      Simulator (integer-keyed noise)  ·  Predictor tables  ·  datasets
 //! ```
 //!
-//! The cache is single-threaded by design (interior `RefCell`s); the
-//! parallel sweeps in `dataset`/`experiments` shard work per thread and
-//! give each shard its own cache.
+//! ## Concurrency model
+//!
+//! The cache is `Send + Sync`: the row and matrix maps are split across
+//! [`N_SHARDS`] independent `RwLock`ed shards (keyed by a hash of the
+//! `ConvConfig` / `(c, im)` key), and rows are shared as
+//! `Arc<[Option<f64>]>`, so one warm cache can serve many concurrent
+//! selection requests — the multi-tenant serving shape the
+//! [`Coordinator`](crate::coordinator) builds on. Warm queries take a
+//! shard read lock (shared, uncontended between distinct shards); a miss
+//! computes the value *outside* the write lock, so a slow profile on one
+//! key never blocks hits on other keys of the same shard. Because the
+//! underlying sources are deterministic, a racing double-compute of the
+//! same key produces bit-identical values; the first insert wins and
+//! later readers share its allocation.
+//!
+//! Use one shared cache (behind `&` or `Arc`) when several threads query
+//! the *same platform* — per-thread caches only make sense when each
+//! thread owns a distinct source. Single-threaded callers pay one
+//! uncontended lock per query, which profiling shows is noise next to a
+//! simulator profile or a PJRT predict.
 
 use super::{CostSource, TableSource};
 use crate::layers::ConvConfig;
 use crate::networks::Network;
 use crate::primitives::Layout;
 use std::borrow::Cow;
-use std::cell::RefCell;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
-/// A memoizing layer over any [`CostSource`].
-pub struct CostCache<'a> {
-    inner: &'a dyn CostSource,
-    rows: RefCell<HashMap<ConvConfig, Rc<[Option<f64>]>>>,
-    dlt: RefCell<HashMap<(u32, u32), [[f64; 3]; 3]>>,
+/// Number of independent lock shards per map. A power of two (the shard
+/// pick is a mask) comfortably above the core counts we serve from, so
+/// concurrent misses on *different* keys rarely queue on one lock.
+pub const N_SHARDS: usize = 16;
+
+/// Hit/miss counters of a [`CostCache`], split by map. Counters are
+/// monotonic over the cache's lifetime; use [`CacheStats::since`] to get
+/// the delta across a batch (how the [`Coordinator`](crate::coordinator)
+/// reports per-batch hit rates).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Layer-row lookups answered from the cache.
+    pub row_hits: u64,
+    /// Layer-row lookups that had to query the inner source.
+    pub row_misses: u64,
+    /// DLT-matrix lookups answered from the cache.
+    pub dlt_hits: u64,
+    /// DLT-matrix lookups that had to query the inner source.
+    pub dlt_misses: u64,
 }
 
-impl<'a> CostCache<'a> {
-    pub fn new(inner: &'a dyn CostSource) -> Self {
-        Self {
-            inner,
-            rows: RefCell::new(HashMap::new()),
-            dlt: RefCell::new(HashMap::new()),
+impl CacheStats {
+    /// Total lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.row_hits + self.dlt_hits
+    }
+
+    /// Total lookups that reached the inner source.
+    pub fn misses(&self) -> u64 {
+        self.row_misses + self.dlt_misses
+    }
+
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.lookups() as f64
         }
     }
 
-    /// The memoized cost row for a layer config. A warm query is a hash
-    /// lookup plus a refcount bump — no allocation or copy; the row is
-    /// computed at most once.
-    pub fn row(&self, cfg: &ConvConfig) -> Rc<[Option<f64>]> {
-        if let Some(r) = self.rows.borrow().get(cfg) {
-            return Rc::clone(r);
+    /// Counter delta since an `earlier` snapshot of the same cache.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            row_hits: self.row_hits.saturating_sub(earlier.row_hits),
+            row_misses: self.row_misses.saturating_sub(earlier.row_misses),
+            dlt_hits: self.dlt_hits.saturating_sub(earlier.dlt_hits),
+            dlt_misses: self.dlt_misses.saturating_sub(earlier.dlt_misses),
         }
-        let r: Rc<[Option<f64>]> = self.inner.layer_costs(cfg).into_owned().into();
-        self.rows.borrow_mut().insert(*cfg, Rc::clone(&r));
-        r
+    }
+}
+
+/// The wrapped source: borrowed for the transient per-call caches the
+/// selection entry points create, owned (`Arc`) for the long-lived
+/// per-platform caches the coordinator serves from.
+enum Inner<'a> {
+    Borrowed(&'a dyn CostSource),
+    Shared(Arc<dyn CostSource>),
+}
+
+/// A memoizing, thread-safe layer over any [`CostSource`].
+///
+/// One warm `CostCache` can be shared across threads (it is
+/// `Send + Sync`); results are bit-identical to querying the inner
+/// source directly, no matter how many threads race on it.
+///
+/// ```
+/// use primsel::selection::{self, CostCache};
+/// use primsel::simulator::{machine, Simulator};
+///
+/// let sim = Simulator::new(machine::intel_i9_9900k());
+/// let cache = CostCache::new(&sim); // Send + Sync: share by reference
+/// let net = primsel::networks::vgg(11);
+/// let sequential = selection::select(&net, &cache).unwrap();
+///
+/// // four concurrent tenants select over the same warm cache
+/// let concurrent: Vec<_> = std::thread::scope(|s| {
+///     let handles: Vec<_> = (0..4)
+///         .map(|_| s.spawn(|| selection::select(&net, &cache).unwrap()))
+///         .collect();
+///     handles.into_iter().map(|h| h.join().unwrap()).collect()
+/// });
+/// for sel in &concurrent {
+///     assert_eq!(sel.primitive, sequential.primitive);
+///     assert_eq!(sel.estimated_ms, sequential.estimated_ms);
+/// }
+/// assert!(cache.stats().row_hits > 0); // the repeats were cache hits
+/// ```
+pub struct CostCache<'a> {
+    inner: Inner<'a>,
+    rows: [RwLock<HashMap<ConvConfig, Arc<[Option<f64>]>>>; N_SHARDS],
+    dlt: [RwLock<HashMap<(u32, u32), [[f64; 3]; 3]>>; N_SHARDS],
+    row_hits: AtomicU64,
+    row_misses: AtomicU64,
+    dlt_hits: AtomicU64,
+    dlt_misses: AtomicU64,
+}
+
+fn shard_of<K: Hash>(key: &K) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) & (N_SHARDS - 1)
+}
+
+impl<'a> CostCache<'a> {
+    /// A cache borrowing its source — the transient, per-call shape the
+    /// selection entry points use.
+    pub fn new(inner: &'a dyn CostSource) -> Self {
+        Self::build(Inner::Borrowed(inner))
+    }
+
+    fn build(inner: Inner<'a>) -> Self {
+        Self {
+            inner,
+            rows: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            dlt: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            row_hits: AtomicU64::new(0),
+            row_misses: AtomicU64::new(0),
+            dlt_hits: AtomicU64::new(0),
+            dlt_misses: AtomicU64::new(0),
+        }
+    }
+
+    fn source(&self) -> &dyn CostSource {
+        match &self.inner {
+            Inner::Borrowed(s) => *s,
+            Inner::Shared(s) => s.as_ref(),
+        }
+    }
+
+    /// The memoized cost row for a layer config. A warm query is a shard
+    /// read lock, a hash lookup and a refcount bump — no allocation or
+    /// copy; the row is computed at most once per distinct key (a racing
+    /// double-compute stores the first result; the values are
+    /// bit-identical either way because sources are deterministic).
+    pub fn row(&self, cfg: &ConvConfig) -> Arc<[Option<f64>]> {
+        let shard = &self.rows[shard_of(cfg)];
+        if let Some(r) = shard.read().expect("cache shard poisoned").get(cfg) {
+            self.row_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(r);
+        }
+        self.row_misses.fetch_add(1, Ordering::Relaxed);
+        // compute outside the write lock: a slow profile on this key must
+        // not block hits (or other misses) on the rest of the shard
+        let r: Arc<[Option<f64>]> = self.source().layer_costs(cfg).into_owned().into();
+        let mut map = shard.write().expect("cache shard poisoned");
+        Arc::clone(map.entry(*cfg).or_insert(r))
     }
 
     /// The memoized 3x3 DLT matrix for an edge tensor.
     pub fn matrix(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
-        if let Some(m) = self.dlt.borrow().get(&(c, im)) {
+        let key = (c, im);
+        let shard = &self.dlt[shard_of(&key)];
+        if let Some(m) = shard.read().expect("cache shard poisoned").get(&key) {
+            self.dlt_hits.fetch_add(1, Ordering::Relaxed);
             return *m;
         }
-        let m = self.inner.dlt_matrix3(c, im);
-        self.dlt.borrow_mut().insert((c, im), m);
-        m
+        self.dlt_misses.fetch_add(1, Ordering::Relaxed);
+        let m = self.source().dlt_matrix3(c, im);
+        *shard.write().expect("cache shard poisoned").entry(key).or_insert(m)
     }
 
     /// Number of distinct layer rows materialised so far.
     pub fn rows_cached(&self) -> usize {
-        self.rows.borrow().len()
+        self.rows.iter().map(|s| s.read().expect("cache shard poisoned").len()).sum()
     }
 
     /// Number of distinct DLT matrices materialised so far.
     pub fn dlt_cached(&self) -> usize {
-        self.dlt.borrow().len()
+        self.dlt.iter().map(|s| s.read().expect("cache shard poisoned").len()).sum()
+    }
+
+    /// Snapshot of the hit/miss counters. Monotonic; pair with
+    /// [`CacheStats::since`] for per-batch deltas. Under concurrency the
+    /// snapshot is *approximate* (counters are independent relaxed
+    /// atomics), which is fine for the reporting it feeds.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            row_hits: self.row_hits.load(Ordering::Relaxed),
+            row_misses: self.row_misses.load(Ordering::Relaxed),
+            dlt_hits: self.dlt_hits.load(Ordering::Relaxed),
+            dlt_misses: self.dlt_misses.load(Ordering::Relaxed),
+        }
     }
 
     /// Simulated Table-4 profiling wall-clock for a whole network (25
@@ -120,6 +284,14 @@ impl<'a> CostCache<'a> {
         keys.dedup();
         let mats = keys.iter().map(|&(c, im)| self.matrix(c, im)).collect();
         TableSource::new(configs, prim, keys, mats)
+    }
+}
+
+impl CostCache<'static> {
+    /// A cache owning its source — the long-lived, per-platform shape the
+    /// [`Coordinator`](crate::coordinator) keeps warm across batches.
+    pub fn new_shared(inner: Arc<dyn CostSource>) -> Self {
+        Self::build(Inner::Shared(inner))
     }
 }
 
@@ -161,7 +333,7 @@ mod tests {
         assert_eq!(cache.row(&cfg).as_ref(), direct.as_slice());
         // second query: cache hit, same shared allocation
         let (a, b) = (cache.row(&cfg), cache.row(&cfg));
-        assert!(std::rc::Rc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(a.as_ref(), direct.as_slice());
         assert_eq!(cache.rows_cached(), 1);
         let m = cache.matrix(64, 28);
@@ -202,5 +374,38 @@ mod tests {
         );
         assert_eq!(cache.dlt_cost(16, 56, Layout::Hwc, Layout::Hwc), 0.0);
         assert!(cache.is_memoized());
+    }
+
+    #[test]
+    fn cache_is_send_sync_and_shared_variant_owns() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<CostCache<'_>>();
+
+        let cache = CostCache::new_shared(Arc::new(Simulator::new(
+            machine::intel_i9_9900k(),
+        )));
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let cfg = ConvConfig::new(64, 64, 56, 1, 3);
+        assert_eq!(cache.row(&cfg).as_ref(), sim.profile_layer(&cfg).as_slice());
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let cache = CostCache::new(&sim);
+        assert_eq!(cache.stats(), CacheStats::default());
+        let cfg = ConvConfig::new(64, 64, 56, 1, 3);
+        cache.row(&cfg);
+        cache.row(&cfg);
+        cache.matrix(64, 28);
+        cache.matrix(64, 28);
+        cache.matrix(64, 28);
+        let s = cache.stats();
+        assert_eq!((s.row_hits, s.row_misses), (1, 1));
+        assert_eq!((s.dlt_hits, s.dlt_misses), (2, 1));
+        assert_eq!(s.lookups(), 5);
+        assert!((s.hit_rate() - 0.6).abs() < 1e-12);
+        let later = CacheStats { row_hits: 5, ..s };
+        assert_eq!(later.since(&s), CacheStats { row_hits: 4, ..CacheStats::default() });
     }
 }

@@ -12,7 +12,7 @@
 pub mod cache;
 pub mod memory;
 
-pub use cache::CostCache;
+pub use cache::{CacheStats, CostCache};
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
@@ -29,7 +29,14 @@ use std::collections::HashMap;
 /// Rows are returned as `Cow`: dense table sources hand out borrows,
 /// computing sources hand out owned rows. `dlt_matrix3` exists so graph
 /// assembly can fetch a whole edge-tensor matrix in one query.
-pub trait CostSource {
+///
+/// `Send + Sync` is a supertrait: every cost source is shareable across
+/// threads, so one warm [`CostCache`] (itself a `CostSource`) can serve
+/// concurrent selection requests — the contract the
+/// [`Coordinator`](crate::coordinator) and the parallel sweeps rely on.
+/// All in-tree sources (simulator, dense tables, caches) are immutable
+/// or internally synchronised, so the bound costs nothing.
+pub trait CostSource: Send + Sync {
     /// Per-primitive cost row for one layer (ms; None = inapplicable).
     fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]>;
 

@@ -1,5 +1,5 @@
 //! The platform substrate: analytical machine models standing in for the
-//! paper's Intel / AMD / ARM testbeds (DESIGN.md §3 documents the
+//! paper's Intel / AMD / ARM testbeds (`ARCHITECTURE.md` documents the
 //! substitution). A [`Simulator`] answers the same queries the paper's
 //! profiler answers — primitive execution time and DLT cost for a layer
 //! configuration — with platform-dependent non-linear behaviour plus

@@ -1,0 +1,228 @@
+//! Concurrency tests for the shared cost cache and the coordinator
+//! (loom-free: plain `std::thread` hammering with deterministic inputs).
+//! The invariant under test everywhere: sharing one warm cache across
+//! threads changes *nothing* about the answers — rows, matrices,
+//! selections and objectives are bit-identical to a fresh
+//! single-threaded cache.
+
+use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
+use primsel::layers::ConvConfig;
+use primsel::networks;
+use primsel::selection::{self, memory, CostCache, CostSource};
+use primsel::simulator::noise::SplitMix64;
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+
+const THREADS: usize = 8;
+
+fn rand_cfg(rng: &mut SplitMix64) -> ConvConfig {
+    let k = 1 + (rng.next_u64() % 512) as u32;
+    let c = 1 + (rng.next_u64() % 512) as u32;
+    let im = 7 + (rng.next_u64() % 220) as u32;
+    let s = [1u32, 2, 4][(rng.next_u64() % 3) as usize];
+    let f = [1u32, 3, 5, 7, 9, 11][(rng.next_u64() % 6) as usize];
+    ConvConfig::new(k, c, im, s, f)
+}
+
+/// Many threads hammer one shared cache — overlapping key sets, every
+/// thread interleaving row and matrix queries in its own order — and
+/// every answer must equal what a fresh single-threaded cache returns.
+#[test]
+fn shared_cache_hammer_is_bit_identical_to_single_threaded() {
+    let sim = Simulator::new(machine::intel_i9_9900k());
+    let shared = CostCache::new(&sim);
+
+    // a pool of configs with deliberate duplicates so threads collide on
+    // hot keys as well as racing on cold ones
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    let mut pool: Vec<ConvConfig> = (0..96).map(|_| rand_cfg(&mut rng)).collect();
+    let dups = pool[..32].to_vec();
+    pool.extend(dups);
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let shared = &shared;
+            let sim = &sim;
+            let pool = &pool;
+            s.spawn(move || {
+                // per-thread visit order, seeded differently per thread
+                let mut rng = SplitMix64::new(0xAB + t as u64);
+                for _ in 0..3 {
+                    for _ in 0..pool.len() {
+                        let cfg = &pool[(rng.next_u64() as usize) % pool.len()];
+                        assert_eq!(
+                            shared.row(cfg).as_ref(),
+                            sim.profile_layer(cfg).as_slice(),
+                            "shared row must equal direct profile"
+                        );
+                        assert_eq!(shared.matrix(cfg.c, cfg.im), sim.dlt_matrix(cfg.c, cfg.im));
+                    }
+                }
+            });
+        }
+    });
+
+    // post-conditions: the shared cache holds exactly what a fresh
+    // single-threaded cache would, key for key and bit for bit
+    let fresh = CostCache::new(&sim);
+    for cfg in &pool {
+        assert_eq!(shared.row(cfg).as_ref(), fresh.row(cfg).as_ref());
+        assert_eq!(shared.layer_costs(cfg), fresh.layer_costs(cfg));
+        assert_eq!(shared.matrix(cfg.c, cfg.im), fresh.matrix(cfg.c, cfg.im));
+    }
+    let distinct = {
+        let mut v = pool.clone();
+        v.sort_by_key(|c| (c.k, c.c, c.im, c.s, c.f));
+        v.dedup();
+        v.len()
+    };
+    assert_eq!(shared.rows_cached(), distinct);
+    let stats = shared.stats();
+    // every lookup was counted, and the overwhelming majority were hits
+    assert!(stats.lookups() >= (THREADS * 3 * pool.len()) as u64);
+    // even in the pathological schedule where every thread double-misses
+    // every cold key, hits still dominate (bounds: ≥ 3072 row lookups,
+    // ≤ THREADS × distinct = 768 misses)
+    assert!(stats.row_hits > stats.row_misses * 2, "{stats:?}");
+}
+
+/// Concurrent *selection* through one shared cache: every thread's
+/// result must be bit-identical to the sequential fresh-cache result,
+/// for both the plain and the memory-budgeted objectives.
+#[test]
+fn concurrent_selection_matches_single_threaded() {
+    let sim = Simulator::new(machine::amd_a10_7850k());
+    let nets = networks::selection_networks();
+
+    // sequential ground truth, one fresh cache per network
+    let expected: Vec<_> = nets
+        .iter()
+        .map(|net| {
+            let cache = CostCache::new(&sim);
+            let sel = selection::select(net, &cache).unwrap();
+            let ev = selection::evaluate(net, &sel, &cache).unwrap();
+            let budgeted =
+                memory::select_with_budget(net, &cache, 4.0 * 1024.0 * 1024.0, 10.0).unwrap();
+            (sel, ev, budgeted)
+        })
+        .collect();
+
+    let shared = CostCache::new(&sim);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let shared = &shared;
+            let nets = &nets;
+            let expected = &expected;
+            s.spawn(move || {
+                // stagger starting points so threads hit different
+                // networks (and so different cache keys) simultaneously
+                for i in 0..nets.len() {
+                    let n = (i + t) % nets.len();
+                    let (exp_sel, exp_ev, exp_budgeted) = &expected[n];
+                    let sel = selection::select(&nets[n], shared).unwrap();
+                    assert_eq!(sel.primitive, exp_sel.primitive, "{}", nets[n].name);
+                    assert_eq!(sel.estimated_ms, exp_sel.estimated_ms);
+                    let ev = selection::evaluate(&nets[n], &sel, shared).unwrap();
+                    assert_eq!(ev, *exp_ev);
+                    let budgeted = memory::select_with_budget(
+                        &nets[n],
+                        shared,
+                        4.0 * 1024.0 * 1024.0,
+                        10.0,
+                    )
+                    .unwrap();
+                    assert_eq!(budgeted.primitive, exp_budgeted.primitive);
+                    assert_eq!(budgeted.estimated_ms, exp_budgeted.estimated_ms);
+                }
+            });
+        }
+    });
+}
+
+/// An owned-source shared cache (`new_shared`, the coordinator's shape)
+/// behaves exactly like the borrowed one under the same hammer.
+#[test]
+fn shared_arc_cache_matches_borrowed() {
+    let sim = Simulator::new(machine::arm_cortex_a73());
+    let owned = Arc::new(CostCache::new_shared(Arc::new(sim.clone())));
+    let net = networks::googlenet();
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let cache = Arc::clone(&owned);
+            let net = net.clone();
+            std::thread::spawn(move || selection::select(&net, cache.as_ref()).unwrap())
+        })
+        .collect();
+    let expected = selection::select(&net, &CostCache::new(&sim)).unwrap();
+    for h in handles {
+        let sel = h.join().unwrap();
+        assert_eq!(sel.primitive, expected.primitive);
+        assert_eq!(sel.estimated_ms, expected.estimated_ms);
+    }
+}
+
+/// Coordinator batch over mixed networks/platforms/objectives: reports
+/// come back in request order and match sequential per-request
+/// selection with fresh caches.
+#[test]
+fn coordinator_batch_matches_sequential_selection() {
+    let coord = Coordinator::new();
+    let platforms = ["intel", "amd", "arm"];
+    let nets = networks::selection_networks();
+
+    let mut reqs = Vec::new();
+    for net in &nets {
+        for p in platforms {
+            reqs.push(SelectionRequest::new(net.clone(), p));
+        }
+    }
+    // memory-budgeted tenants in the same batch
+    for p in platforms {
+        reqs.push(SelectionRequest::new(networks::vgg(16), p).with_objective(
+            Objective::MinTimeWithMemoryBudget {
+                budget_bytes: 8.0 * 1024.0 * 1024.0,
+                lambda_ms_per_mb: 5.0,
+            },
+        ));
+    }
+
+    let batch = coord.submit_batch(&reqs).unwrap();
+    assert_eq!(batch.reports.len(), reqs.len());
+    assert_eq!(batch.stats.len(), platforms.len());
+
+    for (req, rep) in reqs.iter().zip(&batch.reports) {
+        assert_eq!(rep.network, req.network.name);
+        assert_eq!(rep.platform, req.platform);
+
+        let sim = Simulator::new(machine::by_name(&req.platform).unwrap());
+        let fresh = CostCache::new(&sim);
+        let expected = match req.objective {
+            Objective::MinTime => selection::select(&req.network, &fresh).unwrap(),
+            Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
+                memory::select_with_budget(&req.network, &fresh, budget_bytes, lambda_ms_per_mb)
+                    .unwrap()
+            }
+        };
+        assert_eq!(rep.selection.primitive, expected.primitive, "{}/{}", rep.network, rep.platform);
+        assert_eq!(rep.selection.estimated_ms, expected.estimated_ms);
+        assert_eq!(
+            rep.evaluated_ms,
+            selection::evaluate(&req.network, &expected, &fresh).unwrap()
+        );
+        assert_eq!(rep.peak_workspace_bytes, memory::peak_workspace(&req.network, &expected));
+    }
+
+    // a second identical batch is served almost entirely from the warm
+    // caches: zero misses, identical reports
+    let warm = coord.submit_batch(&reqs).unwrap();
+    for (_, s) in &warm.stats {
+        assert_eq!(s.misses(), 0, "warm batch must not re-profile: {s:?}");
+        assert!(s.hits() > 0);
+    }
+    for (a, b) in batch.reports.iter().zip(&warm.reports) {
+        assert_eq!(a.selection.primitive, b.selection.primitive);
+        assert_eq!(a.selection.estimated_ms, b.selection.estimated_ms);
+        assert_eq!(a.evaluated_ms, b.evaluated_ms);
+    }
+}
