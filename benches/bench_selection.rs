@@ -11,15 +11,17 @@
 mod harness;
 
 use harness::Bench;
-use primsel::coordinator::{Coordinator, SelectionRequest};
-use primsel::experiments::{model_source, Workbench};
+use primsel::coordinator::{Coordinator, OnboardSpec, SelectionRequest};
+use primsel::dataset;
+use primsel::experiments::Workbench;
 use primsel::networks;
 use primsel::par;
-use primsel::perfmodel::predictor::DltPredictor;
-use primsel::perfmodel::Predictor;
+use primsel::perfmodel::model::model_table;
+use primsel::perfmodel::LinCostModel;
 use primsel::runtime::Runtime;
-use primsel::selection::{self, CostCache};
+use primsel::selection::{self, CostCache, CostSource, ModeledSource};
 use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
 
 fn main() {
     let mut b = Bench::new();
@@ -96,6 +98,31 @@ fn main() {
             let _ = coord.submit_batch(&reqs).unwrap();
         });
     }
+    // model-served selection, no PJRT: a Lin model trained offline on
+    // intel simulator data answers through ModeledSource (per-call cache
+    // wraps it), vs the profiled_zoo_total row above — the modeled-vs-
+    // simulated sweep comparison
+    {
+        let (prim, dlt) = dataset::calibration_sample(&sim, 0.10, 17);
+        let lin = LinCostModel::fit(&prim, &dlt, "intel").unwrap();
+        let modeled = ModeledSource::new(Arc::new(lin));
+        b.run("selection/modeled_source_zoo", 1, 10, || {
+            for net in &nets {
+                let _ = selection::select(net, &modeled).unwrap();
+            }
+        });
+    }
+    // cold platform onboarding: calibration draw + Lin fit + register
+    // (no validation) — the "new device shows up" hot path
+    {
+        let coord = Coordinator::new();
+        let target: Arc<dyn CostSource> =
+            Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        b.run("selection/onboard_platform_cold", 1, 10, || {
+            let spec = OnboardSpec::fresh_lin(Arc::clone(&target), 0.02, 7);
+            let _ = coord.onboard_platform("arm-lin-bench", spec).unwrap();
+        });
+    }
     // the thing the model replaces: exhaustive profiling wall-clock
     {
         let cache = CostCache::new(&sim);
@@ -125,17 +152,13 @@ fn model_pipeline_tier(
     let mut wb = Workbench::new(rt);
     wb.max_epochs = 60; // enough for a usable model if not cached yet
 
-    let nn2 = wb.nn2_params("intel").map_err(|e| e.to_string())?;
-    let dltp = wb.dlt_nn2_params("intel").map_err(|e| e.to_string())?;
-    let (sx, sy) = wb.prim_standardizers("intel").map_err(|e| e.to_string())?;
-    let (dx, dy) = wb.dlt_standardizers("intel").map_err(|e| e.to_string())?;
-    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy).map_err(|e| e.to_string())?;
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy).map_err(|e| e.to_string())?;
+    let inputs = wb.xla_model_inputs("intel").map_err(|e| e.to_string())?;
+    let model = inputs.build(&wb.rt).map_err(|e| e.to_string())?;
 
     for net in nets {
-        let _ = model_source(net, &prim, &dlt).map_err(|e| e.to_string())?; // warm executables
+        let _ = model_table(net, &model).map_err(|e| e.to_string())?; // warm executables
         b.run(&format!("selection/model_pipeline_{}", net.name), 1, 10, || {
-            let source = model_source(net, &prim, &dlt).unwrap();
+            let source = model_table(net, &model).unwrap();
             let _ = selection::select(net, &source).unwrap();
         });
     }

@@ -4,10 +4,9 @@
 //!
 //! Run: `cargo run --release --example optimize_zoo [-- platform]`
 
-use primsel::experiments::{model_source, Workbench};
+use primsel::experiments::Workbench;
 use primsel::networks;
-use primsel::perfmodel::predictor::DltPredictor;
-use primsel::perfmodel::Predictor;
+use primsel::perfmodel::model::model_table;
 use primsel::primitives::Family;
 use primsel::report::{fmt_time_ms, Table};
 use primsel::runtime::Runtime;
@@ -19,13 +18,9 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::open_default()?;
     let mut wb = Workbench::new(rt);
 
-    let nn2 = wb.nn2_params(&platform)?;
-    let dltp = wb.dlt_nn2_params(&platform)?;
-    let (sx, sy) = wb.prim_standardizers(&platform)?;
-    let (dx, dy) = wb.dlt_standardizers(&platform)?;
+    let inputs = wb.xla_model_inputs(&platform)?;
     let sim = wb.platform(&platform)?.sim.clone();
-    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
+    let model = inputs.build(&wb.rt)?;
 
     let mut t = Table::new(
         &format!("zoo optimisation on {platform}"),
@@ -35,9 +30,9 @@ fn main() -> anyhow::Result<()> {
     // profiled once, and evaluation reuses the profiling sweep's rows
     let measured = CostCache::new(&sim);
     for net in networks::zoo() {
-        let _ = model_source(&net, &prim, &dlt)?; // warm executables
+        let _ = model_table(&net, &model)?; // warm executables
         let t0 = Instant::now();
-        let source = model_source(&net, &prim, &dlt)?;
+        let source = model_table(&net, &model)?;
         let sel = selection::select(&net, &source)?;
         let opt_ms = t0.elapsed().as_secs_f64() * 1e3;
 

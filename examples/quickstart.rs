@@ -12,10 +12,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use primsel::experiments::{model_source, Workbench};
+use primsel::experiments::Workbench;
 use primsel::networks;
-use primsel::perfmodel::predictor::DltPredictor;
-use primsel::perfmodel::Predictor;
+use primsel::perfmodel::model::model_table;
 use primsel::primitives::{catalog, Family};
 use primsel::profiler;
 use primsel::report::Table;
@@ -30,20 +29,16 @@ fn main() -> anyhow::Result<()> {
     // ---- steps 1+2: profile (simulated ARM) + train NN2 over PJRT ----
     println!("[1/5] profiling ARM (simulated) + training NN2 via AOT train_step...");
     let t0 = Instant::now();
-    let nn2 = wb.nn2_params("arm")?;
-    let dltp = wb.dlt_nn2_params("arm")?;
+    let inputs = wb.xla_model_inputs("arm")?;
     println!("      ready in {:.1?} (cached under artifacts/trained/)", t0.elapsed());
 
     // ---- step 3: batched prediction for all GoogLeNet layers ----
     let net = networks::googlenet();
-    let (sx, sy) = wb.prim_standardizers("arm")?;
-    let (dx, dy) = wb.dlt_standardizers("arm")?;
     let sim = wb.platform("arm")?.sim.clone();
-    let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
-    let _warm = model_source(&net, &prim, &dlt)?;
+    let model = inputs.build(&wb.rt)?;
+    let _warm = model_table(&net, &model)?;
     let t0 = Instant::now();
-    let source = model_source(&net, &prim, &dlt)?;
+    let source = model_table(&net, &model)?;
     let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "[2/5] predicted {} layer cost rows + DLT edges in {predict_ms:.1} ms (batched PJRT)",

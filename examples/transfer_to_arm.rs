@@ -1,46 +1,110 @@
 //! Transfer-learning walkthrough (paper §4.4 / Figure 9): pre-train on
-//! Intel, then adapt to ARM three ways — direct, factor-corrected, and
-//! fine-tuned on 1% of ARM data — and compare against native training.
+//! Intel, then adapt to ARM with a small calibration sample — entirely
+//! through the [`CostModel`] layer.
+//!
+//! Part 1 runs offline (no PJRT): a pure-Rust `LinCostModel` is trained
+//! on Intel simulator data, factor-corrected to ARM from ~1% of samples,
+//! and onboarded into a `Coordinator` as a served platform with
+//! validation against profiled-optimal selections.
+//!
+//! Part 2 needs `make artifacts`: the Intel NN2 model is applied to ARM
+//! directly, factor-corrected, fine-tuned on 1% of ARM data (lr/10), and
+//! compared against native training — the paper's Figure 8/9 shape.
 //!
 //! Run: `cargo run --release --example transfer_to_arm`
 
+use primsel::coordinator::{Coordinator, OnboardSpec};
 use primsel::dataset;
 use primsel::experiments::Workbench;
+use primsel::networks;
 use primsel::perfmodel::metrics::mdrae_all;
-use primsel::perfmodel::transfer::factor_correction;
-use primsel::perfmodel::Predictor;
+use primsel::perfmodel::model::CostModel;
+use primsel::perfmodel::transfer::prim_factors;
+use primsel::perfmodel::LinCostModel;
 use primsel::report::Table;
 use primsel::runtime::Runtime;
+use primsel::selection::CostSource;
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open_default()?;
+    offline_lin_transfer()?;
+    match Runtime::open_default() {
+        Ok(rt) => nn2_transfer(rt)?,
+        Err(e) => {
+            println!("\nskipping the NN2 (PJRT) transfer walkthrough: {e}");
+            println!("run `make artifacts` to enable it");
+        }
+    }
+    Ok(())
+}
+
+/// Part 1 — the serving story, fully offline: Lin source model on Intel,
+/// §4.4 factor correction to ARM, coordinator onboarding + validation.
+fn offline_lin_transfer() -> anyhow::Result<()> {
+    println!("[offline] training LinCostModel on Intel simulator data...");
+    let intel = Simulator::new(machine::intel_i9_9900k());
+    let (prim, dlt) = dataset::calibration_sample(&intel, 0.80, 1);
+    let source_model: Arc<dyn CostModel + Send + Sync> =
+        Arc::new(LinCostModel::fit(&prim, &dlt, "intel")?);
+
+    let arm: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+    let coord = Coordinator::new();
+    println!("[offline] onboarding \"arm-lin\" from 1% ARM calibration samples...");
+    let report = coord.onboard_platform(
+        "arm-lin",
+        OnboardSpec::transfer(Arc::clone(&arm), source_model, 0.01, 7)
+            .with_validation(networks::selection_networks()),
+    )?;
+
+    let mut t = Table::new(
+        &format!(
+            "onboarded {} ({}, {} calib samples) — predicted vs simulated",
+            report.platform, report.model_kind, report.calib_samples
+        ),
+        &["network", "predicted ms", "simulated ms", "profiled ms", "increase", "agreement"],
+    );
+    for v in &report.validation {
+        t.row(vec![
+            v.network.clone(),
+            format!("{:.2}", v.predicted_ms),
+            format!("{:.2}", v.simulated_ms),
+            format!("{:.2}", v.profiled_ms),
+            format!("{:.2}%", v.increase * 100.0),
+            format!("{:.0}%", v.agreement * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let path = coord.persist_table("arm-lin", &networks::selection_networks())?;
+    println!("[offline] dense serving table persisted to {}", path.display());
+    Ok(())
+}
+
+/// Part 2 — the paper's NN2 figure-8/9 comparison over PJRT.
+fn nn2_transfer(rt: Runtime) -> anyhow::Result<()> {
     let mut wb = Workbench::new(rt);
     wb.max_epochs = 120; // walkthrough speed
 
-    println!("pre-training the Intel NN2 model (cached if already trained)...");
+    println!("\npre-training the Intel NN2 model (cached if already trained)...");
     let intel = wb.nn2_params("intel")?;
-
-    let (xs, targets, _, _) = wb.prim_test_data("arm")?;
-    let (isx, isy) = wb.prim_standardizers("intel")?;
-
-    // 1) direct application
-    let direct = Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
-    let md_direct = mdrae_all(&direct.predict_raw(&xs)?, &targets);
-
-    // 2) factor correction from 1% of ARM profiles
-    let factors = {
+    let (cfgs, targets) = wb.prim_test_set("arm")?;
+    let cal = {
         let pd = wb.platform("arm")?;
         let idx = dataset::fraction(&pd.prim_split.train, 0.01, 7);
-        let cal = pd.prim.subset(&idx);
-        let cxs: Vec<Vec<f64>> = cal.features().iter().map(|f| f.to_vec()).collect();
-        let ctargets = cal.targets.clone();
-        let pred = Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
-        factor_correction(&pred, &cxs, &ctargets)?
+        pd.prim.subset(&idx)
     };
-    let mut corrected =
-        Predictor::new(&wb.rt, "nn2", intel.clone(), isx.clone(), isy.clone())?;
-    corrected.factors = factors;
-    let md_factor = mdrae_all(&corrected.predict_raw(&xs)?, &targets);
+
+    // 1+2) direct application, then factor correction from 1% of ARM
+    // profiles — one built model serves both evaluations
+    let (md_direct, md_factor) = {
+        let inputs = wb.xla_model_inputs_from(intel.clone(), "intel", "arm")?;
+        let model = inputs.build(&wb.rt)?;
+        let md_direct = mdrae_all(&model.predict_prim(&cfgs)?, &targets);
+        let factors = prim_factors(&model, &cal)?;
+        let model = model.with_prim_factors(factors, cal.len());
+        (md_direct, mdrae_all(&model.predict_prim(&cfgs)?, &targets))
+    };
 
     // 3) fine-tune on 1% of ARM data (lr/10, same AOT artifacts)
     println!("fine-tuning on 1% of ARM profiles...");
@@ -49,15 +113,17 @@ fn main() -> anyhow::Result<()> {
         dataset::fraction(&pd.prim_split.train, 0.01, 7)
     };
     let tuned = wb.finetune(intel.clone(), "arm", &idx)?;
-    let (asx, asy) = wb.prim_standardizers("arm")?;
-    let tuned_pred = Predictor::new(&wb.rt, "nn2", tuned, asx.clone(), asy.clone())?;
-    let md_tuned = mdrae_all(&tuned_pred.predict_raw(&xs)?, &targets);
+    let md_tuned = {
+        let inputs = wb.xla_model_inputs_from(tuned, "arm", "arm")?;
+        let model = inputs.build(&wb.rt)?;
+        mdrae_all(&model.predict_prim(&cfgs)?, &targets)
+    };
 
     // 4) native full-data reference
     println!("training native ARM model for reference...");
-    let native = wb.nn2_params("arm")?;
-    let native_pred = Predictor::new(&wb.rt, "nn2", native, asx, asy)?;
-    let md_native = mdrae_all(&native_pred.predict_raw(&xs)?, &targets);
+    let inputs = wb.xla_model_inputs("arm")?;
+    let native = inputs.build(&wb.rt)?;
+    let md_native = mdrae_all(&native.predict_prim(&cfgs)?, &targets);
 
     let mut t = Table::new(
         "Intel -> ARM transfer: MdRAE on the ARM test set",

@@ -11,37 +11,55 @@
 //!              submit_batch(&[SelectionRequest])
 //!                             |
 //!                        Coordinator ── par::par_map_heavy ──► workers
-//!                        /         \                        (1 request
-//!              CostCache(intel)  CostCache(arm) …            per job)
-//!                        |             |
-//!                   Simulator / predictor tables (per platform)
+//!                     /       |       \                    (1 request
+//!           CostCache(intel)  |   CostCache(arm-lin) …       per job)
+//!                     |       |             |
+//!             Simulator   TableSource   ModeledSource ── CostModel
+//!            (measured)   (persisted)   (predicted — onboarded via
+//!                                        onboard_platform)
 //! ```
 //!
 //! Every request for a platform routes through that platform's shared
 //! cache ([`CostCache`] is `Send + Sync`, sharded internally), so the
-//! first request to touch a layer config profiles it and every later
-//! request — same batch or a later one — gets a hash lookup. Results are
-//! bit-identical to solving each request alone with a fresh cache
-//! (pinned by `rust/tests/concurrency.rs`): sources are deterministic,
-//! and the cache stores exactly what the source returned.
+//! first request to touch a layer config profiles — or *predicts* — it
+//! and every later request gets a hash lookup. Results are bit-identical
+//! to solving each request alone with a fresh cache (pinned by
+//! `rust/tests/concurrency.rs`): sources are deterministic, and the
+//! cache stores exactly what the source returned.
 //!
-//! Platforms resolve on demand: a request naming `"intel"`, `"amd"` or
-//! `"arm"` gets a simulator-backed cache built from
-//! [`machine::by_name`](crate::simulator::machine::by_name); other cost
-//! sources — e.g. a predictor-built
-//! [`TableSource`](crate::selection::TableSource) for a trained platform
-//! model — can be attached under any name with [`Coordinator::register`].
+//! ## Where platforms come from
 //!
-//! Each [`BatchReport`] carries per-platform [`CacheStats`] deltas, so a
-//! serving process can watch its hit rate climb as tenants repeat layer
-//! shapes — the `serve_zoo` example prints exactly that trajectory.
+//! * **Built-in simulator platforms** (`"intel"`, `"amd"`, `"arm"`)
+//!   resolve on demand via [`machine::by_name`](crate::simulator::machine::by_name).
+//! * **Arbitrary sources** attach under any name with
+//!   [`Coordinator::register`] — e.g. a persisted
+//!   [`TableSource`](crate::selection::TableSource) reloaded from
+//!   `artifacts/tables/`.
+//! * **Model-served platforms** are created by
+//!   [`Coordinator::onboard_platform`]: draw a small calibration sample
+//!   from a target source, train a fresh
+//!   [`LinCostModel`](crate::perfmodel::LinCostModel) (or §4.4
+//!   factor-correct an existing source-platform model), and serve its
+//!   predictions through a [`ModeledSource`](crate::selection::ModeledSource)
+//!   — the paper's profiling→model swap as a service operation.
+//!
+//! Each [`SelectionReport`] says which kind answered via
+//! [`CostProvenance`]; each [`BatchReport`] carries per-platform
+//! [`CacheStats`] deltas, so a serving process can watch its hit rate
+//! climb as tenants repeat layer shapes — the `serve_zoo` example prints
+//! exactly that trajectory.
 
+use crate::dataset::{self, calibration_sample};
 use crate::networks::Network;
 use crate::par;
-use crate::selection::{self, memory, CacheStats, CostCache, CostSource, Selection};
+use crate::perfmodel::model::{CostModel, FactorCorrected, LinCostModel};
+use crate::selection::{
+    self, memory, CacheStats, CostCache, CostSource, ModeledSource, Selection, TableSource,
+};
 use crate::simulator::{machine, Simulator};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
@@ -69,6 +87,22 @@ impl Objective {
             }
         }
     }
+}
+
+/// What kind of cost source answered a request — measured (profiler /
+/// simulator / precomputed measured tables) or a trained model's
+/// predictions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CostProvenance {
+    /// Costs come from measurement (the paper's baseline flow).
+    Measured,
+    /// Costs come from a performance model (the paper's contribution).
+    Predicted {
+        /// The model-kind tag ("lin", "lin+factor", "nn2", ...).
+        model_kind: String,
+        /// Calibration rows the model saw from this platform.
+        calib_samples: usize,
+    },
 }
 
 /// One tenant request: optimise `network` for `platform` under
@@ -99,6 +133,8 @@ pub struct SelectionReport {
     pub network: String,
     pub platform: String,
     pub objective: Objective,
+    /// Whether this platform's costs are measured or model-predicted.
+    pub provenance: CostProvenance,
     /// The chosen primitive per layer plus the objective value.
     pub selection: Selection,
     /// Plain network time of the chosen assignment under the platform's
@@ -127,7 +163,106 @@ pub struct BatchReport {
     pub wall_ms: f64,
 }
 
-/// The serving layer: per-platform shared caches plus batch fan-out.
+/// How [`Coordinator::onboard_platform`] turns a calibration sample into
+/// a served model.
+pub enum OnboardMode {
+    /// Fit a fresh [`LinCostModel`] on the calibration sample alone —
+    /// closed form, offline, no source platform needed.
+    FreshLin,
+    /// §4.4 transfer: keep a source-platform model's shape, correct its
+    /// per-column scale from the calibration sample
+    /// ([`FactorCorrected`]).
+    Transfer(Arc<dyn CostModel + Send + Sync>),
+}
+
+/// Everything [`Coordinator::onboard_platform`] needs to know about the
+/// new platform.
+pub struct OnboardSpec {
+    /// The device being onboarded, behind the same [`CostSource`]
+    /// interface everything else uses (simulator stand-in, real
+    /// profiler, ...). Queried only for the calibration sample — and for
+    /// ground truth when `validate` is non-empty.
+    pub target: Arc<dyn CostSource>,
+    /// Fraction of the canonical config universe to calibrate on (the
+    /// paper operates at ~0.01–0.02).
+    pub calib_fraction: f64,
+    /// Seed for the calibration draw.
+    pub seed: u64,
+    pub mode: OnboardMode,
+    /// Networks to validate on: each gets a predicted-vs-simulated
+    /// wallclock comparison in the [`OnboardReport`] (costs extra target
+    /// queries; pass an empty vec to skip).
+    pub validate: Vec<Network>,
+}
+
+impl OnboardSpec {
+    /// A fresh-Lin spec with no validation.
+    pub fn fresh_lin(target: Arc<dyn CostSource>, calib_fraction: f64, seed: u64) -> Self {
+        Self { target, calib_fraction, seed, mode: OnboardMode::FreshLin, validate: Vec::new() }
+    }
+
+    /// A §4.4 transfer spec with no validation.
+    pub fn transfer(
+        target: Arc<dyn CostSource>,
+        source_model: Arc<dyn CostModel + Send + Sync>,
+        calib_fraction: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            target,
+            calib_fraction,
+            seed,
+            mode: OnboardMode::Transfer(source_model),
+            validate: Vec::new(),
+        }
+    }
+
+    /// Request validation networks (builder style).
+    pub fn with_validation(mut self, nets: Vec<Network>) -> Self {
+        self.validate = nets;
+        self
+    }
+}
+
+/// Predicted-vs-simulated quality of one validation network.
+#[derive(Debug, Clone)]
+pub struct OnboardValidation {
+    pub network: String,
+    /// The model's own estimate of its chosen assignment (ms).
+    pub predicted_ms: f64,
+    /// The model-chosen assignment evaluated under the target source (ms).
+    pub simulated_ms: f64,
+    /// The target-profiled optimal assignment's time (ms).
+    pub profiled_ms: f64,
+    /// `simulated_ms / profiled_ms - 1` — the paper's Fig. 7/8 metric.
+    pub increase: f64,
+    /// Fraction of layers where model and profiled selection agree on
+    /// the primitive.
+    pub agreement: f64,
+}
+
+/// What [`Coordinator::onboard_platform`] did.
+#[derive(Debug, Clone)]
+pub struct OnboardReport {
+    pub platform: String,
+    pub model_kind: String,
+    /// Calibration rows drawn from the target.
+    pub calib_samples: usize,
+    pub provenance: CostProvenance,
+    /// One entry per requested validation network.
+    pub validation: Vec<OnboardValidation>,
+    /// Wall-clock of the whole onboarding (sampling + fit + validation).
+    pub wall_ms: f64,
+}
+
+/// One served platform: its shared cache plus where its costs come from.
+struct PlatformEntry {
+    cache: Arc<CostCache<'static>>,
+    provenance: CostProvenance,
+}
+
+/// The serving layer: per-platform shared caches plus batch fan-out and
+/// model-served platform onboarding.
 ///
 /// ```
 /// use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
@@ -155,7 +290,7 @@ pub struct BatchReport {
 /// assert_eq!(report.stats[0].0, "intel");
 /// ```
 pub struct Coordinator {
-    platforms: RwLock<HashMap<String, Arc<CostCache<'static>>>>,
+    platforms: RwLock<HashMap<String, Arc<PlatformEntry>>>,
 }
 
 impl Default for Coordinator {
@@ -170,38 +305,190 @@ impl Coordinator {
         Self { platforms: RwLock::new(HashMap::new()) }
     }
 
-    /// Attach a custom cost source (predictor tables, a measured
+    /// Attach a custom cost source (a persisted table, a measured
     /// profiler…) under `platform`. Replaces any existing cache for that
-    /// name, resetting its memoized rows and stats.
+    /// name, resetting its memoized rows and stats. The platform is
+    /// reported as [`CostProvenance::Measured`]; model-served platforms
+    /// go through [`Self::onboard_platform`] instead.
     pub fn register(&self, platform: &str, source: Arc<dyn CostSource>) {
-        let cache = Arc::new(CostCache::new_shared(source));
+        self.register_with_provenance(platform, source, CostProvenance::Measured);
+    }
+
+    /// [`Self::register`] with an explicit [`CostProvenance`] — how a
+    /// *predicted* table reloaded from disk keeps reporting
+    /// `Predicted{..}` after a restart instead of silently becoming
+    /// `Measured` (see [`Self::persist_table`]).
+    pub fn register_with_provenance(
+        &self,
+        platform: &str,
+        source: Arc<dyn CostSource>,
+        provenance: CostProvenance,
+    ) {
+        self.insert(platform, Arc::new(CostCache::new_shared(source)), provenance);
+    }
+
+    fn insert(
+        &self,
+        platform: &str,
+        cache: Arc<CostCache<'static>>,
+        provenance: CostProvenance,
+    ) {
+        let entry = Arc::new(PlatformEntry { cache, provenance });
         self.platforms
             .write()
             .expect("platform map poisoned")
-            .insert(platform.to_string(), cache);
+            .insert(platform.to_string(), entry);
+    }
+
+    /// Onboard a new platform from a handful of calibration samples
+    /// (paper §4.4 as a service operation): draw `spec.calib_fraction`
+    /// of the canonical config universe from `spec.target`, fit or
+    /// transfer-adapt a model, validate if requested, and serve the
+    /// model's predictions under `platform` (provenance
+    /// [`CostProvenance::Predicted`]).
+    pub fn onboard_platform(&self, platform: &str, spec: OnboardSpec) -> Result<OnboardReport> {
+        let t0 = Instant::now();
+        ensure!(
+            spec.calib_fraction > 0.0 && spec.calib_fraction <= 1.0,
+            "calib_fraction must be in (0, 1], got {}",
+            spec.calib_fraction
+        );
+        let (prim, dlt) = calibration_sample(spec.target.as_ref(), spec.calib_fraction, spec.seed);
+        let calib_samples = prim.len();
+
+        let model: Arc<dyn CostModel + Send + Sync> = match spec.mode {
+            OnboardMode::FreshLin => Arc::new(LinCostModel::fit(&prim, &dlt, platform)?),
+            OnboardMode::Transfer(source) => {
+                Arc::new(FactorCorrected::fit(source, &prim, &dlt)?)
+            }
+        };
+        let model_kind = model.kind().to_string();
+        // the long-lived serving cache is built up front so the
+        // validation pass below warms it — the first tenant requests for
+        // a validated platform are hash lookups, not re-predictions
+        let cache: Arc<CostCache<'static>> =
+            Arc::new(CostCache::new_shared(Arc::new(ModeledSource::new(model))));
+
+        let mut validation = Vec::new();
+        if !spec.validate.is_empty() {
+            let modeled = cache.as_ref();
+            let target = CostCache::new(spec.target.as_ref());
+            for net in &spec.validate {
+                let sel_model = selection::select(net, modeled)?;
+                let sel_prof = selection::select(net, &target)?;
+                let simulated_ms = selection::evaluate(net, &sel_model, &target)?;
+                let profiled_ms = selection::evaluate(net, &sel_prof, &target)?;
+                let agree = sel_model
+                    .primitive
+                    .iter()
+                    .zip(&sel_prof.primitive)
+                    .filter(|(a, b)| a == b)
+                    .count();
+                validation.push(OnboardValidation {
+                    network: net.name.clone(),
+                    predicted_ms: sel_model.estimated_ms,
+                    simulated_ms,
+                    profiled_ms,
+                    increase: simulated_ms / profiled_ms - 1.0,
+                    agreement: agree as f64 / net.n_layers() as f64,
+                });
+            }
+        }
+
+        let provenance =
+            CostProvenance::Predicted { model_kind: model_kind.clone(), calib_samples };
+        self.insert(platform, cache, provenance.clone());
+        Ok(OnboardReport {
+            platform: platform.to_string(),
+            model_kind,
+            calib_samples,
+            provenance,
+            validation,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Bake the dense serving table for `platform` over `nets` and
+    /// persist it as JSON under `artifacts/tables/<platform>.json`, so
+    /// an onboarded platform survives a process restart: reload with
+    /// [`TableSource::load_json`] and re-attach with
+    /// [`Self::register_with_provenance`], passing the original
+    /// platform's [`Self::provenance`] (persisted tables carry values,
+    /// not provenance — a reloaded predicted table must not come back
+    /// claiming `Measured`). Returns the path written.
+    pub fn persist_table(&self, platform: &str, nets: &[Network]) -> Result<PathBuf> {
+        let path = dataset::table_artifact_path(platform);
+        self.persist_table_to(platform, nets, &path)?;
+        Ok(path)
+    }
+
+    /// [`Self::persist_table`] with an explicit destination path.
+    pub fn persist_table_to(
+        &self,
+        platform: &str,
+        nets: &[Network],
+        path: &std::path::Path,
+    ) -> Result<()> {
+        let entry = self.entry(platform)?;
+        let mut configs: Vec<crate::layers::ConvConfig> = Vec::new();
+        let mut rows = Vec::new();
+        let mut keys: Vec<(u32, u32)> = Vec::new();
+        for net in nets {
+            for cfg in &net.layers {
+                // networks repeat layer shapes; one row per distinct
+                // config is all the table keeps anyway
+                if !configs.contains(cfg) {
+                    configs.push(*cfg);
+                    rows.push(entry.cache.row(cfg).to_vec());
+                }
+            }
+            keys.extend(net.edges.iter().map(|&(u, v)| (net.layers[u].k, net.layers[v].im)));
+        }
+        keys.sort_unstable();
+        keys.dedup();
+        let mats = keys.iter().map(|&(c, im)| entry.cache.matrix(c, im)).collect();
+        TableSource::new(configs, rows, keys, mats).save_json(path)
+    }
+
+    /// The platform entry, creating a simulator-backed one on first use
+    /// for the built-in platform names.
+    fn entry(&self, platform: &str) -> Result<Arc<PlatformEntry>> {
+        if let Some(e) = self.platforms.read().expect("platform map poisoned").get(platform) {
+            return Ok(Arc::clone(e));
+        }
+        let m = machine::by_name(platform).ok_or_else(|| {
+            anyhow!(
+                "unknown platform {platform:?}: register()/onboard_platform() a source \
+                 or use intel/amd/arm"
+            )
+        })?;
+        let entry = Arc::new(PlatformEntry {
+            cache: Arc::new(CostCache::new_shared(Arc::new(Simulator::new(m)))),
+            provenance: CostProvenance::Measured,
+        });
+        let mut map = self.platforms.write().expect("platform map poisoned");
+        // a racing resolver may have inserted meanwhile; keep the winner
+        Ok(Arc::clone(map.entry(platform.to_string()).or_insert(entry)))
     }
 
     /// The shared cache serving `platform`, creating a simulator-backed
     /// one on first use for the built-in platform names.
     pub fn cache(&self, platform: &str) -> Result<Arc<CostCache<'static>>> {
-        if let Some(c) = self.platforms.read().expect("platform map poisoned").get(platform) {
-            return Ok(Arc::clone(c));
-        }
-        let m = machine::by_name(platform).ok_or_else(|| {
-            anyhow!("unknown platform {platform:?}: register() a source or use intel/amd/arm")
-        })?;
-        let cache = Arc::new(CostCache::new_shared(Arc::new(Simulator::new(m))));
-        let mut map = self.platforms.write().expect("platform map poisoned");
-        // a racing resolver may have inserted meanwhile; keep the winner
-        Ok(Arc::clone(map.entry(platform.to_string()).or_insert(cache)))
+        Ok(Arc::clone(&self.entry(platform)?.cache))
+    }
+
+    /// Where `platform`'s costs come from, if it is attached (or a
+    /// built-in name).
+    pub fn provenance(&self, platform: &str) -> Result<CostProvenance> {
+        Ok(self.entry(platform)?.provenance.clone())
     }
 
     /// Solve a single request synchronously on the caller's thread
     /// (through the platform's shared cache, so it still warms the cache
     /// for everyone else).
     pub fn submit(&self, req: &SelectionRequest) -> Result<SelectionReport> {
-        let cache = self.cache(&req.platform)?;
-        solve_one(&cache, req)
+        let entry = self.entry(&req.platform)?;
+        solve_one(&entry, req)
     }
 
     /// Solve a batch of requests concurrently: platforms are resolved up
@@ -214,25 +501,25 @@ impl Coordinator {
     /// means when batches overlap.
     pub fn submit_batch(&self, reqs: &[SelectionRequest]) -> Result<BatchReport> {
         let t0 = Instant::now();
-        let caches: Vec<Arc<CostCache<'static>>> =
-            reqs.iter().map(|r| self.cache(&r.platform)).collect::<Result<_>>()?;
+        let entries: Vec<Arc<PlatformEntry>> =
+            reqs.iter().map(|r| self.entry(&r.platform)).collect::<Result<_>>()?;
 
         // distinct platforms in first-appearance order, with pre-batch
         // counter snapshots for the per-batch stats delta
-        let mut seen: Vec<(String, Arc<CostCache<'static>>, CacheStats)> = Vec::new();
-        for (r, c) in reqs.iter().zip(&caches) {
+        let mut seen: Vec<(String, Arc<PlatformEntry>, CacheStats)> = Vec::new();
+        for (r, e) in reqs.iter().zip(&entries) {
             if !seen.iter().any(|(name, _, _)| *name == r.platform) {
-                seen.push((r.platform.clone(), Arc::clone(c), c.stats()));
+                seen.push((r.platform.clone(), Arc::clone(e), e.cache.stats()));
             }
         }
 
         let idx: Vec<usize> = (0..reqs.len()).collect();
-        let results = par::par_map_heavy(&idx, |&i| solve_one(&caches[i], &reqs[i]));
+        let results = par::par_map_heavy(&idx, |&i| solve_one(&entries[i], &reqs[i]));
         let reports = results.into_iter().collect::<Result<Vec<_>>>()?;
 
         let stats = seen
             .into_iter()
-            .map(|(name, cache, before)| (name, cache.stats().since(&before)))
+            .map(|(name, entry, before)| (name, entry.cache.stats().since(&before)))
             .collect();
         Ok(BatchReport { reports, stats, wall_ms: t0.elapsed().as_secs_f64() * 1e3 })
     }
@@ -241,14 +528,15 @@ impl Coordinator {
     pub fn cache_stats(&self) -> Vec<(String, CacheStats)> {
         let map = self.platforms.read().expect("platform map poisoned");
         let mut out: Vec<(String, CacheStats)> =
-            map.iter().map(|(name, c)| (name.clone(), c.stats())).collect();
+            map.iter().map(|(name, e)| (name.clone(), e.cache.stats())).collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
 }
 
-fn solve_one(cache: &CostCache<'static>, req: &SelectionRequest) -> Result<SelectionReport> {
+fn solve_one(entry: &PlatformEntry, req: &SelectionRequest) -> Result<SelectionReport> {
     let t0 = Instant::now();
+    let cache = entry.cache.as_ref();
     let selection = match req.objective {
         Objective::MinTime => selection::select(&req.network, cache)?,
         Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
@@ -261,6 +549,7 @@ fn solve_one(cache: &CostCache<'static>, req: &SelectionRequest) -> Result<Selec
         network: req.network.name.clone(),
         platform: req.platform.clone(),
         objective: req.objective,
+        provenance: entry.provenance.clone(),
         selection,
         evaluated_ms,
         peak_workspace_bytes,
@@ -293,6 +582,7 @@ mod tests {
         assert_eq!(rep.selection.estimated_ms, direct.estimated_ms);
         assert_eq!(rep.evaluated_ms, selection::evaluate(&net, &direct, &sim).unwrap());
         assert_eq!(rep.platform, "amd");
+        assert_eq!(rep.provenance, CostProvenance::Measured);
     }
 
     #[test]
@@ -346,5 +636,43 @@ mod tests {
             .unwrap();
         assert!(tight.peak_workspace_bytes < free.peak_workspace_bytes);
         assert!(tight.evaluated_ms >= free.evaluated_ms);
+    }
+
+    #[test]
+    fn onboarding_rejects_bad_fraction() {
+        let coord = Coordinator::new();
+        let target: Arc<dyn CostSource> =
+            Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        let spec = OnboardSpec::fresh_lin(Arc::clone(&target), 0.0, 1);
+        assert!(coord.onboard_platform("arm-lin", spec).is_err());
+        let spec = OnboardSpec::fresh_lin(target, 1.5, 1);
+        assert!(coord.onboard_platform("arm-lin", spec).is_err());
+    }
+
+    #[test]
+    fn onboarded_platform_serves_with_predicted_provenance() {
+        let coord = Coordinator::new();
+        let target: Arc<dyn CostSource> =
+            Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        let report = coord
+            .onboard_platform("arm-lin", OnboardSpec::fresh_lin(target, 0.02, 7))
+            .unwrap();
+        assert_eq!(report.platform, "arm-lin");
+        assert_eq!(report.model_kind, "lin");
+        assert!(report.calib_samples > 0);
+        assert!(report.validation.is_empty());
+
+        let rep = coord.submit(&SelectionRequest::new(networks::alexnet(), "arm-lin")).unwrap();
+        assert!(rep.evaluated_ms > 0.0);
+        match &rep.provenance {
+            CostProvenance::Predicted { model_kind, calib_samples } => {
+                assert_eq!(model_kind, "lin");
+                assert_eq!(*calib_samples, report.calib_samples);
+            }
+            other => panic!("expected predicted provenance, got {other:?}"),
+        }
+        // the built-in measured platform is untouched
+        let rep = coord.submit(&SelectionRequest::new(networks::alexnet(), "arm")).unwrap();
+        assert_eq!(rep.provenance, CostProvenance::Measured);
     }
 }

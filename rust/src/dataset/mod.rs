@@ -6,6 +6,7 @@
 mod persist;
 mod standardize;
 
+pub use persist::table_artifact_path;
 pub use standardize::Standardizer;
 
 use crate::layers::{ranges, ConvConfig};
@@ -18,6 +19,11 @@ use std::collections::BTreeSet;
 /// Maximum dataset size: 80% of this fits the 7-batch AOT train_epoch
 /// artifact exactly (7 * 1024 / 0.8).
 pub const MAX_CONFIGS: usize = 8960;
+
+/// Canonical seed for the enumerated config universe — the paper's
+/// dataset date. Every platform profiles the *same* config set, which is
+/// what makes cross-platform calibration and transfer comparable.
+pub const DATASET_SEED: u64 = 20200612;
 
 /// The primitive running-time dataset: `(k,c,im,s,f) -> (R_1..R_N)`.
 #[derive(Debug, Clone)]
@@ -88,6 +94,35 @@ pub fn dlt_pairs(configs: &[ConvConfig]) -> Vec<(u32, u32)> {
 pub fn profile_dlt_dataset(sim: &Simulator, pairs: &[(u32, u32)]) -> DltDataset {
     let targets = crate::par::par_map(pairs, |&(c, im)| sim.dlt_matrix(c, im));
     DltDataset { pairs: pairs.to_vec(), targets }
+}
+
+/// Draw a small calibration set from a target cost source: a seeded
+/// `fraction` of the canonical config universe, profiled through
+/// `source` into a primitive dataset plus the DLT dataset of the
+/// sample's distinct edge tensors.
+///
+/// This is the "measure a handful of points on the new device" step of
+/// platform onboarding (paper §4.4): the coordinator feeds the result to
+/// [`LinCostModel::fit`](crate::perfmodel::LinCostModel::fit) or
+/// [`FactorCorrected::fit`](crate::perfmodel::FactorCorrected::fit).
+/// The source is queried through the same `CostSource` interface the
+/// selection engine uses, so any target works — a simulator stand-in, a
+/// real profiler, even another model.
+pub fn calibration_sample(
+    source: &dyn crate::selection::CostSource,
+    fraction: f64,
+    seed: u64,
+) -> (PrimDataset, DltDataset) {
+    let mut configs = enumerate_configs(MAX_CONFIGS, DATASET_SEED);
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut configs);
+    let n = ((configs.len() as f64 * fraction).round() as usize).clamp(1, configs.len());
+    configs.truncate(n);
+    let targets =
+        crate::par::par_map(&configs, |cfg| source.layer_costs(cfg).into_owned());
+    let pairs = dlt_pairs(&configs);
+    let dlt_targets = crate::par::par_map(&pairs, |&(c, im)| source.dlt_matrix3(c, im));
+    (PrimDataset { configs, targets }, DltDataset { pairs, targets: dlt_targets })
 }
 
 impl PrimDataset {
@@ -352,9 +387,9 @@ mod tests {
                 assert_eq!(b.mask[i * 2 + j], 0.0);
             }
         }
-        // col 1 masked everywhere
-        assert_eq!(b.mask[0 * 2 + 1], 0.0);
-        assert_eq!(b.mask[0 * 2], 1.0);
+        // col 1 masked everywhere (row 0: indices 0 and 1)
+        assert_eq!(b.mask[1], 0.0);
+        assert_eq!(b.mask[0], 1.0);
     }
 
     #[test]
@@ -389,6 +424,29 @@ mod tests {
         for (&(c, im), m) in dlt.pairs.iter().zip(&dlt.targets) {
             assert_eq!(*m, sim.dlt_matrix(c, im));
         }
+    }
+
+    #[test]
+    fn calibration_sample_matches_source_and_seed() {
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let (prim, dlt) = calibration_sample(&sim, 0.01, 5);
+        let universe = enumerate_configs(MAX_CONFIGS, DATASET_SEED).len();
+        let n = ((universe as f64 * 0.01).round() as usize).clamp(1, universe);
+        assert_eq!(prim.len(), n);
+        // rows are exactly what the source returns
+        for (cfg, row) in prim.configs.iter().zip(&prim.targets) {
+            assert_eq!(*row, sim.profile_layer(cfg));
+        }
+        // dlt pairs cover exactly the sample's distinct (c, im) tensors
+        assert_eq!(dlt.pairs, dlt_pairs(&prim.configs));
+        for (&(c, im), m) in dlt.pairs.iter().zip(&dlt.targets) {
+            assert_eq!(*m, sim.dlt_matrix(c, im));
+        }
+        // deterministic in the seed, different across seeds
+        let (again, _) = calibration_sample(&sim, 0.01, 5);
+        assert_eq!(again.configs, prim.configs);
+        let (other, _) = calibration_sample(&sim, 0.01, 6);
+        assert_ne!(other.configs, prim.configs);
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! Dataset persistence: CSV save/load so profiled datasets (simulated or
-//! real-device) can be shipped between machines — the paper's "factory
-//! profiling once" deployment story needs the dataset to be an artifact.
+//! Dataset + table persistence: CSV save/load for profiled datasets and
+//! JSON save/load for predicted dense cost tables, so both the paper's
+//! "factory profiling once" story and an onboarded platform's serving
+//! table survive process restarts and ship between machines.
 
 use super::{DltDataset, PrimDataset};
+use crate::config::Json;
 use crate::layers::ConvConfig;
 use crate::primitives::catalog;
+use crate::selection::TableSource;
 use anyhow::{bail, ensure, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 impl PrimDataset {
     /// CSV: header `k,c,im,s,f,<primitive names...>`; undefined = empty.
@@ -112,6 +115,120 @@ impl DltDataset {
     }
 }
 
+/// Canonical location for a platform's persisted serving table.
+pub fn table_artifact_path(platform: &str) -> PathBuf {
+    PathBuf::from("artifacts/tables").join(format!("{platform}.json"))
+}
+
+impl TableSource {
+    /// Serialise the dense table to JSON:
+    /// `{"configs": [[k,c,im,s,f],...], "rows": [[ms|null,...],...],
+    ///   "dlt": [[c, im, m00..m22],...]}`.
+    /// Parent directories are created as needed.
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("{\"configs\":[");
+        let configs = self.configs();
+        for (i, c) in configs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("[{},{},{},{},{}]", c.k, c.c, c.im, c.s, c.f));
+        }
+        out.push_str("],\"rows\":[");
+        for (i, c) in configs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            let row = self.row(c).expect("table covers its own configs");
+            for (j, t) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                match t {
+                    Some(v) => {
+                        ensure!(v.is_finite(), "non-finite cost in table row");
+                        out.push_str(&format!("{v}"));
+                    }
+                    None => out.push_str("null"),
+                }
+            }
+            out.push(']');
+        }
+        out.push_str("],\"dlt\":[");
+        for (i, ((c, im), m)) in self.dlt_entries().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("[{c},{im}"));
+            for row in &m {
+                for v in row {
+                    ensure!(v.is_finite(), "non-finite cost in DLT matrix");
+                    out.push_str(&format!(",{v}"));
+                }
+            }
+            out.push(']');
+        }
+        out.push_str("]}");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path:?}"))
+    }
+
+    /// Load a table previously written by [`Self::save_json`]. Parsing
+    /// goes through [`crate::config::Json`] (the same reader the
+    /// artifact manifest uses).
+    pub fn load_json(path: &Path) -> Result<TableSource> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let root = Json::parse(&text)?;
+
+        let mut configs = Vec::new();
+        for c in root.get("configs")?.as_arr()? {
+            let f = c.as_arr()?;
+            ensure!(f.len() == 5, "config needs 5 fields");
+            configs.push(ConvConfig::new(
+                f[0].as_f64()? as u32,
+                f[1].as_f64()? as u32,
+                f[2].as_f64()? as u32,
+                f[3].as_f64()? as u32,
+                f[4].as_f64()? as u32,
+            ));
+        }
+
+        let mut rows = Vec::new();
+        for r in root.get("rows")?.as_arr()? {
+            let cells = r.as_arr()?;
+            ensure!(cells.len() == catalog().len(), "row length != catalog size");
+            rows.push(
+                cells
+                    .iter()
+                    .map(|v| match v {
+                        Json::Null => Ok(None),
+                        other => other.as_f64().map(Some),
+                    })
+                    .collect::<Result<Vec<Option<f64>>>>()?,
+            );
+        }
+        ensure!(rows.len() == configs.len(), "row count != config count");
+
+        let mut keys = Vec::new();
+        let mut mats = Vec::new();
+        for e in root.get("dlt")?.as_arr()? {
+            let f = e.as_arr()?;
+            ensure!(f.len() == 11, "dlt entry needs c, im + 9 costs");
+            keys.push((f[0].as_f64()? as u32, f[1].as_f64()? as u32));
+            let mut m = [[0.0; 3]; 3];
+            for (i, v) in f[2..].iter().enumerate() {
+                m[i / 3][i % 3] = v.as_f64()?;
+            }
+            mats.push(m);
+        }
+        Ok(TableSource::new(configs, rows, keys, mats))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +266,40 @@ mod tests {
         assert_eq!(back.pairs, ds.pairs);
         let (a, b) = (back.targets[1][0][2], ds.targets[1][0][2]);
         assert!((a - b).abs() < 1e-8 * b.abs(), "{a} vs {b}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_source_json_round_trip() {
+        // bake a dense table (Some/None cells + DLT matrices), persist,
+        // reload: bit-exact (f64 Display round-trips)
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let cache = crate::selection::CostCache::new(&sim);
+        let net = crate::networks::alexnet();
+        let table = cache.table_for(&net);
+        let path = std::env::temp_dir().join("primsel_table_rt.json");
+        table.save_json(&path).unwrap();
+        let back = TableSource::load_json(&path).unwrap();
+        assert_eq!(back.configs(), table.configs());
+        for cfg in table.configs() {
+            assert_eq!(back.row(cfg), table.row(cfg));
+        }
+        assert_eq!(back.dlt_entries(), table.dlt_entries());
+        // the reloaded table serves selection identically
+        let a = crate::selection::select(&net, &table).unwrap();
+        let b = crate::selection::select(&net, &back).unwrap();
+        assert_eq!(a.primitive, b.primitive);
+        assert_eq!(a.estimated_ms, b.estimated_ms);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_json_rejects_garbage() {
+        let path = std::env::temp_dir().join("primsel_table_bad.json");
+        std::fs::write(&path, "{\"configs\":[[1,2]]}").unwrap();
+        assert!(TableSource::load_json(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(TableSource::load_json(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 

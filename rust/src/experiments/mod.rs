@@ -10,7 +10,6 @@ mod tables;
 mod transfer;
 mod workbench;
 
-pub use quality::model_source;
 pub use workbench::Workbench;
 
 use crate::report::Table;

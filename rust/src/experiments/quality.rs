@@ -2,49 +2,23 @@
 //! performance model vs optimised with profiled ("measured") costs.
 
 use super::Workbench;
-use crate::networks::{self, Network};
-use crate::perfmodel::predictor::DltPredictor;
-use crate::perfmodel::Predictor;
+use crate::networks;
+use crate::perfmodel::model::model_table;
 use crate::report::Table;
-use crate::selection::{self, TableSource};
+use crate::selection;
 use anyhow::Result;
-
-/// Build a TableSource for a network from the two predictors (step ii of
-/// the paper's pipeline): one batched call for all layers, one for all
-/// edge tensors.
-pub fn model_source(
-    net: &Network,
-    prim: &Predictor,
-    dlt: &DltPredictor,
-) -> Result<TableSource> {
-    let rows = prim.predict_configs(&net.layers)?;
-    let mut keys: Vec<(u32, u32)> = net
-        .edges
-        .iter()
-        .map(|&(u, v)| (net.layers[u].k, net.layers[v].im))
-        .collect();
-    keys.sort();
-    keys.dedup();
-    let mats = dlt.predict_pairs(&keys)?;
-    Ok(TableSource::new(net.layers.clone(), rows, keys, mats))
-}
 
 /// The relative inference-time increase of model-driven selection vs
 /// profile-driven selection, evaluated under measured (simulated) costs.
 pub fn increase_for(
     wb: &mut Workbench,
-    net: &Network,
+    net: &networks::Network,
     platform: &str,
 ) -> Result<f64> {
-    let nn2_params = wb.nn2_params(platform)?;
-    let dlt_params = wb.dlt_nn2_params(platform)?;
-    let (sx, sy) = wb.prim_standardizers(platform)?;
-    let (dx, dy) = wb.dlt_standardizers(platform)?;
+    let inputs = wb.xla_model_inputs(platform)?;
     let sim = wb.platform(platform)?.sim.clone();
-
-    let prim = Predictor::new(&wb.rt, "nn2", nn2_params, sx, sy)?;
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
-    let source = model_source(net, &prim, &dlt)?;
+    let model = inputs.build(&wb.rt)?;
+    let source = model_table(net, &model)?;
 
     // one shared cost cache: select and both evaluations profile each
     // distinct layer/edge tensor once

@@ -3,12 +3,10 @@
 //! profiling approach (simulated device wall-clock: 25 runs per applicable
 //! primitive per layer, paper §4.1.1/§5.2).
 
-use super::quality::model_source;
 use super::Workbench;
 use crate::networks;
 use crate::par;
-use crate::perfmodel::predictor::DltPredictor;
-use crate::perfmodel::Predictor;
+use crate::perfmodel::model::model_table;
 use crate::report::{fmt_time_ms, Table};
 use crate::selection::{self, CostCache};
 use anyhow::Result;
@@ -17,17 +15,13 @@ use std::time::Instant;
 pub fn table4(wb: &mut Workbench) -> Result<Vec<Table>> {
     // model inference is timed with the Intel-trained models (as the paper
     // produces estimates on the Intel platform)
-    let nn2_params = wb.nn2_params("intel")?;
-    let dlt_params = wb.dlt_nn2_params("intel")?;
-    let (sx, sy) = wb.prim_standardizers("intel")?;
-    let (dx, dy) = wb.dlt_standardizers("intel")?;
+    let inputs = wb.xla_model_inputs("intel")?;
     let sims: Vec<_> = ["intel", "amd", "arm"]
         .iter()
         .map(|p| wb.platform(p).map(|pd| pd.sim.clone()))
         .collect::<Result<_>>()?;
 
-    let prim = Predictor::new(&wb.rt, "nn2", nn2_params, sx, sy)?;
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
+    let model = inputs.build(&wb.rt)?;
 
     let nets = networks::selection_networks();
 
@@ -53,9 +47,9 @@ pub fn table4(wb: &mut Workbench) -> Result<Vec<Table>> {
     );
     for (ni, net) in nets.iter().enumerate() {
         // warm the predict executables so we time inference, not compile
-        let _ = model_source(net, &prim, &dlt)?;
+        let _ = model_table(net, &model)?;
         let t0 = Instant::now();
-        let source = model_source(net, &prim, &dlt)?;
+        let source = model_table(net, &model)?;
         let _sel = selection::select(net, &source)?;
         let model_ms = t0.elapsed().as_secs_f64() * 1e3;
 

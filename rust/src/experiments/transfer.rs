@@ -1,12 +1,16 @@
-//! Figures 8–10 and Table 5: transfer learning across platforms.
+//! Figures 8–10 and Table 5: transfer learning across platforms. All
+//! flows route through the [`CostModel`] layer: the workbench hands out
+//! [`XlaModelInputs`](crate::perfmodel::XlaModelInputs) bundles, and
+//! evaluation/selection consume the built model through the trait —
+//! the same abstraction the serving path uses.
 
-use super::quality::model_source;
 use super::Workbench;
+use crate::dataset::PrimDataset;
 use crate::networks;
 use crate::perfmodel::metrics::{mdrae_all, mdrae_per_column};
-use crate::perfmodel::predictor::DltPredictor;
-use crate::perfmodel::transfer::factor_correction;
-use crate::perfmodel::{ParamStore, Predictor};
+use crate::perfmodel::model::{model_table, CostModel};
+use crate::perfmodel::transfer::prim_factors;
+use crate::perfmodel::ParamStore;
 use crate::primitives::{catalog, Family};
 use crate::report::Table;
 use crate::selection;
@@ -15,37 +19,43 @@ use anyhow::Result;
 /// Evaluate a primitive-model parameter set on a target platform:
 /// (MdRAE on the target test set, GoogLeNet inference increase).
 /// `std_from` names the platform whose standardisers the params were
-/// trained under ("intel" for direct transfer, the target otherwise).
+/// trained under ("intel" for direct transfer, the target otherwise);
+/// `factors` optionally applies §4.4 correction factors estimated from
+/// `calib_samples` target rows.
 fn eval_on_target(
     wb: &mut Workbench,
     params: ParamStore,
     std_from: &str,
     target: &str,
-    factors: Option<Vec<f64>>,
+    factors: Option<(Vec<f64>, usize)>,
 ) -> Result<(f64, f64)> {
-    let (sx, sy) = wb.prim_standardizers(std_from)?;
-    let (xs, targets, _, _) = wb.prim_test_data(target)?;
-    let dlt_params = wb.dlt_nn2_params(target)?;
-    let (dx, dy) = wb.dlt_standardizers(target)?;
+    let (cfgs, targets) = wb.prim_test_set(target)?;
+    let inputs = wb.xla_model_inputs_from(params, std_from, target)?;
     let sim = wb.platform(target)?.sim.clone();
 
-    let mut prim = Predictor::new(&wb.rt, "nn2", params, sx, sy)?;
-    if let Some(f) = factors {
-        prim.factors = f;
+    let mut model = inputs.build(&wb.rt)?;
+    if let Some((f, n)) = factors {
+        model = model.with_prim_factors(f, n);
     }
-    let md = mdrae_all(&prim.predict_raw(&xs)?, &targets);
+    let md = mdrae_all(&model.predict_prim(&cfgs)?, &targets);
 
     // GoogLeNet selection quality (the paper's §4.4 target network);
     // one cache serves the profiled selection and both evaluations
     let net = networks::googlenet();
-    let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dlt_params, dx, dy)?;
-    let source = model_source(&net, &prim, &dlt)?;
+    let source = model_table(&net, &model)?;
     let measured = selection::CostCache::new(&sim);
     let sel_model = selection::select(&net, &source)?;
     let sel_prof = selection::select(&net, &measured)?;
     let t_model = selection::evaluate(&net, &sel_model, &measured)?;
     let t_prof = selection::evaluate(&net, &sel_prof, &measured)?;
     Ok((md, t_model / t_prof - 1.0))
+}
+
+/// A seeded calibration subset of a platform's training rows.
+fn calib_subset(wb: &mut Workbench, target: &str, frac: f64, seed: u64) -> Result<PrimDataset> {
+    let pd = wb.platform(target)?;
+    let idx = crate::dataset::fraction(&pd.prim_split.train, frac, seed);
+    Ok(pd.prim.subset(&idx))
 }
 
 /// Figure 8: Intel model applied to AMD/ARM — directly, factor-corrected
@@ -61,23 +71,19 @@ pub fn fig8(wb: &mut Workbench) -> Result<Vec<Table>> {
         &["target", "Intel direct", "Factor Intel (1%)", "native NN2"],
     );
     for target in ["amd", "arm"] {
-        // factor correction from 1% of the target's training data
-        let (sx, sy) = wb.prim_standardizers("intel")?;
+        // factor correction from 1% of the target's training data,
+        // estimated through the CostModel trait
+        let cal = calib_subset(wb, target, 0.01, 77)?;
         let factors = {
-            let pd = wb.platform(target)?;
-            let idx = crate::dataset::fraction(&pd.prim_split.train, 0.01, 77);
-            let cal = pd.prim.subset(&idx);
-            let xs: Vec<Vec<f64>> =
-                cal.features().iter().map(|f| f.to_vec()).collect();
-            let targets = cal.targets.clone();
-            let pred = Predictor::new(&wb.rt, "nn2", intel.clone(), sx, sy)?;
-            factor_correction(&pred, &xs, &targets)?
+            let inputs = wb.xla_model_inputs_from(intel.clone(), "intel", target)?;
+            let model = inputs.build(&wb.rt)?;
+            prim_factors(&model, &cal)?
         };
 
         let (md_direct, inc_direct) =
             eval_on_target(wb, intel.clone(), "intel", target, None)?;
         let (md_factor, inc_factor) =
-            eval_on_target(wb, intel.clone(), "intel", target, Some(factors))?;
+            eval_on_target(wb, intel.clone(), "intel", target, Some((factors, cal.len())))?;
         let native = wb.nn2_params(target)?;
         let (md_native, inc_native) = eval_on_target(wb, native, target, target, None)?;
 
@@ -181,10 +187,10 @@ pub fn table5(wb: &mut Workbench) -> Result<Vec<Table>> {
             (tb, vb)
         };
         let params = wb.finetune_custom(intel.clone(), &tb, &vb)?;
-        let (xs, targets, _, _) = wb.prim_test_data("amd")?;
-        let (sx, sy) = wb.prim_standardizers("amd")?;
-        let pred = Predictor::new(&wb.rt, "nn2", params, sx, sy)?;
-        let per_col = mdrae_per_column(&pred.predict_raw(&xs)?, &targets);
+        let (cfgs, targets) = wb.prim_test_set("amd")?;
+        let inputs = wb.xla_model_inputs_from(params, "amd", "amd")?;
+        let model = inputs.build(&wb.rt)?;
+        let per_col = mdrae_per_column(&model.predict_prim(&cfgs)?, &targets);
         for (fj, cols_j) in fam_cols.iter().enumerate() {
             let vals: Vec<f64> = cols_j
                 .iter()

@@ -1,19 +1,25 @@
 //! The Workbench: shared state for the experiment suite — per-platform
 //! datasets, trained models (disk-cached under `artifacts/trained/`),
 //! and the standardisers that travel with them.
+//!
+//! Model *construction* lives in `perfmodel::model`: the workbench hands
+//! out [`XlaModelInputs`] bundles (params + standardisers + provenance)
+//! and [`LinCostModel`]s, so experiment code routes through the
+//! [`CostModel`](crate::perfmodel::CostModel) trait instead of wiring
+//! Predictor/Lin plumbing by hand.
 
 use crate::dataset::{self, Batches, DltDataset, PrimDataset, Split, Standardizer};
-use crate::perfmodel::{
-    self, hparams_for, LinModel, ParamStore, Predictor, TrainOpts, Trainer,
-};
-use crate::perfmodel::predictor::DltPredictor;
+use crate::layers::ConvConfig;
+use crate::perfmodel::model::{LinCostModel, ModelProvenance, XlaModelInputs};
+use crate::perfmodel::{self, hparams_for, LinModel, ParamStore, TrainOpts, Trainer};
 use crate::runtime::Runtime;
 use crate::simulator::{machine, Simulator};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-pub const DATASET_SEED: u64 = 20200612;
+pub use crate::dataset::DATASET_SEED;
+
 pub const SPLIT_SEED: u64 = 42;
 
 /// One platform's profiled data, ready for training.
@@ -119,6 +125,18 @@ impl Workbench {
         Ok((test.pairs, flat, pd.dlt_std_x.clone(), pd.dlt_std_y.clone()))
     }
 
+    /// Owned copy of a platform's primitive test split as configs +
+    /// masked targets — the shape [`CostModel`](crate::perfmodel::CostModel)
+    /// evaluation consumes.
+    pub fn prim_test_set(
+        &mut self,
+        platform: &str,
+    ) -> Result<(Vec<ConvConfig>, Vec<Vec<Option<f64>>>)> {
+        let pd = self.platform(platform)?;
+        let test = pd.prim.subset(&pd.prim_split.test);
+        Ok((test.configs, test.targets))
+    }
+
     /// Owned standardisers for a platform's primitive dataset.
     pub fn prim_standardizers(&mut self, platform: &str) -> Result<(Standardizer, Standardizer)> {
         let pd = self.platform(platform)?;
@@ -181,20 +199,49 @@ impl Workbench {
         Ok(res.params)
     }
 
-    /// A ready NN2 predictor for a platform.
-    pub fn nn2_predictor(&mut self, platform: &str) -> Result<Predictor<'_>> {
-        let params = self.nn2_params(platform)?;
-        let pd = &self.data[platform];
-        let (sx, sy) = (pd.std_x.clone(), pd.std_y.clone());
-        Predictor::new(&self.rt, "nn2", params, sx, sy)
+    /// Everything needed to build the platform's native NN2
+    /// [`XlaCostModel`](crate::perfmodel::XlaCostModel): train (or load)
+    /// the nn2 + dlt_nn2 params, bundle them with the platform's
+    /// standardisers. Build with `inputs.build(&wb.rt)` once the
+    /// workbench's mutable phase is done.
+    pub fn xla_model_inputs(&mut self, platform: &str) -> Result<XlaModelInputs> {
+        let prim_params = self.nn2_params(platform)?;
+        self.xla_model_inputs_from(prim_params, platform, platform)
     }
 
-    /// A ready NN2 DLT predictor for a platform.
-    pub fn dlt_predictor(&mut self, platform: &str) -> Result<DltPredictor<'_>> {
-        let params = self.dlt_nn2_params(platform)?;
-        let pd = &self.data[platform];
-        let (sx, sy) = (pd.dlt_std_x.clone(), pd.dlt_std_y.clone());
-        DltPredictor::new(&self.rt, "dlt_nn2", params, sx, sy)
+    /// The transfer-evaluation shape (paper §4.4): primitive params from
+    /// anywhere (trained under `std_from`'s standardisers), DLT model
+    /// native to `target`.
+    pub fn xla_model_inputs_from(
+        &mut self,
+        prim_params: ParamStore,
+        std_from: &str,
+        target: &str,
+    ) -> Result<XlaModelInputs> {
+        let dlt_params = self.dlt_nn2_params(target)?;
+        let (std_x, std_y) = self.prim_standardizers(std_from)?;
+        let (dlt_std_x, dlt_std_y) = self.dlt_standardizers(target)?;
+        let samples = self.platform(std_from)?.prim_split.train.len();
+        Ok(XlaModelInputs {
+            prim_kind: "nn2".to_string(),
+            prim_params,
+            std_x,
+            std_y,
+            dlt_kind: "dlt_nn2".to_string(),
+            dlt_params,
+            dlt_std_x,
+            dlt_std_y,
+            provenance: ModelProvenance::Native { platform: std_from.to_string(), samples },
+        })
+    }
+
+    /// The platform's full-data [`LinCostModel`] (closed form, offline;
+    /// not cached — fitting is cheaper than loading).
+    pub fn lin_cost_model(&mut self, platform: &str) -> Result<LinCostModel> {
+        let pd = self.platform(platform)?;
+        let prim = pd.prim.subset(&pd.prim_split.train);
+        let dlt = pd.dlt.subset(&pd.dlt_split.train);
+        LinCostModel::fit(&prim, &dlt, platform)
     }
 
     /// Train (or load) all 31 per-primitive NN1 models for a platform.

@@ -14,8 +14,7 @@
 
 use anyhow::{bail, Result};
 use primsel::experiments::{self, Workbench};
-use primsel::perfmodel::predictor::DltPredictor;
-use primsel::perfmodel::Predictor;
+use primsel::perfmodel::model::model_table;
 use primsel::primitives::catalog;
 use primsel::report::Table;
 use primsel::runtime::Runtime;
@@ -123,13 +122,9 @@ fn cmd_select(flags: &HashMap<String, String>) -> Result<()> {
     let measured_costs = selection::CostCache::new(&sim);
 
     let sel = if source == "model" {
-        let nn2 = wb.nn2_params(platform)?;
-        let dltp = wb.dlt_nn2_params(platform)?;
-        let (sx, sy) = wb.prim_standardizers(platform)?;
-        let (dx, dy) = wb.dlt_standardizers(platform)?;
-        let prim = Predictor::new(&wb.rt, "nn2", nn2, sx, sy)?;
-        let dlt = DltPredictor::new(&wb.rt, "dlt_nn2", dltp, dx, dy)?;
-        let src = experiments::model_source(&net, &prim, &dlt)?;
+        let inputs = wb.xla_model_inputs(platform)?;
+        let model = inputs.build(&wb.rt)?;
+        let src = model_table(&net, &model)?;
         selection::select(&net, &src)?
     } else {
         selection::select(&net, &measured_costs)?

@@ -1,11 +1,14 @@
 //! The paper's performance models on the rust side: training loops that
 //! drive the AOT `train_step`/`train_epoch` artifacts over PJRT, batched
 //! predictors over the `predict` artifacts, the linear-regression
-//! baseline, evaluation metrics (MdRAE) and transfer learning (factor
-//! correction + fine-tuning).
+//! baseline, evaluation metrics (MdRAE), transfer learning (factor
+//! correction + fine-tuning) — and the runtime-agnostic [`model`] layer
+//! ([`CostModel`]) that presents any of them to the serving stack as one
+//! interface.
 
 pub mod lin;
 pub mod metrics;
+pub mod model;
 pub mod params;
 pub mod predictor;
 pub mod trainer;
@@ -13,6 +16,9 @@ pub mod transfer;
 
 pub use lin::LinModel;
 pub use metrics::mdrae;
+pub use model::{
+    CostModel, FactorCorrected, LinCostModel, ModelProvenance, XlaCostModel, XlaModelInputs,
+};
 pub use params::ParamStore;
 pub use predictor::Predictor;
 pub use trainer::{TrainOpts, TrainResult, Trainer};

@@ -1,0 +1,581 @@
+//! The runtime-agnostic model layer: one trait, [`CostModel`], between
+//! "something that can predict primitive/DLT costs" and everything that
+//! consumes predictions (dense [`TableSource`] baking, the lazy
+//! [`ModeledSource`](crate::selection::ModeledSource) serving source, the
+//! [`Coordinator`](crate::coordinator)'s platform onboarding, and the
+//! experiment suite).
+//!
+//! Three implementations ship in-tree:
+//! * [`LinCostModel`] — the paper's Lin baseline bundled as a full cost
+//!   model (primitive rows + 3x3 DLT matrices). Pure Rust, trains offline
+//!   in closed form, no PJRT — the model the serving layer can always
+//!   fall back to.
+//! * [`XlaCostModel`] — the NN1/NN2 [`Predictor`]/[`DltPredictor`] pair
+//!   driving the AOT artifacts over PJRT, when the runtime is available.
+//! * [`FactorCorrected`] — §4.4 transfer: any base model wrapped with
+//!   per-column multiplicative factors estimated from a small target
+//!   calibration set.
+//!
+//! Raw model output is *dense* (a number for every primitive / every DLT
+//! cell, physical or not); [`masked_row`] / [`clamp_dlt`] apply the
+//! catalog applicability mask and the positive floor exactly once, at the
+//! boundary where predictions become [`CostSource`](crate::selection::CostSource)
+//! answers.
+
+use crate::dataset::{DltDataset, PrimDataset, Standardizer};
+use crate::layers::ConvConfig;
+use crate::networks::Network;
+use crate::primitives::{catalog, Layout};
+use crate::runtime::Runtime;
+use crate::selection::TableSource;
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::lin::LinModel;
+use super::params::ParamStore;
+use super::predictor::{DltPredictor, Predictor};
+use super::transfer::{robust_factors, MIN_CALIB_RATIOS};
+
+/// Positive floor applied to served predictions (ms). Log-space inverses
+/// are positive by construction, but factor correction and future model
+/// kinds are not; PBQP edge/node costs must never go non-positive.
+pub const COST_FLOOR_MS: f64 = 1e-9;
+
+/// Where a model's knowledge came from — reported through
+/// [`SelectionReport`](crate::coordinator::SelectionReport) provenance so
+/// a tenant can tell a natively-trained platform from a few-sample
+/// transfer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelProvenance {
+    /// Trained on `samples` profiled rows of `platform` itself.
+    Native { platform: String, samples: usize },
+    /// Adapted from a `source` platform's model using `calib_samples`
+    /// target calibration rows (paper §4.4).
+    Transferred { source: String, calib_samples: usize },
+}
+
+impl ModelProvenance {
+    /// The platform the underlying knowledge was measured on.
+    pub fn origin(&self) -> &str {
+        match self {
+            ModelProvenance::Native { platform, .. } => platform,
+            ModelProvenance::Transferred { source, .. } => source,
+        }
+    }
+
+    /// Human-readable one-liner for reports.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelProvenance::Native { platform, samples } => {
+                format!("native({platform}, {samples} samples)")
+            }
+            ModelProvenance::Transferred { source, calib_samples } => {
+                format!("transfer({source}, {calib_samples} calib samples)")
+            }
+        }
+    }
+}
+
+/// A trained performance model serving both cost surfaces of the paper's
+/// pipeline: per-primitive layer cost rows and 3x3 DLT matrices.
+///
+/// Predictions are **raw and dense** — one number per catalog primitive
+/// (resp. per DLT cell) regardless of applicability, possibly
+/// non-physical. Consumers apply [`masked_row`] / [`clamp_dlt`] (or go
+/// through [`model_table`] / [`ModeledSource`](crate::selection::ModeledSource),
+/// which do it for them).
+///
+/// ```
+/// use primsel::layers::ConvConfig;
+/// use primsel::perfmodel::model::{masked_row, CostModel, ModelProvenance, COST_FLOOR_MS};
+/// use primsel::primitives::catalog;
+///
+/// /// A toy model: every primitive costs `macs / 1e6` ms.
+/// struct MacsModel(ModelProvenance);
+///
+/// impl CostModel for MacsModel {
+///     fn kind(&self) -> &str { "macs" }
+///     fn provenance(&self) -> &ModelProvenance { &self.0 }
+///     fn predict_prim(&self, cfgs: &[ConvConfig]) -> primsel::Result<Vec<Vec<f64>>> {
+///         Ok(cfgs.iter().map(|c| vec![c.macs() / 1e6; catalog().len()]).collect())
+///     }
+///     fn predict_dlt(&self, pairs: &[(u32, u32)]) -> primsel::Result<Vec<[[f64; 3]; 3]>> {
+///         Ok(pairs.iter().map(|&(c, im)| [[(c * im) as f64 * 1e-6; 3]; 3]).collect())
+///     }
+/// }
+///
+/// let m = MacsModel(ModelProvenance::Native { platform: "toy".into(), samples: 0 });
+/// let cfg = ConvConfig::new(64, 64, 56, 2, 3); // stride 2: winograd/kn2 inapplicable
+/// let raw = m.predict_prim(std::slice::from_ref(&cfg)).unwrap();
+/// let row = masked_row(&cfg, &raw[0], COST_FLOOR_MS);
+/// // dense raw output, masked served row
+/// assert_eq!(raw[0].len(), catalog().len());
+/// assert!(row.iter().zip(catalog()).all(|(t, p)| t.is_some() == p.applicable(&cfg)));
+/// assert_eq!(m.provenance().origin(), "toy");
+/// ```
+pub trait CostModel {
+    /// Short model-kind tag ("lin", "nn2", "lin+factor", ...).
+    fn kind(&self) -> &str;
+
+    /// Where the model's knowledge came from.
+    fn provenance(&self) -> &ModelProvenance;
+
+    /// Raw per-primitive cost predictions (ms) for layer configs: one
+    /// dense row of `catalog().len()` values per config.
+    fn predict_prim(&self, cfgs: &[ConvConfig]) -> Result<Vec<Vec<f64>>>;
+
+    /// Raw 3x3 DLT matrices (ms) for `(c, im)` tensors. Diagonal entries
+    /// are meaningless (identity transforms are free) and ignored by
+    /// consumers.
+    fn predict_dlt(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>>;
+}
+
+/// Turn one dense raw prediction row into a served cost row: inapplicable
+/// primitives masked to `None` via the catalog, the rest clamped to
+/// `floor_ms`.
+pub fn masked_row(cfg: &ConvConfig, raw: &[f64], floor_ms: f64) -> Vec<Option<f64>> {
+    catalog()
+        .iter()
+        .zip(raw)
+        .map(|(p, &v)| if p.applicable(cfg) { Some(v.max(floor_ms)) } else { None })
+        .collect()
+}
+
+/// Clamp a raw DLT matrix into served form: zero diagonal, off-diagonal
+/// entries floored at `floor_ms`.
+pub fn clamp_dlt(raw: [[f64; 3]; 3], floor_ms: f64) -> [[f64; 3]; 3] {
+    let mut m = [[0.0; 3]; 3];
+    for src in Layout::ALL {
+        for dst in Layout::ALL {
+            if src != dst {
+                m[src.index()][dst.index()] = raw[src.index()][dst.index()].max(floor_ms);
+            }
+        }
+    }
+    m
+}
+
+/// Bake a dense [`TableSource`] for one network from a model: one batched
+/// primitive prediction for all layers, one batched DLT prediction for
+/// all distinct edge tensors (step ii of the paper's Figure 2). The
+/// table is masked and clamped, ready to serve or persist.
+pub fn model_table(net: &Network, model: &dyn CostModel) -> Result<TableSource> {
+    let raw = model.predict_prim(&net.layers)?;
+    let rows = net
+        .layers
+        .iter()
+        .zip(&raw)
+        .map(|(cfg, r)| masked_row(cfg, r, COST_FLOOR_MS))
+        .collect();
+    let mut keys: Vec<(u32, u32)> = net
+        .edges
+        .iter()
+        .map(|&(u, v)| (net.layers[u].k, net.layers[v].im))
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let mats = model
+        .predict_dlt(&keys)?
+        .into_iter()
+        .map(|m| clamp_dlt(m, COST_FLOOR_MS))
+        .collect();
+    Ok(TableSource::new(net.layers.clone(), rows, keys, mats))
+}
+
+/// Extended Lin feature map for a layer config: the raw `(k, c, im, s, f)`
+/// plus the output spatial size `o = (im - f) / s + 1`. In log space every
+/// product of powers of existing features is linearly dependent, so `o`
+/// is the one derived feature that adds expressiveness — and it carries
+/// the gemm shapes (`o²` columns) every lowering family is built on.
+pub fn lin_prim_features(cfg: &ConvConfig) -> Vec<f64> {
+    let o = cfg.out_size().unwrap_or(1).max(1) as f64;
+    vec![cfg.k as f64, cfg.c as f64, cfg.im as f64, cfg.s as f64, cfg.f as f64, o]
+}
+
+/// The paper's Lin baseline bundled as a full [`CostModel`]: one
+/// per-column log-space OLS for primitive rows (over
+/// [`lin_prim_features`]) and one for the 9 DLT cells (over `(c, im)`).
+/// Fits in closed form on the host — no PJRT, no artifacts — which makes
+/// it the model the serving layer can always train from a calibration
+/// sample, offline.
+#[derive(Debug, Clone)]
+pub struct LinCostModel {
+    prim: LinModel,
+    dlt: LinModel,
+    provenance: ModelProvenance,
+}
+
+impl LinCostModel {
+    /// Fit both Lin models on profiled datasets from `platform`.
+    pub fn fit(prim: &PrimDataset, dlt: &DltDataset, platform: &str) -> Result<LinCostModel> {
+        let xs: Vec<Vec<f64>> = prim.configs.iter().map(lin_prim_features).collect();
+        let sx = Standardizer::fit(&xs, true);
+        let sy = Standardizer::fit_masked(&prim.targets, true);
+        let prim_lin = LinModel::fit(&xs, &prim.targets, sx, sy)?;
+
+        let dxs: Vec<Vec<f64>> = dlt.features().iter().map(|f| f.to_vec()).collect();
+        let dys = dlt.flat_targets();
+        let dsx = Standardizer::fit(&dxs, true);
+        let dsy = Standardizer::fit_masked(&dys, true);
+        let dlt_lin = LinModel::fit(&dxs, &dys, dsx, dsy)?;
+
+        Ok(LinCostModel {
+            prim: prim_lin,
+            dlt: dlt_lin,
+            provenance: ModelProvenance::Native {
+                platform: platform.to_string(),
+                samples: prim.len(),
+            },
+        })
+    }
+
+    /// The underlying primitive-row Lin model.
+    pub fn prim_lin(&self) -> &LinModel {
+        &self.prim
+    }
+}
+
+impl CostModel for LinCostModel {
+    fn kind(&self) -> &str {
+        "lin"
+    }
+
+    fn provenance(&self) -> &ModelProvenance {
+        &self.provenance
+    }
+
+    fn predict_prim(&self, cfgs: &[ConvConfig]) -> Result<Vec<Vec<f64>>> {
+        let xs: Vec<Vec<f64>> = cfgs.iter().map(lin_prim_features).collect();
+        Ok(self.prim.predict_raw(&xs))
+    }
+
+    fn predict_dlt(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>> {
+        let xs: Vec<Vec<f64>> =
+            pairs.iter().map(|&(c, im)| vec![c as f64, im as f64]).collect();
+        Ok(self.dlt.predict_raw(&xs).into_iter().map(matrix_from_flat9).collect())
+    }
+}
+
+/// Everything needed to assemble an [`XlaCostModel`] except the runtime
+/// borrow — the shape the [`Workbench`](crate::experiments::Workbench)
+/// hands out so its `&mut self` training phase and the model's `&Runtime`
+/// inference phase don't fight over borrows.
+pub struct XlaModelInputs {
+    pub prim_kind: String,
+    pub prim_params: ParamStore,
+    pub std_x: Standardizer,
+    pub std_y: Standardizer,
+    pub dlt_kind: String,
+    pub dlt_params: ParamStore,
+    pub dlt_std_x: Standardizer,
+    pub dlt_std_y: Standardizer,
+    pub provenance: ModelProvenance,
+}
+
+impl XlaModelInputs {
+    /// Compile the predictors against a runtime and return the model.
+    pub fn build(self, rt: &Runtime) -> Result<XlaCostModel<'_>> {
+        let prim =
+            Predictor::new(rt, &self.prim_kind, self.prim_params, self.std_x, self.std_y)?;
+        let dlt = DltPredictor::new(
+            rt,
+            &self.dlt_kind,
+            self.dlt_params,
+            self.dlt_std_x,
+            self.dlt_std_y,
+        )?;
+        Ok(XlaCostModel { kind: self.prim_kind, prim, dlt, provenance: self.provenance })
+    }
+}
+
+/// The NN1/NN2 predictors (AOT artifacts over PJRT) as a [`CostModel`].
+/// Only constructible when a runtime is open; the rest of the serving
+/// stack neither knows nor cares which implementation answers.
+pub struct XlaCostModel<'rt> {
+    kind: String,
+    prim: Predictor<'rt>,
+    dlt: DltPredictor<'rt>,
+    provenance: ModelProvenance,
+}
+
+impl XlaCostModel<'_> {
+    /// Apply §4.4 per-primitive correction factors (builder style),
+    /// marking the provenance as transferred from its current origin.
+    pub fn with_prim_factors(mut self, factors: Vec<f64>, calib_samples: usize) -> Self {
+        self.prim.factors = factors;
+        self.provenance = ModelProvenance::Transferred {
+            source: self.provenance.origin().to_string(),
+            calib_samples,
+        };
+        self
+    }
+}
+
+impl CostModel for XlaCostModel<'_> {
+    fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    fn provenance(&self) -> &ModelProvenance {
+        &self.provenance
+    }
+
+    fn predict_prim(&self, cfgs: &[ConvConfig]) -> Result<Vec<Vec<f64>>> {
+        let xs: Vec<Vec<f64>> = cfgs.iter().map(|c| c.features().to_vec()).collect();
+        self.prim.predict_raw(&xs)
+    }
+
+    fn predict_dlt(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>> {
+        self.dlt.predict_pairs(pairs)
+    }
+}
+
+/// §4.4 factor correction as a model combinator: a base model (any
+/// [`CostModel`] that is `Send + Sync`) scaled per primitive column and
+/// per DLT cell by median measured/predicted ratios from a target
+/// calibration set.
+pub struct FactorCorrected {
+    kind: String,
+    base: Arc<dyn CostModel + Send + Sync>,
+    prim_factors: Vec<f64>,
+    /// Row-major src x dst; diagonal 1.0 (unused).
+    dlt_factors: [[f64; 3]; 3],
+    provenance: ModelProvenance,
+}
+
+impl FactorCorrected {
+    /// Estimate factors from a calibration sample measured on the target
+    /// platform (see [`robust_factors`] for the estimator's guards).
+    pub fn fit(
+        base: Arc<dyn CostModel + Send + Sync>,
+        prim: &PrimDataset,
+        dlt: &DltDataset,
+    ) -> Result<FactorCorrected> {
+        let prim_factors =
+            robust_factors(&base.predict_prim(&prim.configs)?, &prim.targets, MIN_CALIB_RATIOS);
+
+        let dlt_preds: Vec<Vec<f64>> = base
+            .predict_dlt(&dlt.pairs)?
+            .into_iter()
+            .map(|m| m.iter().flatten().copied().collect())
+            .collect();
+        let flat = robust_factors(&dlt_preds, &dlt.flat_targets(), MIN_CALIB_RATIOS);
+        // an empty DLT calibration set yields an empty factor vector
+        // (robust_factors sizes off the measured rows): keep 1.0 rather
+        // than indexing out of bounds
+        let mut dlt_factors = [[1.0; 3]; 3];
+        if flat.len() == 9 {
+            for src in Layout::ALL {
+                for dst in Layout::ALL {
+                    if src != dst {
+                        dlt_factors[src.index()][dst.index()] =
+                            flat[src.index() * 3 + dst.index()];
+                    }
+                }
+            }
+        }
+
+        let provenance = ModelProvenance::Transferred {
+            source: base.provenance().origin().to_string(),
+            calib_samples: prim.len(),
+        };
+        let kind = format!("{}+factor", base.kind());
+        Ok(FactorCorrected { kind, base, prim_factors, dlt_factors, provenance })
+    }
+
+    /// The per-primitive correction factors.
+    pub fn prim_factors(&self) -> &[f64] {
+        &self.prim_factors
+    }
+}
+
+impl CostModel for FactorCorrected {
+    fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    fn provenance(&self) -> &ModelProvenance {
+        &self.provenance
+    }
+
+    fn predict_prim(&self, cfgs: &[ConvConfig]) -> Result<Vec<Vec<f64>>> {
+        let mut rows = self.base.predict_prim(cfgs)?;
+        for row in &mut rows {
+            for (v, f) in row.iter_mut().zip(&self.prim_factors) {
+                *v *= f;
+            }
+        }
+        Ok(rows)
+    }
+
+    fn predict_dlt(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>> {
+        let mut mats = self.base.predict_dlt(pairs)?;
+        for m in &mut mats {
+            for src in Layout::ALL {
+                for dst in Layout::ALL {
+                    m[src.index()][dst.index()] *= self.dlt_factors[src.index()][dst.index()];
+                }
+            }
+        }
+        Ok(mats)
+    }
+}
+
+/// Assemble a 3x3 matrix from 9 row-major values (diagonal zeroed — the
+/// layout of `DltDataset::flat_targets` and the DLT Lin outputs).
+fn matrix_from_flat9(row: Vec<f64>) -> [[f64; 3]; 3] {
+    let mut m = [[0.0; 3]; 3];
+    for src in Layout::ALL {
+        for dst in Layout::ALL {
+            if src != dst {
+                m[src.index()][dst.index()] = row[src.index() * 3 + dst.index()];
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset;
+    use crate::networks;
+    use crate::perfmodel::metrics::mdrae_all;
+    use crate::selection::CostSource;
+    use crate::simulator::{machine, Simulator};
+
+    fn lin_for(platform: &str, n_configs: usize, seed: u64) -> (LinCostModel, Simulator) {
+        let sim = Simulator::new(machine::by_name(platform).unwrap());
+        let configs = dataset::enumerate_configs(n_configs, seed);
+        let prim = dataset::profile_prim_dataset(&sim, &configs);
+        let pairs = dataset::dlt_pairs(&configs);
+        let dlt = dataset::profile_dlt_dataset(&sim, &pairs);
+        (LinCostModel::fit(&prim, &dlt, platform).unwrap(), sim)
+    }
+
+    #[test]
+    fn lin_cost_model_fits_simulator_reasonably() {
+        let (model, sim) = lin_for("intel", 600, 11);
+        let test = dataset::enumerate_configs(800, 12);
+        let test = &test[600..];
+        let actual: Vec<Vec<Option<f64>>> =
+            test.iter().map(|c| sim.profile_layer(c)).collect();
+        let preds = model.predict_prim(test).unwrap();
+        let md = mdrae_all(&preds, &actual);
+        assert!(md < 0.60, "Lin MdRAE unreasonably high: {md}");
+        assert_eq!(model.kind(), "lin");
+        assert_eq!(model.provenance().origin(), "intel");
+    }
+
+    #[test]
+    fn lin_dlt_predictions_track_the_simulator() {
+        // DLT cost is a power law in (c, im) *per bandwidth tier*; the
+        // tier steps are exactly what a log-space OLS cannot represent,
+        // so require order-of-magnitude tracking (factor 4), not
+        // precision — selection only needs the relative ranking of
+        // layout chains to be roughly right.
+        let (model, sim) = lin_for("arm", 400, 3);
+        let mats = model.predict_dlt(&[(64, 56), (128, 28)]).unwrap();
+        for (m, &(c, im)) in mats.iter().zip(&[(64u32, 56u32), (128, 28)]) {
+            let truth = sim.dlt_matrix(c, im);
+            for src in Layout::ALL {
+                for dst in Layout::ALL {
+                    if src == dst {
+                        assert_eq!(m[src.index()][dst.index()], 0.0);
+                    } else {
+                        let (p, a) =
+                            (m[src.index()][dst.index()], truth[src.index()][dst.index()]);
+                        let ratio = p / a;
+                        assert!(
+                            p.is_finite() && (0.25..4.0).contains(&ratio),
+                            "dlt ({c},{im}) {src:?}->{dst:?}: {p} vs {a}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_row_masks_and_clamps() {
+        let cfg = ConvConfig::new(8, 8, 32, 2, 3); // strided: kn2/wino inapplicable
+        let raw = vec![-5.0; catalog().len()];
+        let row = masked_row(&cfg, &raw, COST_FLOOR_MS);
+        for (t, p) in row.iter().zip(catalog()) {
+            match t {
+                Some(v) => {
+                    assert!(p.applicable(&cfg));
+                    assert_eq!(*v, COST_FLOOR_MS);
+                }
+                None => assert!(!p.applicable(&cfg)),
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_dlt_zeroes_diagonal_and_floors() {
+        let m = clamp_dlt([[-1.0; 3]; 3], COST_FLOOR_MS);
+        for src in Layout::ALL {
+            for dst in Layout::ALL {
+                let v = m[src.index()][dst.index()];
+                if src == dst {
+                    assert_eq!(v, 0.0);
+                } else {
+                    assert_eq!(v, COST_FLOOR_MS);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_table_serves_a_network() {
+        let (model, _) = lin_for("intel", 400, 5);
+        let net = networks::vgg(11);
+        let table = model_table(&net, &model).unwrap();
+        for cfg in &net.layers {
+            let row = table.layer_costs(cfg);
+            for (t, p) in row.iter().zip(catalog()) {
+                assert_eq!(t.is_some(), p.applicable(cfg));
+                if let Some(v) = t {
+                    assert!(*v >= COST_FLOOR_MS && v.is_finite());
+                }
+            }
+        }
+        for &(u, v) in &net.edges {
+            let (c, im) = (net.layers[u].k, net.layers[v].im);
+            let m = table.dlt_matrix3(c, im);
+            assert_eq!(m[0][0], 0.0);
+            assert!(m[0][2] >= COST_FLOOR_MS);
+        }
+    }
+
+    #[test]
+    fn factor_corrected_recovers_cross_platform_scale() {
+        // intel-trained Lin, factor-corrected with arm calibration data,
+        // must predict arm costs much better than the uncorrected model
+        let (intel_model, _) = lin_for("intel", 800, 21);
+        let arm = Simulator::new(machine::arm_cortex_a73());
+        let cal_cfgs = dataset::enumerate_configs(900, 22);
+        let prim = dataset::profile_prim_dataset(&arm, &cal_cfgs[800..]);
+        let pairs = dataset::dlt_pairs(&cal_cfgs[800..]);
+        let dlt = dataset::profile_dlt_dataset(&arm, &pairs);
+        let base: Arc<dyn CostModel + Send + Sync> = Arc::new(intel_model);
+        let corrected = FactorCorrected::fit(Arc::clone(&base), &prim, &dlt).unwrap();
+        assert_eq!(corrected.kind(), "lin+factor");
+        assert!(matches!(
+            corrected.provenance(),
+            ModelProvenance::Transferred { calib_samples: 100, .. }
+        ));
+
+        let test_cfgs = dataset::enumerate_configs(1000, 23);
+        let test_cfgs = &test_cfgs[900..];
+        let actual: Vec<Vec<Option<f64>>> =
+            test_cfgs.iter().map(|c| arm.profile_layer(c)).collect();
+        let md_base = mdrae_all(&base.predict_prim(test_cfgs).unwrap(), &actual);
+        let md_corr = mdrae_all(&corrected.predict_prim(test_cfgs).unwrap(), &actual);
+        assert!(
+            md_corr < md_base * 0.7,
+            "correction didn't help: {md_base} -> {md_corr}"
+        );
+    }
+}

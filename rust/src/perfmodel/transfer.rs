@@ -4,37 +4,64 @@
 //! Two mechanisms:
 //! 1. **Factor correction** — per-primitive multiplicative scale estimated
 //!    from ~1% of target samples (median ratio of measured to predicted).
+//!    Works on any [`CostModel`] (Lin or the PJRT predictors); the
+//!    model-level entry points are [`prim_factors`] and
+//!    [`FactorCorrected::fit`](super::model::FactorCorrected::fit).
 //! 2. **Fine-tuning** — continue training the source parameters on a small
 //!    fraction of target data at lr/10 (same AOT artifacts; lr is a
 //!    runtime scalar).
 
 use super::metrics::median;
-use super::predictor::Predictor;
+use super::model::CostModel;
+use crate::dataset::PrimDataset;
 use anyhow::Result;
 
-/// Estimate per-output correction factors from a small calibration set:
-/// factor_j = median over samples of (measured_j / predicted_j).
+/// Minimum number of calibration ratios a column needs before its median
+/// is trusted as a correction factor. Below this the factor stays 1.0 —
+/// a 1- or 2-sample "median" is just noise wearing a robe.
+pub const MIN_CALIB_RATIOS: usize = 3;
+
+/// Estimate per-column correction factors from predictions and measured
+/// targets: `factor_j = median over samples of (measured_j / predicted_j)`.
 ///
-/// `xs` raw features, `measured` masked targets (ms).
-pub fn factor_correction(
-    pred: &Predictor,
-    xs: &[Vec<f64>],
+/// Robustness guards (the places a raw ratio estimator goes wrong):
+/// * predictions that are non-positive or non-finite are skipped — Lin's
+///   log-space inverse can go non-physical on extrapolated inputs, and a
+///   ratio against such a prediction is meaningless;
+/// * columns with fewer than `min_ratios` usable ratios keep factor 1.0
+///   instead of trusting a 1-sample "median".
+pub fn robust_factors(
+    preds: &[Vec<f64>],
     measured: &[Vec<Option<f64>>],
-) -> Result<Vec<f64>> {
-    let raw = pred.predict_raw(xs)?;
-    let out_dim = pred.out_dim();
+    min_ratios: usize,
+) -> Vec<f64> {
+    let out_dim = measured.first().map_or(0, |r| r.len());
     let mut factors = vec![1.0; out_dim];
-    for j in 0..out_dim {
-        let ratios: Vec<f64> = raw
+    for (j, factor) in factors.iter_mut().enumerate() {
+        let ratios: Vec<f64> = preds
             .iter()
             .zip(measured)
-            .filter_map(|(p, m)| m[j].map(|mv| mv / p[j].max(1e-12)))
+            .filter_map(|(p, m)| {
+                let pv = p[j];
+                if pv.is_finite() && pv > 0.0 {
+                    m[j].map(|mv| mv / pv)
+                } else {
+                    None
+                }
+            })
             .collect();
-        if !ratios.is_empty() {
-            factors[j] = median(&ratios);
+        if ratios.len() >= min_ratios {
+            *factor = median(&ratios);
         }
     }
-    Ok(factors)
+    factors
+}
+
+/// Per-primitive factors for a [`CostModel`] from a calibration subset of
+/// a target platform's primitive dataset — the entry point every factor
+/// flow (experiments, onboarding, examples) goes through.
+pub fn prim_factors(model: &dyn CostModel, calib: &PrimDataset) -> Result<Vec<f64>> {
+    Ok(robust_factors(&model.predict_prim(&calib.configs)?, &calib.targets, MIN_CALIB_RATIOS))
 }
 
 #[cfg(test)]
@@ -43,8 +70,35 @@ mod tests {
 
     #[test]
     fn median_ratio_recovers_scale() {
-        // direct unit test of the estimator logic on synthetic ratios
-        let ratios = [1.9, 2.0, 2.1, 2.05, 1.95];
-        assert!((median(&ratios) - 2.0).abs() < 1e-9);
+        let preds = vec![vec![1.0], vec![2.0], vec![4.0], vec![8.0]];
+        let measured: Vec<Vec<Option<f64>>> =
+            vec![vec![Some(2.1)], vec![Some(4.0)], vec![Some(7.9)], vec![Some(16.0)]];
+        let f = robust_factors(&preds, &measured, MIN_CALIB_RATIOS);
+        assert!((f[0] - 2.0).abs() < 0.05, "{}", f[0]);
+    }
+
+    #[test]
+    fn non_physical_predictions_are_skipped() {
+        // a zero/negative prediction must not poison the median with a
+        // huge or negative ratio
+        let preds = vec![vec![-1.0], vec![0.0], vec![2.0], vec![2.0], vec![2.0]];
+        let measured: Vec<Vec<Option<f64>>> =
+            vec![vec![Some(5.0)]; 5];
+        let f = robust_factors(&preds, &measured, MIN_CALIB_RATIOS);
+        assert!((f[0] - 2.5).abs() < 1e-12, "{}", f[0]);
+    }
+
+    #[test]
+    fn sparse_columns_keep_identity_factor() {
+        // two usable ratios are below MIN_CALIB_RATIOS: stay at 1.0
+        let preds = vec![vec![1.0, 1.0]; 4];
+        let measured: Vec<Vec<Option<f64>>> = vec![
+            vec![Some(3.0), Some(7.0)],
+            vec![Some(3.0), Some(7.0)],
+            vec![Some(3.0), None],
+            vec![None, None],
+        ];
+        let f = robust_factors(&preds, &measured, 3);
+        assert_eq!(f, vec![3.0, 1.0]);
     }
 }

@@ -11,8 +11,10 @@
 
 pub mod cache;
 pub mod memory;
+pub mod modeled;
 
 pub use cache::{CacheStats, CostCache};
+pub use modeled::ModeledSource;
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
@@ -118,6 +120,16 @@ impl TableSource {
     /// Borrowed row for a config, if present.
     pub fn row(&self, cfg: &ConvConfig) -> Option<&[Option<f64>]> {
         self.by_cfg.get(cfg).map(|&i| self.prim[i].as_slice())
+    }
+
+    /// All DLT entries `((c, im), matrix)`, sorted by key — the
+    /// persistence layer (`dataset::persist`) walks the table through
+    /// this and [`Self::configs`]/[`Self::row`].
+    pub fn dlt_entries(&self) -> Vec<((u32, u32), [[f64; 3]; 3])> {
+        let mut out: Vec<((u32, u32), [[f64; 3]; 3])> =
+            self.dlt.iter().map(|(k, m)| (*k, *m)).collect();
+        out.sort_unstable_by_key(|(k, _)| *k);
+        out
     }
 
     fn dlt_lookup(&self, c: u32, im: u32) -> &[[f64; 3]; 3] {

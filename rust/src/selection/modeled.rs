@@ -1,0 +1,160 @@
+//! [`ModeledSource`]: the bridge from the model layer to the cost-query
+//! engine. Any `Send + Sync` [`CostModel`] becomes a [`CostSource`], so
+//! every existing consumer — `build_problem`, [`CostCache`](super::CostCache),
+//! dense tables, the [`Coordinator`](crate::coordinator) — works
+//! unchanged over *predicted* costs. This is the paper's headline swap
+//! (profiling stage → trained model) expressed as a drop-in source.
+
+use super::{CostSource, TableSource};
+use crate::layers::ConvConfig;
+use crate::networks::Network;
+use crate::perfmodel::model::{clamp_dlt, masked_row, model_table, CostModel, COST_FLOOR_MS};
+use crate::primitives::Layout;
+use anyhow::Result;
+use std::borrow::Cow;
+use std::sync::Arc;
+
+/// A [`CostSource`] that answers from a trained [`CostModel`].
+///
+/// Served rows are applicability-masked via the catalog and clamped to
+/// [`COST_FLOOR_MS`]; DLT matrices keep a zero diagonal. Queries run the
+/// model per key, so the source reports `is_memoized() == false` and the
+/// selection entry points (and the coordinator's per-platform caches)
+/// transparently memoize it — each distinct layer config is predicted
+/// once per cache lifetime.
+///
+/// The model must be infallible at query time for the `CostSource`
+/// contract (which has no error channel): the in-tree `Send + Sync`
+/// models (Lin, factor-corrected Lin) are pure arithmetic and cannot
+/// fail, so a prediction error here is a programming bug and panics.
+pub struct ModeledSource {
+    model: Arc<dyn CostModel + Send + Sync>,
+}
+
+impl ModeledSource {
+    pub fn new(model: Arc<dyn CostModel + Send + Sync>) -> Self {
+        Self { model }
+    }
+
+    /// The model answering this source's queries.
+    pub fn model(&self) -> &(dyn CostModel + Send + Sync) {
+        self.model.as_ref()
+    }
+
+    /// Bake the dense per-network table (masked + clamped) — the shape to
+    /// persist for an onboarded platform.
+    pub fn table_for(&self, net: &Network) -> Result<TableSource> {
+        model_table(net, self.model.as_ref())
+    }
+}
+
+impl CostSource for ModeledSource {
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        let raw = self
+            .model
+            .predict_prim(std::slice::from_ref(cfg))
+            .expect("cost model failed to predict a layer row");
+        Cow::Owned(masked_row(cfg, &raw[0], COST_FLOOR_MS))
+    }
+
+    fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        self.dlt_matrix3(c, im)[src.index()][dst.index()]
+    }
+
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        let raw = self
+            .model
+            .predict_dlt(&[(c, im)])
+            .expect("cost model failed to predict a DLT matrix");
+        clamp_dlt(raw[0], COST_FLOOR_MS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::model::ModelProvenance;
+    use crate::primitives::catalog;
+    use crate::{dataset, networks, selection};
+    use crate::perfmodel::LinCostModel;
+    use crate::simulator::{machine, Simulator};
+
+    /// A model that predicts nonsense (negative everywhere) — the source
+    /// must still serve strictly positive, masked rows.
+    struct Hostile(ModelProvenance);
+
+    impl CostModel for Hostile {
+        fn kind(&self) -> &str {
+            "hostile"
+        }
+        fn provenance(&self) -> &ModelProvenance {
+            &self.0
+        }
+        fn predict_prim(&self, cfgs: &[ConvConfig]) -> Result<Vec<Vec<f64>>> {
+            Ok(cfgs.iter().map(|_| vec![-1.0; catalog().len()]).collect())
+        }
+        fn predict_dlt(&self, pairs: &[(u32, u32)]) -> Result<Vec<[[f64; 3]; 3]>> {
+            Ok(pairs.iter().map(|_| [[-1.0; 3]; 3]).collect())
+        }
+    }
+
+    #[test]
+    fn hostile_model_is_floored_and_masked() {
+        let src = ModeledSource::new(Arc::new(Hostile(ModelProvenance::Native {
+            platform: "void".into(),
+            samples: 0,
+        })));
+        let cfg = ConvConfig::new(16, 16, 28, 2, 3);
+        let row = src.layer_costs(&cfg);
+        for (t, p) in row.iter().zip(catalog()) {
+            assert_eq!(t.is_some(), p.applicable(&cfg));
+            if let Some(v) = t {
+                assert_eq!(*v, COST_FLOOR_MS);
+            }
+        }
+        let m = src.dlt_matrix3(16, 28);
+        assert_eq!(m[1][1], 0.0);
+        assert_eq!(m[0][1], COST_FLOOR_MS);
+        assert_eq!(src.dlt_cost(16, 28, Layout::Chw, Layout::Chw), 0.0);
+        assert_eq!(src.dlt_cost(16, 28, Layout::Chw, Layout::Hwc), COST_FLOOR_MS);
+        assert!(!src.is_memoized());
+    }
+
+    #[test]
+    fn selection_over_modeled_source_runs_end_to_end() {
+        // a Lin model trained on simulated intel data must drive the full
+        // select/evaluate path with no PJRT anywhere
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let (prim, dlt) = dataset::calibration_sample(&sim, 0.05, 7);
+        let model = LinCostModel::fit(&prim, &dlt, "intel").unwrap();
+        let src = ModeledSource::new(Arc::new(model));
+        let net = networks::vgg(11);
+        let sel = selection::select(&net, &src).unwrap();
+        assert_eq!(sel.primitive.len(), net.n_layers());
+        assert!(sel.estimated_ms > 0.0);
+        // the modeled selection, evaluated under measured costs, is a
+        // valid assignment (all chosen primitives applicable)
+        let t = selection::evaluate(&net, &sel, &sim).unwrap();
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn modeled_source_matches_its_baked_table() {
+        let sim = Simulator::new(machine::arm_cortex_a73());
+        let (prim, dlt) = dataset::calibration_sample(&sim, 0.03, 9);
+        let model = LinCostModel::fit(&prim, &dlt, "arm").unwrap();
+        let src = ModeledSource::new(Arc::new(model));
+        let net = networks::alexnet();
+        let table = src.table_for(&net).unwrap();
+        for cfg in &net.layers {
+            assert_eq!(src.layer_costs(cfg).as_ref(), table.layer_costs(cfg).as_ref());
+        }
+        for &(u, v) in &net.edges {
+            let (c, im) = (net.layers[u].k, net.layers[v].im);
+            assert_eq!(src.dlt_matrix3(c, im), table.dlt_matrix3(c, im));
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! End-to-end model-served platform onboarding (the paper's §4.4 flow as
+//! a service operation), fully offline — no PJRT anywhere:
+//!
+//! * fresh-Lin onboarding from ≤ 2% calibration samples must yield zoo
+//!   selections whose simulated wallclock is within 10% of
+//!   profiled-source selections (the acceptance bound);
+//! * an Intel-trained `LinCostModel`, factor-corrected to ARM from ~1%
+//!   of samples, must transfer with the same quality and report
+//!   chosen-primitive agreement;
+//! * an onboarded platform's dense table survives a process "restart"
+//!   (persist → reload → register) bit-identically.
+
+use primsel::coordinator::{
+    Coordinator, CostProvenance, OnboardSpec, SelectionRequest,
+};
+use primsel::dataset;
+use primsel::networks;
+use primsel::perfmodel::model::CostModel;
+use primsel::perfmodel::LinCostModel;
+use primsel::selection::{CostSource, TableSource};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+
+fn arm_target() -> Arc<dyn CostSource> {
+    Arc::new(Simulator::new(machine::arm_cortex_a73()))
+}
+
+/// Shared assertions over an onboard report's validation block: the
+/// acceptance bound on the zoo aggregate, a looser per-network backstop,
+/// and a sanity floor on reported primitive agreement.
+fn assert_validation_quality(report: &primsel::coordinator::OnboardReport) {
+    assert_eq!(report.validation.len(), networks::selection_networks().len());
+    let mut total_model = 0.0;
+    let mut total_prof = 0.0;
+    let mut agreement_sum = 0.0;
+    for v in &report.validation {
+        assert!(v.predicted_ms > 0.0, "{}: non-positive prediction", v.network);
+        assert!(v.simulated_ms > 0.0 && v.profiled_ms > 0.0, "{}: bad wallclocks", v.network);
+        assert!(
+            v.increase < 0.25,
+            "{}: modeled selection {:.1}% worse than profiled",
+            v.network,
+            v.increase * 100.0
+        );
+        assert!((0.0..=1.0).contains(&v.agreement), "{}: bad agreement", v.network);
+        total_model += v.simulated_ms;
+        total_prof += v.profiled_ms;
+        agreement_sum += v.agreement;
+    }
+    // the acceptance bound: zoo-aggregate simulated wallclock of modeled
+    // selections within 10% of the profiled-source selections
+    let zoo_increase = total_model / total_prof - 1.0;
+    assert!(
+        zoo_increase < 0.10,
+        "zoo selections {:.2}% worse than profiled (bound: 10%)",
+        zoo_increase * 100.0
+    );
+    // agreement is genuinely reported (not stuck at zero)
+    assert!(agreement_sum / report.validation.len() as f64 > 0.1);
+}
+
+#[test]
+fn fresh_lin_onboarding_serves_zoo_within_10pct() {
+    let coord = Coordinator::new();
+    let report = coord
+        .onboard_platform(
+            "arm-lin",
+            OnboardSpec::fresh_lin(arm_target(), 0.02, 42)
+                .with_validation(networks::selection_networks()),
+        )
+        .unwrap();
+
+    assert_eq!(report.model_kind, "lin");
+    // ≤ 2% of the canonical universe
+    let universe = dataset::enumerate_configs(dataset::MAX_CONFIGS, dataset::DATASET_SEED).len();
+    assert!(report.calib_samples * 50 <= universe + 50, "{}", report.calib_samples);
+    assert_validation_quality(&report);
+
+    // the onboarded platform serves requests with predicted provenance
+    let rep = coord
+        .submit(&SelectionRequest::new(networks::googlenet(), "arm-lin"))
+        .unwrap();
+    assert!(matches!(rep.provenance, CostProvenance::Predicted { .. }));
+    assert!(rep.evaluated_ms > 0.0);
+}
+
+#[test]
+fn intel_lin_transfers_to_arm_with_one_percent_calibration() {
+    // source model: Lin trained on (a large sample of) Intel simulator
+    // data — the "factory-profiled platform" of §4.4
+    let intel = Simulator::new(machine::intel_i9_9900k());
+    let (prim, dlt) = dataset::calibration_sample(&intel, 0.5, 3);
+    let source: Arc<dyn CostModel + Send + Sync> =
+        Arc::new(LinCostModel::fit(&prim, &dlt, "intel").unwrap());
+
+    let coord = Coordinator::new();
+    let report = coord
+        .onboard_platform(
+            "arm-transfer",
+            OnboardSpec::transfer(arm_target(), source, 0.01, 9)
+                .with_validation(networks::selection_networks()),
+        )
+        .unwrap();
+
+    assert_eq!(report.model_kind, "lin+factor");
+    assert!(matches!(
+        &report.provenance,
+        CostProvenance::Predicted { model_kind, .. } if model_kind == "lin+factor"
+    ));
+    assert_validation_quality(&report);
+
+    // agreement is surfaced per network (the satellite's reporting
+    // requirement): print the table a CI log can eyeball
+    for v in &report.validation {
+        println!(
+            "{:<16} simulated {:>9.2} ms  profiled {:>9.2} ms  (+{:.2}%)  agreement {:.0}%",
+            v.network,
+            v.simulated_ms,
+            v.profiled_ms,
+            v.increase * 100.0,
+            v.agreement * 100.0
+        );
+    }
+}
+
+#[test]
+fn onboarded_table_survives_restart_via_persisted_json() {
+    let zoo = networks::selection_networks();
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform("arm-lin", OnboardSpec::fresh_lin(arm_target(), 0.02, 42))
+        .unwrap();
+    let before: Vec<_> = zoo
+        .iter()
+        .map(|n| coord.submit(&SelectionRequest::new(n.clone(), "arm-lin")).unwrap())
+        .collect();
+
+    // persist under a temp dir so parallel test runs don't collide on
+    // artifacts/tables/
+    let dir = std::env::temp_dir().join(format!("primsel_tables_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("arm-lin.json");
+    coord.persist_table_to("arm-lin", &zoo, &path).unwrap();
+
+    // "restart": a fresh coordinator serving the reloaded table, with
+    // the original platform's provenance restored alongside the values
+    let provenance = coord.provenance("arm-lin").unwrap();
+    let reloaded = TableSource::load_json(&path).unwrap();
+    let coord2 = Coordinator::new();
+    coord2.register_with_provenance("arm-lin", Arc::new(reloaded), provenance);
+    for (net, old) in zoo.iter().zip(&before) {
+        let new = coord2.submit(&SelectionRequest::new(net.clone(), "arm-lin")).unwrap();
+        assert_eq!(new.selection.primitive, old.selection.primitive);
+        assert_eq!(new.selection.estimated_ms, old.selection.estimated_ms);
+        assert_eq!(new.evaluated_ms, old.evaluated_ms);
+        // the reloaded platform still reports model-predicted costs
+        assert_eq!(new.provenance, old.provenance);
+        assert!(matches!(new.provenance, CostProvenance::Predicted { .. }));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn persist_table_writes_the_artifact_path() {
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform("arm-lin-persist", OnboardSpec::fresh_lin(arm_target(), 0.01, 4))
+        .unwrap();
+    let net = networks::alexnet();
+    let path = coord.persist_table("arm-lin-persist", std::slice::from_ref(&net)).unwrap();
+    assert_eq!(path, dataset::table_artifact_path("arm-lin-persist"));
+    assert!(path.exists());
+    let table = TableSource::load_json(&path).unwrap();
+    // the reloaded table answers exactly what the served cache answers
+    let cache = coord.cache("arm-lin-persist").unwrap();
+    for cfg in &net.layers {
+        assert_eq!(table.layer_costs(cfg).as_ref(), cache.row(cfg).as_ref());
+    }
+    std::fs::remove_file(&path).ok();
+}
