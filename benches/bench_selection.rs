@@ -20,6 +20,7 @@ use primsel::perfmodel::model::model_table;
 use primsel::perfmodel::LinCostModel;
 use primsel::runtime::Runtime;
 use primsel::selection::{self, CostCache, CostSource, ModeledSource};
+use primsel::service::{Service, ServiceConfig};
 use primsel::simulator::{machine, Simulator};
 use std::sync::Arc;
 
@@ -97,6 +98,61 @@ fn main() {
         b.run("selection/coordinator_batch", 1, 10, || {
             let _ = coord.submit_batch(&reqs).unwrap();
         });
+    }
+    // the admission-controlled service end-to-end: the same mixed
+    // three-platform zoo batch as coordinator_batch, but through the
+    // bounded queue + fair scheduler + persistent worker pool — the
+    // delta between the rows is the serving layer's overhead
+    {
+        let service = Service::new(
+            Coordinator::shared(),
+            ServiceConfig::default()
+                .with_capacity(1024)
+                .with_workers(par::workers().clamp(2, 8)),
+        );
+        service.register_tenant("bench", 1.0, usize::MAX).unwrap();
+        let reqs: Vec<SelectionRequest> = ["intel", "amd", "arm"]
+            .iter()
+            .flat_map(|p| nets.iter().map(|n| SelectionRequest::new(n.clone(), p)))
+            .collect();
+        let submit_all = |tenant: &str, reqs: &[SelectionRequest]| {
+            let tickets: Vec<_> = reqs
+                .iter()
+                .map(|r| service.submit(tenant, r.clone()).unwrap())
+                .collect();
+            for t in tickets {
+                let _ = t.wait().unwrap();
+            }
+        };
+        submit_all("bench", &reqs); // warm the caches
+        b.run("selection/service_throughput", 1, 10, || submit_all("bench", &reqs));
+
+        // fairness shape: a weight-1 flood plus a weight-8 interactive
+        // tenant riding the same queue — the row tracks the *combined*
+        // drain time, so a scheduler regression that serialises tenants
+        // (or starves one) moves it
+        service.register_tenant("bench-heavy", 1.0, usize::MAX).unwrap();
+        service.register_tenant("bench-light", 8.0, usize::MAX).unwrap();
+        let light_reqs: Vec<SelectionRequest> = (0..6)
+            .map(|_| SelectionRequest::new(networks::alexnet(), "intel"))
+            .collect();
+        b.run("selection/service_fairness", 1, 10, || {
+            let heavy: Vec<_> = reqs
+                .iter()
+                .map(|r| service.submit("bench-heavy", r.clone()).unwrap())
+                .collect();
+            let light: Vec<_> = light_reqs
+                .iter()
+                .map(|r| service.submit("bench-light", r.clone()).unwrap())
+                .collect();
+            for t in light {
+                let _ = t.wait().unwrap();
+            }
+            for t in heavy {
+                let _ = t.wait().unwrap();
+            }
+        });
+        service.shutdown();
     }
     // model-served selection, no PJRT: a Lin model trained offline on
     // intel simulator data answers through ModeledSource (per-call cache

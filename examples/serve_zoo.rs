@@ -1,32 +1,50 @@
-//! Drive the multi-tenant selection service: one [`Coordinator`], three
-//! platforms, a batch of concurrent mixed-network requests (plus a few
-//! memory-constrained tenants) served from shared warm cost caches.
+//! Drive the admission-controlled selection service: one shared
+//! [`Coordinator`], a bounded admission queue, a deficit-weighted fair
+//! scheduler and a persistent worker pool, serving two tenants of
+//! *unequal weight* concurrently:
+//!
+//! * `batch-sweep` (weight 1) floods the whole zoo x three platforms —
+//!   plus a few TASO-style memory-budget requests — through
+//!   non-blocking admission, so queue-full rejections show up as
+//!   backpressure instead of unbounded buffering;
+//! * `interactive` (weight 4) submits a small latency-sensitive batch
+//!   through blocking admission and gets its reports while the sweep's
+//!   backlog is still queued — the fairness guarantee, visible.
 //!
 //! Runs entirely on the simulator substrate — no AOT artifacts needed —
-//! and prints the cold-vs-warm batch wall-clock next to the per-platform
-//! cache hit rates, which is the whole economic argument for sharding
-//! the cache: the second batch of the same traffic is nearly free.
+//! and ends with the full `ServiceStats` printout: per-tenant
+//! admitted/rejected/served, p50/p95 wait and service latency, and the
+//! per-platform cache hit rates that make the second pass of the same
+//! traffic nearly free.
 //!
 //! Run: `cargo run --release --example serve_zoo`
 
 use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
 use primsel::networks;
-use primsel::report::{fmt_pct, fmt_time_ms, Table};
+use primsel::report::{fmt_time_ms, Table};
+use primsel::service::{Service, ServiceConfig, SubmitError, Ticket};
 
 fn main() -> anyhow::Result<()> {
     let platforms = ["intel", "amd", "arm"];
-    let coord = Coordinator::new();
+    let service = Service::new(
+        Coordinator::shared(),
+        // a deliberately small admission queue so the sweep's flood can
+        // actually bounce off it
+        ServiceConfig::default().with_capacity(12),
+    );
+    service.register_tenant("batch-sweep", 1.0, 4)?;
+    service.register_tenant("interactive", 4.0, 4)?;
 
-    // the traffic: every selection network on every platform, plus one
-    // memory-constrained VGG-16 tenant per platform riding the same batch
-    let mut reqs = Vec::new();
+    // the flood: every selection network on every platform, plus one
+    // memory-constrained VGG-16 request per platform
+    let mut sweep_reqs = Vec::new();
     for net in networks::selection_networks() {
         for p in platforms {
-            reqs.push(SelectionRequest::new(net.clone(), p));
+            sweep_reqs.push(SelectionRequest::new(net.clone(), p));
         }
     }
     for p in platforms {
-        reqs.push(SelectionRequest::new(networks::vgg(16), p).with_objective(
+        sweep_reqs.push(SelectionRequest::new(networks::vgg(16), p).with_objective(
             Objective::MinTimeWithMemoryBudget {
                 budget_bytes: 8.0 * 1024.0 * 1024.0,
                 lambda_ms_per_mb: 5.0,
@@ -34,45 +52,72 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
-    let cold = coord.submit_batch(&reqs)?;
-    let warm = coord.submit_batch(&reqs)?;
+    // non-blocking admission: whatever bounces (QueueFull) is retried
+    // once with blocking admission afterwards — nothing is lost, but the
+    // rejections are real and show up in the stats
+    let mut sweep_tickets: Vec<Ticket> = Vec::new();
+    let mut retry = Vec::new();
+    for req in sweep_reqs {
+        match service.try_submit("batch-sweep", req.clone()) {
+            Ok(t) => sweep_tickets.push(t),
+            Err(SubmitError::QueueFull) => retry.push(req),
+            Err(e) => return Err(anyhow::anyhow!("sweep admission failed: {e}")),
+        }
+    }
+
+    // the interactive tenant arrives while the sweep backlog is queued
+    let interactive: Vec<Ticket> = ["alexnet", "vgg11", "googlenet", "resnet18"]
+        .iter()
+        .filter_map(|name| networks::by_name(name))
+        .map(|net| service.submit("interactive", SelectionRequest::new(net, "intel")))
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("interactive admission failed: {e}"))?;
 
     let mut t = Table::new(
-        "serve_zoo — one warm-batch report per request",
-        &["network", "platform", "objective", "est time", "peak ws (MiB)", "request wall"],
+        "interactive tenant — served ahead of the batch-sweep backlog (4x weight)",
+        &["network", "platform", "est time", "peak ws (MiB)", "request wall"],
     );
-    for r in &warm.reports {
+    for ticket in interactive {
+        let r = ticket.wait()?;
         t.row(vec![
             r.network.clone(),
             r.platform.clone(),
-            r.objective.tag(),
             fmt_time_ms(r.evaluated_ms),
             format!("{:.1}", r.peak_workspace_bytes / (1024.0 * 1024.0)),
             fmt_time_ms(r.wall_ms),
         ]);
     }
     println!("{}", t.render());
-
-    let mut s = Table::new(
-        "cache trajectory — cold batch vs warm batch",
-        &["platform", "cold hit rate", "cold misses", "warm hit rate", "warm misses"],
-    );
-    for ((p, c), (_, w)) in cold.stats.iter().zip(&warm.stats) {
-        s.row(vec![
-            p.clone(),
-            fmt_pct(c.hit_rate()),
-            c.misses().to_string(),
-            fmt_pct(w.hit_rate()),
-            w.misses().to_string(),
-        ]);
-    }
-    println!("{}", s.render());
+    let mid = service.stats();
+    let sweep_row = mid.tenants.iter().find(|t| t.tenant == "batch-sweep");
     println!(
-        "batch wall-clock: cold {} -> warm {} ({} requests, {} platforms)",
-        fmt_time_ms(cold.wall_ms),
-        fmt_time_ms(warm.wall_ms),
-        reqs.len(),
-        platforms.len(),
+        "interactive done; batch-sweep at that moment: {} queued, {} rejected so far\n",
+        sweep_row.map_or(0, |t| t.queued),
+        sweep_row.map_or(0, |t| t.rejected),
     );
+
+    // retry the bounced sweep requests with blocking admission, then
+    // drain the whole sweep
+    for req in retry {
+        sweep_tickets.push(
+            service
+                .submit("batch-sweep", req)
+                .map_err(|e| anyhow::anyhow!("sweep retry failed: {e}"))?,
+        );
+    }
+    let mut sweep_total_ms = 0.0;
+    let n_sweep = sweep_tickets.len();
+    for ticket in sweep_tickets {
+        sweep_total_ms += ticket.wait()?.evaluated_ms;
+    }
+    println!(
+        "batch-sweep drained: {n_sweep} requests, {:.1} ms total estimated network time\n",
+        sweep_total_ms
+    );
+
+    // the instruments: rejected counts, p50/p95 wait & service latency,
+    // per-platform cache hit rates
+    println!("{}", service.stats().render());
+    service.shutdown();
     Ok(())
 }

@@ -255,10 +255,39 @@ pub struct OnboardReport {
     pub wall_ms: f64,
 }
 
+/// What [`Coordinator::recalibrate_platform`] did.
+#[derive(Debug, Clone)]
+pub struct RecalibrationReport {
+    pub platform: String,
+    /// Fresh calibration rows drawn from the target.
+    pub calib_samples: usize,
+    /// The platform's provenance after the refresh.
+    pub provenance: CostProvenance,
+    /// Largest relative change across all refreshed scale factors
+    /// (per-primitive columns and DLT cells),
+    /// `max_j |new_j / old_j - 1|` — how far the platform had drifted
+    /// since the previous calibration.
+    pub max_factor_shift: f64,
+    /// Wall-clock of the refresh (sampling + refit + cache rebuild).
+    pub wall_ms: f64,
+}
+
+/// What a §4.4 transfer-onboarded platform keeps around so its scale
+/// factors can be refreshed in place later: the (untouched) source
+/// model and the target device to draw fresh measurements from.
+struct TransferContext {
+    base: Arc<dyn CostModel + Send + Sync>,
+    target: Arc<dyn CostSource>,
+    current: Arc<FactorCorrected>,
+}
+
 /// One served platform: its shared cache plus where its costs come from.
 struct PlatformEntry {
     cache: Arc<CostCache<'static>>,
     provenance: CostProvenance,
+    /// Present only for transfer-onboarded platforms (enables
+    /// [`Coordinator::recalibrate_platform`]).
+    transfer: Option<TransferContext>,
 }
 
 /// The serving layer: per-platform shared caches plus batch fan-out and
@@ -305,6 +334,14 @@ impl Coordinator {
         Self { platforms: RwLock::new(HashMap::new()) }
     }
 
+    /// An empty coordinator behind an [`Arc`] — the shutdown-safe shared
+    /// handle the serving layer ([`crate::service::Service`]) builds on:
+    /// worker threads hold clones, so the platform caches outlive any
+    /// one service (or batch) and survive service shutdown intact.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
     /// Attach a custom cost source (a persisted table, a measured
     /// profiler…) under `platform`. Replaces any existing cache for that
     /// name, resetting its memoized rows and stats. The platform is
@@ -324,7 +361,7 @@ impl Coordinator {
         source: Arc<dyn CostSource>,
         provenance: CostProvenance,
     ) {
-        self.insert(platform, Arc::new(CostCache::new_shared(source)), provenance);
+        self.insert(platform, Arc::new(CostCache::new_shared(source)), provenance, None);
     }
 
     fn insert(
@@ -332,8 +369,9 @@ impl Coordinator {
         platform: &str,
         cache: Arc<CostCache<'static>>,
         provenance: CostProvenance,
+        transfer: Option<TransferContext>,
     ) {
-        let entry = Arc::new(PlatformEntry { cache, provenance });
+        let entry = Arc::new(PlatformEntry { cache, provenance, transfer });
         self.platforms
             .write()
             .expect("platform map poisoned")
@@ -356,12 +394,21 @@ impl Coordinator {
         let (prim, dlt) = calibration_sample(spec.target.as_ref(), spec.calib_fraction, spec.seed);
         let calib_samples = prim.len();
 
-        let model: Arc<dyn CostModel + Send + Sync> = match spec.mode {
-            OnboardMode::FreshLin => Arc::new(LinCostModel::fit(&prim, &dlt, platform)?),
-            OnboardMode::Transfer(source) => {
-                Arc::new(FactorCorrected::fit(source, &prim, &dlt)?)
-            }
-        };
+        let (model, transfer): (Arc<dyn CostModel + Send + Sync>, Option<TransferContext>) =
+            match spec.mode {
+                OnboardMode::FreshLin => {
+                    (Arc::new(LinCostModel::fit(&prim, &dlt, platform)?), None)
+                }
+                OnboardMode::Transfer(source) => {
+                    let fc = Arc::new(FactorCorrected::fit(Arc::clone(&source), &prim, &dlt)?);
+                    let ctx = TransferContext {
+                        base: source,
+                        target: Arc::clone(&spec.target),
+                        current: Arc::clone(&fc),
+                    };
+                    (fc, Some(ctx))
+                }
+            };
         let model_kind = model.kind().to_string();
         // the long-lived serving cache is built up front so the
         // validation pass below warms it — the first tenant requests for
@@ -397,13 +444,90 @@ impl Coordinator {
 
         let provenance =
             CostProvenance::Predicted { model_kind: model_kind.clone(), calib_samples };
-        self.insert(platform, cache, provenance.clone());
+        self.insert(platform, cache, provenance.clone(), transfer);
         Ok(OnboardReport {
             platform: platform.to_string(),
             model_kind,
             calib_samples,
             provenance,
             validation,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Refresh a transfer-onboarded platform's §4.4 scale factors in
+    /// place from a *fresh* measurement draw — the online-recalibration
+    /// half of the transfer lifecycle: a device whose clocks, thermals
+    /// or firmware drifted since onboarding gets new per-column factors
+    /// without retraining (or even touching) the source model, because
+    /// [`FactorCorrected`] isolates all platform-specific state in the
+    /// factors.
+    ///
+    /// The platform's serving cache is re-registered (a rebuilt
+    /// [`ModeledSource`] cache), dropping every memoized prediction made
+    /// under the stale factors; provenance keeps reporting
+    /// `Predicted { "…+factor", calib_samples }` with the *new* sample
+    /// count. Errors for platforms that are unknown, measured, or
+    /// fresh-Lin-onboarded (nothing to rescale).
+    pub fn recalibrate_platform(
+        &self,
+        platform: &str,
+        calib_fraction: f64,
+        seed: u64,
+    ) -> Result<RecalibrationReport> {
+        let t0 = Instant::now();
+        ensure!(
+            calib_fraction > 0.0 && calib_fraction <= 1.0,
+            "calib_fraction must be in (0, 1], got {calib_fraction}"
+        );
+        let entry = self
+            .platforms
+            .read()
+            .expect("platform map poisoned")
+            .get(platform)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown platform {platform:?}: nothing to recalibrate"))?;
+        let ctx = entry.transfer.as_ref().ok_or_else(|| {
+            anyhow!(
+                "platform {platform:?} is not transfer-onboarded; only §4.4 \
+                 factor-corrected platforms carry recalibratable scale state"
+            )
+        })?;
+
+        let (prim, dlt) = calibration_sample(ctx.target.as_ref(), calib_fraction, seed);
+        let calib_samples = prim.len();
+        let fresh = Arc::new(FactorCorrected::fit(Arc::clone(&ctx.base), &prim, &dlt)?);
+        // drift over BOTH scale surfaces the refresh replaces: primitive
+        // columns and DLT cells (a device can drift in its layout
+        // transforms while per-primitive costs hold steady)
+        let old_dlt = ctx.current.dlt_factors().iter().flatten();
+        let new_dlt = fresh.dlt_factors().iter().flatten();
+        let max_factor_shift = ctx
+            .current
+            .prim_factors()
+            .iter()
+            .zip(fresh.prim_factors())
+            .chain(old_dlt.zip(new_dlt))
+            .filter(|(&old, _)| old > 0.0)
+            .map(|(&old, &new)| (new / old - 1.0).abs())
+            .fold(0.0f64, f64::max);
+
+        let provenance =
+            CostProvenance::Predicted { model_kind: fresh.kind().to_string(), calib_samples };
+        let served: Arc<dyn CostModel + Send + Sync> = Arc::clone(&fresh);
+        let cache: Arc<CostCache<'static>> =
+            Arc::new(CostCache::new_shared(Arc::new(ModeledSource::new(served))));
+        let next_ctx = TransferContext {
+            base: Arc::clone(&ctx.base),
+            target: Arc::clone(&ctx.target),
+            current: fresh,
+        };
+        self.insert(platform, cache, provenance.clone(), Some(next_ctx));
+        Ok(RecalibrationReport {
+            platform: platform.to_string(),
+            calib_samples,
+            provenance,
+            max_factor_shift,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -465,6 +589,7 @@ impl Coordinator {
         let entry = Arc::new(PlatformEntry {
             cache: Arc::new(CostCache::new_shared(Arc::new(Simulator::new(m)))),
             provenance: CostProvenance::Measured,
+            transfer: None,
         });
         let mut map = self.platforms.write().expect("platform map poisoned");
         // a racing resolver may have inserted meanwhile; keep the winner
@@ -483,12 +608,21 @@ impl Coordinator {
         Ok(self.entry(platform)?.provenance.clone())
     }
 
-    /// Solve a single request synchronously on the caller's thread
-    /// (through the platform's shared cache, so it still warms the cache
-    /// for everyone else).
-    pub fn submit(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+    /// The unit of work everything request-shaped funnels through: solve
+    /// one request synchronously on the caller's thread, through the
+    /// platform's shared cache (warming it for everyone else). This is
+    /// what [`Self::submit_batch`]'s fan-out jobs and the serving
+    /// layer's persistent workers
+    /// ([`service::worker`](crate::service)) each call per request.
+    pub fn select_one(&self, req: &SelectionRequest) -> Result<SelectionReport> {
         let entry = self.entry(&req.platform)?;
         solve_one(&entry, req)
+    }
+
+    /// Solve a single request synchronously (alias of
+    /// [`Self::select_one`], kept as the one-off entry point's name).
+    pub fn submit(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        self.select_one(req)
     }
 
     /// Solve a batch of requests concurrently: platforms are resolved up
@@ -674,5 +808,47 @@ mod tests {
         // the built-in measured platform is untouched
         let rep = coord.submit(&SelectionRequest::new(networks::alexnet(), "arm")).unwrap();
         assert_eq!(rep.provenance, CostProvenance::Measured);
+    }
+
+    #[test]
+    fn recalibrate_refreshes_transfer_factors_in_place() {
+        // onboard arm via §4.4 transfer from an intel-trained Lin, then
+        // recalibrate from a fresh (larger, differently-seeded) draw:
+        // provenance tracks the new sample count and serving continues
+        // over the rebuilt cache
+        let coord = Coordinator::new();
+        let intel = Simulator::new(machine::intel_i9_9900k());
+        let (prim, dlt) = calibration_sample(&intel, 0.05, 3);
+        let source: Arc<dyn CostModel + Send + Sync> =
+            Arc::new(LinCostModel::fit(&prim, &dlt, "intel").unwrap());
+        let target: Arc<dyn CostSource> =
+            Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        let onboard = coord
+            .onboard_platform("arm-x", OnboardSpec::transfer(target, source, 0.02, 5))
+            .unwrap();
+        assert_eq!(onboard.model_kind, "lin+factor");
+
+        let recal = coord.recalibrate_platform("arm-x", 0.04, 99).unwrap();
+        assert_eq!(recal.platform, "arm-x");
+        assert!(recal.calib_samples > onboard.calib_samples);
+        assert!(recal.max_factor_shift.is_finite());
+        match &recal.provenance {
+            CostProvenance::Predicted { model_kind, calib_samples } => {
+                assert_eq!(model_kind, "lin+factor");
+                assert_eq!(*calib_samples, recal.calib_samples);
+            }
+            other => panic!("expected predicted provenance, got {other:?}"),
+        }
+        assert_eq!(coord.provenance("arm-x").unwrap(), recal.provenance);
+        let rep =
+            coord.submit(&SelectionRequest::new(networks::alexnet(), "arm-x")).unwrap();
+        assert!(rep.evaluated_ms > 0.0);
+
+        // only transfer-onboarded platforms carry recalibratable state
+        assert!(coord.recalibrate_platform("riscv", 0.02, 1).is_err()); // unknown
+        let t2: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        coord.onboard_platform("arm-lin2", OnboardSpec::fresh_lin(t2, 0.02, 7)).unwrap();
+        assert!(coord.recalibrate_platform("arm-lin2", 0.02, 1).is_err()); // fresh Lin
+        assert!(coord.recalibrate_platform("arm-x", 0.0, 1).is_err()); // bad fraction
     }
 }

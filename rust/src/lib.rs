@@ -32,6 +32,7 @@ pub mod profiler;
 pub mod report;
 pub mod runtime;
 pub mod selection;
+pub mod service;
 pub mod simulator;
 
 /// Crate-wide result alias.

@@ -5,6 +5,8 @@
 //!       regenerate a paper table/figure (results/ gets the CSVs)
 //!   select --network <name> --platform <intel|amd|arm> [--source model|profile]
 //!       run the full Figure-2 pipeline on one network
+//!   serve [--capacity N] [--workers N] [--heavy N] [--light N]
+//!       drive the admission-controlled service with a mixed-tenant workload
 //!   profile [--runs N]
 //!       time the real Pallas kernel artifacts on this host via PJRT
 //!   train --platform <p> --kind <nn1|nn2|dlt_nn1|dlt_nn2>
@@ -31,6 +33,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "exp" => cmd_exp(&flags),
         "select" => cmd_select(&flags),
+        "serve" => cmd_serve(&flags),
         "profile" => cmd_profile(&flags),
         "train" => cmd_train(&flags),
         "networks" => cmd_networks(),
@@ -71,6 +74,8 @@ fn print_usage() {
          commands:\n\
          \x20 exp --id <id|all> [--repeats N] [--max-epochs N]   regenerate paper artefacts\n\
          \x20 select --network <name> --platform <p> [--source model|profile]\n\
+         \x20 serve [--capacity N] [--workers N] [--heavy N] [--light N]\n\
+         \x20                                                    mixed-tenant serving demo\n\
          \x20 profile [--runs N]                                  time real kernels on this host\n\
          \x20 train --platform <p> --kind <kind>                  (re)train a model\n\
          \x20 networks                                            list the network zoo\n\
@@ -147,6 +152,91 @@ fn cmd_select(flags: &HashMap<String, String>) -> Result<()> {
         "estimated: {:.3} ms | measured-on-{platform}: {measured:.3} ms",
         sel.estimated_ms
     );
+    Ok(())
+}
+
+/// Drive the admission-controlled service with a mixed-tenant workload:
+/// a weight-1 "heavy" tenant floods zoo requests through non-blocking
+/// admission (rejections are the backpressure signal), while a weight-4
+/// "light" tenant submits a small interactive batch through blocking
+/// admission. Prints the light tenant's reports, then the full
+/// [`ServiceStats`] — rejected counts and p50/p95 wait included — so a
+/// fairness regression is visible straight from the terminal.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use primsel::coordinator::{Coordinator, SelectionRequest};
+    use primsel::service::{Service, ServiceConfig, SubmitError};
+
+    let get = |key: &str, default: usize| -> Result<usize> {
+        let parsed: Option<usize> = flags.get(key).map(|v| v.parse()).transpose()?;
+        Ok(parsed.unwrap_or(default))
+    };
+    let capacity = get("capacity", 32)?;
+    let workers = get("workers", primsel::par::workers().clamp(2, 8))?;
+    let heavy_n = get("heavy", 48)?;
+    let light_n = get("light", 8)?;
+    if capacity < 1 || workers < 1 {
+        bail!("--capacity and --workers must be at least 1 (got {capacity}, {workers})");
+    }
+
+    let service = Service::new(
+        Coordinator::shared(),
+        ServiceConfig::default().with_capacity(capacity).with_workers(workers),
+    );
+    // unequal weights: the light tenant gets 4 dispatches for each heavy
+    // one while both are backlogged
+    service.register_tenant("heavy", 1.0, workers)?;
+    service.register_tenant("light", 4.0, workers)?;
+
+    let nets = networks::selection_networks();
+    let platforms = ["intel", "amd", "arm"];
+
+    let mut heavy_tickets = Vec::new();
+    for i in 0..heavy_n {
+        let req = SelectionRequest::new(
+            nets[i % nets.len()].clone(),
+            platforms[i % platforms.len()],
+        );
+        match service.try_submit("heavy", req) {
+            Ok(t) => heavy_tickets.push(t),
+            Err(SubmitError::QueueFull) => {} // shed load; counted as rejected
+            Err(e) => bail!("heavy admission failed: {e}"),
+        }
+    }
+    let light_tickets: Vec<_> = (0..light_n)
+        .map(|i| {
+            let req = SelectionRequest::new(
+                nets[i % nets.len()].clone(),
+                platforms[(i + 1) % platforms.len()],
+            );
+            service.submit("light", req)
+        })
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("light admission failed: {e}"))?;
+
+    let mut t = Table::new(
+        "light tenant reports (weighted 4x over the heavy flood)",
+        &["network", "platform", "est time (ms)", "request wall (ms)"],
+    );
+    for ticket in light_tickets {
+        let r = ticket.wait()?;
+        t.row(vec![
+            r.network,
+            r.platform,
+            format!("{:.3}", r.evaluated_ms),
+            format!("{:.3}", r.wall_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "light tenant fully served; heavy backlog still queued: {}",
+        service.stats().tenants.iter().find(|t| t.tenant == "heavy").map_or(0, |t| t.queued)
+    );
+
+    for ticket in heavy_tickets {
+        ticket.wait()?;
+    }
+    println!("{}", service.stats().render());
+    service.shutdown();
     Ok(())
 }
 

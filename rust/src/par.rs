@@ -121,6 +121,63 @@ where
     slots.into_iter().map(|r| r.expect("every index visited")).collect()
 }
 
+/// A long-lived, named worker pool — the persistent counterpart of the
+/// scoped fan-outs above, for services that outlive any one batch (the
+/// admission-controlled serving layer in [`crate::service`]). `n` OS
+/// threads each run `body(worker_index)` until it returns; unlike the
+/// scoped helpers, the body must be `'static` (share state via `Arc`)
+/// and the threads are joined explicitly with [`Pool::join`].
+///
+/// The pool itself has no queue or shutdown channel: the body is
+/// expected to loop on some shared work source (e.g.
+/// [`AdmissionQueue::pop`](crate::service::queue::AdmissionQueue::pop))
+/// and return when that source reports closed-and-drained. That keeps
+/// this primitive rayon-swappable too — under a real rayon dependency
+/// these become `ThreadPoolBuilder` threads.
+pub struct Pool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `n` named threads (`<name>-0` … `<name>-{n-1}`), each
+    /// running `body(worker_index)` to completion.
+    pub fn spawn<F>(n: usize, name: &str, body: F) -> Pool
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let body = std::sync::Arc::new(body);
+        let handles = (0..n)
+            .map(|i| {
+                let body = std::sync::Arc::clone(&body);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || body(i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Pool { handles }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Whether the pool has no workers.
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Wait for every worker's body to return. Panics if a worker
+    /// panicked (the service layer treats a dead worker as a bug, not a
+    /// recoverable condition).
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().expect("pool worker panicked");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +213,22 @@ mod tests {
         let empty: [u64; 0] = [];
         assert!(par_map_heavy(&empty, |x| *x).is_empty());
         assert_eq!(par_map_heavy(&[7u64], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn pool_runs_every_worker_and_joins() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hits);
+        let pool = Pool::spawn(4, "test-pool", move |i| {
+            h.fetch_add(1 << (8 * i), Ordering::SeqCst);
+        });
+        assert_eq!(pool.len(), 4);
+        assert!(!pool.is_empty());
+        pool.join();
+        // each worker index ran exactly once
+        assert_eq!(hits.load(Ordering::SeqCst), 0x01010101);
     }
 
     #[test]

@@ -387,6 +387,12 @@ impl FactorCorrected {
     pub fn prim_factors(&self) -> &[f64] {
         &self.prim_factors
     }
+
+    /// The per-DLT-cell correction factors (row-major src x dst;
+    /// diagonal fixed at 1.0, unused).
+    pub fn dlt_factors(&self) -> &[[f64; 3]; 3] {
+        &self.dlt_factors
+    }
 }
 
 impl CostModel for FactorCorrected {

@@ -179,23 +179,51 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Raw (normalised-space) predictions for all rows in `b`.
+    ///
+    /// The per-chunk state is staged once and reused: the parameter
+    /// literals are built a single time (not re-converted per chunk),
+    /// and each distinct predict batch size gets one padded input
+    /// buffer that rows are written into in place — no per-chunk
+    /// allocation on the batched-predict hot path.
     pub fn predict_normalised(&self, params: &ParamStore, b: &Batches) -> Result<Vec<f32>> {
         let (b_small, b_large) = self.rt.manifest.predict_batches;
         let total = b.n_batches * b.batch;
         let mut out = vec![0.0f32; total * b.out_dim];
+
+        // params are chunk-invariant: convert to literals exactly once
+        // and truncate the tail back between executions
+        let mut inputs = Vec::new();
+        params.push_literals(&mut inputs)?;
+        let n_param_inputs = inputs.len();
+        // (batch size, executable, reusable padded input buffer) — at
+        // most two entries (the small and large predict artifacts)
+        let mut staged: Vec<(usize, std::rc::Rc<xla::PjRtLoadedExecutable>, Vec<f32>)> =
+            Vec::with_capacity(2);
+
         let mut row = 0usize;
         while row < total {
             let remaining = total - row;
             let bsz = if remaining >= b_large { b_large } else { b_small };
-            let exe = self.rt.load(&self.spec.files[&format!("predict_b{bsz}")])?;
+            let si = match staged.iter().position(|(s, _, _)| *s == bsz) {
+                Some(i) => i,
+                None => {
+                    let exe = self.rt.load(&self.spec.files[&format!("predict_b{bsz}")])?;
+                    staged.push((bsz, exe, vec![0.0f32; bsz * b.in_dim]));
+                    staged.len() - 1
+                }
+            };
             let n_rows = bsz.min(remaining);
-            let mut x = vec![0.0f32; bsz * b.in_dim];
+            let x = &mut staged[si].2;
             x[..n_rows * b.in_dim]
                 .copy_from_slice(&b.x[row * b.in_dim..(row + n_rows) * b.in_dim]);
-            let mut inputs = Vec::new();
-            params.push_literals(&mut inputs)?;
-            inputs.push(literal_f32(&x, &[bsz as i64, b.in_dim as i64])?);
-            let res = self.rt.execute(&exe, &inputs)?;
+            if n_rows < bsz {
+                // only the final short chunk pads; keep the padding
+                // deterministic rather than leaking earlier rows
+                x[n_rows * b.in_dim..].fill(0.0);
+            }
+            inputs.truncate(n_param_inputs);
+            inputs.push(literal_f32(&staged[si].2, &[bsz as i64, b.in_dim as i64])?);
+            let res = self.rt.execute(&staged[si].1, &inputs)?;
             let y = to_f32_vec(&res[0])?;
             out[row * b.out_dim..(row + n_rows) * b.out_dim]
                 .copy_from_slice(&y[..n_rows * b.out_dim]);

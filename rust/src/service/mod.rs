@@ -1,0 +1,415 @@
+//! # The admission-controlled serving layer
+//!
+//! [`Coordinator::submit_batch`](crate::coordinator::Coordinator::submit_batch)
+//! is a synchronous fan-out: the caller owns the batch, the batch owns
+//! the threads, and one tenant's thousand-request sweep monopolises the
+//! process while everyone else waits. This module is the traffic-shaped
+//! alternative — a [`Service`] in front of the coordinator that admits,
+//! schedules and serves requests from *many* tenants concurrently and
+//! continuously:
+//!
+//! ```text
+//!   tenants ── submit / try_submit ──► AdmissionQueue (bounded, per-
+//!      ▲        (Ticket out,            tenant lanes; QueueFull /
+//!      │         QueueFull back)        blocking + deadline)
+//!      │                                      │ DrrScheduler picks
+//!      │                                      ▼ (weights, inflight caps)
+//!   Ticket::wait/poll ◄── fulfil ── worker pool (par::Pool, persistent)
+//!                                             │ Coordinator::select_one
+//!                                             ▼
+//!                               per-platform shared CostCaches
+//! ```
+//!
+//! The module split mirrors the pipeline: [`queue`] is the bounded
+//! MPMC admission mechanism, [`sched`] the deficit-weighted round-robin
+//! fairness policy, [`worker`] the persistent drain loop, [`stats`] the
+//! instruments ([`ServiceStats`]). Three properties the test suite
+//! (`rust/tests/service.rs`) pins:
+//!
+//! * **Transparency** — served reports are bit-identical to calling
+//!   `submit_batch` with the same requests: the service reshapes *when*
+//!   work runs, never *what* it computes.
+//! * **Backpressure** — at capacity, [`Service::try_submit`] refuses
+//!   with [`SubmitError::QueueFull`] instead of buffering without
+//!   bound; blocked [`Service::submit`] calls wake as workers drain.
+//! * **Fairness** — a flood from one tenant cannot starve another:
+//!   dispatch order follows tenant weights (deficit round robin), so a
+//!   weighted interactive tenant's requests complete while a batch
+//!   tenant's backlog is still queued.
+
+pub mod queue;
+pub mod sched;
+pub mod stats;
+mod ticket;
+pub mod worker;
+
+pub use queue::SubmitError;
+pub use stats::{HistogramSnapshot, LatencyHistogram, ServiceStats, TenantStats};
+pub use ticket::Ticket;
+
+use crate::coordinator::{Coordinator, SelectionRequest};
+use crate::par;
+use crate::selection::CacheStats;
+use queue::AdmissionQueue;
+use sched::DrrScheduler;
+use stats::TenantCounters;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+use worker::Job;
+
+/// How a [`Service`] is shaped: admission bound, pool size, and the
+/// defaults for tenants that are not explicitly registered.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Max admitted-but-undispatched requests across all tenants; at
+    /// this bound `try_submit` rejects and `submit` blocks.
+    pub capacity: usize,
+    /// Persistent worker threads draining the scheduler.
+    pub workers: usize,
+    /// Scheduling weight for tenants first seen via `submit`.
+    pub default_weight: f64,
+    /// Max concurrently-served requests for tenants first seen via
+    /// `submit` (caps how much of the pool one tenant can occupy).
+    pub default_max_inflight: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 256,
+            workers: par::workers().clamp(2, 8),
+            default_weight: 1.0,
+            default_max_inflight: usize::MAX,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Override the admission capacity (builder style).
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    /// Override the worker-pool size (builder style).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Override the defaults applied to auto-registered tenants
+    /// (builder style).
+    pub fn with_tenant_defaults(mut self, weight: f64, max_inflight: usize) -> Self {
+        self.default_weight = weight;
+        self.default_max_inflight = max_inflight;
+        self
+    }
+}
+
+/// One tenant's identity + counters, shared between submitters, workers
+/// and stats readers.
+pub(crate) struct TenantMeta {
+    name: String,
+    weight: f64,
+    pub(crate) counters: TenantCounters,
+}
+
+#[derive(Default)]
+struct TenantTable {
+    metas: Vec<Arc<TenantMeta>>,
+    by_name: HashMap<String, usize>,
+}
+
+/// Everything the worker pool shares with the service front door.
+pub(crate) struct ServiceShared {
+    pub(crate) queue: AdmissionQueue<Job, DrrScheduler>,
+    pub(crate) coord: Arc<Coordinator>,
+    tenants: RwLock<TenantTable>,
+    pub(crate) wait: LatencyHistogram,
+    pub(crate) service: LatencyHistogram,
+    /// Per-platform cache counters at service start; stats() reports
+    /// deltas against this.
+    baseline: Vec<(String, CacheStats)>,
+}
+
+impl ServiceShared {
+    pub(crate) fn tenant_meta(&self, id: usize) -> Arc<TenantMeta> {
+        Arc::clone(&self.tenants.read().expect("tenant table poisoned").metas[id])
+    }
+}
+
+/// The admission-controlled serving layer over a shared
+/// [`Coordinator`]. See the module docs for the architecture.
+///
+/// Dropping the service performs a clean shutdown: admission closes,
+/// workers drain every already-admitted request (fulfilling its
+/// [`Ticket`]), and the pool is joined. Use [`Service::shutdown`] to do
+/// this explicitly.
+///
+/// ```
+/// use primsel::coordinator::{Coordinator, SelectionRequest};
+/// use primsel::service::{Service, ServiceConfig};
+/// use primsel::networks;
+///
+/// let service = Service::new(
+///     Coordinator::shared(),
+///     ServiceConfig::default().with_capacity(16).with_workers(2),
+/// );
+/// // two tenants submit concurrently-served requests and get tickets
+/// let a = service
+///     .submit("interactive", SelectionRequest::new(networks::alexnet(), "intel"))
+///     .unwrap();
+/// let b = service
+///     .submit("batch", SelectionRequest::new(networks::vgg(11), "arm"))
+///     .unwrap();
+/// let report = a.wait().unwrap();
+/// assert_eq!(report.network, "alexnet");
+/// assert!(b.wait().unwrap().evaluated_ms > 0.0);
+/// let stats = service.stats();
+/// assert_eq!(stats.tenants.len(), 2);
+/// assert_eq!(stats.tenants.iter().map(|t| t.served).sum::<u64>(), 2);
+/// service.shutdown();
+/// ```
+pub struct Service {
+    shared: Arc<ServiceShared>,
+    pool: Option<par::Pool>,
+    workers: usize,
+    default_weight: f64,
+    default_max_inflight: usize,
+}
+
+impl Service {
+    /// Start a service over `coord`: build the admission queue and spawn
+    /// the persistent worker pool. The coordinator handle is shared —
+    /// synchronous `submit_batch` callers and the service can coexist on
+    /// the same platform caches, and the coordinator outlives service
+    /// shutdown.
+    pub fn new(coord: Arc<Coordinator>, config: ServiceConfig) -> Service {
+        assert!(config.workers >= 1, "a service needs at least one worker");
+        // validate the auto-registration defaults now: failing later,
+        // inside the first submit's tenant registration, would poison
+        // the tenant table instead of pointing at the bad config
+        assert!(
+            config.default_weight.is_finite() && config.default_weight > 0.0,
+            "default tenant weight must be positive, got {}",
+            config.default_weight
+        );
+        let shared = Arc::new(ServiceShared {
+            queue: AdmissionQueue::new(config.capacity, DrrScheduler::new()),
+            baseline: coord.cache_stats(),
+            coord,
+            tenants: RwLock::new(TenantTable::default()),
+            wait: LatencyHistogram::new(),
+            service: LatencyHistogram::new(),
+        });
+        let pool = worker::spawn(&shared, config.workers);
+        Service {
+            shared,
+            pool: Some(pool),
+            workers: config.workers,
+            default_weight: config.default_weight,
+            default_max_inflight: config.default_max_inflight,
+        }
+    }
+
+    /// Register `name` with an explicit scheduling weight and
+    /// max-inflight cap. Errors if the tenant already exists (weights
+    /// are fixed at registration — re-weighting live lanes would make
+    /// past fairness unauditable).
+    pub fn register_tenant(
+        &self,
+        name: &str,
+        weight: f64,
+        max_inflight: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "tenant weight must be positive, got {weight}"
+        );
+        let mut table = self.shared.tenants.write().expect("tenant table poisoned");
+        anyhow::ensure!(
+            !table.by_name.contains_key(name),
+            "tenant {name:?} is already registered"
+        );
+        self.insert_tenant(&mut table, name, weight, max_inflight);
+        Ok(())
+    }
+
+    /// The one place a tenant lane comes into being: keeps the dense-id
+    /// invariant (queue lane index == metas index == by_name value) in a
+    /// single code path. Caller holds the table write lock.
+    fn insert_tenant(
+        &self,
+        table: &mut TenantTable,
+        name: &str,
+        weight: f64,
+        max_inflight: usize,
+    ) -> usize {
+        let id = self.shared.queue.add_tenant(weight, max_inflight);
+        debug_assert_eq!(id, table.metas.len());
+        table.metas.push(Arc::new(TenantMeta {
+            name: name.to_string(),
+            weight,
+            counters: TenantCounters::default(),
+        }));
+        table.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Resolve (or auto-register with the config defaults) a tenant id.
+    fn tenant_id(&self, name: &str) -> usize {
+        if let Some(&id) = self
+            .shared
+            .tenants
+            .read()
+            .expect("tenant table poisoned")
+            .by_name
+            .get(name)
+        {
+            return id;
+        }
+        let mut table = self.shared.tenants.write().expect("tenant table poisoned");
+        if let Some(&id) = table.by_name.get(name) {
+            return id; // raced another registrar; keep the winner
+        }
+        self.insert_tenant(&mut table, name, self.default_weight, self.default_max_inflight)
+    }
+
+    fn admit(
+        &self,
+        tenant: &str,
+        req: SelectionRequest,
+        mode: AdmitMode,
+    ) -> Result<Ticket, SubmitError> {
+        let id = self.tenant_id(tenant);
+        let meta = self.shared.tenant_meta(id);
+        let (ticket, cell) = Ticket::pending();
+        let job = Job { req, admitted_at: Instant::now(), cell };
+        let outcome = match mode {
+            AdmitMode::Try => self.shared.queue.try_push(id, job),
+            AdmitMode::Block => self.shared.queue.push(id, job, None),
+            AdmitMode::Deadline(d) => self.shared.queue.push(id, job, Some(d)),
+        };
+        match outcome {
+            Ok(()) => {
+                meta.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(ticket)
+            }
+            Err(e) => {
+                // only backpressure counts as rejected (that's what the
+                // counter documents); Closed is lifecycle, not load
+                if matches!(e, SubmitError::QueueFull | SubmitError::Timeout) {
+                    meta.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Admit one request, blocking while the queue is at capacity.
+    /// Returns the request's [`Ticket`]; a request whose platform is
+    /// unknown (or whose selection fails) is still admitted and served —
+    /// the error comes back through [`Ticket::wait`].
+    pub fn submit(&self, tenant: &str, req: SelectionRequest) -> Result<Ticket, SubmitError> {
+        self.admit(tenant, req, AdmitMode::Block)
+    }
+
+    /// [`Self::submit`] with an admission deadline: blocks at most
+    /// `deadline`, then fails with [`SubmitError::Timeout`].
+    pub fn submit_deadline(
+        &self,
+        tenant: &str,
+        req: SelectionRequest,
+        deadline: Duration,
+    ) -> Result<Ticket, SubmitError> {
+        self.admit(tenant, req, AdmitMode::Deadline(deadline))
+    }
+
+    /// Non-blocking admission: at capacity, fail *now* with
+    /// [`SubmitError::QueueFull`] — the backpressure signal.
+    pub fn try_submit(&self, tenant: &str, req: SelectionRequest) -> Result<Ticket, SubmitError> {
+        self.admit(tenant, req, AdmitMode::Try)
+    }
+
+    /// The coordinator this service serves from.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.shared.coord
+    }
+
+    /// A point-in-time [`ServiceStats`] snapshot.
+    pub fn stats(&self) -> ServiceStats {
+        let lanes = self.shared.queue.lane_snapshot();
+        let table = self.shared.tenants.read().expect("tenant table poisoned");
+        let tenants = table
+            .metas
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let (queued, inflight) = lanes.get(i).copied().unwrap_or((0, 0));
+                TenantStats {
+                    tenant: m.name.clone(),
+                    weight: m.weight,
+                    admitted: m.counters.admitted.load(Ordering::Relaxed),
+                    rejected: m.counters.rejected.load(Ordering::Relaxed),
+                    served: m.counters.served.load(Ordering::Relaxed),
+                    queued,
+                    inflight,
+                }
+            })
+            .collect();
+        drop(table);
+        let platforms = self
+            .shared
+            .coord
+            .cache_stats()
+            .into_iter()
+            .map(|(name, s)| {
+                let before = self
+                    .shared
+                    .baseline
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, b)| *b)
+                    .unwrap_or_default();
+                (name, s.since(&before))
+            })
+            .collect();
+        ServiceStats {
+            queue_depth: self.shared.queue.depth(),
+            capacity: self.shared.queue.capacity(),
+            workers: self.workers,
+            tenants,
+            wait: self.shared.wait.snapshot(),
+            service: self.shared.service.snapshot(),
+            platforms,
+        }
+    }
+
+    /// Clean shutdown: close admission, drain every already-admitted
+    /// request (each ticket is fulfilled), join the pool. Idempotent
+    /// with the `Drop` impl.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.queue.close();
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+enum AdmitMode {
+    Try,
+    Block,
+    Deadline(Duration),
+}

@@ -1,0 +1,381 @@
+//! The bounded MPMC admission queue: per-tenant lanes behind one
+//! `Mutex` + two `Condvar`s, with a *global* capacity bound over all
+//! queued (admitted, not yet dispatched) items.
+//!
+//! This is the mechanism half of admission control — locks, lanes,
+//! blocking and backpressure; *which* lane a worker serves next is
+//! delegated to a [`Scheduler`](super::sched::Scheduler) consulted under
+//! the same lock, so admission, scheduling and inflight accounting can
+//! never race each other.
+//!
+//! Semantics:
+//!
+//! * [`AdmissionQueue::try_push`] never blocks: at capacity it returns
+//!   [`SubmitError::QueueFull`] — the backpressure signal a tenant can
+//!   react to (shed load, retry later, route elsewhere).
+//! * [`AdmissionQueue::push`] blocks while full (optionally up to a
+//!   deadline, then [`SubmitError::Timeout`]), waking when a worker pop
+//!   frees a slot.
+//! * [`AdmissionQueue::pop`] blocks until the scheduler yields an
+//!   eligible item, and returns `None` only when the queue is closed
+//!   *and* fully drained — so closing is graceful by construction:
+//!   admission stops immediately, workers finish everything already
+//!   admitted.
+//! * [`AdmissionQueue::complete`] returns a tenant's inflight slot and
+//!   wakes poppers (a freed slot can make a capped tenant eligible
+//!   again).
+//!
+//! Liveness: every backlogged lane is eligible once its inflight count
+//! is under the cap, and caps are floored at 1 — so "queued but nobody
+//! eligible" implies some request is inflight, whose completion will
+//! wake the waiters. There is no state where items are queued and no
+//! wake-up is pending.
+
+use super::sched::Scheduler;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Why an admission attempt did not enqueue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at capacity (only from non-blocking admission).
+    QueueFull,
+    /// The queue stayed at capacity past the caller's deadline.
+    Timeout,
+    /// The service is shutting down; no new work is admitted.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::Timeout => write!(f, "admission deadline exceeded while queue full"),
+            SubmitError::Closed => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct Inner<T, S> {
+    /// One FIFO lane per tenant, indexed by tenant id.
+    lanes: Vec<VecDeque<T>>,
+    /// Total queued items across lanes (≤ capacity).
+    len: usize,
+    closed: bool,
+    sched: S,
+    /// Scratch for the per-pick backlog snapshot, reused across pops so
+    /// the hot path never allocates under the queue lock.
+    backlog: Vec<usize>,
+}
+
+/// Bounded multi-tenant MPMC queue; see the module docs for semantics.
+pub struct AdmissionQueue<T, S: Scheduler> {
+    inner: Mutex<Inner<T, S>>,
+    /// Producers wait here while at capacity.
+    not_full: Condvar,
+    /// Workers wait here while nothing is eligible.
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T, S: Scheduler> AdmissionQueue<T, S> {
+    pub fn new(capacity: usize, sched: S) -> Self {
+        assert!(capacity >= 1, "admission queue capacity must be >= 1");
+        Self {
+            inner: Mutex::new(Inner {
+                lanes: Vec::new(),
+                len: 0,
+                closed: false,
+                sched,
+                backlog: Vec::new(),
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<T, S>> {
+        self.inner.lock().expect("admission queue poisoned")
+    }
+
+    /// Register the next tenant lane; returns its id. Lane ids are dense
+    /// and stable (lanes are never removed).
+    pub fn add_tenant(&self, weight: f64, max_inflight: usize) -> usize {
+        let mut inner = self.lock();
+        inner.lanes.push(VecDeque::new());
+        inner.sched.add_tenant(weight, max_inflight);
+        inner.lanes.len() - 1
+    }
+
+    /// Total queued (admitted, not yet dispatched) items — the
+    /// admission-control bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current queue depth across all lanes.
+    pub fn depth(&self) -> usize {
+        self.lock().len
+    }
+
+    /// Per-tenant `(queued, inflight)` snapshot, indexed by tenant id.
+    pub fn lane_snapshot(&self) -> Vec<(usize, usize)> {
+        let inner = self.lock();
+        (0..inner.lanes.len())
+            .map(|i| (inner.lanes[i].len(), inner.sched.inflight(i)))
+            .collect()
+    }
+
+    /// Non-blocking admission: enqueue or fail *now*.
+    pub fn try_push(&self, tenant: usize, item: T) -> Result<(), SubmitError> {
+        let mut inner = self.lock();
+        if inner.closed {
+            return Err(SubmitError::Closed);
+        }
+        if inner.len >= self.capacity {
+            return Err(SubmitError::QueueFull);
+        }
+        inner.lanes[tenant].push_back(item);
+        inner.len += 1;
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking admission: wait while at capacity, up to `deadline` from
+    /// now if given (then [`SubmitError::Timeout`]).
+    pub fn push(
+        &self,
+        tenant: usize,
+        item: T,
+        deadline: Option<Duration>,
+    ) -> Result<(), SubmitError> {
+        let start = Instant::now();
+        let mut inner = self.lock();
+        loop {
+            if inner.closed {
+                return Err(SubmitError::Closed);
+            }
+            if inner.len < self.capacity {
+                inner.lanes[tenant].push_back(item);
+                inner.len += 1;
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = match deadline {
+                None => self.not_full.wait(inner).expect("admission queue poisoned"),
+                Some(d) => {
+                    let elapsed = start.elapsed();
+                    if elapsed >= d {
+                        return Err(SubmitError::Timeout);
+                    }
+                    // re-check on every wake: a wait_timeout that reports
+                    // timed_out may still find a freed slot (and spurious
+                    // wakes may not)
+                    self.not_full
+                        .wait_timeout(inner, d - elapsed)
+                        .expect("admission queue poisoned")
+                        .0
+                }
+            };
+        }
+    }
+
+    /// Worker side: block until the scheduler yields an eligible item,
+    /// mark it dispatched (pair with [`Self::complete`]), and return it
+    /// with its tenant id. Returns `None` once the queue is closed and
+    /// every lane is drained.
+    pub fn pop(&self) -> Option<(usize, T)> {
+        let mut guard = self.lock();
+        loop {
+            {
+                // split the guard once so the scratch buffer and the
+                // scheduler can be borrowed as disjoint fields
+                let inner = &mut *guard;
+                inner.backlog.clear();
+                for lane in &inner.lanes {
+                    inner.backlog.push(lane.len());
+                }
+                if let Some(t) = inner.sched.pick(&inner.backlog) {
+                    let item =
+                        inner.lanes[t].pop_front().expect("scheduler picked an empty lane");
+                    inner.len -= 1;
+                    inner.sched.on_dispatch(t);
+                    drop(guard);
+                    self.not_full.notify_one();
+                    return Some((t, item));
+                }
+                if inner.closed && inner.len == 0 {
+                    return None;
+                }
+            }
+            guard = self.not_empty.wait(guard).expect("admission queue poisoned");
+        }
+    }
+
+    /// A dispatched item finished; frees the tenant's inflight slot.
+    pub fn complete(&self, tenant: usize) {
+        let mut inner = self.lock();
+        inner.sched.on_complete(tenant);
+        drop(inner);
+        // a freed slot can make a capped tenant schedulable again, and
+        // several workers may be waiting on different lanes
+        self.not_empty.notify_all();
+    }
+
+    /// Stop admitting; pending pushes fail with [`SubmitError::Closed`],
+    /// workers drain what was already admitted and then see `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Whether [`Self::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::DrrScheduler;
+    use super::*;
+    use std::sync::Arc;
+
+    fn queue(capacity: usize, tenants: usize) -> Arc<AdmissionQueue<u32, DrrScheduler>> {
+        let q = Arc::new(AdmissionQueue::new(capacity, DrrScheduler::new()));
+        for _ in 0..tenants {
+            q.add_tenant(1.0, usize::MAX);
+        }
+        q
+    }
+
+    #[test]
+    fn try_push_full_then_pop_frees_a_slot() {
+        let q = queue(2, 1);
+        q.try_push(0, 1).unwrap();
+        q.try_push(0, 2).unwrap();
+        assert_eq!(q.try_push(0, 3), Err(SubmitError::QueueFull));
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop(), Some((0, 1)));
+        q.try_push(0, 3).unwrap();
+        assert_eq!(q.pop(), Some((0, 2)));
+        assert_eq!(q.pop(), Some((0, 3)));
+        assert_eq!(q.lane_snapshot(), vec![(0, 3)]); // three never completed
+        q.complete(0);
+        q.complete(0);
+        q.complete(0);
+        assert_eq!(q.lane_snapshot(), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_drain() {
+        let q = queue(1, 1);
+        q.try_push(0, 1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push(0, 2, None));
+        // let the pusher reach its wait, then free the slot
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.depth(), 1, "pusher must be blocked, not queued");
+        assert_eq!(q.pop(), Some((0, 1)));
+        pusher.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some((0, 2)));
+    }
+
+    #[test]
+    fn push_deadline_times_out_while_full() {
+        let q = queue(1, 1);
+        q.try_push(0, 1).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(
+            q.push(0, 2, Some(Duration::from_millis(40))),
+            Err(SubmitError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_drains_pops() {
+        let q = queue(4, 2);
+        q.try_push(0, 10).unwrap();
+        q.try_push(1, 20).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.try_push(0, 30), Err(SubmitError::Closed));
+        assert_eq!(q.push(0, 30, None), Err(SubmitError::Closed));
+        // both queued items still drain, then None
+        let mut drained: Vec<u32> = Vec::new();
+        while let Some((t, v)) = q.pop() {
+            drained.push(v);
+            q.complete(t);
+        }
+        drained.sort_unstable();
+        assert_eq!(drained, vec![10, 20]);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_blocks_until_inflight_slot_frees() {
+        // cap the single tenant at 1 inflight
+        let q = Arc::new(AdmissionQueue::new(4, DrrScheduler::new()));
+        q.add_tenant(1.0, 1);
+        q.try_push(0, 1).unwrap();
+        q.try_push(0, 2).unwrap();
+        let (t, v) = q.pop().unwrap();
+        assert_eq!((t, v), (0, 1));
+        // second pop must wait for complete(0)
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        q.complete(0);
+        assert_eq!(popper.join().unwrap(), Some((0, 2)));
+        q.complete(0);
+    }
+
+    #[test]
+    fn concurrent_producers_and_workers_preserve_items() {
+        let q = queue(8, 4);
+        let total = 400u32;
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some((t, v)) = q.pop() {
+                        got.push(v);
+                        q.complete(t);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4u32)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..total / 4 {
+                        q.push(p as usize, p * 1000 + i, None).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = workers
+            .into_iter()
+            .flat_map(|w| w.join().unwrap())
+            .collect();
+        assert_eq!(all.len(), total as usize);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total as usize, "every item delivered exactly once");
+    }
+}

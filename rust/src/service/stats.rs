@@ -1,0 +1,281 @@
+//! Serving observability: per-tenant admission counters, wait/service
+//! latency histograms, and the [`ServiceStats`] snapshot a serving
+//! process prints — the instruments that make a fairness regression or
+//! a backpressure storm visible without a debugger.
+
+use crate::report::Table;
+use crate::selection::CacheStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets: 4 per doubling from 1 µs, covering
+/// ~1 µs to ~10 min with ≤ ~19% bucket resolution — plenty for p50/p95
+/// of a serving path whose requests span µs (warm table hits) to
+/// seconds (cold profiling sweeps).
+pub const N_BUCKETS: usize = 120;
+const BUCKETS_PER_DOUBLING: f64 = 4.0;
+
+/// A lock-free, fixed-bucket latency histogram (relaxed atomics, like
+/// [`CacheStats`]'s counters: approximate under concurrency, exact
+/// enough for reporting).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // floor(log2(us) * 4): sub-µs measurements land in bucket 0
+        let idx = ((us.max(1) as f64).log2() * BUCKETS_PER_DOUBLING).floor() as usize;
+        idx.min(N_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket, in milliseconds.
+    fn bucket_mid_ms(idx: usize) -> f64 {
+        let lo = (idx as f64 / BUCKETS_PER_DOUBLING).exp2();
+        let hi = ((idx + 1) as f64 / BUCKETS_PER_DOUBLING).exp2();
+        (lo * hi).sqrt() / 1e3
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough copy of the counters for reporting.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        let quantile = |q: f64| -> f64 {
+            if count == 0 {
+                return 0.0;
+            }
+            let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+            let mut seen = 0u64;
+            for (i, &b) in buckets.iter().enumerate() {
+                seen += b;
+                if seen >= rank {
+                    return Self::bucket_mid_ms(i);
+                }
+            }
+            Self::bucket_mid_ms(N_BUCKETS - 1)
+        };
+        let (p50_ms, p95_ms) = (quantile(0.50), quantile(0.95));
+        let sum_us = self.sum_us.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            mean_ms: if count == 0 { 0.0 } else { sum_us as f64 / count as f64 / 1e3 },
+            p50_ms,
+            p95_ms,
+            max_ms: self.max_us.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+/// Point-in-time summary of one [`LatencyHistogram`]. Quantiles are
+/// bucket-resolution estimates (≤ ~19% relative error by construction).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Monotonic per-tenant admission counters (worker/submitter side).
+#[derive(Default)]
+pub(crate) struct TenantCounters {
+    pub(crate) admitted: AtomicU64,
+    pub(crate) rejected: AtomicU64,
+    pub(crate) served: AtomicU64,
+}
+
+/// One tenant's row in a [`ServiceStats`] snapshot.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub weight: f64,
+    /// Requests that passed admission control (lifetime).
+    pub admitted: u64,
+    /// Requests bounced by backpressure — `QueueFull` or a blown
+    /// admission deadline (lifetime).
+    pub rejected: u64,
+    /// Requests fully served (lifetime).
+    pub served: u64,
+    /// Currently queued (admitted, not yet dispatched).
+    pub queued: usize,
+    /// Currently being served by workers.
+    pub inflight: usize,
+}
+
+/// What [`Service::stats`](super::Service::stats) returns: the live
+/// queue/tenant picture, latency summaries, and per-platform cache
+/// deltas accumulated since the service started.
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    /// Admitted-but-undispatched requests right now, across tenants.
+    pub queue_depth: usize,
+    /// The admission bound `queue_depth` is capped at.
+    pub capacity: usize,
+    /// Worker threads draining the scheduler.
+    pub workers: usize,
+    pub tenants: Vec<TenantStats>,
+    /// Admission → dispatch latency (time spent queued).
+    pub wait: HistogramSnapshot,
+    /// Dispatch → fulfilment latency (time inside a worker).
+    pub service: HistogramSnapshot,
+    /// Per-platform cache hit/miss deltas over the service's lifetime,
+    /// sorted by platform name (merged across all tenants' traffic —
+    /// and any direct coordinator traffic sharing those caches).
+    pub platforms: Vec<(String, CacheStats)>,
+}
+
+impl ServiceStats {
+    /// Render the snapshot as ASCII tables (what the `serve` subcommand
+    /// and `serve_zoo` example print).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "service stats — queue {}/{} ({} workers)",
+                self.queue_depth, self.capacity, self.workers
+            ),
+            &["tenant", "weight", "admitted", "rejected", "served", "queued", "inflight"],
+        );
+        for ts in &self.tenants {
+            t.row(vec![
+                ts.tenant.clone(),
+                format!("{:.1}", ts.weight),
+                ts.admitted.to_string(),
+                ts.rejected.to_string(),
+                ts.served.to_string(),
+                ts.queued.to_string(),
+                ts.inflight.to_string(),
+            ]);
+        }
+        let mut lat = Table::new(
+            "latency (ms)",
+            &["phase", "count", "mean", "p50", "p95", "max"],
+        );
+        for (name, h) in [("wait", &self.wait), ("service", &self.service)] {
+            lat.row(vec![
+                name.to_string(),
+                h.count.to_string(),
+                format!("{:.3}", h.mean_ms),
+                format!("{:.3}", h.p50_ms),
+                format!("{:.3}", h.p95_ms),
+                format!("{:.3}", h.max_ms),
+            ]);
+        }
+        let mut cache = Table::new(
+            "per-platform cache deltas (service lifetime)",
+            &["platform", "hits", "misses", "hit rate"],
+        );
+        for (p, s) in &self.platforms {
+            cache.row(vec![
+                p.clone(),
+                s.hits().to_string(),
+                s.misses().to_string(),
+                crate::report::fmt_pct(s.hit_rate()),
+            ]);
+        }
+        format!("{}\n{}\n{}", t.render(), lat.render(), cache.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_snapshots_to_zeros() {
+        let h = LatencyHistogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.p95_ms, 0.0);
+        assert_eq!(s.mean_ms, 0.0);
+        assert_eq!(s.max_ms, 0.0);
+    }
+
+    #[test]
+    fn quantiles_track_recorded_latencies() {
+        let h = LatencyHistogram::new();
+        // 95 fast samples at ~1 ms, 5 slow at ~100 ms
+        for _ in 0..95 {
+            h.record(Duration::from_millis(1));
+        }
+        for _ in 0..5 {
+            h.record(Duration::from_millis(100));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        // bucket resolution is ~19%, so compare with generous factors
+        assert!(s.p50_ms > 0.5 && s.p50_ms < 2.0, "p50 {}", s.p50_ms);
+        assert!(s.p95_ms > 0.5 && s.p95_ms < 2.0, "p95 {} (95th is still fast)", s.p95_ms);
+        assert!(s.max_ms >= 99.0, "max {}", s.max_ms);
+        assert!(s.mean_ms > 4.0 && s.mean_ms < 8.0, "mean {}", s.mean_ms);
+        // one more slow sample pushes p95 into the slow mode
+        for _ in 0..10 {
+            h.record(Duration::from_millis(100));
+        }
+        let s = h.snapshot();
+        assert!(s.p95_ms > 50.0, "p95 {}", s.p95_ms);
+    }
+
+    #[test]
+    fn bucket_mapping_is_monotonic_and_bounded() {
+        let mut last = 0;
+        for us in [0u64, 1, 2, 3, 7, 100, 1_000, 1_000_000, u64::MAX] {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= last, "bucket({us}) regressed");
+            assert!(b < N_BUCKETS);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn render_includes_every_section() {
+        let stats = ServiceStats {
+            queue_depth: 1,
+            capacity: 8,
+            workers: 2,
+            tenants: vec![TenantStats {
+                tenant: "t0".into(),
+                weight: 2.0,
+                admitted: 5,
+                rejected: 1,
+                served: 4,
+                queued: 1,
+                inflight: 0,
+            }],
+            wait: HistogramSnapshot::default(),
+            service: HistogramSnapshot::default(),
+            platforms: vec![("intel".into(), CacheStats::default())],
+        };
+        let out = stats.render();
+        assert!(out.contains("t0") && out.contains("rejected"));
+        assert!(out.contains("p95") && out.contains("intel"));
+    }
+}

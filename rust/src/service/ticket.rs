@@ -1,0 +1,136 @@
+//! Per-request result handles: a [`Ticket`] is the caller's half of one
+//! admitted request, fulfilled by whichever worker serves it.
+
+use crate::coordinator::SelectionReport;
+use anyhow::Result;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Shared slot between a [`Ticket`] and the worker that will fulfil it.
+pub(crate) struct TicketCell {
+    slot: Mutex<Option<Result<SelectionReport>>>,
+    done: Condvar,
+}
+
+impl TicketCell {
+    pub(crate) fn fulfil(&self, result: Result<SelectionReport>) {
+        let mut slot = self.slot.lock().expect("ticket poisoned");
+        debug_assert!(slot.is_none(), "ticket fulfilled twice");
+        *slot = Some(result);
+        drop(slot);
+        self.done.notify_all();
+    }
+}
+
+/// The caller's handle to one admitted request.
+///
+/// A ticket is always eventually fulfilled: workers fulfil served
+/// requests (with the report, or the error the selection produced), and
+/// a clean shutdown drains every admitted request before the workers
+/// exit — so [`Ticket::wait`] cannot hang on a live-or-cleanly-stopped
+/// service.
+pub struct Ticket {
+    cell: Arc<TicketCell>,
+}
+
+impl Ticket {
+    /// A fresh pending ticket plus the worker-side fulfilment handle.
+    pub(crate) fn pending() -> (Ticket, Arc<TicketCell>) {
+        let cell = Arc::new(TicketCell { slot: Mutex::new(None), done: Condvar::new() });
+        (Ticket { cell: Arc::clone(&cell) }, cell)
+    }
+
+    /// Non-blocking readiness check: has the report landed?
+    pub fn poll(&self) -> bool {
+        self.cell.slot.lock().expect("ticket poisoned").is_some()
+    }
+
+    /// Block until the request is served and take its result.
+    pub fn wait(self) -> Result<SelectionReport> {
+        let mut slot = self.cell.slot.lock().expect("ticket poisoned");
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.cell.done.wait(slot).expect("ticket poisoned");
+        }
+    }
+
+    /// [`Self::wait`] with a timeout: `Err(self)` gives the ticket back
+    /// if the result hasn't landed within `d`.
+    pub fn wait_timeout(
+        self,
+        d: Duration,
+    ) -> std::result::Result<Result<SelectionReport>, Ticket> {
+        let deadline = std::time::Instant::now() + d;
+        {
+            let mut slot = self.cell.slot.lock().expect("ticket poisoned");
+            loop {
+                if let Some(r) = slot.take() {
+                    return Ok(r);
+                }
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                slot = self
+                    .cell
+                    .done
+                    .wait_timeout(slot, deadline - now)
+                    .expect("ticket poisoned")
+                    .0;
+            }
+        }
+        Err(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> SelectionReport {
+        SelectionReport {
+            network: "net".into(),
+            platform: "p".into(),
+            objective: crate::coordinator::Objective::MinTime,
+            provenance: crate::coordinator::CostProvenance::Measured,
+            selection: crate::selection::Selection { primitive: vec![0], estimated_ms: 1.0 },
+            evaluated_ms: 1.0,
+            peak_workspace_bytes: 0.0,
+            wall_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn fulfil_then_wait() {
+        let (ticket, cell) = Ticket::pending();
+        assert!(!ticket.poll());
+        cell.fulfil(Ok(report()));
+        assert!(ticket.poll());
+        assert_eq!(ticket.wait().unwrap().network, "net");
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled_across_threads() {
+        let (ticket, cell) = Ticket::pending();
+        let t = std::thread::spawn(move || ticket.wait().unwrap().network);
+        std::thread::sleep(Duration::from_millis(20));
+        cell.fulfil(Ok(report()));
+        assert_eq!(t.join().unwrap(), "net");
+    }
+
+    #[test]
+    fn wait_timeout_returns_the_ticket() {
+        let (ticket, cell) = Ticket::pending();
+        let ticket = match ticket.wait_timeout(Duration::from_millis(10)) {
+            Err(t) => t,
+            Ok(_) => panic!("nothing was fulfilled yet"),
+        };
+        cell.fulfil(Err(anyhow::anyhow!("boom")));
+        match ticket.wait_timeout(Duration::from_secs(5)) {
+            Ok(r) => assert!(r.is_err()),
+            Err(_) => panic!("fulfilled ticket must resolve"),
+        }
+    }
+}

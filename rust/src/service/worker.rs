@@ -1,0 +1,64 @@
+//! The persistent worker pool: long-lived threads (built on
+//! [`par::Pool`](crate::par::Pool), not per-batch spawns) that drain
+//! the fair scheduler into the coordinator's
+//! [`select_one`](crate::coordinator::Coordinator::select_one) unit of
+//! work and fulfil each request's [`Ticket`](super::Ticket).
+//!
+//! A worker's life is one loop: pop (blocks until the scheduler yields
+//! an eligible request), record the queued-wait latency, run the
+//! selection, record the service latency, fulfil the ticket, return the
+//! tenant's inflight slot. When the queue reports closed-and-drained
+//! the loop ends and the thread exits — shutdown is just "close, then
+//! join".
+
+use super::ticket::TicketCell;
+use super::ServiceShared;
+use crate::coordinator::SelectionRequest;
+use crate::par;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One admitted request in flight through the queue.
+pub(crate) struct Job {
+    pub(crate) req: SelectionRequest,
+    /// When admission succeeded — the wait histogram measures from here
+    /// to dispatch.
+    pub(crate) admitted_at: Instant,
+    /// Fulfilment half of the caller's [`Ticket`](super::Ticket).
+    pub(crate) cell: Arc<TicketCell>,
+}
+
+/// One worker's drain loop; returns when the queue is closed and empty.
+pub(crate) fn run(shared: &ServiceShared) {
+    while let Some((tenant, job)) = shared.queue.pop() {
+        shared.wait.record(job.admitted_at.elapsed());
+        let t0 = Instant::now();
+        // errors (unknown platform, solver failure) — and panics from a
+        // user-registered cost source — travel through the ticket: a bad
+        // request must never take the worker down, hang its ticket, or
+        // leak the tenant's inflight slot
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.coord.select_one(&job.req)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow::anyhow!("selection panicked: {msg}"))
+        });
+        shared.service.record(t0.elapsed());
+        shared.tenant_meta(tenant).counters.served.fetch_add(1, Ordering::Relaxed);
+        job.cell.fulfil(result);
+        shared.queue.complete(tenant);
+    }
+}
+
+/// Spawn the persistent pool: `n` named threads running [`run`] until
+/// shutdown.
+pub(crate) fn spawn(shared: &Arc<ServiceShared>, n: usize) -> par::Pool {
+    let shared = Arc::clone(shared);
+    par::Pool::spawn(n, "primsel-serve", move |_| run(&shared))
+}

@@ -1,0 +1,288 @@
+//! Integration tests for the admission-controlled serving layer
+//! (`primsel::service`), pinning its three contracts:
+//!
+//! * **transparency** — served reports are bit-identical to the
+//!   synchronous `Coordinator::submit_batch` for the same requests;
+//! * **backpressure** — `try_submit` fails with `QueueFull` at
+//!   capacity, a deadline submit times out while full, and a blocked
+//!   `submit` wakes as workers drain;
+//! * **fairness** — a weighted light tenant's small batch completes
+//!   while a heavy tenant's earlier flood is still queued, and clean
+//!   shutdown drains every admitted ticket.
+//!
+//! Timing-sensitive tests slow the cost source down (a wrapper that
+//! sleeps per *cold* layer query) and give every request a unique layer
+//! config so the platform cache cannot absorb the slowness — making
+//! "the worker is busy for ~100 ms" a property of the request, not of
+//! the host's scheduler mood.
+
+use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
+use primsel::layers::ConvConfig;
+use primsel::networks::{self, Network};
+use primsel::primitives::Layout;
+use primsel::selection::CostSource;
+use primsel::service::{Service, ServiceConfig, SubmitError};
+use primsel::simulator::{machine, Simulator};
+use std::borrow::Cow;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A cost source that takes real wall-clock per layer query — the
+/// stand-in for an actual on-device profile.
+struct SlowSource {
+    inner: Simulator,
+    delay: Duration,
+}
+
+impl SlowSource {
+    fn new(delay_ms: u64) -> Self {
+        Self {
+            inner: Simulator::new(machine::arm_cortex_a73()),
+            delay: Duration::from_millis(delay_ms),
+        }
+    }
+}
+
+impl CostSource for SlowSource {
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        std::thread::sleep(self.delay);
+        self.inner.layer_costs(cfg)
+    }
+
+    fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+        self.inner.dlt_cost(c, im, src, dst)
+    }
+
+    fn dlt_matrix3(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
+        self.inner.dlt_matrix3(c, im)
+    }
+}
+
+/// A small chain network whose layer configs are unique per `tag`, so
+/// every request against a caching platform is a cold one.
+fn unique_net(tag: u32, n_layers: u32) -> Network {
+    let layers: Vec<ConvConfig> = (0..n_layers)
+        // im varies with the tag: no two nets share a config, and all
+        // configs stay inside the paper's valid ranges
+        .map(|i| ConvConfig::new(16 + i, 16, 28 + (tag % 64), 1, 3))
+        .collect();
+    let edges = (0..n_layers as usize - 1).map(|u| (u, u + 1)).collect();
+    Network { name: format!("chain-{tag}"), layers, edges }
+}
+
+fn slow_service(delay_ms: u64, capacity: usize, workers: usize) -> Service {
+    let coord = Coordinator::shared();
+    coord.register("slow", Arc::new(SlowSource::new(delay_ms)));
+    Service::new(coord, ServiceConfig::default().with_capacity(capacity).with_workers(workers))
+}
+
+fn wait_until(deadline: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    ok()
+}
+
+fn tenant_row(service: &Service, name: &str) -> primsel::service::TenantStats {
+    service
+        .stats()
+        .tenants
+        .into_iter()
+        .find(|t| t.tenant == name)
+        .expect("tenant registered")
+}
+
+#[test]
+fn service_results_bit_identical_to_synchronous_batch() {
+    let coord = Coordinator::shared();
+    let mut reqs = Vec::new();
+    for (i, net) in networks::selection_networks().into_iter().enumerate() {
+        for p in ["intel", "amd", "arm"] {
+            let mut req = SelectionRequest::new(net.clone(), p);
+            if i % 2 == 0 {
+                req = req.with_objective(Objective::MinTimeWithMemoryBudget {
+                    budget_bytes: 8.0 * 1024.0 * 1024.0,
+                    lambda_ms_per_mb: 5.0,
+                });
+            }
+            reqs.push(req);
+        }
+    }
+    let sync = coord.submit_batch(&reqs).unwrap();
+
+    let service =
+        Service::new(Arc::clone(&coord), ServiceConfig::default().with_workers(4));
+    let tenants = ["a", "b", "c"];
+    let tickets: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| service.submit(tenants[i % tenants.len()], r.clone()).unwrap())
+        .collect();
+    for (ticket, expected) in tickets.into_iter().zip(&sync.reports) {
+        let served = ticket.wait().unwrap();
+        assert_eq!(served.network, expected.network);
+        assert_eq!(served.platform, expected.platform);
+        assert_eq!(served.selection.primitive, expected.selection.primitive);
+        assert_eq!(served.selection.estimated_ms, expected.selection.estimated_ms);
+        assert_eq!(served.evaluated_ms, expected.evaluated_ms);
+        assert_eq!(served.peak_workspace_bytes, expected.peak_workspace_bytes);
+        assert_eq!(served.provenance, expected.provenance);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.tenants.iter().map(|t| t.served).sum::<u64>(), reqs.len() as u64);
+    assert_eq!(stats.wait.count, reqs.len() as u64);
+    assert_eq!(stats.service.count, reqs.len() as u64);
+    service.shutdown();
+}
+
+#[test]
+fn backpressure_queue_full_then_blocked_submit_wakes_on_drain() {
+    // one worker chewing a ~200 ms request, capacity 2: the queue can
+    // actually fill
+    let service = slow_service(25, 2, 1);
+    let req = |tag| SelectionRequest::new(unique_net(tag, 8), "slow");
+
+    let first = service.submit("t", req(0)).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(5), || tenant_row(&service, "t").inflight == 1),
+        "first request must be dispatched"
+    );
+
+    // fill the queue to capacity behind the busy worker
+    let second = service.submit("t", req(1)).unwrap();
+    let third = service.submit("t", req(2)).unwrap();
+    assert_eq!(service.stats().queue_depth, 2);
+
+    // non-blocking admission refuses *now*
+    match service.try_submit("t", req(3)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    assert_eq!(tenant_row(&service, "t").rejected, 1);
+
+    // a deadline shorter than the worker's current request times out
+    let t0 = Instant::now();
+    match service.submit_deadline("t", req(4), Duration::from_millis(30)) {
+        Err(SubmitError::Timeout) => assert!(t0.elapsed() >= Duration::from_millis(30)),
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert_eq!(tenant_row(&service, "t").rejected, 2);
+
+    // a blocked submit parks until the worker drains a slot, then admits
+    let admit_t0 = Instant::now();
+    let fourth = service.submit("t", req(5)).unwrap();
+    let blocked_for = admit_t0.elapsed();
+    // it can only have been admitted after a pop freed a queue slot,
+    // i.e. after the worker finished the ~200 ms first request
+    assert!(
+        blocked_for >= Duration::from_millis(20),
+        "submit returned after {blocked_for:?}, queue never blocked it"
+    );
+
+    for t in [first, second, third, fourth] {
+        assert!(t.wait().is_ok());
+    }
+    service.shutdown();
+}
+
+#[test]
+fn weighted_light_tenant_finishes_while_heavy_backlog_queued() {
+    // single worker, ~120 ms per unique request: dispatch order is the
+    // whole story
+    let service = slow_service(20, 64, 1);
+    service.register_tenant("heavy", 1.0, 1).unwrap();
+    service.register_tenant("light", 8.0, 1).unwrap();
+
+    // the heavy flood goes in first — under FIFO it would starve
+    // everything behind it
+    let heavy_n = 8u32;
+    let heavy_tickets: Vec<_> = (0..heavy_n)
+        .map(|i| {
+            service
+                .submit("heavy", SelectionRequest::new(unique_net(100 + i, 6), "slow"))
+                .unwrap()
+        })
+        .collect();
+    let light_tickets: Vec<_> = (0..3u32)
+        .map(|i| {
+            service
+                .submit("light", SelectionRequest::new(unique_net(200 + i, 6), "slow"))
+                .unwrap()
+        })
+        .collect();
+
+    for t in light_tickets {
+        assert!(t.wait().is_ok());
+    }
+    // the instant the light tenant is fully served, the heavy backlog
+    // must still be deep: DRR with 8x weight dispatches at most a
+    // couple of heavy requests before the light lane drains
+    let heavy = tenant_row(&service, "heavy");
+    assert!(
+        heavy.queued >= 4,
+        "heavy backlog should still be queued, got {heavy:?}"
+    );
+    assert!(
+        heavy.served <= 3,
+        "heavy tenant served too much before light finished: {heavy:?}"
+    );
+
+    for t in heavy_tickets {
+        assert!(t.wait().is_ok());
+    }
+    let heavy = tenant_row(&service, "heavy");
+    assert_eq!(heavy.served, heavy_n as u64);
+    assert_eq!(heavy.queued, 0);
+    service.shutdown();
+}
+
+#[test]
+fn clean_shutdown_drains_admitted_tickets() {
+    let coord = Coordinator::shared();
+    let service =
+        Service::new(coord, ServiceConfig::default().with_capacity(64).with_workers(2));
+    let tickets: Vec<_> = (0..12)
+        .map(|i| {
+            let net = networks::selection_networks()[i % 6].clone();
+            service.submit("t", SelectionRequest::new(net, "intel")).unwrap()
+        })
+        .collect();
+    // shut down immediately: everything admitted must still be served
+    service.shutdown();
+    for t in tickets {
+        assert!(t.poll(), "shutdown returned before draining");
+        assert!(t.wait().is_ok());
+    }
+}
+
+#[test]
+fn errors_flow_through_tickets_and_coordinator_outlives_service() {
+    let coord = Coordinator::shared();
+    let service = Service::new(Arc::clone(&coord), ServiceConfig::default().with_workers(2));
+
+    // a request for an unknown platform is admitted; the error comes
+    // back through the ticket, not the worker's stack
+    let bad = service
+        .submit("t", SelectionRequest::new(networks::alexnet(), "riscv"))
+        .unwrap();
+    assert!(bad.wait().is_err());
+
+    let ok = service
+        .submit("t", SelectionRequest::new(networks::alexnet(), "intel"))
+        .unwrap();
+    assert!(ok.wait().is_ok());
+
+    let stats = service.stats();
+    assert_eq!(stats.capacity, ServiceConfig::default().capacity);
+    assert!(stats.platforms.iter().any(|(p, s)| p == "intel" && s.lookups() > 0));
+
+    service.shutdown();
+    // the coordinator (shared handle) survives service shutdown
+    assert!(coord
+        .submit(&SelectionRequest::new(networks::alexnet(), "intel"))
+        .is_ok());
+}
