@@ -18,13 +18,150 @@
 //! traffic nearly free.
 //!
 //! Run: `cargo run --release --example serve_zoo`
+//!
+//! With `--inject-faults`, runs the self-healing demo instead: a
+//! transfer-onboarded platform over a seeded [`FaultySource`] is driven
+//! through drift → automatic recalibration → repeated recalibration
+//! failure → quarantine (typed refusals) → cool-down probe readmission,
+//! ending with the health section of the `ServiceStats` printout.
 
-use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
-use primsel::networks;
+use primsel::coordinator::{Coordinator, Objective, OnboardSpec, SelectionRequest};
+use primsel::dataset::calibration_sample;
+use primsel::health::{HealthPolicy, HealthState, PlatformHealth, QuarantinedError};
+use primsel::networks::{self, Network};
+use primsel::perfmodel::{CostModel, LinCostModel};
 use primsel::report::{fmt_time_ms, Table};
+use primsel::selection::{CostSource, FaultySource};
 use primsel::service::{Service, ServiceConfig, SubmitError, Ticket};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
+    if std::env::args().any(|a| a == "--inject-faults") {
+        return inject_faults_demo();
+    }
+    serve_demo()
+}
+
+/// Serve requests at `platform` until `done(health)` holds. Refused
+/// tickets still resolve (typed errors) — expected while quarantined.
+fn drive_until(
+    service: &Service,
+    platform: &str,
+    net: &Network,
+    done: impl Fn(&PlatformHealth) -> bool,
+) -> anyhow::Result<u32> {
+    for n in 1..=80 {
+        let ticket = service
+            .submit("ops", SelectionRequest::new(net.clone(), platform))
+            .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?;
+        let _ = ticket.wait();
+        let health = service
+            .coordinator()
+            .platform_health_of(platform)
+            .ok_or_else(|| anyhow::anyhow!("{platform} is not monitored"))?;
+        if done(&health) {
+            return Ok(n);
+        }
+    }
+    anyhow::bail!("demo did not reach the expected health state within 80 requests")
+}
+
+fn inject_faults_demo() -> anyhow::Result<()> {
+    // the "live device": an ARM simulator wrapped in seeded fault
+    // injection, serving as both calibration target and replay target
+    let faulty = Arc::new(FaultySource::new(
+        Arc::new(Simulator::new(machine::arm_cortex_a73())),
+        42,
+    ));
+    let target: Arc<dyn CostSource> = Arc::clone(&faulty);
+
+    let coord = Coordinator::shared();
+    let intel = Simulator::new(machine::intel_i9_9900k());
+    let (prim, dlt) = calibration_sample(&intel, 0.1, 3);
+    let source: Arc<dyn CostModel + Send + Sync> =
+        Arc::new(LinCostModel::fit(&prim, &dlt, "intel")?);
+    coord.onboard_platform(
+        "arm-live",
+        OnboardSpec::transfer(Arc::clone(&target), source, 0.02, 5),
+    )?;
+    coord.monitor_platform(
+        "arm-live",
+        target,
+        HealthPolicy::default()
+            .with_sampling(1.0, 7)
+            .with_window(24, 8)
+            .with_drift_band(0.75)
+            .with_quarantine(2, Duration::ZERO, Duration::from_millis(100)),
+    )?;
+    let service = Service::new(Arc::clone(&coord), ServiceConfig::default().with_workers(2));
+    let net = networks::alexnet();
+
+    // phase 1 — healthy traffic: live replays agree with the served model
+    for _ in 0..3 {
+        let ticket = service
+            .submit("ops", SelectionRequest::new(net.clone(), "arm-live"))
+            .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?;
+        ticket.wait()?;
+    }
+    let h = coord.platform_health_of("arm-live").unwrap();
+    println!("phase 1 — healthy: state {}, drift {:.3}\n", h.state, h.drift);
+
+    // phase 2 — the device drifts 3x: detection, then automatic repair
+    faulty.set_drift(3.0);
+    let n = drive_until(&service, "arm-live", &net, |h| h.state == HealthState::Drifting)?;
+    println!("phase 2 — drift 3.0 injected: Drifting after {n} requests");
+    let n = drive_until(&service, "arm-live", &net, |h| h.recalibrations >= 1)?;
+    let h = coord.platform_health_of("arm-live").unwrap();
+    println!(
+        "          auto-recalibrated after {n} more: state {}, drift {:.3}\n",
+        h.state, h.drift
+    );
+
+    // phase 3 — drift again, but now every target query panics:
+    // recalibration attempts burn out and the platform quarantines
+    faulty.set_drift(9.0);
+    drive_until(&service, "arm-live", &net, |h| h.state == HealthState::Drifting)?;
+    faulty.set_error_rate(1.0);
+    drive_until(&service, "arm-live", &net, |h| h.state == HealthState::Quarantined)?;
+    let refused = service
+        .submit("ops", SelectionRequest::new(net.clone(), "arm-live"))
+        .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?;
+    match refused.wait() {
+        Err(e) => {
+            let q = e
+                .downcast_ref::<QuarantinedError>()
+                .ok_or_else(|| anyhow::anyhow!("refusal was not the typed error: {e}"))?;
+            println!("phase 3 — errors injected: quarantined, tickets refuse with:");
+            println!("          {q}\n");
+        }
+        Ok(_) => anyhow::bail!("expected a quarantined refusal"),
+    }
+
+    // phase 4 — fault cleared: after the cool-down the next admission
+    // probes a recalibration and the platform readmits
+    faulty.set_error_rate(0.0);
+    std::thread::sleep(Duration::from_millis(150));
+    let ticket = service
+        .submit("ops", SelectionRequest::new(net, "arm-live"))
+        .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?;
+    let report = ticket.wait()?;
+    let h = coord.platform_health_of("arm-live").unwrap();
+    println!(
+        "phase 4 — probe readmission: served {} in {}, state {}\n",
+        report.network,
+        fmt_time_ms(report.wall_ms),
+        h.state
+    );
+
+    // the instruments, health table included
+    println!("{}", service.stats().render());
+    service.shutdown();
+    Ok(())
+}
+
+fn serve_demo() -> anyhow::Result<()> {
     let platforms = ["intel", "amd", "arm"];
     let service = Service::new(
         Coordinator::shared(),

@@ -50,15 +50,19 @@
 //! exactly that trajectory.
 
 use crate::dataset::{self, calibration_sample};
+use crate::health::{self, HealthMonitor, HealthPolicy, PlatformHealth, PlatformMonitor};
 use crate::networks::Network;
 use crate::par;
 use crate::perfmodel::model::{CostModel, FactorCorrected, LinCostModel};
+use crate::perfmodel::transfer::{robust_factors, MIN_CALIB_RATIOS};
 use crate::selection::{
     self, memory, CacheStats, CostCache, CostSource, ModeledSource, Selection, TableSource,
 };
 use crate::simulator::{machine, Simulator};
+use crate::sync;
 use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::PathBuf;
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
@@ -255,6 +259,26 @@ pub struct OnboardReport {
     pub wall_ms: f64,
 }
 
+/// Which refresh [`Coordinator::recalibrate_platform`] ran for the
+/// platform's onboarding kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecalPath {
+    /// §4.4 factor refresh: the retained source model is untouched, only
+    /// the per-column scale factors are re-estimated.
+    TransferFactors,
+    /// Full closed-form refit of the fresh-Lin model from the new draw.
+    FreshLinRefit,
+}
+
+impl fmt::Display for RecalPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            RecalPath::TransferFactors => "transfer-factors",
+            RecalPath::FreshLinRefit => "fresh-lin-refit",
+        })
+    }
+}
+
 /// What [`Coordinator::recalibrate_platform`] did.
 #[derive(Debug, Clone)]
 pub struct RecalibrationReport {
@@ -263,31 +287,49 @@ pub struct RecalibrationReport {
     pub calib_samples: usize,
     /// The platform's provenance after the refresh.
     pub provenance: CostProvenance,
-    /// Largest relative change across all refreshed scale factors
-    /// (per-primitive columns and DLT cells),
+    /// Largest relative change the refresh caused: for transfer
+    /// platforms, across all refreshed scale factors (per-primitive
+    /// columns and DLT cells); for fresh-Lin platforms, across old-vs-new
+    /// model predictions on the fresh draw. In both cases
     /// `max_j |new_j / old_j - 1|` — how far the platform had drifted
     /// since the previous calibration.
     pub max_factor_shift: f64,
+    /// Which refresh ran (factor rescale vs full Lin refit).
+    pub path: RecalPath,
     /// Wall-clock of the refresh (sampling + refit + cache rebuild).
     pub wall_ms: f64,
 }
 
-/// What a §4.4 transfer-onboarded platform keeps around so its scale
-/// factors can be refreshed in place later: the (untouched) source
-/// model and the target device to draw fresh measurements from.
-struct TransferContext {
-    base: Arc<dyn CostModel + Send + Sync>,
+/// The model state a recalibration refreshes, per onboarding kind.
+enum RecalMode {
+    /// §4.4 transfer: the (untouched) source model plus the factor set
+    /// currently serving.
+    Transfer {
+        base: Arc<dyn CostModel + Send + Sync>,
+        current: Arc<FactorCorrected>,
+    },
+    /// Fresh-Lin: the Lin model currently serving (refit wholesale on
+    /// recalibration — closed form, so a full refit costs the same as a
+    /// factor pass).
+    FreshLin { current: Arc<LinCostModel> },
+}
+
+/// What a model-onboarded platform keeps around so it can be
+/// recalibrated in place later: the target device to draw fresh
+/// measurements from, plus the per-kind model state.
+struct RecalContext {
     target: Arc<dyn CostSource>,
-    current: Arc<FactorCorrected>,
+    mode: RecalMode,
 }
 
 /// One served platform: its shared cache plus where its costs come from.
 struct PlatformEntry {
     cache: Arc<CostCache<'static>>,
     provenance: CostProvenance,
-    /// Present only for transfer-onboarded platforms (enables
-    /// [`Coordinator::recalibrate_platform`]).
-    transfer: Option<TransferContext>,
+    /// Present for every model-onboarded platform (enables
+    /// [`Coordinator::recalibrate_platform`]); absent for measured /
+    /// directly-registered sources, which have no model to refresh.
+    recal: Option<RecalContext>,
 }
 
 /// The serving layer: per-platform shared caches plus batch fan-out and
@@ -320,6 +362,9 @@ struct PlatformEntry {
 /// ```
 pub struct Coordinator {
     platforms: RwLock<HashMap<String, Arc<PlatformEntry>>>,
+    /// Per-platform drift monitors (see [`crate::health`]); empty until
+    /// [`Self::monitor_platform`] attaches one.
+    health: HealthMonitor,
 }
 
 impl Default for Coordinator {
@@ -331,7 +376,7 @@ impl Default for Coordinator {
 impl Coordinator {
     /// An empty coordinator; platform caches attach on first use.
     pub fn new() -> Self {
-        Self { platforms: RwLock::new(HashMap::new()) }
+        Self { platforms: RwLock::new(HashMap::new()), health: HealthMonitor::default() }
     }
 
     /// An empty coordinator behind an [`Arc`] — the shutdown-safe shared
@@ -369,13 +414,10 @@ impl Coordinator {
         platform: &str,
         cache: Arc<CostCache<'static>>,
         provenance: CostProvenance,
-        transfer: Option<TransferContext>,
+        recal: Option<RecalContext>,
     ) {
-        let entry = Arc::new(PlatformEntry { cache, provenance, transfer });
-        self.platforms
-            .write()
-            .expect("platform map poisoned")
-            .insert(platform.to_string(), entry);
+        let entry = Arc::new(PlatformEntry { cache, provenance, recal });
+        sync::write(&self.platforms).insert(platform.to_string(), entry);
     }
 
     /// Onboard a new platform from a handful of calibration samples
@@ -394,21 +436,24 @@ impl Coordinator {
         let (prim, dlt) = calibration_sample(spec.target.as_ref(), spec.calib_fraction, spec.seed);
         let calib_samples = prim.len();
 
-        let (model, transfer): (Arc<dyn CostModel + Send + Sync>, Option<TransferContext>) =
-            match spec.mode {
-                OnboardMode::FreshLin => {
-                    (Arc::new(LinCostModel::fit(&prim, &dlt, platform)?), None)
-                }
-                OnboardMode::Transfer(source) => {
-                    let fc = Arc::new(FactorCorrected::fit(Arc::clone(&source), &prim, &dlt)?);
-                    let ctx = TransferContext {
-                        base: source,
-                        target: Arc::clone(&spec.target),
-                        current: Arc::clone(&fc),
-                    };
-                    (fc, Some(ctx))
-                }
-            };
+        let (model, recal): (Arc<dyn CostModel + Send + Sync>, RecalContext) = match spec.mode {
+            OnboardMode::FreshLin => {
+                let lin = Arc::new(LinCostModel::fit(&prim, &dlt, platform)?);
+                let ctx = RecalContext {
+                    target: Arc::clone(&spec.target),
+                    mode: RecalMode::FreshLin { current: Arc::clone(&lin) },
+                };
+                (lin, ctx)
+            }
+            OnboardMode::Transfer(source) => {
+                let fc = Arc::new(FactorCorrected::fit(Arc::clone(&source), &prim, &dlt)?);
+                let ctx = RecalContext {
+                    target: Arc::clone(&spec.target),
+                    mode: RecalMode::Transfer { base: source, current: Arc::clone(&fc) },
+                };
+                (fc, ctx)
+            }
+        };
         let model_kind = model.kind().to_string();
         // the long-lived serving cache is built up front so the
         // validation pass below warms it — the first tenant requests for
@@ -444,7 +489,7 @@ impl Coordinator {
 
         let provenance =
             CostProvenance::Predicted { model_kind: model_kind.clone(), calib_samples };
-        self.insert(platform, cache, provenance.clone(), transfer);
+        self.insert(platform, cache, provenance.clone(), Some(recal));
         Ok(OnboardReport {
             platform: platform.to_string(),
             model_kind,
@@ -455,20 +500,26 @@ impl Coordinator {
         })
     }
 
-    /// Refresh a transfer-onboarded platform's §4.4 scale factors in
-    /// place from a *fresh* measurement draw — the online-recalibration
-    /// half of the transfer lifecycle: a device whose clocks, thermals
-    /// or firmware drifted since onboarding gets new per-column factors
-    /// without retraining (or even touching) the source model, because
-    /// [`FactorCorrected`] isolates all platform-specific state in the
-    /// factors.
+    /// Refresh a model-onboarded platform's serving model in place from
+    /// a *fresh* measurement draw — the online-recalibration half of the
+    /// onboarding lifecycle, for **both** onboarding kinds (the
+    /// [`RecalibrationReport::path`] says which ran):
+    ///
+    /// * **transfer platforms** get new §4.4 per-column scale factors
+    ///   without retraining (or even touching) the source model, because
+    ///   [`FactorCorrected`] isolates all platform-specific state in the
+    ///   factors;
+    /// * **fresh-Lin platforms** get a wholesale Lin refit from the new
+    ///   draw — the fit is closed form, so a full refit costs the same
+    ///   as a factor pass and the drift loop covers every onboarded
+    ///   platform kind.
     ///
     /// The platform's serving cache is re-registered (a rebuilt
     /// [`ModeledSource`] cache), dropping every memoized prediction made
-    /// under the stale factors; provenance keeps reporting
-    /// `Predicted { "…+factor", calib_samples }` with the *new* sample
-    /// count. Errors for platforms that are unknown, measured, or
-    /// fresh-Lin-onboarded (nothing to rescale).
+    /// under the stale model; provenance keeps reporting
+    /// `Predicted { .., calib_samples }` with the *new* sample count.
+    /// Errors for platforms that are unknown, or measured / directly
+    /// registered (no model state to refresh).
     pub fn recalibrate_platform(
         &self,
         platform: &str,
@@ -480,54 +531,84 @@ impl Coordinator {
             calib_fraction > 0.0 && calib_fraction <= 1.0,
             "calib_fraction must be in (0, 1], got {calib_fraction}"
         );
-        let entry = self
-            .platforms
-            .read()
-            .expect("platform map poisoned")
+        let entry = sync::read(&self.platforms)
             .get(platform)
             .cloned()
             .ok_or_else(|| anyhow!("unknown platform {platform:?}: nothing to recalibrate"))?;
-        let ctx = entry.transfer.as_ref().ok_or_else(|| {
+        let ctx = entry.recal.as_ref().ok_or_else(|| {
             anyhow!(
-                "platform {platform:?} is not transfer-onboarded; only §4.4 \
-                 factor-corrected platforms carry recalibratable scale state"
+                "platform {platform:?} was not model-onboarded; measured and \
+                 directly-registered platforms carry no recalibratable model state"
             )
         })?;
 
         let (prim, dlt) = calibration_sample(ctx.target.as_ref(), calib_fraction, seed);
         let calib_samples = prim.len();
-        let fresh = Arc::new(FactorCorrected::fit(Arc::clone(&ctx.base), &prim, &dlt)?);
-        // drift over BOTH scale surfaces the refresh replaces: primitive
-        // columns and DLT cells (a device can drift in its layout
-        // transforms while per-primitive costs hold steady)
-        let old_dlt = ctx.current.dlt_factors().iter().flatten();
-        let new_dlt = fresh.dlt_factors().iter().flatten();
-        let max_factor_shift = ctx
-            .current
-            .prim_factors()
-            .iter()
-            .zip(fresh.prim_factors())
-            .chain(old_dlt.zip(new_dlt))
-            .filter(|(&old, _)| old > 0.0)
-            .map(|(&old, &new)| (new / old - 1.0).abs())
-            .fold(0.0f64, f64::max);
+
+        let (model, next_mode, max_factor_shift, path): (
+            Arc<dyn CostModel + Send + Sync>,
+            RecalMode,
+            f64,
+            RecalPath,
+        ) = match &ctx.mode {
+            RecalMode::Transfer { base, current } => {
+                let fresh = Arc::new(FactorCorrected::fit(Arc::clone(base), &prim, &dlt)?);
+                // drift over BOTH scale surfaces the refresh replaces:
+                // primitive columns and DLT cells (a device can drift in
+                // its layout transforms while per-primitive costs hold
+                // steady)
+                let old_dlt = current.dlt_factors().iter().flatten();
+                let new_dlt = fresh.dlt_factors().iter().flatten();
+                let shift = current
+                    .prim_factors()
+                    .iter()
+                    .zip(fresh.prim_factors())
+                    .chain(old_dlt.zip(new_dlt))
+                    .filter(|(&old, _)| old > 0.0)
+                    .map(|(&old, &new)| (new / old - 1.0).abs())
+                    .fold(0.0f64, f64::max);
+                (
+                    Arc::clone(&fresh) as Arc<dyn CostModel + Send + Sync>,
+                    RecalMode::Transfer { base: Arc::clone(base), current: fresh },
+                    shift,
+                    RecalPath::TransferFactors,
+                )
+            }
+            RecalMode::FreshLin { current } => {
+                let fresh = Arc::new(LinCostModel::fit(&prim, &dlt, platform)?);
+                // a refit has no factor set to diff, so the shift is
+                // measured where it matters: old-vs-new predictions on
+                // the fresh draw's configs (and its DLT pairs), through
+                // the same robust median the factor path uses
+                let prim_shift = prediction_shift(
+                    &current.predict_prim(&prim.configs)?,
+                    &fresh.predict_prim(&prim.configs)?,
+                );
+                let dlt_shift = prediction_shift(
+                    &flatten_off_diagonal(&current.predict_dlt(&dlt.pairs)?),
+                    &flatten_off_diagonal(&fresh.predict_dlt(&dlt.pairs)?),
+                );
+                (
+                    Arc::clone(&fresh) as Arc<dyn CostModel + Send + Sync>,
+                    RecalMode::FreshLin { current: fresh },
+                    prim_shift.max(dlt_shift),
+                    RecalPath::FreshLinRefit,
+                )
+            }
+        };
 
         let provenance =
-            CostProvenance::Predicted { model_kind: fresh.kind().to_string(), calib_samples };
-        let served: Arc<dyn CostModel + Send + Sync> = Arc::clone(&fresh);
+            CostProvenance::Predicted { model_kind: model.kind().to_string(), calib_samples };
         let cache: Arc<CostCache<'static>> =
-            Arc::new(CostCache::new_shared(Arc::new(ModeledSource::new(served))));
-        let next_ctx = TransferContext {
-            base: Arc::clone(&ctx.base),
-            target: Arc::clone(&ctx.target),
-            current: fresh,
-        };
+            Arc::new(CostCache::new_shared(Arc::new(ModeledSource::new(model))));
+        let next_ctx = RecalContext { target: Arc::clone(&ctx.target), mode: next_mode };
         self.insert(platform, cache, provenance.clone(), Some(next_ctx));
         Ok(RecalibrationReport {
             platform: platform.to_string(),
             calib_samples,
             provenance,
             max_factor_shift,
+            path,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
@@ -577,7 +658,7 @@ impl Coordinator {
     /// The platform entry, creating a simulator-backed one on first use
     /// for the built-in platform names.
     fn entry(&self, platform: &str) -> Result<Arc<PlatformEntry>> {
-        if let Some(e) = self.platforms.read().expect("platform map poisoned").get(platform) {
+        if let Some(e) = sync::read(&self.platforms).get(platform) {
             return Ok(Arc::clone(e));
         }
         let m = machine::by_name(platform).ok_or_else(|| {
@@ -589,9 +670,9 @@ impl Coordinator {
         let entry = Arc::new(PlatformEntry {
             cache: Arc::new(CostCache::new_shared(Arc::new(Simulator::new(m)))),
             provenance: CostProvenance::Measured,
-            transfer: None,
+            recal: None,
         });
-        let mut map = self.platforms.write().expect("platform map poisoned");
+        let mut map = sync::write(&self.platforms);
         // a racing resolver may have inserted meanwhile; keep the winner
         Ok(Arc::clone(map.entry(platform.to_string()).or_insert(entry)))
     }
@@ -608,15 +689,118 @@ impl Coordinator {
         Ok(self.entry(platform)?.provenance.clone())
     }
 
+    /// Attach a drift monitor to `platform` (which must already resolve:
+    /// built-in, registered, or onboarded): a configurable fraction of
+    /// served selections is shadow-replayed against `target` — the live
+    /// device, behind the usual [`CostSource`] interface — feeding the
+    /// health state machine described in [`crate::health`]. Replaces any
+    /// existing monitor for the name, resetting its state.
+    ///
+    /// ```
+    /// use primsel::coordinator::{Coordinator, SelectionRequest};
+    /// use primsel::health::{HealthPolicy, HealthState};
+    /// use primsel::networks;
+    /// use primsel::simulator::{machine, Simulator};
+    /// use std::sync::Arc;
+    ///
+    /// let coord = Coordinator::new();
+    /// let live = Arc::new(Simulator::new(machine::intel_i9_9900k()));
+    /// coord
+    ///     .monitor_platform("intel", live, HealthPolicy::default().with_sampling(1.0, 1))
+    ///     .unwrap();
+    /// coord.submit(&SelectionRequest::new(networks::alexnet(), "intel")).unwrap();
+    /// let health = coord.platform_health();
+    /// assert_eq!(health[0].platform, "intel");
+    /// // the live source agrees with the served cache: no drift
+    /// assert_eq!(health[0].state, HealthState::Healthy);
+    /// assert_eq!(health[0].sampled, 1);
+    /// ```
+    pub fn monitor_platform(
+        &self,
+        platform: &str,
+        target: Arc<dyn CostSource>,
+        policy: HealthPolicy,
+    ) -> Result<()> {
+        policy.validate()?;
+        // the platform must be servable before it is monitorable
+        let _ = self.entry(platform)?;
+        self.health.register(platform, target, policy);
+        Ok(())
+    }
+
+    /// Health snapshots for every monitored platform, sorted by name
+    /// (empty when nothing is monitored).
+    pub fn platform_health(&self) -> Vec<PlatformHealth> {
+        self.health.snapshot()
+    }
+
+    /// The health snapshot for one platform, if it is monitored.
+    pub fn platform_health_of(&self, platform: &str) -> Option<PlatformHealth> {
+        self.health.get(platform).map(|m| m.snapshot())
+    }
+
+    /// Run one recalibration attempt for the health loop: any panic from
+    /// a faulty target source (the [`CostSource`] trait has no error
+    /// channel) is caught and reported as a failure message, never
+    /// propagated.
+    fn recalibrate_guarded(&self, platform: &str, fraction: f64, seed: u64) -> Result<(), String> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.recalibrate_platform(platform, fraction, seed)
+        })) {
+            Ok(Ok(_report)) => Ok(()),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(payload) => {
+                Err(format!("recalibration panicked: {}", health::panic_message(payload)))
+            }
+        }
+    }
+
+    /// The monitor's recalibration hook for `platform` (see
+    /// [`PlatformMonitor`]): draws with the policy's fraction and a
+    /// per-attempt seed so retries see fresh samples.
+    fn health_recal<'a>(
+        &'a self,
+        platform: &'a str,
+        mon: &'a PlatformMonitor,
+    ) -> impl Fn(u64) -> Result<(), String> + 'a {
+        move |attempt| {
+            self.recalibrate_guarded(
+                platform,
+                mon.policy().recalib_fraction,
+                mon.attempt_seed(attempt),
+            )
+        }
+    }
+
     /// The unit of work everything request-shaped funnels through: solve
     /// one request synchronously on the caller's thread, through the
     /// platform's shared cache (warming it for everyone else). This is
     /// what [`Self::submit_batch`]'s fan-out jobs and the serving
     /// layer's persistent workers
     /// ([`service::worker`](crate::service)) each call per request.
+    ///
+    /// When the platform is monitored ([`Self::monitor_platform`]), the
+    /// request passes the health admission gate first — a `Quarantined`
+    /// platform refuses immediately with a typed
+    /// [`QuarantinedError`](crate::health::QuarantinedError) (recover it
+    /// with `err.downcast_ref`), or probes a recalibration if the
+    /// cool-down has elapsed — and feeds the monitor's shadow sampler
+    /// after solving.
     pub fn select_one(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        let monitor = self.health.get(&req.platform);
+        if let Some(mon) = &monitor {
+            let recal = self.health_recal(&req.platform, mon);
+            mon.admit(&recal).map_err(anyhow::Error::from)?;
+        }
+        // resolve the entry *after* admission: a successful quarantine
+        // probe re-registers the serving cache
         let entry = self.entry(&req.platform)?;
-        solve_one(&entry, req)
+        let report = solve_one(&entry, req)?;
+        if let Some(mon) = &monitor {
+            let recal = self.health_recal(&req.platform, mon);
+            mon.observe(&req.network, entry.cache.as_ref(), &recal);
+        }
+        Ok(report)
     }
 
     /// Solve a single request synchronously (alias of
@@ -647,8 +831,11 @@ impl Coordinator {
             }
         }
 
+        // each job goes through select_one, not solve_one directly, so
+        // batch traffic passes the same health gate and feeds the same
+        // drift monitors as the serving layer's per-request path
         let idx: Vec<usize> = (0..reqs.len()).collect();
-        let results = par::par_map_heavy(&idx, |&i| solve_one(&entries[i], &reqs[i]));
+        let results = par::par_map_heavy(&idx, |&i| self.select_one(&reqs[i]));
         let reports = results.into_iter().collect::<Result<Vec<_>>>()?;
 
         let stats = seen
@@ -660,12 +847,44 @@ impl Coordinator {
 
     /// Lifetime hit/miss totals per attached platform, sorted by name.
     pub fn cache_stats(&self) -> Vec<(String, CacheStats)> {
-        let map = self.platforms.read().expect("platform map poisoned");
+        let map = sync::read(&self.platforms);
         let mut out: Vec<(String, CacheStats)> =
             map.iter().map(|(name, e)| (name.clone(), e.cache.stats())).collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
+}
+
+/// Worst relative old→new prediction change across columns, via the same
+/// robust per-column median the factor machinery uses:
+/// `max_j |median_i(new_ij / old_ij) - 1|`.
+fn prediction_shift(old: &[Vec<f64>], new: &[Vec<f64>]) -> f64 {
+    let as_measured: Vec<Vec<Option<f64>>> =
+        new.iter().map(|r| r.iter().map(|&v| Some(v)).collect()).collect();
+    robust_factors(old, &as_measured, MIN_CALIB_RATIOS)
+        .into_iter()
+        .filter(|f| f.is_finite())
+        .map(|f| (f - 1.0).abs())
+        .fold(0.0f64, f64::max)
+}
+
+/// Flatten predicted 3x3 DLT matrices into rows of their six
+/// off-diagonal cells (the diagonal is meaningless — identity transforms
+/// are free — and must not contribute ratios).
+fn flatten_off_diagonal(mats: &[[[f64; 3]; 3]]) -> Vec<Vec<f64>> {
+    mats.iter()
+        .map(|m| {
+            let mut row = Vec::with_capacity(6);
+            for (i, r) in m.iter().enumerate() {
+                for (j, &v) in r.iter().enumerate() {
+                    if i != j {
+                        row.push(v);
+                    }
+                }
+            }
+            row
+        })
+        .collect()
 }
 
 fn solve_one(entry: &PlatformEntry, req: &SelectionRequest) -> Result<SelectionReport> {
@@ -830,6 +1049,7 @@ mod tests {
 
         let recal = coord.recalibrate_platform("arm-x", 0.04, 99).unwrap();
         assert_eq!(recal.platform, "arm-x");
+        assert_eq!(recal.path, RecalPath::TransferFactors);
         assert!(recal.calib_samples > onboard.calib_samples);
         assert!(recal.max_factor_shift.is_finite());
         match &recal.provenance {
@@ -844,11 +1064,22 @@ mod tests {
             coord.submit(&SelectionRequest::new(networks::alexnet(), "arm-x")).unwrap();
         assert!(rep.evaluated_ms > 0.0);
 
-        // only transfer-onboarded platforms carry recalibratable state
-        assert!(coord.recalibrate_platform("riscv", 0.02, 1).is_err()); // unknown
+        // fresh-Lin platforms recalibrate too, via a full refit: the
+        // serving model is replaced and the report says so
         let t2: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
         coord.onboard_platform("arm-lin2", OnboardSpec::fresh_lin(t2, 0.02, 7)).unwrap();
-        assert!(coord.recalibrate_platform("arm-lin2", 0.02, 1).is_err()); // fresh Lin
+        let refit = coord.recalibrate_platform("arm-lin2", 0.03, 11).unwrap();
+        assert_eq!(refit.path, RecalPath::FreshLinRefit);
+        assert!(refit.max_factor_shift.is_finite() && refit.max_factor_shift >= 0.0);
+        let rep =
+            coord.submit(&SelectionRequest::new(networks::alexnet(), "arm-lin2")).unwrap();
+        assert!(rep.evaluated_ms > 0.0);
+
+        // only model-onboarded platforms carry recalibratable state
+        assert!(coord.recalibrate_platform("riscv", 0.02, 1).is_err()); // unknown
+        let direct: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        coord.register("arm-direct", direct);
+        assert!(coord.recalibrate_platform("arm-direct", 0.02, 1).is_err()); // registered
         assert!(coord.recalibrate_platform("arm-x", 0.0, 1).is_err()); // bad fraction
     }
 }

@@ -1,0 +1,137 @@
+//! The rolling drift window: the evidence buffer behind the health
+//! state machine's drift statistic.
+//!
+//! Each entry is one replayed layer config — the cost row the serving
+//! cache answered with (`preds`) next to what the live target measured
+//! for the same config (`measured`). The window is bounded: old evidence
+//! ages out, so a platform that drifts and then recovers (or gets
+//! recalibrated) sees its score fall back without any manual reset.
+
+use crate::perfmodel::transfer::{self, MIN_CALIB_RATIOS};
+use std::collections::VecDeque;
+
+/// A bounded window of (served prediction, live measurement) rows with
+/// the §4.4 drift statistic over its contents.
+///
+/// The score is [`transfer::drift_score`]: per primitive column, the
+/// median measured/served ratio across the window, reduced to
+/// `max_j |ln factor_j|`. A platform whose serving model still matches
+/// its device scores ≈ 0; a column drifted to `r×` scores `|ln r|`.
+///
+/// ```
+/// use primsel::health::DriftWindow;
+///
+/// let mut w = DriftWindow::new(16);
+/// assert_eq!(w.score(), 0.0); // empty window: no evidence, no drift
+///
+/// // the device now runs every primitive at twice the served cost
+/// for _ in 0..4 {
+///     w.push(vec![1.0, 5.0], vec![Some(2.0), Some(10.0)]);
+/// }
+/// assert!((w.score() - 2f64.ln()).abs() < 1e-9);
+///
+/// // capacity bounds the evidence: pushing 16 agreeing rows evicts the
+/// // drifted ones and the score decays back to zero
+/// for _ in 0..16 {
+///     w.push(vec![1.0, 5.0], vec![Some(1.0), Some(5.0)]);
+/// }
+/// assert_eq!(w.len(), 16);
+/// assert_eq!(w.score(), 0.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct DriftWindow {
+    cap: usize,
+    rows: VecDeque<(Vec<f64>, Vec<Option<f64>>)>,
+}
+
+impl DriftWindow {
+    /// An empty window holding at most `cap` rows (floored at 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { cap, rows: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append one replayed config's (served, measured) rows, evicting the
+    /// oldest entry when full. Served values of `NaN` mark positions the
+    /// cache had no cost for; they are skipped by the statistic.
+    pub fn push(&mut self, preds: Vec<f64>, measured: Vec<Option<f64>>) {
+        if self.rows.len() == self.cap {
+            self.rows.pop_front();
+        }
+        self.rows.push_back((preds, measured));
+    }
+
+    /// Rows currently held.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the window holds no evidence.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Maximum rows the window holds.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Drop all evidence (after a recalibration: the old rows compare
+    /// against a model that no longer serves).
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+
+    /// The drift statistic over the current window (0.0 when empty; see
+    /// the type docs).
+    pub fn score(&self) -> f64 {
+        let (preds, measured): (Vec<_>, Vec<_>) = self.rows.iter().cloned().unzip();
+        transfer::drift_score(&preds, &measured, MIN_CALIB_RATIOS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_keeps_len_at_capacity() {
+        let mut w = DriftWindow::new(3);
+        for i in 0..10 {
+            w.push(vec![1.0], vec![Some(i as f64 + 1.0)]);
+        }
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.capacity(), 3);
+        // the survivors are the last three pushes: medians over {8,9,10}
+        assert!((w.score() - 9f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clear_resets_evidence() {
+        let mut w = DriftWindow::new(4);
+        for _ in 0..4 {
+            w.push(vec![1.0], vec![Some(3.0)]);
+        }
+        assert!(w.score() > 1.0);
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.score(), 0.0);
+    }
+
+    #[test]
+    fn nan_preds_are_ignored_not_poisonous() {
+        let mut w = DriftWindow::new(8);
+        for _ in 0..4 {
+            w.push(vec![f64::NAN, 2.0], vec![Some(1.0), Some(4.0)]);
+        }
+        assert!((w.score() - 2f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_capacity_floors_to_one() {
+        let mut w = DriftWindow::new(0);
+        w.push(vec![1.0], vec![Some(1.0)]);
+        w.push(vec![1.0], vec![Some(1.0)]);
+        assert_eq!(w.len(), 1);
+    }
+}

@@ -1,0 +1,833 @@
+//! # Platform health: drift detection, self-healing, quarantine
+//!
+//! The paper's §4.4 transfer flow calibrates a platform *once*; real
+//! fleets drift (thermal throttling, firmware updates, co-tenancy). This
+//! module closes the loop: every monitored platform gets a shadow
+//! sampler that replays a fraction of served selections against the live
+//! target device, a rolling drift statistic built from the same factor
+//! machinery §4.4 uses to *fit* corrections ([`DriftWindow`]), and a
+//! state machine that recalibrates automatically and degrades gracefully
+//! when recalibration itself keeps failing:
+//!
+//! ```text
+//!                 drift ≤ band                 drift > band
+//!               ┌─────────────┐             ┌──────────────┐
+//!               ▼             │             ▼              │
+//!          ┌─────────┐   ┌──────────┐   ┌───────────────┐  │
+//!          │ Healthy │──►│ Drifting │──►│ Recalibrating │──┘ (failure,
+//!          └─────────┘   └──────────┘   └───────────────┘    < N consec.,
+//!               ▲    drift > band   next     │    │          backoff 2^k)
+//!               │                sampled     │    │
+//!               │                 observe    │    │ N consecutive
+//!               │         success            │    │ failures
+//!               └────────────────────────────┘    ▼
+//!                                          ┌─────────────┐
+//!                  probe success           │ Quarantined │──┐
+//!               ◄──────────────────────────│ (refused)   │  │ cool-down
+//!                                          └─────────────┘  │ elapsed:
+//!                                                 ▲         │ probe
+//!                                                 └─────────┘
+//! ```
+//!
+//! * `Healthy`, `Drifting` and `Recalibrating` all **serve**: drift makes
+//!   selections stale, not wrong, so traffic keeps flowing while the
+//!   factors refresh in the background of a request.
+//! * `Quarantined` **refuses**: every admission resolves immediately
+//!   with a typed [`QuarantinedError`] (downcastable from the crate's
+//!   `anyhow`-style error — a ticket never hangs on a dead platform).
+//!   After `cool_down`, the next admission *probes*: it runs one
+//!   synchronous recalibration, readmitting on success and re-arming the
+//!   cool-down on failure.
+//!
+//! The [`Coordinator`](crate::coordinator::Coordinator) drives this per
+//! request: `monitor_platform` attaches a monitor, `select_one` consults
+//! it at admission and feeds it after each solve, and `platform_health`
+//! snapshots every monitor for operators (the service layer renders the
+//! same snapshots in `ServiceStats`). Fault injection for all of it
+//! lives in [`FaultySource`](crate::selection::FaultySource).
+
+pub mod drift;
+
+pub use drift::DriftWindow;
+
+use crate::layers::ConvConfig;
+use crate::networks::Network;
+use crate::selection::{CostCache, CostSource};
+use crate::simulator::noise::{fnv1a_words, SplitMix64};
+use crate::sync;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Hash salt for the shadow-sampling coin (vs. recalibration seeds).
+const SALT_SAMPLE: u64 = 0x4845_414C_5448_5341; // "HEALTHSA"
+/// Hash salt mixing recalibration-attempt seeds.
+const SALT_RECAL: u64 = 0x4845_414C_5448_5243; // "HEALTHRC"
+
+/// Where a monitored platform sits in the health state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Drift statistic inside the band; serving normally.
+    Healthy,
+    /// Drift statistic beyond the band; still serving, recalibration
+    /// pending (or backing off after a failed attempt).
+    Drifting,
+    /// A recalibration is in flight; still serving from the old cache.
+    Recalibrating,
+    /// Too many consecutive recalibration failures; admissions are
+    /// refused with [`QuarantinedError`] until a cool-down probe
+    /// succeeds.
+    Quarantined,
+}
+
+impl HealthState {
+    /// Whether requests for the platform are admitted in this state.
+    pub fn is_serving(self) -> bool {
+        self != HealthState::Quarantined
+    }
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Drifting => "drifting",
+            HealthState::Recalibrating => "recalibrating",
+            HealthState::Quarantined => "quarantined",
+        })
+    }
+}
+
+/// Tuning for one platform's monitor. The defaults suit a long-running
+/// service (light shadow sampling, a band well above model noise,
+/// patient quarantine); tests tighten everything to make transitions
+/// happen in a handful of requests.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Fraction of served selections whose layer configs are replayed
+    /// against the live target (0 disables shadow traffic entirely,
+    /// 1 replays every request). The per-request coin is a pure function
+    /// of `(seed, observation index)` — deterministic, order-free at the
+    /// endpoints.
+    pub sample_fraction: f64,
+    /// Seed for the sampling coin and recalibration draws.
+    pub seed: u64,
+    /// Rolling window capacity (replayed configs retained).
+    pub window: usize,
+    /// Minimum window fill before the drift statistic is trusted; below
+    /// this no transition happens.
+    pub min_window: usize,
+    /// Drift band: state goes `Drifting` when the windowed statistic
+    /// (max per-column `|ln(measured/served factor)|`) exceeds this.
+    /// The default 0.35 tolerates factor drift up to ~1.42x / 0.70x.
+    pub drift_band: f64,
+    /// Whether `Drifting` triggers automatic recalibration (on the next
+    /// sampled observation past any backoff).
+    pub auto_recalibrate: bool,
+    /// Calibration fraction for automatic recalibration draws.
+    pub recalib_fraction: f64,
+    /// Consecutive recalibration failures before `Quarantined`.
+    pub max_failures: u32,
+    /// Base delay between failed recalibration attempts; attempt `k`
+    /// (1-based) waits `backoff * 2^(k-1)`.
+    pub backoff: Duration,
+    /// How long a quarantined platform waits before an admission is
+    /// allowed to probe-recalibrate it.
+    pub cool_down: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            sample_fraction: 0.05,
+            seed: 0,
+            window: 64,
+            min_window: 12,
+            drift_band: 0.35,
+            auto_recalibrate: true,
+            recalib_fraction: 0.02,
+            max_failures: 3,
+            backoff: Duration::from_millis(250),
+            cool_down: Duration::from_secs(5),
+        }
+    }
+}
+
+impl HealthPolicy {
+    /// Set the shadow-sampling fraction and seed (builder style).
+    pub fn with_sampling(mut self, fraction: f64, seed: u64) -> Self {
+        self.sample_fraction = fraction;
+        self.seed = seed;
+        self
+    }
+
+    /// Set window capacity and minimum fill (builder style).
+    pub fn with_window(mut self, window: usize, min_window: usize) -> Self {
+        self.window = window;
+        self.min_window = min_window;
+        self
+    }
+
+    /// Set the drift band (builder style).
+    pub fn with_drift_band(mut self, band: f64) -> Self {
+        self.drift_band = band;
+        self
+    }
+
+    /// Enable/disable automatic recalibration and set its calibration
+    /// fraction (builder style).
+    pub fn with_auto_recalibrate(mut self, on: bool, fraction: f64) -> Self {
+        self.auto_recalibrate = on;
+        self.recalib_fraction = fraction;
+        self
+    }
+
+    /// Set the quarantine knobs (builder style).
+    pub fn with_quarantine(
+        mut self,
+        max_failures: u32,
+        backoff: Duration,
+        cool_down: Duration,
+    ) -> Self {
+        self.max_failures = max_failures;
+        self.backoff = backoff;
+        self.cool_down = cool_down;
+        self
+    }
+
+    /// Reject nonsensical policies before a monitor is built from one.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.sample_fraction),
+            "sample_fraction must be in [0, 1], got {}",
+            self.sample_fraction
+        );
+        anyhow::ensure!(
+            self.drift_band.is_finite() && self.drift_band > 0.0,
+            "drift_band must be positive, got {}",
+            self.drift_band
+        );
+        anyhow::ensure!(
+            self.recalib_fraction > 0.0 && self.recalib_fraction <= 1.0,
+            "recalib_fraction must be in (0, 1], got {}",
+            self.recalib_fraction
+        );
+        anyhow::ensure!(self.max_failures >= 1, "max_failures must be at least 1");
+        anyhow::ensure!(self.min_window >= 1, "min_window must be at least 1");
+        anyhow::ensure!(
+            self.window >= self.min_window,
+            "window ({}) must hold at least min_window ({}) rows",
+            self.window,
+            self.min_window
+        );
+        Ok(())
+    }
+}
+
+/// The typed refusal a quarantined platform answers admissions with.
+/// Travels through the crate's error type and stays downcastable:
+/// `err.downcast_ref::<QuarantinedError>()` recovers it behind any
+/// added context, so callers (and the service's tickets) can tell
+/// "platform is quarantined" from ordinary request errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantinedError {
+    pub platform: String,
+    /// Consecutive recalibration failures at refusal time.
+    pub consecutive_failures: u32,
+    /// Time until the next admission is allowed to probe.
+    pub retry_in: Duration,
+}
+
+impl fmt::Display for QuarantinedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "platform {:?} is quarantined after {} consecutive recalibration failures; \
+             next probe allowed in {:.0?}",
+            self.platform, self.consecutive_failures, self.retry_in
+        )
+    }
+}
+
+impl std::error::Error for QuarantinedError {}
+
+/// Operator-facing snapshot of one monitored platform.
+#[derive(Debug, Clone)]
+pub struct PlatformHealth {
+    pub platform: String,
+    pub state: HealthState,
+    /// Latest windowed drift statistic (0.0 until `min_window` fills).
+    pub drift: f64,
+    /// Rows currently in the drift window.
+    pub window: usize,
+    /// Requests observed for this platform since monitoring began.
+    pub observed: u64,
+    /// Observed requests the shadow sampler replayed.
+    pub sampled: u64,
+    /// Shadow replays that panicked (target fault during a probe row).
+    pub probe_failures: u64,
+    /// Successful recalibrations (automatic + quarantine probes).
+    pub recalibrations: u64,
+    /// Failed recalibration attempts, lifetime.
+    pub recal_failures: u64,
+    /// Failures since the last success (what quarantine triggers on).
+    pub consecutive_failures: u32,
+    /// Times the platform entered quarantine.
+    pub quarantines: u64,
+}
+
+/// Render a panic payload as text (the shape `std::panic::catch_unwind`
+/// hands back) — shared by the recalibration guard and the service
+/// worker's fault boundary.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Internal mutable state of one platform's monitor.
+struct MonitorState {
+    health: HealthState,
+    window: DriftWindow,
+    drift: f64,
+    observed: u64,
+    sampled: u64,
+    probe_failures: u64,
+    recalibrations: u64,
+    recal_failures: u64,
+    consecutive_failures: u32,
+    quarantines: u64,
+    /// Earliest instant the next recalibration attempt (automatic retry
+    /// or quarantine probe) may run.
+    not_before: Instant,
+    /// Monotone counter mixing per-attempt recalibration seeds.
+    attempt: u64,
+    /// A recalibration is in flight; transitions and further attempts
+    /// hold off until its outcome lands.
+    busy: bool,
+}
+
+/// One monitored platform: the live target to replay against, the
+/// policy, and the state machine. Driven entirely by the coordinator
+/// ([`admit`](Self::admit) before a solve, [`observe`](Self::observe)
+/// after); recalibration is injected as a closure so this type never
+/// depends on the coordinator.
+pub(crate) struct PlatformMonitor {
+    platform: String,
+    target: Arc<dyn CostSource>,
+    policy: HealthPolicy,
+    state: Mutex<MonitorState>,
+}
+
+/// The recalibration hook [`PlatformMonitor`] calls: given an attempt
+/// counter (for seed mixing), run one recalibration and report success
+/// or a failure message. Implementations must not panic — wrap fallible
+/// sources in `catch_unwind`.
+pub(crate) type RecalFn<'a> = &'a dyn Fn(u64) -> Result<(), String>;
+
+impl PlatformMonitor {
+    fn new(platform: &str, target: Arc<dyn CostSource>, policy: HealthPolicy) -> Self {
+        let window = DriftWindow::new(policy.window);
+        Self {
+            platform: platform.to_string(),
+            target,
+            policy,
+            state: Mutex::new(MonitorState {
+                health: HealthState::Healthy,
+                window,
+                drift: 0.0,
+                observed: 0,
+                sampled: 0,
+                probe_failures: 0,
+                recalibrations: 0,
+                recal_failures: 0,
+                consecutive_failures: 0,
+                quarantines: 0,
+                not_before: Instant::now(),
+                attempt: 0,
+                busy: false,
+            }),
+        }
+    }
+
+    pub(crate) fn policy(&self) -> &HealthPolicy {
+        &self.policy
+    }
+
+    /// Mix the policy seed with an attempt counter into a fresh
+    /// calibration-draw seed, so retries draw different samples.
+    pub(crate) fn attempt_seed(&self, attempt: u64) -> u64 {
+        fnv1a_words(&[self.policy.seed, SALT_RECAL, attempt])
+    }
+
+    /// Deterministic sampling coin for the `n`-th observation.
+    fn sample_coin(&self, n: u64) -> bool {
+        let f = self.policy.sample_fraction;
+        if f <= 0.0 {
+            return false;
+        }
+        if f >= 1.0 {
+            return true;
+        }
+        SplitMix64::new(fnv1a_words(&[self.policy.seed, SALT_SAMPLE, n])).next_f64() < f
+    }
+
+    /// Admission gate, called before a request for this platform is
+    /// solved. Serving states pass through; `Quarantined` refuses with
+    /// the typed error — unless the cool-down has elapsed, in which case
+    /// this admission *probes*: it runs one synchronous recalibration
+    /// and serves on success.
+    pub(crate) fn admit(&self, recal: RecalFn<'_>) -> Result<(), QuarantinedError> {
+        let attempt = {
+            let mut s = sync::lock(&self.state);
+            if s.health != HealthState::Quarantined {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if s.busy || now < s.not_before {
+                return Err(QuarantinedError {
+                    platform: self.platform.clone(),
+                    consecutive_failures: s.consecutive_failures,
+                    retry_in: s.not_before.saturating_duration_since(now),
+                });
+            }
+            // cool-down elapsed: this admission probes. State stays
+            // Quarantined (concurrent admissions keep being refused);
+            // `busy` claims the probe for this thread.
+            s.busy = true;
+            let a = s.attempt;
+            s.attempt += 1;
+            a
+        };
+        self.apply_recal_outcome(recal(attempt))
+    }
+
+    /// Post-solve hook: count the observation, maybe shadow-replay the
+    /// network's layer configs against the live target, rescore drift,
+    /// and fire automatic recalibration when due. `cache` is the
+    /// platform's serving cache (the "predicted" side of the replay).
+    ///
+    /// Automatic recalibration fires on the first *sampled* observation
+    /// after the platform entered `Drifting` (and past any backoff) —
+    /// detection and repair are separate observations, so state is
+    /// externally visible between them.
+    pub(crate) fn observe(&self, net: &Network, cache: &CostCache<'static>, recal: RecalFn<'_>) {
+        let now = Instant::now();
+        let (attempt, due) = {
+            let mut s = sync::lock(&self.state);
+            s.observed += 1;
+            if !self.sample_coin(s.observed) {
+                return;
+            }
+            s.sampled += 1;
+            let due = self.policy.auto_recalibrate
+                && s.health == HealthState::Drifting
+                && !s.busy
+                && now >= s.not_before;
+            if due {
+                s.busy = true;
+                s.health = HealthState::Recalibrating;
+                s.attempt += 1;
+            }
+            (s.attempt - u64::from(due), due)
+        };
+        if due {
+            // repair beats more evidence: skip the replay and spend this
+            // observation on the recalibration itself
+            let _ = self.apply_recal_outcome(recal(attempt));
+            return;
+        }
+
+        // shadow replay outside the lock: the target may be slow (or
+        // faulty — a panic here is a probe failure, not a crash)
+        let mut configs: Vec<ConvConfig> = Vec::new();
+        for cfg in &net.layers {
+            if !configs.contains(cfg) {
+                configs.push(*cfg);
+            }
+        }
+        let replay = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            configs
+                .iter()
+                .map(|cfg| {
+                    let preds: Vec<f64> =
+                        cache.row(cfg).iter().map(|t| t.unwrap_or(f64::NAN)).collect();
+                    let measured: Vec<Option<f64>> = self.target.layer_costs(cfg).into_owned();
+                    (preds, measured)
+                })
+                .collect::<Vec<_>>()
+        }));
+
+        let mut s = sync::lock(&self.state);
+        match replay {
+            Ok(rows) => {
+                for (preds, measured) in rows {
+                    s.window.push(preds, measured);
+                }
+                if s.window.len() >= self.policy.min_window {
+                    s.drift = s.window.score();
+                    // band transitions only apply to the serving states a
+                    // score can move; an in-flight recalibration's outcome
+                    // owns the next transition
+                    if !s.busy
+                        && matches!(s.health, HealthState::Healthy | HealthState::Drifting)
+                    {
+                        s.health = if s.drift > self.policy.drift_band {
+                            HealthState::Drifting
+                        } else {
+                            HealthState::Healthy
+                        };
+                    }
+                }
+            }
+            Err(_) => s.probe_failures += 1,
+        }
+    }
+
+    /// Land a recalibration outcome: success heals (fresh factors serve,
+    /// stale evidence drops), failure escalates (backoff, then
+    /// quarantine at `max_failures` consecutive).
+    fn apply_recal_outcome(&self, outcome: Result<(), String>) -> Result<(), QuarantinedError> {
+        let now = Instant::now();
+        let mut s = sync::lock(&self.state);
+        s.busy = false;
+        match outcome {
+            Ok(()) => {
+                s.recalibrations += 1;
+                s.consecutive_failures = 0;
+                // the window compared against a model that no longer
+                // serves; its evidence is void
+                s.window.clear();
+                s.drift = 0.0;
+                s.health = HealthState::Healthy;
+                s.not_before = now;
+                Ok(())
+            }
+            Err(_msg) => {
+                s.recal_failures += 1;
+                s.consecutive_failures += 1;
+                if s.consecutive_failures >= self.policy.max_failures {
+                    if s.consecutive_failures == self.policy.max_failures {
+                        s.quarantines += 1;
+                    }
+                    s.health = HealthState::Quarantined;
+                    s.not_before = now + self.policy.cool_down;
+                    Err(QuarantinedError {
+                        platform: self.platform.clone(),
+                        consecutive_failures: s.consecutive_failures,
+                        retry_in: self.policy.cool_down,
+                    })
+                } else {
+                    s.health = HealthState::Drifting;
+                    let shift = (s.consecutive_failures - 1).min(16);
+                    s.not_before = now + self.policy.backoff * (1u32 << shift);
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Operator snapshot of the current state.
+    pub(crate) fn snapshot(&self) -> PlatformHealth {
+        let s = sync::lock(&self.state);
+        PlatformHealth {
+            platform: self.platform.clone(),
+            state: s.health,
+            drift: s.drift,
+            window: s.window.len(),
+            observed: s.observed,
+            sampled: s.sampled,
+            probe_failures: s.probe_failures,
+            recalibrations: s.recalibrations,
+            recal_failures: s.recal_failures,
+            consecutive_failures: s.consecutive_failures,
+            quarantines: s.quarantines,
+        }
+    }
+}
+
+/// The coordinator's registry of platform monitors.
+#[derive(Default)]
+pub(crate) struct HealthMonitor {
+    monitors: RwLock<HashMap<String, Arc<PlatformMonitor>>>,
+}
+
+impl HealthMonitor {
+    /// Attach (or replace) the monitor for `platform`.
+    pub(crate) fn register(
+        &self,
+        platform: &str,
+        target: Arc<dyn CostSource>,
+        policy: HealthPolicy,
+    ) {
+        let mon = Arc::new(PlatformMonitor::new(platform, target, policy));
+        sync::write(&self.monitors).insert(platform.to_string(), mon);
+    }
+
+    /// The monitor for `platform`, if one is attached.
+    pub(crate) fn get(&self, platform: &str) -> Option<Arc<PlatformMonitor>> {
+        sync::read(&self.monitors).get(platform).cloned()
+    }
+
+    /// Snapshot every monitor, sorted by platform name.
+    pub(crate) fn snapshot(&self) -> Vec<PlatformHealth> {
+        let mut out: Vec<PlatformHealth> =
+            sync::read(&self.monitors).values().map(|m| m.snapshot()).collect();
+        out.sort_by(|a, b| a.platform.cmp(&b.platform));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use std::borrow::Cow;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A constant-cost source: every primitive costs `ms`, DLTs are
+    /// free. Counts queries so tests can assert shadow-traffic volume.
+    struct Flat {
+        ms: AtomicU64,
+        queries: AtomicU64,
+    }
+
+    impl Flat {
+        fn new(ms: f64) -> Self {
+            Self { ms: AtomicU64::new(ms.to_bits()), queries: AtomicU64::new(0) }
+        }
+
+        fn set(&self, ms: f64) {
+            self.ms.store(ms.to_bits(), Ordering::Relaxed);
+        }
+
+        fn queries(&self) -> u64 {
+            self.queries.load(Ordering::Relaxed)
+        }
+    }
+
+    impl CostSource for Flat {
+        fn layer_costs(&self, _cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+            self.queries.fetch_add(1, Ordering::Relaxed);
+            Cow::Owned(vec![Some(f64::from_bits(self.ms.load(Ordering::Relaxed))); 4])
+        }
+
+        fn dlt_cost(
+            &self,
+            _c: u32,
+            _im: u32,
+            _src: crate::primitives::Layout,
+            _dst: crate::primitives::Layout,
+        ) -> f64 {
+            0.0
+        }
+    }
+
+    fn tight_policy() -> HealthPolicy {
+        HealthPolicy::default()
+            .with_sampling(1.0, 7)
+            .with_window(16, 4)
+            .with_drift_band(0.5)
+            .with_quarantine(2, Duration::ZERO, Duration::from_millis(40))
+    }
+
+    fn monitor_over(
+        target: Arc<Flat>,
+        policy: HealthPolicy,
+    ) -> (PlatformMonitor, CostCache<'static>) {
+        // the serving cache predicts a constant 1.0 ms per primitive
+        let cache = CostCache::new_shared(Arc::new(Flat::new(1.0)) as Arc<dyn CostSource>);
+        (PlatformMonitor::new("p", target, policy), cache)
+    }
+
+    fn no_recal(_a: u64) -> Result<(), String> {
+        panic!("recalibration must not fire in this test")
+    }
+
+    #[test]
+    fn healthy_to_drifting_and_back_tracks_the_band() {
+        let target = Arc::new(Flat::new(1.0));
+        let policy = tight_policy().with_auto_recalibrate(false, 0.02);
+        let (mon, cache) = monitor_over(Arc::clone(&target), policy);
+        let net = networks::alexnet();
+
+        mon.observe(&net, &cache, &no_recal);
+        assert_eq!(mon.snapshot().state, HealthState::Healthy);
+        assert!(mon.snapshot().drift < 0.1);
+
+        // the device slows 3x: next replays push the score past the band
+        target.set(3.0);
+        for _ in 0..6 {
+            mon.observe(&net, &cache, &no_recal);
+        }
+        let snap = mon.snapshot();
+        assert_eq!(snap.state, HealthState::Drifting);
+        assert!((snap.drift - 3f64.ln()).abs() < 0.2, "{}", snap.drift);
+
+        // recovery: enough agreeing rows age the drifted evidence out
+        target.set(1.0);
+        for _ in 0..20 {
+            mon.observe(&net, &cache, &no_recal);
+        }
+        assert_eq!(mon.snapshot().state, HealthState::Healthy);
+    }
+
+    #[test]
+    fn auto_recalibration_fires_on_the_next_sampled_observe() {
+        let target = Arc::new(Flat::new(4.0));
+        let (mon, cache) = monitor_over(target, tight_policy());
+        let net = networks::alexnet();
+        let fired = AtomicU64::new(0);
+        let recal = |_a: u64| {
+            fired.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        };
+
+        // drive until Drifting — recal must NOT fire on the detecting
+        // observation itself
+        while mon.snapshot().state != HealthState::Drifting {
+            mon.observe(&net, &cache, &recal);
+            assert!(mon.snapshot().observed < 50, "never entered Drifting");
+        }
+        assert_eq!(fired.load(Ordering::Relaxed), 0);
+
+        // the next observation repairs: success → Healthy, evidence gone
+        mon.observe(&net, &cache, &recal);
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
+        let snap = mon.snapshot();
+        assert_eq!(snap.state, HealthState::Healthy);
+        assert_eq!(snap.recalibrations, 1);
+        assert_eq!(snap.window, 0);
+        assert_eq!(snap.drift, 0.0);
+    }
+
+    #[test]
+    fn repeated_failures_quarantine_then_probe_readmits() {
+        let target = Arc::new(Flat::new(4.0));
+        let (mon, cache) = monitor_over(target, tight_policy());
+        let net = networks::alexnet();
+        let failing = |_a: u64| Err("injected".to_string());
+
+        while mon.snapshot().state != HealthState::Drifting {
+            mon.observe(&net, &cache, &failing);
+        }
+        // max_failures = 2 with zero backoff: two more sampled
+        // observations exhaust the attempts
+        mon.observe(&net, &cache, &failing);
+        let mid = mon.snapshot();
+        assert_eq!(mid.state, HealthState::Drifting, "one failure backs off, still serving");
+        assert_eq!(mid.consecutive_failures, 1);
+        mon.observe(&net, &cache, &failing);
+        let snap = mon.snapshot();
+        assert_eq!(snap.state, HealthState::Quarantined);
+        assert_eq!(snap.quarantines, 1);
+        assert_eq!(snap.recal_failures, 2);
+
+        // inside the cool-down every admission refuses with the typed
+        // error and never invokes the recal hook
+        let err = mon.admit(&no_recal).unwrap_err();
+        assert_eq!(err.platform, "p");
+        assert_eq!(err.consecutive_failures, 2);
+
+        // after the cool-down the next admission probes; success heals
+        std::thread::sleep(Duration::from_millis(45));
+        let probe_ok = |_a: u64| Ok(());
+        mon.admit(&probe_ok).unwrap();
+        let healed = mon.snapshot();
+        assert_eq!(healed.state, HealthState::Healthy);
+        assert_eq!(healed.recalibrations, 1);
+        assert_eq!(healed.consecutive_failures, 0);
+        // and admissions are plain pass-throughs again
+        mon.admit(&no_recal).unwrap();
+    }
+
+    #[test]
+    fn failed_probe_rearms_the_cool_down() {
+        let target = Arc::new(Flat::new(4.0));
+        let (mon, cache) = monitor_over(target, tight_policy());
+        let net = networks::alexnet();
+        let failing = |_a: u64| Err("injected".to_string());
+        while mon.snapshot().state != HealthState::Quarantined {
+            mon.observe(&net, &cache, &failing);
+        }
+        std::thread::sleep(Duration::from_millis(45));
+        let err = mon.admit(&failing).unwrap_err();
+        assert_eq!(err.consecutive_failures, 3);
+        // the probe failure re-armed the cool-down: an immediate retry
+        // is refused without invoking the hook
+        assert!(mon.admit(&no_recal).is_err());
+        assert_eq!(mon.snapshot().state, HealthState::Quarantined);
+        // a single quarantine entry despite multiple failures inside it
+        assert_eq!(mon.snapshot().quarantines, 1);
+    }
+
+    #[test]
+    fn sampling_fraction_zero_generates_no_shadow_traffic() {
+        let target = Arc::new(Flat::new(9.0)); // wildly drifted…
+        let policy = tight_policy().with_sampling(0.0, 7);
+        let (mon, cache) = monitor_over(Arc::clone(&target), policy);
+        let net = networks::alexnet();
+        for _ in 0..50 {
+            mon.observe(&net, &cache, &no_recal);
+        }
+        // …but with sampling off nothing is replayed, so nothing is seen
+        let snap = mon.snapshot();
+        assert_eq!(target.queries(), 0);
+        assert_eq!(snap.sampled, 0);
+        assert_eq!(snap.observed, 50);
+        assert_eq!(snap.state, HealthState::Healthy);
+    }
+
+    #[test]
+    fn replay_panic_counts_as_probe_failure_not_crash() {
+        struct Bomb;
+        impl CostSource for Bomb {
+            fn layer_costs(&self, _cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+                panic!("injected fault: boom");
+            }
+            fn dlt_cost(
+                &self,
+                _c: u32,
+                _im: u32,
+                _src: crate::primitives::Layout,
+                _dst: crate::primitives::Layout,
+            ) -> f64 {
+                0.0
+            }
+        }
+        let cache = CostCache::new_shared(Arc::new(Flat::new(1.0)) as Arc<dyn CostSource>);
+        let mon = PlatformMonitor::new("p", Arc::new(Bomb), tight_policy());
+        let net = networks::alexnet();
+        mon.observe(&net, &cache, &no_recal);
+        let snap = mon.snapshot();
+        assert_eq!(snap.probe_failures, 1);
+        assert_eq!(snap.window, 0);
+        assert_eq!(snap.state, HealthState::Healthy);
+    }
+
+    #[test]
+    fn policy_validation_rejects_nonsense() {
+        assert!(HealthPolicy::default().validate().is_ok());
+        assert!(HealthPolicy::default().with_sampling(1.5, 0).validate().is_err());
+        assert!(HealthPolicy::default().with_drift_band(0.0).validate().is_err());
+        assert!(HealthPolicy::default().with_auto_recalibrate(true, 0.0).validate().is_err());
+        let p = HealthPolicy::default().with_quarantine(0, Duration::ZERO, Duration::ZERO);
+        assert!(p.validate().is_err());
+        assert!(HealthPolicy::default().with_window(4, 12).validate().is_err());
+    }
+
+    #[test]
+    fn quarantined_error_is_downcastable_through_anyhow() {
+        let typed = QuarantinedError {
+            platform: "p".to_string(),
+            consecutive_failures: 3,
+            retry_in: Duration::from_secs(5),
+        };
+        let e: anyhow::Error = typed.clone().into();
+        assert_eq!(e.downcast_ref::<QuarantinedError>(), Some(&typed));
+        assert!(e.to_string().contains("quarantined"));
+    }
+}

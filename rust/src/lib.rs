@@ -21,6 +21,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod health;
 pub mod layers;
 pub mod linalg;
 pub mod networks;
@@ -34,6 +35,7 @@ pub mod runtime;
 pub mod selection;
 pub mod service;
 pub mod simulator;
+pub mod sync;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -64,6 +64,25 @@ pub fn prim_factors(model: &dyn CostModel, calib: &PrimDataset) -> Result<Vec<f6
     Ok(robust_factors(&model.predict_prim(&calib.configs)?, &calib.targets, MIN_CALIB_RATIOS))
 }
 
+/// Drift statistic over a window of (predicted, measured) rows: the worst
+/// per-column absolute log of the robust factor — `max_j |ln f_j|` with
+/// `f_j` from [`robust_factors`].
+///
+/// This is the same §4.4 machinery that *fits* corrections, re-read as a
+/// detector: if the serving model still matched the platform, every
+/// factor would sit near 1.0 and the score near 0.0; a column whose
+/// median measured/predicted ratio has moved to `r` scores `|ln r|`
+/// regardless of direction. Columns without enough usable ratios keep
+/// factor 1.0 and so cannot raise the score. Returns 0.0 for an empty
+/// window.
+pub fn drift_score(preds: &[Vec<f64>], measured: &[Vec<Option<f64>>], min_ratios: usize) -> f64 {
+    robust_factors(preds, measured, min_ratios)
+        .into_iter()
+        .filter(|f| f.is_finite() && *f > 0.0)
+        .map(|f| f.ln().abs())
+        .fold(0.0, f64::max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +119,25 @@ mod tests {
         ];
         let f = robust_factors(&preds, &measured, 3);
         assert_eq!(f, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn drift_score_is_zero_on_agreement_and_symmetric_in_direction() {
+        let preds = vec![vec![2.0, 4.0]; 4];
+        let agree: Vec<Vec<Option<f64>>> = vec![vec![Some(2.0), Some(4.0)]; 4];
+        assert!(drift_score(&preds, &agree, MIN_CALIB_RATIOS).abs() < 1e-12);
+
+        // 3x slowdown in column 0, 3x speedup in column 1: both score ln 3
+        let slow: Vec<Vec<Option<f64>>> = vec![vec![Some(6.0), Some(4.0)]; 4];
+        let fast: Vec<Vec<Option<f64>>> = vec![vec![Some(2.0), Some(4.0 / 3.0)]; 4];
+        let s = drift_score(&preds, &slow, MIN_CALIB_RATIOS);
+        let f = drift_score(&preds, &fast, MIN_CALIB_RATIOS);
+        assert!((s - 3f64.ln()).abs() < 1e-9, "{s}");
+        assert!((f - 3f64.ln()).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn drift_score_empty_window_is_zero() {
+        assert_eq!(drift_score(&[], &[], MIN_CALIB_RATIOS), 0.0);
     }
 }

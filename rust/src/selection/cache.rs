@@ -56,6 +56,7 @@ use super::{CostSource, TableSource};
 use crate::layers::ConvConfig;
 use crate::networks::Network;
 use crate::primitives::Layout;
+use crate::sync;
 use std::borrow::Cow;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -205,7 +206,7 @@ impl<'a> CostCache<'a> {
     /// bit-identical either way because sources are deterministic).
     pub fn row(&self, cfg: &ConvConfig) -> Arc<[Option<f64>]> {
         let shard = &self.rows[shard_of(cfg)];
-        if let Some(r) = shard.read().expect("cache shard poisoned").get(cfg) {
+        if let Some(r) = sync::read(shard).get(cfg) {
             self.row_hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(r);
         }
@@ -213,7 +214,7 @@ impl<'a> CostCache<'a> {
         // compute outside the write lock: a slow profile on this key must
         // not block hits (or other misses) on the rest of the shard
         let r: Arc<[Option<f64>]> = self.source().layer_costs(cfg).into_owned().into();
-        let mut map = shard.write().expect("cache shard poisoned");
+        let mut map = sync::write(shard);
         Arc::clone(map.entry(*cfg).or_insert(r))
     }
 
@@ -221,23 +222,23 @@ impl<'a> CostCache<'a> {
     pub fn matrix(&self, c: u32, im: u32) -> [[f64; 3]; 3] {
         let key = (c, im);
         let shard = &self.dlt[shard_of(&key)];
-        if let Some(m) = shard.read().expect("cache shard poisoned").get(&key) {
+        if let Some(m) = sync::read(shard).get(&key) {
             self.dlt_hits.fetch_add(1, Ordering::Relaxed);
             return *m;
         }
         self.dlt_misses.fetch_add(1, Ordering::Relaxed);
         let m = self.source().dlt_matrix3(c, im);
-        *shard.write().expect("cache shard poisoned").entry(key).or_insert(m)
+        *sync::write(shard).entry(key).or_insert(m)
     }
 
     /// Number of distinct layer rows materialised so far.
     pub fn rows_cached(&self) -> usize {
-        self.rows.iter().map(|s| s.read().expect("cache shard poisoned").len()).sum()
+        self.rows.iter().map(|s| sync::read(s).len()).sum()
     }
 
     /// Number of distinct DLT matrices materialised so far.
     pub fn dlt_cached(&self) -> usize {
-        self.dlt.iter().map(|s| s.read().expect("cache shard poisoned").len()).sum()
+        self.dlt.iter().map(|s| sync::read(s).len()).sum()
     }
 
     /// Snapshot of the hit/miss counters. Monotonic; pair with

@@ -1,0 +1,283 @@
+//! Deterministic fault injection for cost sources.
+//!
+//! [`FaultySource`] wraps any inner [`CostSource`] and perturbs it with
+//! three independently-toggled fault families, so the health subsystem
+//! (drift detection, auto-recalibration, quarantine — see
+//! [`health`](crate::health)) is testable end to end without real
+//! hardware misbehaving on cue:
+//!
+//! * **multiplicative drift** — scales every cost; primitive columns get
+//!   *different* effective factors (`d` raised to a per-column power in
+//!   `[1, 2)`, seeded), because a uniform scale would leave argmin
+//!   selections untouched and make "drift" undetectable by outcome.
+//!   DLT costs scale by the plain factor `d`.
+//! * **error returns** — a seeded per-query coin makes the source panic
+//!   with an `injected fault:` message. The [`CostSource`] trait has no
+//!   error channel by design (hot-path rows are infallible lookups), so
+//!   a panic *is* the error path real sources have — and both consumers
+//!   that must survive it (the service worker, the recalibration guard)
+//!   already run sources under `catch_unwind`.
+//! * **latency spikes** — a seeded per-query coin inserts a sleep,
+//!   modelling a co-tenant stealing the machine mid-profile.
+//!
+//! Every decision is a pure function of `(seed, query key)` — never of
+//! call order — so concurrent and sequential runs inject the *same*
+//! faults on the same queries, and a test that replays a workload
+//! replays its faults.
+
+use super::CostSource;
+use crate::layers::ConvConfig;
+use crate::primitives::Layout;
+use crate::simulator::noise::{fnv1a_words, SplitMix64};
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Salt separating the per-query coins (error vs spike vs drift spread).
+const SALT_ERROR: u64 = 0x4641554C545F4552; // "FAULT_ER"
+const SALT_SPIKE: u64 = 0x4641554C545F5350; // "FAULT_SP"
+const SALT_DRIFT: u64 = 0x4641554C545F4452; // "FAULT_DR"
+
+/// A seeded fault-injecting wrapper around any cost source. All knobs are
+/// atomic and may be flipped while the source is being served from other
+/// threads — tests drive the health state machine by turning drift and
+/// error injection on and off between requests.
+pub struct FaultySource {
+    inner: Arc<dyn CostSource>,
+    seed: u64,
+    /// Multiplicative drift factor as f64 bits (1.0 = off).
+    drift: AtomicU64,
+    /// Probability in [0, 1] (f64 bits) that a query panics.
+    error_rate: AtomicU64,
+    /// Probability in [0, 1] (f64 bits) that a query sleeps.
+    spike_rate: AtomicU64,
+    /// Spike duration in microseconds.
+    spike_us: AtomicU64,
+    queries: AtomicU64,
+    injected_errors: AtomicU64,
+    injected_spikes: AtomicU64,
+}
+
+impl FaultySource {
+    /// Wrap `inner`; all fault families start disabled, so the wrapper is
+    /// initially transparent (bit-identical costs).
+    pub fn new(inner: Arc<dyn CostSource>, seed: u64) -> Self {
+        Self {
+            inner,
+            seed,
+            drift: AtomicU64::new(1.0f64.to_bits()),
+            error_rate: AtomicU64::new(0.0f64.to_bits()),
+            spike_rate: AtomicU64::new(0.0f64.to_bits()),
+            spike_us: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+            injected_spikes: AtomicU64::new(0),
+        }
+    }
+
+    /// Set the multiplicative drift factor (`1.0` disables). Primitive
+    /// column `j` is scaled by `d^(1 + u_j)` with `u_j ∈ [0, 1)` seeded
+    /// per column; DLT costs scale by `d`.
+    pub fn set_drift(&self, d: f64) {
+        assert!(d.is_finite() && d > 0.0, "drift factor must be positive, got {d}");
+        self.drift.store(d.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Set the per-query panic probability (`0.0` disables, `1.0` makes
+    /// every query fail).
+    pub fn set_error_rate(&self, p: f64) {
+        assert!((0.0..=1.0).contains(&p), "error rate must be in [0,1], got {p}");
+        self.error_rate.store(p.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Set the per-query latency-spike probability and duration.
+    pub fn set_latency_spikes(&self, p: f64, dur: Duration) {
+        assert!((0.0..=1.0).contains(&p), "spike rate must be in [0,1], got {p}");
+        self.spike_us.store(dur.as_micros() as u64, Ordering::Relaxed);
+        self.spike_rate.store(p.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Total queries that reached the wrapper (layer rows + DLT lookups)
+    /// — the hammer test's "sampling fraction 0 adds zero shadow
+    /// traffic" assertion reads this.
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    /// Queries that panicked by injection so far.
+    pub fn injected_errors(&self) -> u64 {
+        self.injected_errors.load(Ordering::Relaxed)
+    }
+
+    /// Queries that slept by injection so far.
+    pub fn injected_spikes(&self) -> u64 {
+        self.injected_spikes.load(Ordering::Relaxed)
+    }
+
+    fn drift_factor(&self) -> f64 {
+        f64::from_bits(self.drift.load(Ordering::Relaxed))
+    }
+
+    /// Uniform [0, 1) coin for `(seed, salt, key)` — order-independent.
+    fn coin(&self, salt: u64, key: &[u64]) -> f64 {
+        let mut h = vec![self.seed, salt];
+        h.extend_from_slice(key);
+        SplitMix64::new(fnv1a_words(&h)).next_f64()
+    }
+
+    /// Shared per-query fault gate: count, maybe sleep, maybe panic.
+    fn gate(&self, kind: &str, key: &[u64]) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let spike_rate = f64::from_bits(self.spike_rate.load(Ordering::Relaxed));
+        if spike_rate > 0.0 && self.coin(SALT_SPIKE, key) < spike_rate {
+            self.injected_spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(self.spike_us.load(Ordering::Relaxed)));
+        }
+        let error_rate = f64::from_bits(self.error_rate.load(Ordering::Relaxed));
+        if error_rate > 0.0 && self.coin(SALT_ERROR, key) < error_rate {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: {kind} query failed (seed {})", self.seed);
+        }
+    }
+
+    /// The per-column drift exponent spread `1 + u_j`, `u_j ∈ [0, 1)`.
+    fn column_exponent(&self, j: usize) -> f64 {
+        1.0 + self.coin(SALT_DRIFT, &[j as u64])
+    }
+}
+
+impl CostSource for FaultySource {
+    fn layer_costs(&self, cfg: &ConvConfig) -> Cow<'_, [Option<f64>]> {
+        let key =
+            [cfg.k as u64, cfg.c as u64, cfg.im as u64, cfg.s as u64, cfg.f as u64];
+        self.gate("layer_costs", &key);
+        let row = self.inner.layer_costs(cfg);
+        let d = self.drift_factor();
+        if d == 1.0 {
+            return row;
+        }
+        Cow::Owned(
+            row.iter()
+                .enumerate()
+                .map(|(j, t)| t.map(|v| v * d.powf(self.column_exponent(j))))
+                .collect(),
+        )
+    }
+
+    fn dlt_cost(&self, c: u32, im: u32, src: Layout, dst: Layout) -> f64 {
+        let key = [c as u64, im as u64, src.index() as u64, dst.index() as u64];
+        self.gate("dlt_cost", &key);
+        self.inner.dlt_cost(c, im, src, dst) * self.drift_factor()
+    }
+
+    // is_memoized stays false: every query must pass the fault gate, and
+    // consumers wrap the source in their own CostCache where needed.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{machine, Simulator};
+
+    fn wrapped(seed: u64) -> FaultySource {
+        FaultySource::new(Arc::new(Simulator::new(machine::intel_i9_9900k())), seed)
+    }
+
+    fn cfg() -> ConvConfig {
+        ConvConfig::new(64, 3, 224, 1, 3)
+    }
+
+    #[test]
+    fn transparent_when_disabled() {
+        let f = wrapped(1);
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        assert_eq!(f.layer_costs(&cfg()).as_ref(), sim.layer_costs(&cfg()).as_ref());
+        assert_eq!(
+            f.dlt_cost(64, 224, Layout::Chw, Layout::Hwc),
+            sim.dlt_cost(64, 224, Layout::Chw, Layout::Hwc)
+        );
+        assert_eq!(f.queries(), 2);
+        assert_eq!(f.injected_errors(), 0);
+    }
+
+    #[test]
+    fn drift_scales_columns_differently() {
+        let f = wrapped(2);
+        let clean: Vec<Option<f64>> = f.layer_costs(&cfg()).into_owned();
+        f.set_drift(3.0);
+        let drifted = f.layer_costs(&cfg());
+        let ratios: Vec<f64> = clean
+            .iter()
+            .zip(drifted.iter())
+            .filter_map(|(c, d)| Some(d.as_ref()? / c.as_ref()?))
+            .collect();
+        assert!(ratios.len() > 2);
+        // every column at least 3x (exponent ≥ 1), below 9x (exponent < 2)
+        for r in &ratios {
+            assert!(*r >= 3.0 - 1e-9 && *r < 9.0 + 1e-9, "{r}");
+        }
+        // and the spread is real: not all columns share one factor
+        let spread = ratios.iter().cloned().fold(0.0f64, f64::max)
+            / ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 1.05, "{spread}");
+        // deterministic: same query, same drifted row
+        assert_eq!(drifted.as_ref(), f.layer_costs(&cfg()).as_ref());
+    }
+
+    #[test]
+    fn error_injection_is_deterministic_per_query() {
+        let f = wrapped(3);
+        f.set_error_rate(0.5);
+        let mut failed = Vec::new();
+        for im in [7u32, 14, 28, 56, 112, 224] {
+            let c = ConvConfig::new(32, 16, im, 1, 3);
+            let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f.layer_costs(&c).len()
+            }))
+            .is_err();
+            failed.push(died);
+        }
+        assert!(failed.iter().any(|&d| d), "rate 0.5 over 6 keys hit none");
+        assert!(!failed.iter().all(|&d| d), "rate 0.5 over 6 keys hit all");
+        // replay: the same keys fail, independent of order
+        for (im, &expect) in [224u32, 112, 56, 28, 14, 7].iter().zip(failed.iter().rev()) {
+            let c = ConvConfig::new(32, 16, *im, 1, 3);
+            let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f.layer_costs(&c).len()
+            }))
+            .is_err();
+            assert_eq!(died, expect, "im={im}");
+        }
+        assert!(f.injected_errors() > 0);
+        // disabling stops the panics on the very same keys
+        f.set_error_rate(0.0);
+        for im in [7u32, 14, 28, 56, 112, 224] {
+            let _ = f.layer_costs(&ConvConfig::new(32, 16, im, 1, 3));
+        }
+    }
+
+    #[test]
+    fn rate_one_fails_everything_and_message_is_tagged() {
+        let f = wrapped(4);
+        f.set_error_rate(1.0);
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.dlt_cost(8, 7, Layout::Chw, Layout::Hwc)
+        }))
+        .unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.starts_with("injected fault:"), "{msg}");
+    }
+
+    #[test]
+    fn latency_spikes_sleep_but_do_not_corrupt() {
+        let f = wrapped(5);
+        let clean = f.dlt_cost(16, 14, Layout::Chw, Layout::Hcw);
+        f.set_latency_spikes(1.0, Duration::from_micros(200));
+        let t0 = std::time::Instant::now();
+        let spiked = f.dlt_cost(16, 14, Layout::Chw, Layout::Hcw);
+        assert!(t0.elapsed() >= Duration::from_micros(200));
+        assert_eq!(clean, spiked);
+        assert!(f.injected_spikes() >= 1);
+    }
+}

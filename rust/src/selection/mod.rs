@@ -10,10 +10,12 @@
 //! cost query per primitive pair.
 
 pub mod cache;
+pub mod faulty;
 pub mod memory;
 pub mod modeled;
 
 pub use cache::{CacheStats, CostCache};
+pub use faulty::FaultySource;
 pub use modeled::ModeledSource;
 
 use crate::layers::ConvConfig;

@@ -50,6 +50,7 @@ pub use ticket::Ticket;
 use crate::coordinator::{Coordinator, SelectionRequest};
 use crate::par;
 use crate::selection::CacheStats;
+use crate::sync;
 use queue::AdmissionQueue;
 use sched::DrrScheduler;
 use stats::TenantCounters;
@@ -136,7 +137,7 @@ pub(crate) struct ServiceShared {
 
 impl ServiceShared {
     pub(crate) fn tenant_meta(&self, id: usize) -> Arc<TenantMeta> {
-        Arc::clone(&self.tenants.read().expect("tenant table poisoned").metas[id])
+        Arc::clone(&sync::read(&self.tenants).metas[id])
     }
 }
 
@@ -228,7 +229,7 @@ impl Service {
             weight.is_finite() && weight > 0.0,
             "tenant weight must be positive, got {weight}"
         );
-        let mut table = self.shared.tenants.write().expect("tenant table poisoned");
+        let mut table = sync::write(&self.shared.tenants);
         anyhow::ensure!(
             !table.by_name.contains_key(name),
             "tenant {name:?} is already registered"
@@ -260,17 +261,10 @@ impl Service {
 
     /// Resolve (or auto-register with the config defaults) a tenant id.
     fn tenant_id(&self, name: &str) -> usize {
-        if let Some(&id) = self
-            .shared
-            .tenants
-            .read()
-            .expect("tenant table poisoned")
-            .by_name
-            .get(name)
-        {
+        if let Some(&id) = sync::read(&self.shared.tenants).by_name.get(name) {
             return id;
         }
-        let mut table = self.shared.tenants.write().expect("tenant table poisoned");
+        let mut table = sync::write(&self.shared.tenants);
         if let Some(&id) = table.by_name.get(name) {
             return id; // raced another registrar; keep the winner
         }
@@ -341,7 +335,7 @@ impl Service {
     /// A point-in-time [`ServiceStats`] snapshot.
     pub fn stats(&self) -> ServiceStats {
         let lanes = self.shared.queue.lane_snapshot();
-        let table = self.shared.tenants.read().expect("tenant table poisoned");
+        let table = sync::read(&self.shared.tenants);
         let tenants = table
             .metas
             .iter()
@@ -384,6 +378,7 @@ impl Service {
             wait: self.shared.wait.snapshot(),
             service: self.shared.service.snapshot(),
             platforms,
+            health: self.shared.coord.platform_health(),
         }
     }
 

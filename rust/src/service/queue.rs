@@ -32,6 +32,7 @@
 //! wake-up is pending.
 
 use super::sched::Scheduler;
+use crate::sync;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -99,7 +100,7 @@ impl<T, S: Scheduler> AdmissionQueue<T, S> {
     }
 
     fn lock(&self) -> MutexGuard<'_, Inner<T, S>> {
-        self.inner.lock().expect("admission queue poisoned")
+        sync::lock(&self.inner)
     }
 
     /// Register the next tenant lane; returns its id. Lane ids are dense
@@ -168,7 +169,7 @@ impl<T, S: Scheduler> AdmissionQueue<T, S> {
                 return Ok(());
             }
             inner = match deadline {
-                None => self.not_full.wait(inner).expect("admission queue poisoned"),
+                None => sync::wait(&self.not_full, inner),
                 Some(d) => {
                     let elapsed = start.elapsed();
                     if elapsed >= d {
@@ -177,10 +178,7 @@ impl<T, S: Scheduler> AdmissionQueue<T, S> {
                     // re-check on every wake: a wait_timeout that reports
                     // timed_out may still find a freed slot (and spurious
                     // wakes may not)
-                    self.not_full
-                        .wait_timeout(inner, d - elapsed)
-                        .expect("admission queue poisoned")
-                        .0
+                    sync::wait_timeout(&self.not_full, inner, d - elapsed).0
                 }
             };
         }
@@ -214,7 +212,7 @@ impl<T, S: Scheduler> AdmissionQueue<T, S> {
                     return None;
                 }
             }
-            guard = self.not_empty.wait(guard).expect("admission queue poisoned");
+            guard = sync::wait(&self.not_empty, guard);
         }
     }
 

@@ -3,6 +3,7 @@
 //! process prints — the instruments that make a fairness regression or
 //! a backpressure storm visible without a debugger.
 
+use crate::health::PlatformHealth;
 use crate::report::Table;
 use crate::selection::CacheStats;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -150,6 +151,10 @@ pub struct ServiceStats {
     /// sorted by platform name (merged across all tenants' traffic —
     /// and any direct coordinator traffic sharing those caches).
     pub platforms: Vec<(String, CacheStats)>,
+    /// Health snapshots for every monitored platform
+    /// ([`Coordinator::monitor_platform`](crate::coordinator::Coordinator::monitor_platform)),
+    /// sorted by platform name; empty when nothing is monitored.
+    pub health: Vec<PlatformHealth>,
 }
 
 impl ServiceStats {
@@ -200,7 +205,31 @@ impl ServiceStats {
                 crate::report::fmt_pct(s.hit_rate()),
             ]);
         }
-        format!("{}\n{}\n{}", t.render(), lat.render(), cache.render())
+        let mut out = format!("{}\n{}\n{}", t.render(), lat.render(), cache.render());
+        if !self.health.is_empty() {
+            let mut ht = Table::new(
+                "platform health (monitored platforms)",
+                &[
+                    "platform", "state", "drift", "window", "sampled/observed", "recals",
+                    "consec fail", "quarantines",
+                ],
+            );
+            for h in &self.health {
+                ht.row(vec![
+                    h.platform.clone(),
+                    h.state.to_string(),
+                    format!("{:.3}", h.drift),
+                    h.window.to_string(),
+                    format!("{}/{}", h.sampled, h.observed),
+                    format!("{}+{}f", h.recalibrations, h.recal_failures),
+                    h.consecutive_failures.to_string(),
+                    h.quarantines.to_string(),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&ht.render());
+        }
+        out
     }
 }
 
@@ -273,9 +302,31 @@ mod tests {
             wait: HistogramSnapshot::default(),
             service: HistogramSnapshot::default(),
             platforms: vec![("intel".into(), CacheStats::default())],
+            health: vec![],
         };
         let out = stats.render();
         assert!(out.contains("t0") && out.contains("rejected"));
         assert!(out.contains("p95") && out.contains("intel"));
+        // no monitors → no health table
+        assert!(!out.contains("platform health"));
+
+        let mut stats = stats;
+        stats.health.push(PlatformHealth {
+            platform: "arm-x".into(),
+            state: crate::health::HealthState::Drifting,
+            drift: 1.25,
+            window: 16,
+            observed: 40,
+            sampled: 40,
+            probe_failures: 0,
+            recalibrations: 2,
+            recal_failures: 1,
+            consecutive_failures: 1,
+            quarantines: 0,
+        });
+        let out = stats.render();
+        assert!(out.contains("platform health"), "{out}");
+        assert!(out.contains("arm-x") && out.contains("drifting"), "{out}");
+        assert!(out.contains("1.250") && out.contains("40/40"), "{out}");
     }
 }

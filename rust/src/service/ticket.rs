@@ -2,7 +2,8 @@
 //! admitted request, fulfilled by whichever worker serves it.
 
 use crate::coordinator::SelectionReport;
-use anyhow::Result;
+use crate::sync;
+use anyhow::{anyhow, Result};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -13,8 +14,8 @@ pub(crate) struct TicketCell {
 }
 
 impl TicketCell {
-    pub(crate) fn fulfil(&self, result: Result<SelectionReport>) {
-        let mut slot = self.slot.lock().expect("ticket poisoned");
+    fn fulfil(&self, result: Result<SelectionReport>) {
+        let mut slot = sync::lock(&self.slot);
         debug_assert!(slot.is_none(), "ticket fulfilled twice");
         *slot = Some(result);
         drop(slot);
@@ -22,37 +23,70 @@ impl TicketCell {
     }
 }
 
+/// The serving side's obligation to resolve one [`Ticket`], enforced by
+/// the type system: either [`Fulfiller::fulfil`] runs with a real
+/// result, or the `Drop` impl resolves the ticket with an "abandoned"
+/// error. Whatever path drops an admitted job — a worker panic between
+/// catch points, a queue torn down with items still laned, a future
+/// refactor that forgets a code path — the caller's `wait` returns an
+/// error instead of hanging forever.
+pub(crate) struct Fulfiller {
+    cell: Arc<TicketCell>,
+    fulfilled: bool,
+}
+
+impl Fulfiller {
+    /// Resolve the ticket with the served result (consumes the
+    /// obligation).
+    pub(crate) fn fulfil(mut self, result: Result<SelectionReport>) {
+        self.fulfilled = true;
+        self.cell.fulfil(result);
+    }
+}
+
+impl Drop for Fulfiller {
+    fn drop(&mut self) {
+        if !self.fulfilled {
+            self.cell.fulfil(Err(anyhow!(
+                "request abandoned: the serving side dropped it before a worker \
+                 produced a result"
+            )));
+        }
+    }
+}
+
 /// The caller's handle to one admitted request.
 ///
 /// A ticket is always eventually fulfilled: workers fulfil served
-/// requests (with the report, or the error the selection produced), and
-/// a clean shutdown drains every admitted request before the workers
-/// exit — so [`Ticket::wait`] cannot hang on a live-or-cleanly-stopped
-/// service.
+/// requests (with the report, or the error the selection produced), a
+/// clean shutdown drains every admitted request before the workers
+/// exit, and a request dropped unserved resolves with an "abandoned"
+/// error via [`Fulfiller`]'s `Drop` — so [`Ticket::wait`] cannot hang.
 pub struct Ticket {
     cell: Arc<TicketCell>,
 }
 
 impl Ticket {
-    /// A fresh pending ticket plus the worker-side fulfilment handle.
-    pub(crate) fn pending() -> (Ticket, Arc<TicketCell>) {
+    /// A fresh pending ticket plus the worker-side fulfilment
+    /// obligation.
+    pub(crate) fn pending() -> (Ticket, Fulfiller) {
         let cell = Arc::new(TicketCell { slot: Mutex::new(None), done: Condvar::new() });
-        (Ticket { cell: Arc::clone(&cell) }, cell)
+        (Ticket { cell: Arc::clone(&cell) }, Fulfiller { cell, fulfilled: false })
     }
 
     /// Non-blocking readiness check: has the report landed?
     pub fn poll(&self) -> bool {
-        self.cell.slot.lock().expect("ticket poisoned").is_some()
+        sync::lock(&self.cell.slot).is_some()
     }
 
     /// Block until the request is served and take its result.
     pub fn wait(self) -> Result<SelectionReport> {
-        let mut slot = self.cell.slot.lock().expect("ticket poisoned");
+        let mut slot = sync::lock(&self.cell.slot);
         loop {
             if let Some(r) = slot.take() {
                 return r;
             }
-            slot = self.cell.done.wait(slot).expect("ticket poisoned");
+            slot = sync::wait(&self.cell.done, slot);
         }
     }
 
@@ -64,7 +98,7 @@ impl Ticket {
     ) -> std::result::Result<Result<SelectionReport>, Ticket> {
         let deadline = std::time::Instant::now() + d;
         {
-            let mut slot = self.cell.slot.lock().expect("ticket poisoned");
+            let mut slot = sync::lock(&self.cell.slot);
             loop {
                 if let Some(r) = slot.take() {
                     return Ok(r);
@@ -73,12 +107,7 @@ impl Ticket {
                 if now >= deadline {
                     break;
                 }
-                slot = self
-                    .cell
-                    .done
-                    .wait_timeout(slot, deadline - now)
-                    .expect("ticket poisoned")
-                    .0;
+                slot = sync::wait_timeout(&self.cell.done, slot, deadline - now).0;
             }
         }
         Err(self)
@@ -104,33 +133,51 @@ mod tests {
 
     #[test]
     fn fulfil_then_wait() {
-        let (ticket, cell) = Ticket::pending();
+        let (ticket, fulfiller) = Ticket::pending();
         assert!(!ticket.poll());
-        cell.fulfil(Ok(report()));
+        fulfiller.fulfil(Ok(report()));
         assert!(ticket.poll());
         assert_eq!(ticket.wait().unwrap().network, "net");
     }
 
     #[test]
     fn wait_blocks_until_fulfilled_across_threads() {
-        let (ticket, cell) = Ticket::pending();
+        let (ticket, fulfiller) = Ticket::pending();
         let t = std::thread::spawn(move || ticket.wait().unwrap().network);
         std::thread::sleep(Duration::from_millis(20));
-        cell.fulfil(Ok(report()));
+        fulfiller.fulfil(Ok(report()));
         assert_eq!(t.join().unwrap(), "net");
     }
 
     #[test]
     fn wait_timeout_returns_the_ticket() {
-        let (ticket, cell) = Ticket::pending();
+        let (ticket, fulfiller) = Ticket::pending();
         let ticket = match ticket.wait_timeout(Duration::from_millis(10)) {
             Err(t) => t,
             Ok(_) => panic!("nothing was fulfilled yet"),
         };
-        cell.fulfil(Err(anyhow::anyhow!("boom")));
+        fulfiller.fulfil(Err(anyhow::anyhow!("boom")));
         match ticket.wait_timeout(Duration::from_secs(5)) {
             Ok(r) => assert!(r.is_err()),
             Err(_) => panic!("fulfilled ticket must resolve"),
         }
+    }
+
+    #[test]
+    fn dropped_fulfiller_resolves_the_ticket_with_abandoned() {
+        let (ticket, fulfiller) = Ticket::pending();
+        drop(fulfiller);
+        let err = ticket.wait().unwrap_err();
+        assert!(err.to_string().contains("abandoned"), "{err}");
+    }
+
+    #[test]
+    fn abandonment_wakes_a_blocked_waiter() {
+        let (ticket, fulfiller) = Ticket::pending();
+        let t = std::thread::spawn(move || ticket.wait());
+        std::thread::sleep(Duration::from_millis(20));
+        drop(fulfiller); // e.g. the queue was torn down with the job laned
+        let err = t.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("abandoned"), "{err}");
     }
 }

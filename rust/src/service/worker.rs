@@ -11,9 +11,10 @@
 //! the loop ends and the thread exits — shutdown is just "close, then
 //! join".
 
-use super::ticket::TicketCell;
+use super::ticket::Fulfiller;
 use super::ServiceShared;
 use crate::coordinator::SelectionRequest;
+use crate::health;
 use crate::par;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -25,8 +26,11 @@ pub(crate) struct Job {
     /// When admission succeeded — the wait histogram measures from here
     /// to dispatch.
     pub(crate) admitted_at: Instant,
-    /// Fulfilment half of the caller's [`Ticket`](super::Ticket).
-    pub(crate) cell: Arc<TicketCell>,
+    /// Fulfilment half of the caller's [`Ticket`](super::Ticket). If the
+    /// job is dropped unserved (queue torn down, worker lost), its
+    /// `Drop` resolves the ticket with an "abandoned" error — waiters
+    /// never hang.
+    pub(crate) cell: Fulfiller,
 }
 
 /// One worker's drain loop; returns when the queue is closed and empty.
@@ -42,12 +46,7 @@ pub(crate) fn run(shared: &ServiceShared) {
             shared.coord.select_one(&job.req)
         }))
         .unwrap_or_else(|payload| {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".to_string());
-            Err(anyhow::anyhow!("selection panicked: {msg}"))
+            Err(anyhow::anyhow!("selection panicked: {}", health::panic_message(payload)))
         });
         shared.service.record(t0.elapsed());
         shared.tenant_meta(tenant).counters.served.fetch_add(1, Ordering::Relaxed);

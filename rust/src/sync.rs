@@ -1,0 +1,97 @@
+//! Poison-recovering lock helpers.
+//!
+//! The serving stack guards shared state (admission lanes, tenant
+//! tables, ticket slots, cache shards, the platform map) with standard
+//! library locks. A panic while holding one of those locks poisons it,
+//! and the previous `expect("... poisoned")` discipline turned that
+//! single client panic into a crash for *every* subsequent tenant — one
+//! bad request could wedge admission fleet-wide.
+//!
+//! Every guarded structure in this crate keeps its invariants by
+//! construction (counters, bounded deques, fulfil-once slots): a panic
+//! mid-critical-section cannot leave them half-updated in a way a later
+//! reader would misread. So the right recovery is the one the standard
+//! library exposes for exactly this case: take the guard out of the
+//! [`PoisonError`] and carry on. These helpers centralise that
+//! `unwrap_or_else(PoisonError::into_inner)` so call sites stay as
+//! terse as the old `expect` and the policy lives in one place.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on a condvar, recovering the reacquired guard from poison.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on a condvar with a timeout, recovering the guard from poison.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_after_a_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // poison the mutex: a thread panics while holding the guard
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("holder dies");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // the helper still hands out a usable guard
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_a_writer_panics() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("writer dies");
+        })
+        .join();
+        assert!(l.read().is_err());
+        assert_eq!(read(&l).len(), 3);
+        write(&l).push(4);
+        assert_eq!(read(&l).len(), 4);
+    }
+
+    #[test]
+    fn wait_timeout_returns_on_deadline() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let (_g, res) = wait_timeout(&cv, lock(&m), Duration::from_millis(5));
+        assert!(res.timed_out());
+    }
+}

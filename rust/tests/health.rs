@@ -1,0 +1,283 @@
+//! End-to-end self-healing: the drift → recalibrate → quarantine loop
+//! driven entirely through the public serving surface, with every fault
+//! injected deterministically by [`FaultySource`] under a fixed seed.
+//!
+//! * a transfer-onboarded platform whose device drifts 3x walks
+//!   Healthy → Drifting → (auto) Recalibrating → Healthy, and the healed
+//!   model's zoo selections stay within the onboarding acceptance bound
+//!   (10%) of profiled-optimal **on the drifted device**;
+//! * when recalibration itself keeps failing (error injection), the
+//!   platform quarantines and every `Service::submit` ticket resolves —
+//!   never hangs — with a typed [`QuarantinedError`], while other
+//!   platforms keep serving;
+//! * clearing the fault and waiting out the cool-down lets the next
+//!   admission probe-recalibrate and readmit the platform;
+//! * the same loop heals fresh-Lin-onboarded platforms (full refit path);
+//! * a monitor at sampling fraction 0 is free: selections are
+//!   bit-identical to an unmonitored twin and the live target sees zero
+//!   shadow queries.
+
+use primsel::coordinator::{Coordinator, CostProvenance, OnboardSpec, SelectionRequest};
+use primsel::dataset::calibration_sample;
+use primsel::health::{HealthPolicy, HealthState, QuarantinedError};
+use primsel::networks::{self, Network};
+use primsel::perfmodel::model::CostModel;
+use primsel::perfmodel::LinCostModel;
+use primsel::selection::{self, CostSource, FaultySource};
+use primsel::service::{Service, ServiceConfig};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A faulty live ARM device: the simulator wrapped in seeded fault
+/// injection, handed out both as the concrete handle (to flip faults)
+/// and as the `CostSource` the coordinator sees.
+fn faulty_arm(seed: u64) -> (Arc<FaultySource>, Arc<dyn CostSource>) {
+    let f = Arc::new(FaultySource::new(
+        Arc::new(Simulator::new(machine::arm_cortex_a73())),
+        seed,
+    ));
+    (Arc::clone(&f), f as Arc<dyn CostSource>)
+}
+
+/// An Intel-trained Lin source model (the §4.4 "factory" platform).
+fn intel_lin() -> Arc<dyn CostModel + Send + Sync> {
+    let intel = Simulator::new(machine::intel_i9_9900k());
+    let (prim, dlt) = calibration_sample(&intel, 0.1, 3);
+    Arc::new(LinCostModel::fit(&prim, &dlt, "intel").unwrap())
+}
+
+/// Tight monitor policy: replay everything, small window, no backoff —
+/// transitions happen within a handful of requests, deterministically.
+fn tight(seed: u64, band: f64, max_failures: u32, cool_down: Duration) -> HealthPolicy {
+    HealthPolicy::default()
+        .with_sampling(1.0, seed)
+        .with_window(24, 8)
+        .with_drift_band(band)
+        .with_auto_recalibrate(true, 0.02)
+        .with_quarantine(max_failures, Duration::ZERO, cool_down)
+}
+
+/// Drive requests at `platform` until `done(health)` holds (or panic
+/// after `max` requests). Submission errors are tolerated — a
+/// quarantined platform refuses, which some callers drive *toward*.
+fn drive(
+    coord: &Coordinator,
+    platform: &str,
+    net: &Network,
+    max: usize,
+    done: impl Fn(&primsel::health::PlatformHealth) -> bool,
+) {
+    for _ in 0..max {
+        let _ = coord.submit(&SelectionRequest::new(net.clone(), platform));
+        let h = coord.platform_health_of(platform).expect("platform is monitored");
+        if done(&h) {
+            return;
+        }
+    }
+    let h = coord.platform_health_of(platform).unwrap();
+    panic!("condition not reached after {max} requests; last health: {h:?}");
+}
+
+#[test]
+fn drifted_platform_heals_itself_and_serves_the_zoo_within_tolerance() {
+    let (faulty, target) = faulty_arm(101);
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform("arm-live", OnboardSpec::transfer(target.clone(), intel_lin(), 0.02, 5))
+        .unwrap();
+    coord
+        .monitor_platform("arm-live", target, tight(11, 0.75, 3, Duration::from_millis(200)))
+        .unwrap();
+    let net = networks::alexnet();
+
+    // pre-drift traffic: the monitor sees agreement and stays Healthy
+    for _ in 0..3 {
+        coord.submit(&SelectionRequest::new(net.clone(), "arm-live")).unwrap();
+    }
+    let h = coord.platform_health_of("arm-live").unwrap();
+    assert_eq!(h.state, HealthState::Healthy);
+    assert_eq!(h.sampled, h.observed, "fraction 1.0 replays every request");
+    assert!(h.sampled >= 3);
+
+    // the device drifts 3x (column-spread): evidence accumulates past
+    // the band, a later request detects it, the next one auto-repairs
+    faulty.set_drift(3.0);
+    drive(&coord, "arm-live", &net, 40, |h| h.state == HealthState::Drifting);
+    assert_eq!(coord.platform_health_of("arm-live").unwrap().recalibrations, 0);
+    drive(&coord, "arm-live", &net, 10, |h| h.recalibrations >= 1);
+
+    let healed = coord.platform_health_of("arm-live").unwrap();
+    assert_eq!(healed.state, HealthState::Healthy, "{healed:?}");
+    assert_eq!(healed.consecutive_failures, 0);
+    assert_eq!(healed.quarantines, 0);
+
+    // the healed model serves the zoo within the onboarding acceptance
+    // bound, measured against the *drifted* device
+    let mut total_model = 0.0;
+    let mut total_prof = 0.0;
+    for zoo_net in networks::selection_networks() {
+        let rep = coord.submit(&SelectionRequest::new(zoo_net.clone(), "arm-live")).unwrap();
+        let live: &dyn CostSource = faulty.as_ref();
+        let profiled = selection::select(&zoo_net, live).unwrap();
+        total_model += selection::evaluate(&zoo_net, &rep.selection, live).unwrap();
+        total_prof += selection::evaluate(&zoo_net, &profiled, live).unwrap();
+    }
+    let increase = total_model / total_prof - 1.0;
+    assert!(
+        increase < 0.10,
+        "healed zoo selections {:.2}% worse than profiled-on-drifted (bound: 10%)",
+        increase * 100.0
+    );
+    // the monitor agrees the healed model fits the drifted device
+    assert_eq!(coord.platform_health_of("arm-live").unwrap().state, HealthState::Healthy);
+}
+
+#[test]
+fn failing_recalibration_quarantines_and_tickets_resolve_with_typed_errors() {
+    let (faulty, target) = faulty_arm(202);
+    let coord = Coordinator::shared();
+    coord
+        .onboard_platform("arm-sick", OnboardSpec::transfer(target.clone(), intel_lin(), 0.02, 7))
+        .unwrap();
+    coord
+        .monitor_platform("arm-sick", target, tight(13, 0.75, 2, Duration::from_millis(150)))
+        .unwrap();
+    let net = networks::alexnet();
+
+    // drift hard, then make every target query panic: detection already
+    // happened, so each later request burns one recalibration attempt
+    faulty.set_drift(9.0);
+    drive(&coord, "arm-sick", &net, 40, |h| h.state == HealthState::Drifting);
+    faulty.set_error_rate(1.0);
+    drive(&coord, "arm-sick", &net, 10, |h| h.state == HealthState::Quarantined);
+
+    let sick = coord.platform_health_of("arm-sick").unwrap();
+    assert_eq!(sick.quarantines, 1);
+    assert!(sick.recal_failures >= 2);
+    assert!(!sick.state.is_serving());
+
+    // a direct submit refuses with the typed error (not a string match)
+    let err = coord.submit(&SelectionRequest::new(net.clone(), "arm-sick")).unwrap_err();
+    let q = err.downcast_ref::<QuarantinedError>().expect("typed quarantine error");
+    assert_eq!(q.platform, "arm-sick");
+    assert!(q.consecutive_failures >= 2);
+
+    // through the service: every quarantined ticket RESOLVES (no hangs)
+    // with the same typed error, while another platform keeps serving
+    let service = Service::new(
+        Arc::clone(&coord),
+        ServiceConfig::default().with_capacity(32).with_workers(2),
+    );
+    let mut sick_tickets = Vec::new();
+    for _ in 0..6 {
+        let req = SelectionRequest::new(net.clone(), "arm-sick");
+        sick_tickets.push(service.submit("tenant-a", req).unwrap());
+    }
+    let ok_ticket =
+        service.submit("tenant-b", SelectionRequest::new(net.clone(), "intel")).unwrap();
+    for t in sick_tickets {
+        let resolved = t
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("quarantined ticket must resolve, not hang"));
+        let err = resolved.unwrap_err();
+        assert!(err.downcast_ref::<QuarantinedError>().is_some(), "{err}");
+    }
+    assert_eq!(ok_ticket.wait().unwrap().platform, "intel");
+    let stats = service.stats();
+    assert_eq!(stats.health.len(), 1);
+    assert_eq!(stats.health[0].platform, "arm-sick");
+    let rendered = stats.render();
+    assert!(rendered.contains("platform health") && rendered.contains("quarantined"));
+    service.shutdown();
+
+    // clear the fault and wait out the cool-down: the next admission
+    // probes, the probe-recalibration succeeds, and the platform serves
+    // again — healed against the drifted device it now matches
+    faulty.set_error_rate(0.0);
+    std::thread::sleep(Duration::from_millis(200));
+    let rep = coord.submit(&SelectionRequest::new(net.clone(), "arm-sick")).unwrap();
+    assert!(rep.evaluated_ms > 0.0);
+    let healed = coord.platform_health_of("arm-sick").unwrap();
+    assert_eq!(healed.state, HealthState::Healthy);
+    assert!(healed.recalibrations >= 1);
+    assert_eq!(healed.consecutive_failures, 0);
+}
+
+#[test]
+fn fresh_lin_platform_heals_via_full_refit() {
+    let (faulty, target) = faulty_arm(303);
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform("lin-live", OnboardSpec::fresh_lin(target.clone(), 0.02, 21))
+        .unwrap();
+    coord
+        .monitor_platform("lin-live", target, tight(17, 0.8, 3, Duration::from_millis(200)))
+        .unwrap();
+    let net = networks::vgg(11);
+
+    for _ in 0..3 {
+        coord.submit(&SelectionRequest::new(net.clone(), "lin-live")).unwrap();
+    }
+    assert_eq!(coord.platform_health_of("lin-live").unwrap().state, HealthState::Healthy);
+
+    faulty.set_drift(4.0);
+    drive(&coord, "lin-live", &net, 40, |h| h.recalibrations >= 1);
+    let healed = coord.platform_health_of("lin-live").unwrap();
+    assert_eq!(healed.state, HealthState::Healthy, "{healed:?}");
+
+    // the refit path kept the platform model-served under the same kind
+    match coord.provenance("lin-live").unwrap() {
+        CostProvenance::Predicted { model_kind, .. } => assert_eq!(model_kind, "lin"),
+        other => panic!("expected predicted provenance, got {other:?}"),
+    }
+    assert!(coord.submit(&SelectionRequest::new(net, "lin-live")).unwrap().evaluated_ms > 0.0);
+}
+
+#[test]
+fn monitor_at_fraction_zero_is_bit_identical_and_query_free() {
+    // twin coordinators over identically-seeded faulty targets: one
+    // monitored at sampling fraction 0, one not monitored at all
+    let (faulty_a, target_a) = faulty_arm(404);
+    let (faulty_b, target_b) = faulty_arm(404);
+    let monitored = Coordinator::new();
+    let plain = Coordinator::new();
+    monitored
+        .onboard_platform("arm-twin", OnboardSpec::fresh_lin(target_a.clone(), 0.02, 9))
+        .unwrap();
+    plain.onboard_platform("arm-twin", OnboardSpec::fresh_lin(target_b, 0.02, 9)).unwrap();
+    monitored
+        .monitor_platform(
+            "arm-twin",
+            target_a,
+            tight(19, 0.75, 3, Duration::from_millis(200)).with_sampling(0.0, 19),
+        )
+        .unwrap();
+    assert_eq!(faulty_a.queries(), faulty_b.queries(), "identical onboarding draws");
+    let after_onboard = faulty_a.queries();
+
+    let reqs: Vec<SelectionRequest> = networks::selection_networks()
+        .into_iter()
+        .flat_map(|n| {
+            vec![
+                SelectionRequest::new(n.clone(), "arm-twin"),
+                SelectionRequest::new(n, "arm-twin"),
+            ]
+        })
+        .collect();
+    let a = monitored.submit_batch(&reqs).unwrap();
+    let b = plain.submit_batch(&reqs).unwrap();
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.selection.primitive, rb.selection.primitive);
+        assert_eq!(ra.selection.estimated_ms, rb.selection.estimated_ms);
+        assert_eq!(ra.evaluated_ms, rb.evaluated_ms);
+    }
+
+    // the fraction-0 monitor saw the traffic but replayed none of it:
+    // zero extra queries ever reached the live target
+    let h = monitored.platform_health_of("arm-twin").unwrap();
+    assert_eq!(h.observed, reqs.len() as u64);
+    assert_eq!(h.sampled, 0);
+    assert_eq!(faulty_a.queries(), after_onboard, "warm path must add no shadow traffic");
+    assert_eq!(h.state, HealthState::Healthy);
+}

@@ -16,18 +16,33 @@ pub struct Error {
     /// Outermost-context-first chain of underlying causes (strings; the
     /// shim does not retain live source objects).
     chain: Vec<String>,
+    /// The original typed error, when the `Error` came from a
+    /// `std::error::Error` value — what makes [`Error::downcast_ref`]
+    /// work like the real crate's (typed errors such as the serving
+    /// layer's `QuarantinedError` survive the anyhow boundary).
+    typed: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from anything displayable (the `anyhow!` entry point).
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Error { msg: m.to_string(), chain: Vec::new() }
+        Error { msg: m.to_string(), chain: Vec::new(), typed: None }
     }
 
     /// Wrap with an outer context message (used by [`Context`]).
     pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
         self.chain.insert(0, std::mem::replace(&mut self.msg, c.to_string()));
         self
+    }
+
+    /// Borrow the original typed error, if this `Error` was converted
+    /// from a value of type `E` (via `?` or `From`). Mirrors the real
+    /// crate's `downcast_ref`, including surviving added [`Context`].
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        self.typed.as_ref()?.downcast_ref::<E>()
     }
 
     /// The cause chain, outermost first (message, then wrapped causes).
@@ -62,13 +77,14 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Self {
+        let msg = e.to_string();
         let mut chain = Vec::new();
         let mut src = e.source();
         while let Some(s) = src {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { msg: e.to_string(), chain }
+        Error { msg, chain, typed: Some(Box::new(e)) }
     }
 }
 
@@ -227,5 +243,28 @@ mod tests {
         let e = r.context("outer").unwrap_err();
         assert_eq!(e.to_string(), "outer");
         assert!(format!("{e:?}").contains("inner"));
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors() {
+        let e: Error = Typed(7).into();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        // the typed value survives added context (like the real crate)
+        let e = e.context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        // message-only errors downcast to nothing
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 }
