@@ -11,7 +11,7 @@
 mod harness;
 
 use harness::Bench;
-use primsel::coordinator::{Coordinator, OnboardSpec, SelectionRequest};
+use primsel::coordinator::{Coordinator, Objective, OnboardSpec, SelectionRequest};
 use primsel::dataset;
 use primsel::experiments::Workbench;
 use primsel::networks;
@@ -19,7 +19,8 @@ use primsel::par;
 use primsel::perfmodel::model::model_table;
 use primsel::perfmodel::LinCostModel;
 use primsel::runtime::Runtime;
-use primsel::selection::{self, CostCache, CostSource, ModeledSource};
+use primsel::selection::pareto::DEFAULT_LAMBDA_MS_PER_MB;
+use primsel::selection::{self, CostCache, CostSource, ModeledSource, ParetoFront};
 use primsel::service::{Service, ServiceConfig};
 use primsel::simulator::{machine, Simulator};
 use std::sync::Arc;
@@ -84,6 +85,30 @@ fn main() {
                     let _ = selection::select(net, &cache).unwrap();
                 }
             });
+        });
+    }
+    // the Pareto tentpole: one full budget sweep over a warm cache —
+    // the acceptance pair (vgg16, intel) — exercising the reused PBQP
+    // arena across every distinct workspace level
+    {
+        let cache = CostCache::new(&sim);
+        let net = networks::vgg(16);
+        let _ = selection::select(&net, &cache).unwrap(); // warm rows
+        b.run("selection/pareto_front_sweep", 1, 10, || {
+            let _ = ParetoFront::compute(&net, &cache, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        });
+    }
+    // warm front serving: budget queries answered from the coordinator's
+    // cached front — zero PBQP solves per request, so this row is pure
+    // lookup + report-assembly overhead
+    {
+        let coord = Coordinator::new();
+        let req = SelectionRequest::new(networks::vgg(16), "intel").with_objective(
+            Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+        );
+        let _ = coord.submit(&req).unwrap(); // compute + cache the front
+        b.run("selection/pareto_warm_lookup", 10, 100, || {
+            let _ = coord.submit(&req).unwrap();
         });
     }
     // the coordinator end-to-end: a mixed three-platform zoo batch

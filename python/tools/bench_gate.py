@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff a bench-JSON run against the committed
+baseline and fail CI on regressions in the gated rows.
+
+Usage:
+    python3 python/tools/bench_gate.py \
+        --baseline BENCH_baseline.json \
+        --results results/bench_selection.json
+
+The baseline file carries the gate policy alongside the numbers:
+
+    {
+      "suite": "selection",
+      "gate": {"threshold_pct": 15.0, "rows": ["selection/..."]},
+      "benches": [{"name": "selection/...", "median_ms": 12.3}, ...]
+    }
+
+Rows outside ``gate.rows`` are reported informationally but never fail
+the build (cold rows are noisy; the gate tracks the warm serving rows
+whose regressions are architectural, not environmental).
+
+Self-seeding: a gated row whose baseline ``median_ms`` is null (the
+state this file is committed in before any CI runner has produced real
+numbers) is filled from the current results and the baseline is written
+back, exiting 0 — the runner's first honest numbers become the baseline
+to commit, rather than numbers invented on a different machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def medians(doc: dict) -> dict[str, float | None]:
+    return {b["name"]: b.get("median_ms") for b in doc.get("benches", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--results", required=True, help="fresh bench-run JSON")
+    ap.add_argument(
+        "--threshold-pct",
+        type=float,
+        default=None,
+        help="override the baseline's gate.threshold_pct",
+    )
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    results = load(args.results)
+    gate = baseline.get("gate", {})
+    threshold = args.threshold_pct if args.threshold_pct is not None else float(
+        gate.get("threshold_pct", 15.0)
+    )
+    gated = list(gate.get("rows", []))
+
+    base = medians(baseline)
+    cur = medians(results)
+
+    missing = [r for r in gated if r not in cur or cur[r] is None]
+    if missing:
+        print(f"FAIL: gated rows absent from {args.results}: {missing}")
+        print("      (a renamed or deleted bench row silently ungates itself;")
+        print("       update gate.rows in the baseline deliberately instead)")
+        return 1
+
+    # self-seed: fill null gated baselines from this run and write back
+    to_seed = [r for r in gated if base.get(r) is None]
+    if to_seed:
+        by_name = {b["name"]: b for b in baseline.setdefault("benches", [])}
+        for r in to_seed:
+            row = by_name.get(r)
+            if row is None:
+                row = {"name": r}
+                baseline["benches"].append(row)
+            row["median_ms"] = cur[r]
+            print(f"seeded {r}: median {cur[r]:.4f} ms")
+        with open(args.baseline, "w") as fh:
+            json.dump(baseline, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"seeded baseline written to {args.baseline} — commit it to arm the gate")
+        return 0
+
+    failures = []
+    print(f"bench gate: threshold +{threshold:.1f}% on {len(gated)} rows")
+    for name in sorted(set(base) | set(cur)):
+        b, c = base.get(name), cur.get(name)
+        if b is None or c is None or b <= 0.0:
+            continue
+        delta = (c / b - 1.0) * 100.0
+        is_gated = name in gated
+        verdict = "ok"
+        if is_gated and delta > threshold:
+            verdict = "REGRESSION"
+            failures.append((name, b, c, delta))
+        mark = "*" if is_gated else " "
+        print(f"  {mark} {name:<44} {b:>10.4f} -> {c:>10.4f} ms  ({delta:+7.2f}%)  {verdict}")
+
+    if failures:
+        print(f"FAIL: {len(failures)} gated row(s) regressed more than {threshold:.1f}%:")
+        for name, b, c, delta in failures:
+            print(f"  {name}: {b:.4f} -> {c:.4f} ms ({delta:+.2f}%)")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

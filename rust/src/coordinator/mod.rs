@@ -48,6 +48,26 @@
 //! [`CacheStats`] deltas, so a serving process can watch its hit rate
 //! climb as tenants repeat layer shapes — the `serve_zoo` example prints
 //! exactly that trajectory.
+//!
+//! ## Pareto-front serving
+//!
+//! Budget-shaped questions are answered from the full time×space
+//! trade-off curve instead of fresh solves: the coordinator computes
+//! the [`ParetoFront`] for a (platform, network) pair lazily — one
+//! budget sweep over a reused PBQP arena (see
+//! [`selection::pareto`](crate::selection::pareto)) — and caches it
+//! keyed by platform and network fingerprint. The front-served
+//! objectives [`Objective::FastestUnderBytes`] and
+//! [`Objective::SmallestWithinPct`] are pure lookups on that curve
+//! (zero PBQP solves when warm), and the [`SelectionReport`] carries a
+//! [`FrontLookup`] saying which point answered and whether the front
+//! was cached. Every platform update — [`Coordinator::register`],
+//! [`Coordinator::onboard_platform`],
+//! [`Coordinator::recalibrate_platform`], and the health loop's
+//! auto-recalibration — swaps the platform's serving cache, which
+//! expires its cached fronts in the same stroke: front slots remember
+//! the exact cache `Arc` they were computed over and only serve while
+//! it is still the platform's current one.
 
 use crate::dataset::{self, calibration_sample};
 use crate::health::{self, HealthMonitor, HealthPolicy, PlatformHealth, PlatformMonitor};
@@ -55,15 +75,20 @@ use crate::networks::Network;
 use crate::par;
 use crate::perfmodel::model::{CostModel, FactorCorrected, LinCostModel};
 use crate::perfmodel::transfer::{robust_factors, MIN_CALIB_RATIOS};
+use crate::selection::pareto::DEFAULT_LAMBDA_MS_PER_MB;
 use crate::selection::{
-    self, memory, CacheStats, CostCache, CostSource, ModeledSource, Selection, TableSource,
+    self, memory, CacheStats, CostCache, CostSource, ModeledSource, ParetoFront, Selection,
+    TableSource,
 };
 use crate::simulator::{machine, Simulator};
 use crate::sync;
 use anyhow::{anyhow, ensure, Result};
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::fmt;
+use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
@@ -79,6 +104,17 @@ pub enum Objective {
         budget_bytes: f64,
         lambda_ms_per_mb: f64,
     },
+    /// Fastest assignment whose peak workspace fits under `budget_bytes`
+    /// — answered by lookup on the platform's cached time×space
+    /// [`ParetoFront`], not a fresh solve. Errors if even the leanest
+    /// front point exceeds the budget (a hard constraint, unlike the
+    /// soft [`Objective::MinTimeWithMemoryBudget`] penalty).
+    FastestUnderBytes { budget_bytes: f64 },
+    /// Smallest-footprint assignment within `pct_of_optimal_time`
+    /// percent of the unconstrained optimum time — answered by front
+    /// lookup. `0.0` returns the fastest point; larger slack admits
+    /// leaner points.
+    SmallestWithinPct { pct_of_optimal_time: f64 },
 }
 
 impl Objective {
@@ -89,7 +125,26 @@ impl Objective {
             Objective::MinTimeWithMemoryBudget { budget_bytes, .. } => {
                 format!("time|{:.0}MiB", budget_bytes / (1024.0 * 1024.0))
             }
+            Objective::FastestUnderBytes { budget_bytes } => {
+                if budget_bytes.is_finite() {
+                    format!("fastest|{:.0}MiB", budget_bytes / (1024.0 * 1024.0))
+                } else {
+                    "fastest|unbounded".to_string()
+                }
+            }
+            Objective::SmallestWithinPct { pct_of_optimal_time } => {
+                format!("smallest|+{pct_of_optimal_time:.0}%")
+            }
         }
+    }
+
+    /// Whether this objective is answered by Pareto-front lookup instead
+    /// of a fresh PBQP solve.
+    pub fn is_front_served(&self) -> bool {
+        matches!(
+            self,
+            Objective::FastestUnderBytes { .. } | Objective::SmallestWithinPct { .. }
+        )
     }
 }
 
@@ -131,6 +186,23 @@ impl SelectionRequest {
     }
 }
 
+/// How a front-served request was answered: which [`ParetoFront`] point
+/// was chosen and whether the front came from the coordinator's cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontLookup {
+    /// Budget level (bytes) the chosen point was swept at.
+    pub budget_bytes: f64,
+    /// Peak workspace (bytes) of the chosen point.
+    pub peak_workspace_bytes: f64,
+    /// True time (ms) of the chosen point.
+    pub true_time_ms: f64,
+    /// `true` when the front was already cached (zero PBQP solves for
+    /// this request); `false` when this request computed it.
+    pub cache_hit: bool,
+    /// Number of non-dominated points on the front consulted.
+    pub front_points: usize,
+}
+
 /// The answer to one [`SelectionRequest`].
 #[derive(Debug, Clone)]
 pub struct SelectionReport {
@@ -147,6 +219,10 @@ pub struct SelectionReport {
     pub evaluated_ms: f64,
     /// Peak per-layer workspace of the chosen assignment.
     pub peak_workspace_bytes: f64,
+    /// For front-served objectives ([`Objective::is_front_served`]): the
+    /// [`ParetoFront`] point chosen and whether the front was a cache
+    /// hit. `None` for solve-served objectives.
+    pub front: Option<FrontLookup>,
     /// Wall-clock this request spent inside its worker.
     pub wall_ms: f64,
 }
@@ -332,6 +408,18 @@ struct PlatformEntry {
     recal: Option<RecalContext>,
 }
 
+/// A cached Pareto front plus the serving cache it was computed over.
+/// The cache `Arc` doubles as a validity token: every platform update
+/// (register / onboard / recalibrate / health auto-recal) swaps the
+/// platform's cache pointer, so a slot whose `cache` is no longer the
+/// platform's current one is stale by construction — even if an
+/// invalidation raced an in-flight compute (see
+/// [`Coordinator::front_for`]).
+struct FrontSlot {
+    cache: Arc<CostCache<'static>>,
+    front: Arc<ParetoFront>,
+}
+
 /// The serving layer: per-platform shared caches plus batch fan-out and
 /// model-served platform onboarding.
 ///
@@ -365,6 +453,14 @@ pub struct Coordinator {
     /// Per-platform drift monitors (see [`crate::health`]); empty until
     /// [`Self::monitor_platform`] attaches one.
     health: HealthMonitor,
+    /// Lazily computed time×space Pareto fronts, keyed by
+    /// (platform, network fingerprint). Entries expire when the
+    /// platform's serving cache is replaced (see [`FrontSlot`]).
+    fronts: RwLock<HashMap<(String, u64), FrontSlot>>,
+    /// Lifetime front-cache hits (warm lookups, zero PBQP solves).
+    front_hits: AtomicU64,
+    /// Lifetime front-cache misses (each one computed a front).
+    front_misses: AtomicU64,
 }
 
 impl Default for Coordinator {
@@ -376,7 +472,13 @@ impl Default for Coordinator {
 impl Coordinator {
     /// An empty coordinator; platform caches attach on first use.
     pub fn new() -> Self {
-        Self { platforms: RwLock::new(HashMap::new()), health: HealthMonitor::default() }
+        Self {
+            platforms: RwLock::new(HashMap::new()),
+            health: HealthMonitor::default(),
+            fronts: RwLock::new(HashMap::new()),
+            front_hits: AtomicU64::new(0),
+            front_misses: AtomicU64::new(0),
+        }
     }
 
     /// An empty coordinator behind an [`Arc`] — the shutdown-safe shared
@@ -418,6 +520,17 @@ impl Coordinator {
     ) {
         let entry = Arc::new(PlatformEntry { cache, provenance, recal });
         sync::write(&self.platforms).insert(platform.to_string(), entry);
+        // every platform update funnels through here — register, onboard,
+        // recalibrate (explicit or health-loop), quarantine probe — so
+        // this is the single place cached fronts go stale, and the single
+        // place they are dropped
+        self.invalidate_fronts(platform);
+    }
+
+    /// Drop every cached Pareto front for `platform` (they were computed
+    /// over a cache that is no longer serving).
+    fn invalidate_fronts(&self, platform: &str) {
+        sync::write(&self.fronts).retain(|(p, _), _| p != platform);
     }
 
     /// Onboard a new platform from a handful of calibration samples
@@ -795,7 +908,11 @@ impl Coordinator {
         // resolve the entry *after* admission: a successful quarantine
         // probe re-registers the serving cache
         let entry = self.entry(&req.platform)?;
-        let report = solve_one(&entry, req)?;
+        let report = if req.objective.is_front_served() {
+            self.solve_via_front(&entry, req)?
+        } else {
+            solve_one(&entry, req)?
+        };
         if let Some(mon) = &monitor {
             let recal = self.health_recal(&req.platform, mon);
             mon.observe(&req.network, entry.cache.as_ref(), &recal);
@@ -853,6 +970,139 @@ impl Coordinator {
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
+
+    /// The time×space Pareto front for (`platform`, `network`), computed
+    /// lazily on first request and cached until the platform's serving
+    /// cache is replaced — re-registration, [`Self::onboard_platform`],
+    /// [`Self::recalibrate_platform`], and the health loop's
+    /// auto-recalibration all funnel through the same cache swap, so a
+    /// stale front can never serve.
+    ///
+    /// ```
+    /// use primsel::coordinator::Coordinator;
+    /// use primsel::networks;
+    /// use std::sync::Arc;
+    ///
+    /// let coord = Coordinator::new();
+    /// let net = networks::alexnet();
+    /// let cold = coord.pareto_front("intel", &net).unwrap();
+    /// assert!(!cold.is_empty());
+    /// // the second request answers from the cache: same front, no solve
+    /// let warm = coord.pareto_front("intel", &net).unwrap();
+    /// assert!(Arc::ptr_eq(&cold, &warm));
+    /// assert_eq!(coord.front_cache_stats(), (1, 1));
+    /// ```
+    pub fn pareto_front(&self, platform: &str, network: &Network) -> Result<Arc<ParetoFront>> {
+        let entry = self.entry(platform)?;
+        Ok(self.front_for(platform, &entry, network)?.0)
+    }
+
+    /// Lifetime `(hits, misses)` of the Pareto-front cache: every miss
+    /// computed a front (one budget sweep), every hit answered with zero
+    /// PBQP solves.
+    pub fn front_cache_stats(&self) -> (u64, u64) {
+        (self.front_hits.load(Ordering::Relaxed), self.front_misses.load(Ordering::Relaxed))
+    }
+
+    /// The front for (`platform`, `net`) over `entry`'s cache plus
+    /// whether it was cached. A slot only counts as a hit when it was
+    /// computed over the cache *currently* serving the platform
+    /// (`Arc::ptr_eq`), so a front computed concurrently with a
+    /// recalibration expires the moment the new cache lands.
+    fn front_for(
+        &self,
+        platform: &str,
+        entry: &Arc<PlatformEntry>,
+        net: &Network,
+    ) -> Result<(Arc<ParetoFront>, bool)> {
+        let key = (platform.to_string(), network_fingerprint(net));
+        if let Some(slot) = sync::read(&self.fronts).get(&key) {
+            if Arc::ptr_eq(&slot.cache, &entry.cache) {
+                self.front_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((Arc::clone(&slot.front), true));
+            }
+        }
+        self.front_misses.fetch_add(1, Ordering::Relaxed);
+        // compute outside the lock: the sweep is the expensive part and
+        // the map must stay available to other platforms meanwhile
+        let front =
+            Arc::new(ParetoFront::compute(net, entry.cache.as_ref(), DEFAULT_LAMBDA_MS_PER_MB)?);
+        let mut map = sync::write(&self.fronts);
+        let slot = map.entry(key).or_insert_with(|| FrontSlot {
+            cache: Arc::clone(&entry.cache),
+            front: Arc::clone(&front),
+        });
+        if !Arc::ptr_eq(&slot.cache, &entry.cache) {
+            // the surviving slot belongs to a different cache generation
+            // than the one we solved over; replace it with ours — if ours
+            // is the stale one, the next request through the new cache
+            // fails the pointer check above and recomputes
+            *slot = FrontSlot { cache: Arc::clone(&entry.cache), front: Arc::clone(&front) };
+        }
+        Ok((Arc::clone(&slot.front), false))
+    }
+
+    /// Answer a front-served objective ([`Objective::is_front_served`])
+    /// by lookup on the platform's cached Pareto front.
+    fn solve_via_front(
+        &self,
+        entry: &Arc<PlatformEntry>,
+        req: &SelectionRequest,
+    ) -> Result<SelectionReport> {
+        let t0 = Instant::now();
+        let (front, cache_hit) = self.front_for(&req.platform, entry, &req.network)?;
+        let point = match req.objective {
+            Objective::FastestUnderBytes { budget_bytes } => {
+                front.fastest_under(budget_bytes).ok_or_else(|| {
+                    anyhow!(
+                        "no selection for {:?} on {:?} fits under {budget_bytes} bytes: \
+                         the leanest front point peaks at {} bytes",
+                        req.network.name,
+                        req.platform,
+                        front.min_peak_bytes()
+                    )
+                })?
+            }
+            Objective::SmallestWithinPct { pct_of_optimal_time } => {
+                ensure!(
+                    pct_of_optimal_time.is_finite() && pct_of_optimal_time >= 0.0,
+                    "pct_of_optimal_time must be finite and non-negative, \
+                     got {pct_of_optimal_time}"
+                );
+                front
+                    .smallest_within_pct(pct_of_optimal_time)
+                    .ok_or_else(|| anyhow!("empty Pareto front"))?
+            }
+            other => unreachable!("solve_via_front called with {other:?}"),
+        };
+        Ok(SelectionReport {
+            network: req.network.name.clone(),
+            platform: req.platform.clone(),
+            objective: req.objective,
+            provenance: entry.provenance.clone(),
+            selection: point.selection.clone(),
+            evaluated_ms: point.true_time_ms,
+            peak_workspace_bytes: point.peak_workspace_bytes,
+            front: Some(FrontLookup {
+                budget_bytes: point.budget_bytes,
+                peak_workspace_bytes: point.peak_workspace_bytes,
+                true_time_ms: point.true_time_ms,
+                cache_hit,
+                front_points: front.len(),
+            }),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// Structural fingerprint of a network for the front-cache key: name,
+/// layer configs, and edges (everything the PBQP instance depends on).
+fn network_fingerprint(net: &Network) -> u64 {
+    let mut h = DefaultHasher::new();
+    net.name.hash(&mut h);
+    net.layers.hash(&mut h);
+    net.edges.hash(&mut h);
+    h.finish()
 }
 
 /// Worst relative old→new prediction change across columns, via the same
@@ -895,6 +1145,9 @@ fn solve_one(entry: &PlatformEntry, req: &SelectionRequest) -> Result<SelectionR
         Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
             memory::select_with_budget(&req.network, cache, budget_bytes, lambda_ms_per_mb)?
         }
+        Objective::FastestUnderBytes { .. } | Objective::SmallestWithinPct { .. } => {
+            unreachable!("front-served objectives route through solve_via_front")
+        }
     };
     let evaluated_ms = selection::evaluate(&req.network, &selection, cache)?;
     let peak_workspace_bytes = memory::peak_workspace(&req.network, &selection);
@@ -906,6 +1159,7 @@ fn solve_one(entry: &PlatformEntry, req: &SelectionRequest) -> Result<SelectionR
         selection,
         evaluated_ms,
         peak_workspace_bytes,
+        front: None,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -989,6 +1243,82 @@ mod tests {
             .unwrap();
         assert!(tight.peak_workspace_bytes < free.peak_workspace_bytes);
         assert!(tight.evaluated_ms >= free.evaluated_ms);
+    }
+
+    #[test]
+    fn front_objectives_answer_from_the_cached_front() {
+        let coord = Coordinator::new();
+        let net = networks::vgg(11);
+
+        // unbounded budget == plain min-time selection, bit for bit
+        let free = coord.submit(&SelectionRequest::new(net.clone(), "intel")).unwrap();
+        let fastest = coord
+            .submit(&SelectionRequest::new(net.clone(), "intel").with_objective(
+                Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+            ))
+            .unwrap();
+        assert_eq!(fastest.selection.primitive, free.selection.primitive);
+        assert_eq!(fastest.evaluated_ms, free.evaluated_ms);
+        let look = fastest.front.as_ref().expect("front-served report carries a lookup");
+        assert!(!look.cache_hit, "first front request computes");
+        assert!(look.front_points >= 1);
+
+        // a second front query on the same pair is a cache hit
+        let again = coord
+            .submit(&SelectionRequest::new(net.clone(), "intel").with_objective(
+                Objective::SmallestWithinPct { pct_of_optimal_time: 0.0 },
+            ))
+            .unwrap();
+        assert!(again.front.unwrap().cache_hit);
+        // zero slack pins the fastest point
+        assert_eq!(again.evaluated_ms, fastest.evaluated_ms);
+        assert_eq!(coord.front_cache_stats(), (1, 1));
+
+        // solve-served objectives never carry a lookup
+        assert!(free.front.is_none());
+    }
+
+    #[test]
+    fn front_objectives_reject_bad_inputs() {
+        let coord = Coordinator::new();
+        let net = networks::alexnet();
+        // no assignment has negative workspace: unsatisfiable hard budget
+        let err = coord
+            .submit(&SelectionRequest::new(net.clone(), "intel").with_objective(
+                Objective::FastestUnderBytes { budget_bytes: -1.0 },
+            ))
+            .unwrap_err();
+        assert!(err.to_string().contains("leanest front point"), "{err}");
+        for pct in [f64::NAN, -5.0] {
+            assert!(coord
+                .submit(&SelectionRequest::new(net.clone(), "intel").with_objective(
+                    Objective::SmallestWithinPct { pct_of_optimal_time: pct },
+                ))
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn register_drops_cached_fronts() {
+        let coord = Coordinator::new();
+        let net = networks::alexnet();
+        let sim: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        coord.register("dev", Arc::clone(&sim));
+        let first = coord.pareto_front("dev", &net).unwrap();
+        let warm = coord.pareto_front("dev", &net).unwrap();
+        assert!(Arc::ptr_eq(&first, &warm));
+        // re-registering (even the same source) swaps the serving cache,
+        // so the cached front must be recomputed
+        coord.register("dev", sim);
+        let fresh = coord.pareto_front("dev", &net).unwrap();
+        assert!(!Arc::ptr_eq(&first, &fresh));
+        // same source, so the recomputed front is bit-identical
+        assert_eq!(fresh.points.len(), first.points.len());
+        for (a, b) in fresh.points.iter().zip(&first.points) {
+            assert_eq!(a.selection.primitive, b.selection.primitive);
+            assert_eq!(a.true_time_ms, b.true_time_ms);
+        }
+        assert_eq!(coord.front_cache_stats(), (1, 2));
     }
 
     #[test]

@@ -45,6 +45,12 @@
 //! snapshots every monitor for operators (the service layer renders the
 //! same snapshots in `ServiceStats`). Fault injection for all of it
 //! lives in [`FaultySource`](crate::selection::FaultySource).
+//!
+//! Recalibration — whether triggered here by drift or called explicitly
+//! — re-registers the platform's serving cache through the
+//! coordinator's single insertion funnel, which also drops every cached
+//! time×space Pareto front for the platform: a health-loop refresh can
+//! never leave a stale front serving budget queries.
 
 pub mod drift;
 

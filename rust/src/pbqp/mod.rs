@@ -14,11 +14,15 @@
 //!
 //! Internally the working graph is a flat edge arena driven by
 //! degree-bucket worklists (see `solver.rs` for the representation notes);
-//! the public [`Graph`]/[`solve`] surface is unchanged.
+//! the public [`Graph`]/[`solve`] surface is unchanged. For callers that
+//! re-solve one topology under many node-cost re-pricings (the Pareto
+//! budget sweep), [`ReusableSolver`] keeps the merged-edge arena and
+//! elimination machinery across solves; [`solves_on_thread`] counts
+//! solves per thread so warm serving paths can assert they ran none.
 
 mod solver;
 
-pub use solver::{solve, Solution};
+pub use solver::{solve, solves_on_thread, ReusableSolver, Solution};
 
 /// Infinite cost marker for forbidden (node, choice) combinations.
 pub const INF: f64 = 1e30;

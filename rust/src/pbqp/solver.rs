@@ -19,13 +19,31 @@
 //! Reductions eliminate nodes onto a stack; back-propagation resolves
 //! choices in reverse elimination order.
 
-use super::{Graph, INF};
+use super::{Edge, Graph, INF};
+use std::cell::Cell;
 
 /// A solved assignment.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
     pub choice: Vec<usize>,
     pub cost: f64,
+}
+
+thread_local! {
+    /// Per-thread count of PBQP solves ([`solve`] + [`ReusableSolver::solve_with`]).
+    static SOLVES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of PBQP solves run so far **on the calling thread**. The
+/// counter is thread-local on purpose: tests asserting "this warm path
+/// ran zero solves" stay exact even while other test threads solve
+/// concurrently in the same process.
+pub fn solves_on_thread() -> u64 {
+    SOLVES.with(|c| c.get())
+}
+
+fn note_solve() {
+    SOLVES.with(|c| c.set(c.get() + 1));
 }
 
 /// Records how an eliminated node's choice is recovered.
@@ -43,6 +61,7 @@ enum Elim {
 /// One arena slot: a merged u–v edge with its dense cost matrix stored
 /// row-major as |choices_u| x |choices_v|. The v-major view is the index
 /// swap `mat[j * cols + i]`; see [`entry`].
+#[derive(Clone)]
 struct EdgeSlot {
     u: usize,
     v: usize,
@@ -73,6 +92,7 @@ fn entry(mat: &[f64], node_is_u: bool, cols: usize, i: usize, j: usize) -> f64 {
     }
 }
 
+#[derive(Clone)]
 struct Work {
     costs: Vec<Vec<f64>>,
     /// Flat edge arena; slots are tombstoned, never removed.
@@ -238,7 +258,21 @@ pub fn solve(g: &Graph) -> Solution {
     if n == 0 {
         return Solution { choice: vec![], cost: 0.0 };
     }
+    note_solve();
     let mut w = Work::from_graph(g);
+    let choice = reduce_and_backprop(&mut w);
+    let cost = g.cost_of(&choice);
+    Solution { choice, cost }
+}
+
+/// The reduction loop plus back-propagation, shared between [`solve`]
+/// and [`ReusableSolver::solve_with`]: eliminate nodes onto a stack
+/// (R0/RI/RII exactly, RN heuristically), then resolve choices in
+/// reverse elimination order. Consumes `w`'s worklists and mutates its
+/// node costs; the caller must compute the objective against pristine
+/// costs.
+fn reduce_and_backprop(w: &mut Work) -> Vec<usize> {
+    let n = w.costs.len();
     let mut stack: Vec<Elim> = Vec::with_capacity(n);
 
     loop {
@@ -246,9 +280,9 @@ pub fn solve(g: &Graph) -> Solution {
         let Some((u, deg)) = next else { break };
         match deg {
             0 => stack.push(Elim::Free { node: u }),
-            1 => reduce_ri(&mut w, u, &mut stack),
-            2 => reduce_rii(&mut w, u, &mut stack),
-            _ => reduce_rn(&mut w, u, &mut stack),
+            1 => reduce_ri(w, u, &mut stack),
+            2 => reduce_rii(w, u, &mut stack),
+            _ => reduce_rn(w, u, &mut stack),
         }
         w.alive[u] = false;
     }
@@ -271,8 +305,87 @@ pub fn solve(g: &Graph) -> Solution {
             }
         }
     }
-    let cost = g.cost_of(&choice);
-    Solution { choice, cost }
+    choice
+}
+
+/// A PBQP solver specialised to one graph *topology*, reusable across
+/// node-cost re-pricings.
+///
+/// Construction pays the [`Graph`] → arena conversion once (parallel
+/// edges merged into dense matrices, degree buckets seeded);
+/// [`Self::solve_with`] then clones the pristine arena, swaps in new
+/// node costs and runs the shared reduction loop. Because the merged
+/// edge matrices, the bucket seeding and the reduction rules depend
+/// only on the topology and the cost *values* (never on how the arena
+/// was built), a `solve_with` call is bit-identical to [`solve`] on a
+/// graph carrying the same node costs — the property the Pareto sweep
+/// (`selection::pareto`) relies on when it re-prices workspace
+/// penalties across budget levels without rebuilding the graph.
+///
+/// ```
+/// use primsel::pbqp::{solve, Graph, ReusableSolver};
+///
+/// let mut g = Graph::new(vec![vec![1.0, 3.0], vec![4.0, 1.0]]);
+/// g.add_edge(0, 1, vec![0.0, 2.0, 2.0, 0.0]);
+/// let solver = ReusableSolver::new(&g);
+///
+/// // same costs: bit-identical to a fresh solve
+/// let fresh = solve(&g);
+/// let reused = solver.solve_with(&g.node_costs);
+/// assert_eq!(reused.choice, fresh.choice);
+/// assert_eq!(reused.cost, fresh.cost);
+///
+/// // re-priced costs reuse the merged-edge arena
+/// let repriced = solver.solve_with(&[vec![9.0, 9.0], vec![0.0, 9.0]]);
+/// assert_eq!(repriced.choice[1], 0);
+/// ```
+pub struct ReusableSolver {
+    /// Pristine post-merge arena (worklists seeded, nothing eliminated).
+    template: Work,
+    /// The original edges in insertion order, for the objective sum —
+    /// mirrors [`Graph::cost_of`] exactly.
+    edges: Vec<Edge>,
+}
+
+impl ReusableSolver {
+    /// Build the reusable arena for `g`'s topology (and cost shapes).
+    pub fn new(g: &Graph) -> Self {
+        Self { template: Work::from_graph(g), edges: g.edges.clone() }
+    }
+
+    /// Solve with `node_costs` in place of the graph's own. Each row
+    /// must have the same length as the corresponding row the solver
+    /// was built with.
+    pub fn solve_with(&self, node_costs: &[Vec<f64>]) -> Solution {
+        assert_eq!(node_costs.len(), self.template.costs.len(), "node count mismatch");
+        for (u, (fresh, built)) in node_costs.iter().zip(&self.template.costs).enumerate() {
+            assert_eq!(fresh.len(), built.len(), "choice count mismatch at node {u}");
+        }
+        if node_costs.is_empty() {
+            return Solution { choice: vec![], cost: 0.0 };
+        }
+        note_solve();
+        let mut w = self.template.clone();
+        w.costs = node_costs.to_vec();
+        let choice = reduce_and_backprop(&mut w);
+        let cost = cost_of_with(node_costs, &self.edges, &choice);
+        Solution { choice, cost }
+    }
+}
+
+/// Total assignment cost under explicit node costs — the same summation
+/// order as [`Graph::cost_of`] (nodes in index order, then edges in
+/// insertion order), so the two are bit-identical on equal inputs.
+fn cost_of_with(node_costs: &[Vec<f64>], edges: &[Edge], choice: &[usize]) -> f64 {
+    let mut total = 0.0;
+    for (u, &i) in choice.iter().enumerate() {
+        total += node_costs[u][i];
+    }
+    for e in edges {
+        let cols = node_costs[e.v].len();
+        total += e.at(choice[e.u], choice[e.v], cols);
+    }
+    total
 }
 
 fn argmin(v: &[f64]) -> (usize, f64) {
@@ -570,6 +683,66 @@ mod tests {
         let sol = solve(&g);
         let exact = g.brute_force();
         assert!((sol.cost - exact.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reusable_solver_matches_fresh_solve_bit_for_bit() {
+        // across chains, trees and dense (RN-heuristic) graphs: swapping
+        // re-priced costs into the cloned arena must equal building a
+        // fresh graph with those costs — same choice, same cost bits
+        let mut rng = SplitMix64::new(0x5EED);
+        for case in 0..40 {
+            let g = match case % 3 {
+                0 => {
+                    let n = 2 + (rng.next_u64() as usize) % 6;
+                    let node_costs: Vec<Vec<f64>> = (0..n)
+                        .map(|_| (0..3).map(|_| rng.next_f64() * 10.0).collect())
+                        .collect();
+                    let mut g = Graph::new(node_costs);
+                    for u in 0..n - 1 {
+                        g.add_edge(u, u + 1, (0..9).map(|_| rng.next_f64() * 5.0).collect());
+                    }
+                    g
+                }
+                _ => random_graph(&mut rng, 7, 3, 0.5),
+            };
+            let solver = ReusableSolver::new(&g);
+            for _ in 0..4 {
+                // re-price: same shapes, new values
+                let costs: Vec<Vec<f64>> = g
+                    .node_costs
+                    .iter()
+                    .map(|row| row.iter().map(|_| rng.next_f64() * 12.0).collect())
+                    .collect();
+                let mut fresh_graph = Graph::new(costs.clone());
+                for e in &g.edges {
+                    fresh_graph.add_edge(e.u, e.v, e.cost.clone());
+                }
+                let fresh = solve(&fresh_graph);
+                let reused = solver.solve_with(&costs);
+                assert_eq!(reused.choice, fresh.choice, "case {case}");
+                assert_eq!(reused.cost, fresh.cost, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "choice count mismatch")]
+    fn reusable_solver_rejects_misshapen_costs() {
+        let g = Graph::new(vec![vec![1.0, 2.0], vec![3.0]]);
+        ReusableSolver::new(&g).solve_with(&[vec![1.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn thread_local_solve_counter_counts_both_paths() {
+        let g = Graph::new(vec![vec![3.0, 1.0]]);
+        let solver = ReusableSolver::new(&g);
+        let before = solves_on_thread();
+        let _ = solve(&g);
+        let _ = solver.solve_with(&g.node_costs);
+        assert_eq!(solves_on_thread(), before + 2);
+        // other threads start from their own counter
+        std::thread::spawn(|| assert_eq!(solves_on_thread(), 0)).join().unwrap();
     }
 
     #[test]

@@ -13,10 +13,12 @@ pub mod cache;
 pub mod faulty;
 pub mod memory;
 pub mod modeled;
+pub mod pareto;
 
 pub use cache::{CacheStats, CostCache};
 pub use faulty::FaultySource;
 pub use modeled::ModeledSource;
+pub use pareto::{ParetoFront, ParetoPoint};
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
@@ -229,12 +231,20 @@ fn build_problem_inner(net: &Network, costs: &dyn CostSource) -> Result<Selectio
     Ok(SelectionProblem { graph, choices })
 }
 
-/// A solved selection: primitive per layer plus estimated total time.
+/// A solved selection: primitive per layer plus the solver's objective
+/// and the assignment's true time.
 #[derive(Debug, Clone)]
 pub struct Selection {
     /// Catalog index per layer.
     pub primitive: Vec<usize>,
-    /// Objective value under the cost source used for solving.
+    /// The value the solver minimised. For plain min-time selection this
+    /// equals `estimated_ms`; for budgeted objectives
+    /// ([`memory::select_with_budget`]) it includes the per-layer
+    /// workspace penalty terms.
+    pub objective_ms: f64,
+    /// True network time (ms) of the assignment under the cost source
+    /// used for solving — node times plus DLT edges, never
+    /// penalty-inflated.
     pub estimated_ms: f64,
 }
 
@@ -248,7 +258,7 @@ pub fn select(net: &Network, costs: &dyn CostSource) -> Result<Selection> {
         .enumerate()
         .map(|(u, &ci)| prob.choices[u][ci])
         .collect();
-    Ok(Selection { primitive, estimated_ms: sol.cost })
+    Ok(Selection { primitive, objective_ms: sol.cost, estimated_ms: sol.cost })
 }
 
 /// Evaluate an assignment's true network time under a (different) cost
@@ -313,9 +323,9 @@ fn single_family_inner(
             .ok_or_else(|| anyhow::anyhow!("no applicable primitive"))?;
         primitive.push(pick);
     }
-    let sel = Selection { primitive, estimated_ms: 0.0 };
+    let sel = Selection { primitive, objective_ms: 0.0, estimated_ms: 0.0 };
     let est = evaluate_inner(net, &sel, costs)?;
-    Ok(Selection { estimated_ms: est, ..sel })
+    Ok(Selection { objective_ms: est, estimated_ms: est, ..sel })
 }
 
 #[cfg(test)]
@@ -336,6 +346,8 @@ mod tests {
             let sel = select(&net, &s).unwrap();
             assert_eq!(sel.primitive.len(), net.n_layers());
             assert!(sel.estimated_ms > 0.0);
+            // plain min-time selection has no penalty terms
+            assert_eq!(sel.objective_ms, sel.estimated_ms);
             // the solution's evaluated cost equals its objective
             let ev = evaluate(&net, &sel, &s).unwrap();
             assert!((ev - sel.estimated_ms).abs() / ev < 1e-9, "{ev} vs {}", sel.estimated_ms);
@@ -394,6 +406,7 @@ mod tests {
         let ik = crate::primitives::index_of("im2row-copy-ab-ik").unwrap();
         let alt = Selection {
             primitive: (0..net.n_layers()).map(|i| if i % 2 == 0 { ki } else { ik }).collect(),
+            objective_ms: 0.0,
             estimated_ms: 0.0,
         };
         let alt_cost = evaluate(&net, &alt, &s).unwrap();

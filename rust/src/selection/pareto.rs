@@ -1,0 +1,245 @@
+//! Time×space Pareto fronts — the full TASO-style trade-off curve
+//! (PAPERS.md, arxiv 2005.10709) instead of one budgeted point query.
+//!
+//! [`ParetoFront::compute`] sweeps the memory-budget axis in **one pass**
+//! per (network, cost source): the PBQP topology, edge matrices,
+//! unpenalised times and the solver's merged-edge arena are built once
+//! (see `BudgetedProblem` in [`crate::selection::memory`]), and each
+//! budget level only
+//! re-prices the node costs and re-runs the reductions via
+//! [`pbqp::ReusableSolver`](crate::pbqp::ReusableSolver). The swept
+//! levels are exactly the distinct `workspace_bytes` values over every
+//! (layer, applicable primitive) pair plus zero — between two adjacent
+//! levels the penalty terms vary continuously with no new `max(0, ·)`
+//! kink, so no optimum is skipped that the per-layer soft constraint
+//! could express.
+//!
+//! Because a sweep level and a fresh
+//! [`select_with_budget`](crate::selection::memory::select_with_budget)
+//! call share the same pricing arithmetic and solver path, every front
+//! point is
+//! **bit-identical** to an exact per-budget solve at its
+//! `budget_bytes` — the invariant the differential suite in
+//! `rust/tests/pareto.rs` pins down.
+
+use crate::networks::Network;
+use crate::selection::memory::{peak_workspace, BudgetedProblem};
+use crate::selection::{with_cache, CostSource, Selection};
+use anyhow::Result;
+
+/// Penalty rate used by the coordinator's front cache: ms charged per
+/// MiB of per-layer workspace overshoot. Steep enough that the solver
+/// only overshoots a budget when no applicable primitive fits under it.
+pub const DEFAULT_LAMBDA_MS_PER_MB: f64 = 50.0;
+
+/// One non-dominated point of a [`ParetoFront`].
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// The swept budget level (bytes) this point was solved at.
+    pub budget_bytes: f64,
+    /// Peak per-layer workspace (bytes) of [`Self::selection`].
+    pub peak_workspace_bytes: f64,
+    /// True (unpenalised) network time of [`Self::selection`], ms.
+    pub true_time_ms: f64,
+    /// The assignment realising this trade-off.
+    pub selection: Selection,
+}
+
+/// The non-dominated time×space trade-off curve for one network under
+/// one cost source: `peak_workspace_bytes` strictly increasing,
+/// `true_time_ms` strictly decreasing across [`Self::points`].
+///
+/// ```
+/// use primsel::networks;
+/// use primsel::selection::pareto::ParetoFront;
+/// use primsel::simulator::{machine, Simulator};
+///
+/// let sim = Simulator::new(machine::intel_i9_9900k());
+/// let net = networks::alexnet();
+/// let front = ParetoFront::compute(&net, &sim, 50.0).unwrap();
+/// assert!(!front.is_empty());
+/// // an unbounded budget admits the fastest point on the front
+/// let fastest = front.fastest_under(f64::INFINITY).unwrap();
+/// assert_eq!(fastest.true_time_ms, front.optimal_time_ms());
+/// // the trade-off shape: every earlier point is smaller but slower
+/// for p in &front.points {
+///     assert!(p.peak_workspace_bytes <= fastest.peak_workspace_bytes);
+///     assert!(p.true_time_ms >= fastest.true_time_ms);
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    /// Name of the network the front was computed for.
+    pub network: String,
+    /// Penalty rate the sweep solved with.
+    pub lambda_ms_per_mb: f64,
+    /// Non-dominated points, sorted by increasing peak workspace
+    /// (equivalently: decreasing true time).
+    pub points: Vec<ParetoPoint>,
+    /// Every budget level the sweep solved (sorted, deduplicated) —
+    /// kept so differential tests can re-solve each level exactly.
+    pub swept_budgets: Vec<f64>,
+}
+
+impl ParetoFront {
+    /// Sweep the budget axis for `net` under `costs` and keep the
+    /// non-dominated points. One graph build, one solver arena; one
+    /// re-priced solve per distinct workspace level.
+    pub fn compute(
+        net: &Network,
+        costs: &dyn CostSource,
+        lambda_ms_per_mb: f64,
+    ) -> Result<Self> {
+        with_cache(costs, |c: &dyn CostSource| {
+            Self::compute_inner(net, c, lambda_ms_per_mb)
+        })
+    }
+
+    fn compute_inner(
+        net: &Network,
+        costs: &dyn CostSource,
+        lambda_ms_per_mb: f64,
+    ) -> Result<Self> {
+        let prob = BudgetedProblem::build(net, costs)?;
+        let mut budgets: Vec<f64> = prob.workspace_levels().collect();
+        budgets.push(0.0);
+        budgets.sort_by(|a, b| a.total_cmp(b));
+        budgets.dedup();
+        let mut raw = Vec::with_capacity(budgets.len());
+        for &budget in &budgets {
+            let sel = prob.solve_at(budget, lambda_ms_per_mb);
+            let peak = peak_workspace(net, &sel);
+            raw.push(ParetoPoint {
+                budget_bytes: budget,
+                peak_workspace_bytes: peak,
+                true_time_ms: sel.estimated_ms,
+                selection: sel,
+            });
+        }
+        Ok(Self {
+            network: net.name.clone(),
+            lambda_ms_per_mb,
+            points: pareto_filter(raw),
+            swept_budgets: budgets,
+        })
+    }
+
+    /// The fastest point whose peak workspace fits under `budget_bytes`,
+    /// or `None` if even the leanest point exceeds it.
+    pub fn fastest_under(&self, budget_bytes: f64) -> Option<&ParetoPoint> {
+        // points are sorted by increasing peak and decreasing time, so
+        // the last fitting point is the fastest fitting point
+        self.points.iter().rev().find(|p| p.peak_workspace_bytes <= budget_bytes)
+    }
+
+    /// The smallest-footprint point within `pct` percent of the
+    /// unconstrained optimum time. `pct = 0.0` returns the fastest
+    /// point; larger slack admits leaner points.
+    pub fn smallest_within_pct(&self, pct: f64) -> Option<&ParetoPoint> {
+        let threshold = self.optimal_time_ms() * (1.0 + pct / 100.0);
+        self.points.iter().find(|p| p.true_time_ms <= threshold)
+    }
+
+    /// True time of the fastest (unconstrained-optimal) point, ms.
+    pub fn optimal_time_ms(&self) -> f64 {
+        self.points.last().expect("front is never empty").true_time_ms
+    }
+
+    /// Peak workspace of the leanest point, bytes — the floor below
+    /// which no budget is satisfiable.
+    pub fn min_peak_bytes(&self) -> f64 {
+        self.points.first().expect("front is never empty").peak_workspace_bytes
+    }
+
+    /// Number of non-dominated points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Whether the front has no points (never true for a computed
+    /// front — kept for the `len`/`is_empty` convention).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Keep the non-dominated points: sort by (peak asc, time asc, budget
+/// asc) and keep a point iff it is strictly faster than everything
+/// kept so far. Yields strictly increasing peak, strictly decreasing
+/// time; ties collapse to the lowest-budget representative.
+fn pareto_filter(mut raw: Vec<ParetoPoint>) -> Vec<ParetoPoint> {
+    raw.sort_by(|a, b| {
+        a.peak_workspace_bytes
+            .total_cmp(&b.peak_workspace_bytes)
+            .then(a.true_time_ms.total_cmp(&b.true_time_ms))
+            .then(a.budget_bytes.total_cmp(&b.budget_bytes))
+    });
+    let mut kept: Vec<ParetoPoint> = Vec::new();
+    for p in raw {
+        if kept.last().map_or(true, |last| p.true_time_ms < last.true_time_ms) {
+            kept.push(p);
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::selection;
+    use crate::simulator::{machine, Simulator};
+
+    fn front(net: &Network) -> ParetoFront {
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        ParetoFront::compute(net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap()
+    }
+
+    #[test]
+    fn front_is_strictly_monotone() {
+        let f = front(&networks::alexnet());
+        assert!(!f.is_empty());
+        for w in f.points.windows(2) {
+            assert!(w[0].peak_workspace_bytes < w[1].peak_workspace_bytes);
+            assert!(w[0].true_time_ms > w[1].true_time_ms);
+        }
+    }
+
+    #[test]
+    fn fastest_point_is_the_unconstrained_optimum() {
+        let net = networks::alexnet();
+        let sim = Simulator::new(machine::intel_i9_9900k());
+        let f = ParetoFront::compute(&net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        let free = selection::select(&net, &sim).unwrap();
+        let fastest = f.fastest_under(f64::INFINITY).unwrap();
+        assert_eq!(fastest.selection.primitive, free.primitive);
+        assert_eq!(f.optimal_time_ms(), free.estimated_ms);
+    }
+
+    #[test]
+    fn fastest_under_unsatisfiable_budget_is_none() {
+        let f = front(&networks::alexnet());
+        assert!(f.fastest_under(-1.0).is_none());
+        assert!(f.fastest_under(f.min_peak_bytes()).is_some());
+    }
+
+    #[test]
+    fn zero_pct_slack_returns_the_fastest_point() {
+        let f = front(&networks::alexnet());
+        let p = f.smallest_within_pct(0.0).unwrap();
+        assert_eq!(p.true_time_ms, f.optimal_time_ms());
+        // generous slack admits a point no larger than the fastest
+        let lean = f.smallest_within_pct(1e6).unwrap();
+        assert!(lean.peak_workspace_bytes <= p.peak_workspace_bytes);
+        assert_eq!(lean.peak_workspace_bytes, f.min_peak_bytes());
+    }
+
+    #[test]
+    fn swept_budgets_are_sorted_and_include_zero() {
+        let f = front(&networks::vgg(11));
+        assert_eq!(f.swept_budgets[0], 0.0);
+        for w in f.swept_budgets.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -28,7 +28,10 @@
 //!
 //! * **Transparency** — served reports are bit-identical to calling
 //!   `submit_batch` with the same requests: the service reshapes *when*
-//!   work runs, never *what* it computes.
+//!   work runs, never *what* it computes. That covers the front-served
+//!   objectives (`FastestUnderBytes` / `SmallestWithinPct`) too: workers
+//!   call `select_one`, so tickets answer from the coordinator's cached
+//!   Pareto fronts exactly like direct submissions do.
 //! * **Backpressure** — at capacity, [`Service::try_submit`] refuses
 //!   with [`SubmitError::QueueFull`] instead of buffering without
 //!   bound; blocked [`Service::submit`] calls wake as workers drain.

@@ -124,9 +124,14 @@ mod tests {
             platform: "p".into(),
             objective: crate::coordinator::Objective::MinTime,
             provenance: crate::coordinator::CostProvenance::Measured,
-            selection: crate::selection::Selection { primitive: vec![0], estimated_ms: 1.0 },
+            selection: crate::selection::Selection {
+                primitive: vec![0],
+                objective_ms: 1.0,
+                estimated_ms: 1.0,
+            },
             evaluated_ms: 1.0,
             peak_workspace_bytes: 0.0,
+            front: None,
             wall_ms: 0.0,
         }
     }

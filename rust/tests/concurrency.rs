@@ -203,6 +203,7 @@ fn coordinator_batch_matches_sequential_selection() {
                 memory::select_with_budget(&req.network, &fresh, budget_bytes, lambda_ms_per_mb)
                     .unwrap()
             }
+            other => unreachable!("this batch contains no front objectives: {other:?}"),
         };
         assert_eq!(rep.selection.primitive, expected.primitive, "{}/{}", rep.network, rep.platform);
         assert_eq!(rep.selection.estimated_ms, expected.estimated_ms);

@@ -1,0 +1,351 @@
+//! Differential, concurrency, and invalidation tests for time×space
+//! Pareto-front serving.
+//!
+//! The front is a combinatorial artifact built by a *reused* solver
+//! arena, so every claim here is checked against an independent path:
+//!
+//! * every front point must be **bit-identical** to a fresh
+//!   `select_with_budget` exact solve at that point's budget — on
+//!   alexnet and vgg(11), and on the acceptance pair (vgg16, intel)
+//!   across all (≥ 8) swept budget levels;
+//! * the front itself must be strictly non-dominated and monotone;
+//! * `FastestUnderBytes` / `SmallestWithinPct` answers must be
+//!   bit-identical cold vs cached, across coordinators, and across
+//!   thread interleavings (the concurrency-hammer pattern from
+//!   `rust/tests/concurrency.rs`) — and a warm lookup must run **zero**
+//!   PBQP solves (pinned via `pbqp::solves_on_thread`);
+//! * recalibration — explicit or driven by the health loop's
+//!   `FaultySource` machinery — must drop cached fronts: no stale-front
+//!   serving.
+
+use primsel::coordinator::{Coordinator, Objective, OnboardSpec, SelectionRequest};
+use primsel::dataset::calibration_sample;
+use primsel::health::{HealthPolicy, HealthState};
+use primsel::networks::{self, Network};
+use primsel::pbqp;
+use primsel::perfmodel::model::CostModel;
+use primsel::perfmodel::LinCostModel;
+use primsel::selection::memory::{peak_workspace, select_with_budget};
+use primsel::selection::pareto::DEFAULT_LAMBDA_MS_PER_MB;
+use primsel::selection::{self, CostSource, FaultySource, ParetoFront};
+use primsel::service::{Service, ServiceConfig};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+use std::time::Duration;
+
+const THREADS: usize = 8;
+
+fn intel() -> Simulator {
+    Simulator::new(machine::intel_i9_9900k())
+}
+
+fn front_req(net: &Network, platform: &str, objective: Objective) -> SelectionRequest {
+    SelectionRequest::new(net.clone(), platform).with_objective(objective)
+}
+
+/// Every front point re-solved from scratch at its own budget must come
+/// back bit-identical: same primitives, same penalised objective, same
+/// true time, same peak.
+fn assert_front_matches_fresh_solves(net: &Network, sim: &Simulator, front: &ParetoFront) {
+    for p in &front.points {
+        let fresh =
+            select_with_budget(net, sim, p.budget_bytes, front.lambda_ms_per_mb).unwrap();
+        assert_eq!(
+            p.selection.primitive, fresh.primitive,
+            "{}: front point at budget {} diverged from the exact solve",
+            net.name, p.budget_bytes
+        );
+        assert_eq!(p.selection.objective_ms, fresh.objective_ms);
+        assert_eq!(p.selection.estimated_ms, fresh.estimated_ms);
+        assert_eq!(p.true_time_ms, fresh.estimated_ms);
+        assert_eq!(p.peak_workspace_bytes, peak_workspace(net, &fresh));
+    }
+}
+
+#[test]
+fn front_points_match_fresh_exact_solves_on_small_nets() {
+    let sim = intel();
+    for net in [networks::alexnet(), networks::vgg(11)] {
+        let front = ParetoFront::compute(&net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        assert!(!front.is_empty());
+        assert_front_matches_fresh_solves(&net, &sim, &front);
+    }
+}
+
+#[test]
+fn vgg16_sweep_is_point_identical_to_per_budget_solves_across_levels() {
+    // the acceptance pair: (vgg16, intel_i9_9900k)
+    let sim = intel();
+    let net = networks::vgg(16);
+    let front = ParetoFront::compute(&net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+    assert!(
+        front.swept_budgets.len() >= 8,
+        "expected >= 8 distinct budget levels, got {}",
+        front.swept_budgets.len()
+    );
+
+    // every surviving front point is bit-identical to the exact solve
+    assert_front_matches_fresh_solves(&net, &sim, &front);
+
+    // and across >= 8 quantile-sampled swept levels, the exact solve at
+    // each level is (weakly) dominated by the front — the sweep solved
+    // those levels through the same code path, so a fresh solve can
+    // never beat the curve
+    let n = front.swept_budgets.len();
+    let mut checked = 0;
+    for i in 0..8 {
+        let b = front.swept_budgets[i * (n - 1) / 7];
+        let fresh = select_with_budget(&net, &sim, b, front.lambda_ms_per_mb).unwrap();
+        let fresh_peak = peak_workspace(&net, &fresh);
+        assert!(
+            front.points.iter().any(|p| p.peak_workspace_bytes <= fresh_peak
+                && p.true_time_ms <= fresh.estimated_ms),
+            "exact solve at budget {b} ({} bytes, {} ms) beats the front",
+            fresh_peak,
+            fresh.estimated_ms
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 8);
+}
+
+#[test]
+fn front_is_strictly_nondominated_and_monotone() {
+    let sim = intel();
+    for net in [networks::alexnet(), networks::vgg(11), networks::vgg(16)] {
+        let front = ParetoFront::compute(&net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        for w in front.points.windows(2) {
+            assert!(
+                w[0].peak_workspace_bytes < w[1].peak_workspace_bytes,
+                "{}: peaks must strictly increase",
+                net.name
+            );
+            assert!(
+                w[0].true_time_ms > w[1].true_time_ms,
+                "{}: times must strictly decrease",
+                net.name
+            );
+        }
+        // the fastest point is the unconstrained optimum, bit for bit
+        let free = selection::select(&net, &sim).unwrap();
+        let fastest = front.fastest_under(f64::INFINITY).unwrap();
+        assert_eq!(fastest.selection.primitive, free.primitive);
+        assert_eq!(front.optimal_time_ms(), free.estimated_ms);
+    }
+}
+
+#[test]
+fn warm_front_lookup_is_bit_identical_and_runs_zero_pbqp_solves() {
+    let net = networks::vgg(16);
+    let coord = Coordinator::new();
+    let unbounded = Objective::FastestUnderBytes { budget_bytes: f64::INFINITY };
+
+    // cold: computes the front
+    let cold = coord.submit(&front_req(&net, "intel", unbounded)).unwrap();
+    assert!(!cold.front.as_ref().unwrap().cache_hit);
+
+    // warm: answers from the cached front with ZERO PBQP solves
+    let solves_before = pbqp::solves_on_thread();
+    let warm = coord.submit(&front_req(&net, "intel", unbounded)).unwrap();
+    assert_eq!(
+        pbqp::solves_on_thread(),
+        solves_before,
+        "a warm front lookup must not solve anything"
+    );
+    let look = warm.front.as_ref().unwrap();
+    assert!(look.cache_hit);
+    assert_eq!(warm.selection.primitive, cold.selection.primitive);
+    assert_eq!(warm.selection.estimated_ms, cold.selection.estimated_ms);
+    assert_eq!(warm.evaluated_ms, cold.evaluated_ms);
+    assert_eq!(warm.peak_workspace_bytes, cold.peak_workspace_bytes);
+    let (hits, misses) = coord.front_cache_stats();
+    assert_eq!((hits, misses), (1, 1));
+
+    // a second, cold coordinator answers bit-identically
+    let other = Coordinator::new();
+    let twin = other.submit(&front_req(&net, "intel", unbounded)).unwrap();
+    assert_eq!(twin.selection.primitive, cold.selection.primitive);
+    assert_eq!(twin.evaluated_ms, cold.evaluated_ms);
+}
+
+#[test]
+fn front_answers_are_stable_across_thread_interleavings() {
+    // the concurrency-hammer pattern: one shared coordinator, THREADS
+    // threads firing mixed front objectives, every answer compared to a
+    // single-threaded reference
+    let net = networks::vgg(11);
+    let coord = Coordinator::shared();
+    let front = coord.pareto_front("intel", &net).unwrap();
+
+    // reference objectives: one hard budget pinning each front point,
+    // plus the unbounded query and a pct-slack query
+    let mut objectives: Vec<Objective> = front
+        .points
+        .iter()
+        .map(|p| Objective::FastestUnderBytes { budget_bytes: p.peak_workspace_bytes })
+        .collect();
+    objectives.push(Objective::FastestUnderBytes { budget_bytes: f64::INFINITY });
+    objectives.push(Objective::SmallestWithinPct { pct_of_optimal_time: 0.0 });
+    objectives.push(Objective::SmallestWithinPct { pct_of_optimal_time: 1e9 });
+    let reference: Vec<_> = objectives
+        .iter()
+        .map(|&o| coord.submit(&front_req(&net, "intel", o)).unwrap())
+        .collect();
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let coord = Arc::clone(&coord);
+            let net = &net;
+            let objectives = &objectives;
+            let reference = &reference;
+            s.spawn(move || {
+                // each thread walks the objective list from a different
+                // offset so lookups interleave differently every run
+                for k in 0..objectives.len() * 2 {
+                    let i = (t + k) % objectives.len();
+                    let rep = coord.submit(&front_req(net, "intel", objectives[i])).unwrap();
+                    assert_eq!(rep.selection.primitive, reference[i].selection.primitive);
+                    assert_eq!(rep.selection.estimated_ms, reference[i].selection.estimated_ms);
+                    assert_eq!(rep.evaluated_ms, reference[i].evaluated_ms);
+                    assert_eq!(rep.peak_workspace_bytes, reference[i].peak_workspace_bytes);
+                    assert!(rep.front.unwrap().cache_hit, "front was warmed up front");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn explicit_recalibration_drops_the_cached_front() {
+    let coord = Coordinator::new();
+    let target: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+    coord.onboard_platform("arm-lin", OnboardSpec::fresh_lin(target, 0.02, 7)).unwrap();
+    let net = networks::alexnet();
+
+    let first = coord.pareto_front("arm-lin", &net).unwrap();
+    let warm = coord.pareto_front("arm-lin", &net).unwrap();
+    assert!(Arc::ptr_eq(&first, &warm), "repeat lookups serve the same cached front");
+
+    coord.recalibrate_platform("arm-lin", 0.04, 99).unwrap();
+
+    // the first post-recal front query recomputes — cache_hit says so
+    let rep = coord
+        .submit(&front_req(
+            &net,
+            "arm-lin",
+            Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+        ))
+        .unwrap();
+    assert!(!rep.front.unwrap().cache_hit, "recalibration must drop the cached front");
+
+    // and the recomputed front is exactly what the refreshed serving
+    // cache yields
+    let fresh = coord.pareto_front("arm-lin", &net).unwrap();
+    assert!(!Arc::ptr_eq(&first, &fresh));
+    let direct = ParetoFront::compute(
+        &net,
+        coord.cache("arm-lin").unwrap().as_ref(),
+        DEFAULT_LAMBDA_MS_PER_MB,
+    )
+    .unwrap();
+    assert_eq!(fresh.points.len(), direct.points.len());
+    for (a, b) in fresh.points.iter().zip(&direct.points) {
+        assert_eq!(a.selection.primitive, b.selection.primitive);
+        assert_eq!(a.true_time_ms, b.true_time_ms);
+        assert_eq!(a.peak_workspace_bytes, b.peak_workspace_bytes);
+    }
+}
+
+#[test]
+fn health_loop_auto_recalibration_drops_the_cached_front() {
+    // the fault-injection machinery from rust/tests/health.rs: a
+    // transfer-onboarded platform whose live device drifts, monitored
+    // with a tight policy so the auto-recal fires within a few requests
+    let faulty = Arc::new(FaultySource::new(
+        Arc::new(Simulator::new(machine::arm_cortex_a73())),
+        101,
+    ));
+    let target: Arc<dyn CostSource> = Arc::clone(&faulty) as Arc<dyn CostSource>;
+    let intel_sim = intel();
+    let (prim, dlt) = calibration_sample(&intel_sim, 0.1, 3);
+    let source: Arc<dyn CostModel + Send + Sync> =
+        Arc::new(LinCostModel::fit(&prim, &dlt, "intel").unwrap());
+
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform("arm-live", OnboardSpec::transfer(Arc::clone(&target), source, 0.02, 5))
+        .unwrap();
+    coord
+        .monitor_platform(
+            "arm-live",
+            target,
+            HealthPolicy::default()
+                .with_sampling(1.0, 11)
+                .with_window(24, 8)
+                .with_drift_band(0.75)
+                .with_auto_recalibrate(true, 0.02)
+                .with_quarantine(3, Duration::ZERO, Duration::from_millis(200)),
+        )
+        .unwrap();
+    let net = networks::alexnet();
+
+    let before = coord.pareto_front("arm-live", &net).unwrap();
+
+    // drift the device and drive traffic until the health loop repairs
+    faulty.set_drift(3.0);
+    let mut recalibrated = false;
+    for _ in 0..50 {
+        let _ = coord.submit(&SelectionRequest::new(net.clone(), "arm-live"));
+        let h = coord.platform_health_of("arm-live").unwrap();
+        if h.recalibrations >= 1 {
+            recalibrated = true;
+            break;
+        }
+    }
+    assert!(recalibrated, "auto-recalibration never fired");
+    assert_eq!(coord.platform_health_of("arm-live").unwrap().state, HealthState::Healthy);
+
+    // the auto-recal swapped the serving cache, so the cached front is
+    // gone: the next lookup recomputes over the healed model
+    let rep = coord
+        .submit(&front_req(
+            &net,
+            "arm-live",
+            Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+        ))
+        .unwrap();
+    assert!(!rep.front.unwrap().cache_hit, "auto-recal must drop the cached front");
+    let after = coord.pareto_front("arm-live", &net).unwrap();
+    assert!(!Arc::ptr_eq(&before, &after));
+    let (_, misses) = coord.front_cache_stats();
+    assert!(misses >= 2, "both generations were computed, got {misses} misses");
+}
+
+#[test]
+fn front_objectives_through_service_tickets_match_direct_submits() {
+    let net = networks::vgg(11);
+    let coord = Coordinator::shared();
+    let objectives = [
+        Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+        Objective::SmallestWithinPct { pct_of_optimal_time: 5.0 },
+    ];
+    let direct: Vec<_> = objectives
+        .iter()
+        .map(|&o| coord.submit(&front_req(&net, "intel", o)).unwrap())
+        .collect();
+
+    let service = Service::new(
+        Arc::clone(&coord),
+        ServiceConfig::default().with_capacity(16).with_workers(2),
+    );
+    for (o, d) in objectives.iter().zip(&direct) {
+        let ticket = service.submit("tenant", front_req(&net, "intel", *o)).unwrap();
+        let rep = ticket.wait().unwrap();
+        assert_eq!(rep.selection.primitive, d.selection.primitive);
+        assert_eq!(rep.evaluated_ms, d.evaluated_ms);
+        assert_eq!(rep.peak_workspace_bytes, d.peak_workspace_bytes);
+        // the direct submits warmed the front, so tickets hit the cache
+        assert!(rep.front.unwrap().cache_hit);
+    }
+    service.shutdown();
+}

@@ -3,10 +3,13 @@
 
 use primsel::dataset::{self, Standardizer};
 use primsel::layers::ConvConfig;
+use primsel::networks::Network;
 use primsel::pbqp::{self, Graph};
 use primsel::perfmodel::metrics;
 use primsel::primitives::{catalog, Layout};
-use primsel::selection::{self, CostCache, CostSource};
+use primsel::selection::memory::{peak_workspace, select_with_budget, workspace_bytes};
+use primsel::selection::pareto::{ParetoFront, DEFAULT_LAMBDA_MS_PER_MB};
+use primsel::selection::{self, CostCache, CostSource, Selection};
 use primsel::simulator::noise::SplitMix64;
 use primsel::simulator::{machine, Simulator};
 
@@ -316,6 +319,81 @@ fn prop_mdrae_properties() {
         assert!((metrics::mdrae(&scaled) - m).abs() < 1e-12);
         let exact: Vec<(f64, f64)> = pairs.iter().map(|&(_, a)| (a, a)).collect();
         assert_eq!(metrics::mdrae(&exact), 0.0);
+    }
+}
+
+/// The workspace model is total over the config space: every
+/// (primitive, config) pair — applicable or not — yields a finite,
+/// non-negative byte count.
+#[test]
+fn prop_workspace_model_sane() {
+    let mut rng = SplitMix64::new(43);
+    for _ in 0..CASES {
+        let cfg = rand_cfg(&mut rng);
+        for prim in catalog() {
+            let w = workspace_bytes(prim, &cfg);
+            assert!(w.is_finite() && w >= 0.0, "{}: workspace {w}", prim.name);
+        }
+    }
+}
+
+/// Peak workspace is a per-layer maximum, so jointly permuting the
+/// (layer, primitive) pairs must not move it by a single bit.
+#[test]
+fn prop_peak_workspace_permutation_stable() {
+    let mut rng = SplitMix64::new(47);
+    let cat = catalog();
+    for case in 0..CASES {
+        let n = 2 + (rng.next_u64() % 10) as usize;
+        let mut layers: Vec<ConvConfig> = Vec::with_capacity(n);
+        let mut primitive: Vec<usize> = Vec::with_capacity(n);
+        while layers.len() < n {
+            let cfg = rand_cfg(&mut rng);
+            let apps: Vec<usize> =
+                (0..cat.len()).filter(|&p| cat[p].applicable(&cfg)).collect();
+            if apps.is_empty() {
+                continue; // degenerate config (e.g. filter larger than image)
+            }
+            primitive.push(apps[(rng.next_u64() as usize) % apps.len()]);
+            layers.push(cfg);
+        }
+        let net =
+            Network { name: format!("perm-{case}"), layers: layers.clone(), edges: vec![] };
+        let sel =
+            Selection { primitive: primitive.clone(), objective_ms: 0.0, estimated_ms: 0.0 };
+        let peak = peak_workspace(&net, &sel);
+        assert!(peak.is_finite() && peak >= 0.0);
+
+        // joint Fisher–Yates shuffle of the (layer, primitive) pairs
+        let mut pairs: Vec<(ConvConfig, usize)> = layers.into_iter().zip(primitive).collect();
+        for i in (1..pairs.len()).rev() {
+            let j = (rng.next_u64() as usize) % (i + 1);
+            pairs.swap(i, j);
+        }
+        let (layers2, primitive2): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+        let net2 = Network { name: "shuffled".into(), layers: layers2, edges: vec![] };
+        let sel2 = Selection { primitive: primitive2, objective_ms: 0.0, estimated_ms: 0.0 };
+        assert_eq!(peak, peak_workspace(&net2, &sel2), "case {case}: peak moved");
+    }
+}
+
+/// With no effective budget constraint, both the Pareto front's fastest
+/// endpoint and an infinite-budget point query recover the
+/// unconstrained `selection::select` answer bit for bit.
+#[test]
+fn prop_infinite_budget_front_endpoints_match_unconstrained_select() {
+    let sim = Simulator::new(machine::intel_i9_9900k());
+    for net in [primsel::networks::alexnet(), primsel::networks::vgg(11)] {
+        let free = selection::select(&net, &sim).unwrap();
+        let front = ParetoFront::compute(&net, &sim, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        let fastest = front.fastest_under(f64::INFINITY).unwrap();
+        assert_eq!(fastest.selection.primitive, free.primitive, "{}", net.name);
+        assert_eq!(fastest.true_time_ms, free.estimated_ms);
+        let inf =
+            select_with_budget(&net, &sim, f64::INFINITY, DEFAULT_LAMBDA_MS_PER_MB).unwrap();
+        assert_eq!(inf.primitive, free.primitive);
+        assert_eq!(inf.estimated_ms, free.estimated_ms);
+        assert_eq!(inf.objective_ms, inf.estimated_ms, "no penalty at infinite budget");
     }
 }
 
