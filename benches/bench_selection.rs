@@ -11,7 +11,7 @@
 mod harness;
 
 use harness::Bench;
-use primsel::coordinator::{Coordinator, Objective, OnboardSpec, SelectionRequest};
+use primsel::coordinator::{Coordinator, Objective, OnboardSpec, ReportDetail, SelectionRequest};
 use primsel::dataset;
 use primsel::experiments::Workbench;
 use primsel::networks;
@@ -109,6 +109,27 @@ fn main() {
         let _ = coord.submit(&req).unwrap(); // compute + cache the front
         b.run("selection/pareto_warm_lookup", 10, 100, || {
             let _ = coord.submit(&req).unwrap();
+        });
+    }
+    // the compiled-plan tentpole pair: `cold` re-builds the PBQP graph
+    // and elimination template from the (already warm) cost cache every
+    // call — the per-request price before plans; `warm_plan` answers the
+    // same request through the coordinator's plan cache with Minimal
+    // detail — one flat arena solve, zero construction, zero cache
+    // lookups, zero steady-state allocation. The gate prints the
+    // warm/cold ratio (acceptance: >= 5x).
+    {
+        let coord = Coordinator::new();
+        let net = networks::vgg(16);
+        let req = SelectionRequest::new(net.clone(), "intel")
+            .with_detail(ReportDetail::Minimal);
+        let _ = coord.select_one(&req).unwrap(); // compile + cache the plan
+        b.run("selection/select_one_warm_plan", 10, 100, || {
+            let _ = coord.select_one(&req).unwrap();
+        });
+        let cache = coord.cache("intel").unwrap();
+        b.run("selection/select_one_cold", 1, 10, || {
+            let _ = selection::select(&net, cache.as_ref()).unwrap();
         });
     }
     // the coordinator end-to-end: a mixed three-platform zoo batch

@@ -109,8 +109,18 @@ def main() -> int:
         for name, b, c, delta in failures:
             print(f"  {name}: {b:.4f} -> {c:.4f} ms ({delta:+.2f}%)")
         return 1
-    print("bench gate passed")
+    print(f"bench gate passed{speedup_note(cur)}")
     return 0
+
+
+def speedup_note(cur: dict[str, float | None]) -> str:
+    """Warm-plan vs cold-rebuild speedup for the summary line, when both
+    rows are present in the results (acceptance target: >= 5x)."""
+    warm = cur.get("selection/select_one_warm_plan")
+    cold = cur.get("selection/select_one_cold")
+    if warm and cold and warm > 0.0:
+        return f" (warm-plan select speedup: {cold / warm:.1f}x over cold rebuild)"
+    return ""
 
 
 if __name__ == "__main__":

@@ -68,6 +68,29 @@
 //! expires its cached fronts in the same stroke: front slots remember
 //! the exact cache `Arc` they were computed over and only serve while
 //! it is still the platform's current one.
+//!
+//! ## Compiled selection plans
+//!
+//! The solve-served objectives ([`Objective::MinTime`] and
+//! [`Objective::MinTimeWithMemoryBudget`]) are answered through a
+//! second per-(platform, network fingerprint) cache: a compiled
+//! [`SelectionPlan`](crate::selection::SelectionPlan) freezing the
+//! layer/choice topology, the DLT edge matrices and the unpenalised
+//! times in flat arenas plus a
+//! [`ReusableSolver`](crate::pbqp::ReusableSolver) elimination
+//! template. A warm request does **zero graph construction, zero
+//! per-layer cache lookups and zero steady-state heap allocation**:
+//! the solve runs out of a per-worker thread-local
+//! [`PlanScratch`](crate::selection::PlanScratch), and freezing the
+//! times is sound because a plan slot — like a front slot — remembers
+//! the exact cache `Arc` it was compiled over, and cache rows are
+//! immutable within a generation. Plans invalidate through the same
+//! single [`Coordinator::register`]/onboard/recalibrate funnel as
+//! fronts, and warm results are bit-identical to the cold
+//! [`selection::select`] path by construction (pinned differentially
+//! in `rust/tests/plan.rs`). Callers that don't need the report's
+//! name strings can ask for [`ReportDetail::Minimal`] and render them
+//! lazily with [`SelectionReport::render`] — the service workers do.
 
 use crate::dataset::{self, calibration_sample};
 use crate::health::{self, HealthMonitor, HealthPolicy, PlatformHealth, PlatformMonitor};
@@ -77,12 +100,13 @@ use crate::perfmodel::model::{CostModel, FactorCorrected, LinCostModel};
 use crate::perfmodel::transfer::{robust_factors, MIN_CALIB_RATIOS};
 use crate::selection::pareto::DEFAULT_LAMBDA_MS_PER_MB;
 use crate::selection::{
-    self, memory, CacheStats, CostCache, CostSource, ModeledSource, ParetoFront, Selection,
-    TableSource,
+    self, CacheStats, CostCache, CostSource, ModeledSource, ParetoFront, PlanScratch,
+    Selection, SelectionPlan, TableSource,
 };
 use crate::simulator::{machine, Simulator};
 use crate::sync;
 use anyhow::{anyhow, ensure, Result};
+use std::cell::RefCell;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::fmt;
@@ -164,6 +188,22 @@ pub enum CostProvenance {
     },
 }
 
+/// How much of a [`SelectionReport`] to assemble eagerly. The numeric
+/// fields are always exact; only the name strings are optional, because
+/// they are the one part of a warm report that costs heap allocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReportDetail {
+    /// Fill every field, names included (the default).
+    #[default]
+    Full,
+    /// Leave [`SelectionReport::network`] and
+    /// [`SelectionReport::platform`] empty; callers that end up needing
+    /// them render lazily with [`SelectionReport::render`]. The service
+    /// workers request this so the warm fast path allocates nothing for
+    /// requests whose tenants only read the numbers.
+    Minimal,
+}
+
 /// One tenant request: optimise `network` for `platform` under
 /// `objective`.
 #[derive(Debug, Clone)]
@@ -171,17 +211,31 @@ pub struct SelectionRequest {
     pub network: Network,
     pub platform: String,
     pub objective: Objective,
+    /// How much of the report to assemble eagerly (default
+    /// [`ReportDetail::Full`]).
+    pub detail: ReportDetail,
 }
 
 impl SelectionRequest {
     /// A plain min-time request.
     pub fn new(network: Network, platform: &str) -> Self {
-        Self { network, platform: platform.to_string(), objective: Objective::MinTime }
+        Self {
+            network,
+            platform: platform.to_string(),
+            objective: Objective::MinTime,
+            detail: ReportDetail::Full,
+        }
     }
 
     /// Override the objective (builder style).
     pub fn with_objective(mut self, objective: Objective) -> Self {
         self.objective = objective;
+        self
+    }
+
+    /// Override the report detail (builder style).
+    pub fn with_detail(mut self, detail: ReportDetail) -> Self {
+        self.detail = detail;
         self
     }
 }
@@ -225,6 +279,20 @@ pub struct SelectionReport {
     pub front: Option<FrontLookup>,
     /// Wall-clock this request spent inside its worker.
     pub wall_ms: f64,
+}
+
+impl SelectionReport {
+    /// Fill the name strings from the originating request — the lazy
+    /// half of a [`ReportDetail::Minimal`] report, run only once the
+    /// report is actually handed to something that reads names. Safe
+    /// (and idempotent) on a [`ReportDetail::Full`] report too.
+    pub fn render(mut self, req: &SelectionRequest) -> SelectionReport {
+        self.network.clear();
+        self.network.push_str(&req.network.name);
+        self.platform.clear();
+        self.platform.push_str(&req.platform);
+        self
+    }
 }
 
 /// The answer to one [`Coordinator::submit_batch`] call.
@@ -420,6 +488,16 @@ struct FrontSlot {
     front: Arc<ParetoFront>,
 }
 
+/// A compiled [`SelectionPlan`] plus the serving cache it was compiled
+/// over — the same generation-token pattern as [`FrontSlot`]: the slot
+/// only serves while its `cache` is still the platform's current one,
+/// which is also what makes the plan's *frozen times* sound (rows are
+/// immutable within a cache generation).
+struct PlanSlot {
+    cache: Arc<CostCache<'static>>,
+    plan: Arc<SelectionPlan>,
+}
+
 /// The serving layer: per-platform shared caches plus batch fan-out and
 /// model-served platform onboarding.
 ///
@@ -461,6 +539,14 @@ pub struct Coordinator {
     front_hits: AtomicU64,
     /// Lifetime front-cache misses (each one computed a front).
     front_misses: AtomicU64,
+    /// Compiled selection plans, keyed like [`Self::fronts`] and expired
+    /// by the same cache swap (see [`PlanSlot`]).
+    plans: RwLock<HashMap<(String, u64), PlanSlot>>,
+    /// Lifetime plan-cache hits (warm solves: zero graph builds, zero
+    /// cache lookups).
+    plan_hits: AtomicU64,
+    /// Lifetime plan-cache misses (each one compiled a plan).
+    plan_misses: AtomicU64,
 }
 
 impl Default for Coordinator {
@@ -478,6 +564,9 @@ impl Coordinator {
             fronts: RwLock::new(HashMap::new()),
             front_hits: AtomicU64::new(0),
             front_misses: AtomicU64::new(0),
+            plans: RwLock::new(HashMap::new()),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
         }
     }
 
@@ -522,15 +611,22 @@ impl Coordinator {
         sync::write(&self.platforms).insert(platform.to_string(), entry);
         // every platform update funnels through here — register, onboard,
         // recalibrate (explicit or health-loop), quarantine probe — so
-        // this is the single place cached fronts go stale, and the single
-        // place they are dropped
+        // this is the single place cached fronts and compiled plans go
+        // stale, and the single place they are dropped
         self.invalidate_fronts(platform);
+        self.invalidate_plans(platform);
     }
 
     /// Drop every cached Pareto front for `platform` (they were computed
     /// over a cache that is no longer serving).
     fn invalidate_fronts(&self, platform: &str) {
         sync::write(&self.fronts).retain(|(p, _), _| p != platform);
+    }
+
+    /// Drop every compiled plan for `platform` (they froze times out of
+    /// a cache that is no longer serving).
+    fn invalidate_plans(&self, platform: &str) {
+        sync::write(&self.plans).retain(|(p, _), _| p != platform);
     }
 
     /// Onboard a new platform from a handful of calibration samples
@@ -886,11 +982,39 @@ impl Coordinator {
     }
 
     /// The unit of work everything request-shaped funnels through: solve
-    /// one request synchronously on the caller's thread, through the
-    /// platform's shared cache (warming it for everyone else). This is
-    /// what [`Self::submit_batch`]'s fan-out jobs and the serving
-    /// layer's persistent workers
-    /// ([`service::worker`](crate::service)) each call per request.
+    /// one request synchronously on the caller's thread. This is what
+    /// [`Self::submit_batch`]'s fan-out jobs and the serving layer's
+    /// persistent workers ([`service::worker`](crate::service)) each
+    /// call per request.
+    ///
+    /// Solve-served objectives go through the compiled-plan cache: the
+    /// first request for a (platform, network) pair compiles a
+    /// [`SelectionPlan`] (one graph build through the platform's shared
+    /// cache), and every warm repeat solves out of the frozen arenas
+    /// with zero graph construction, zero per-layer cache lookups, and
+    /// — with [`ReportDetail::Minimal`] — zero steady-state heap
+    /// allocation on the solve core. Warm answers are bit-identical to
+    /// the cold path.
+    ///
+    /// ```
+    /// use primsel::coordinator::{Coordinator, ReportDetail, SelectionRequest};
+    /// use primsel::networks;
+    ///
+    /// let coord = Coordinator::new();
+    /// let req = SelectionRequest::new(networks::alexnet(), "intel");
+    /// let cold = coord.select_one(&req).unwrap(); // compiles + caches the plan
+    /// let warm = coord.select_one(&req).unwrap(); // plan hit: no graph build
+    /// assert_eq!(warm.selection.primitive, cold.selection.primitive);
+    /// assert_eq!(warm.evaluated_ms, cold.evaluated_ms);
+    /// assert_eq!(coord.plan_cache_stats(), (1, 1));
+    ///
+    /// // minimal reports skip the name strings; render fills them lazily
+    /// let min = coord
+    ///     .select_one(&req.clone().with_detail(ReportDetail::Minimal))
+    ///     .unwrap();
+    /// assert!(min.network.is_empty());
+    /// assert_eq!(min.render(&req).network, "alexnet");
+    /// ```
     ///
     /// When the platform is monitored ([`Self::monitor_platform`]), the
     /// request passes the health admission gate first — a `Quarantined`
@@ -911,7 +1035,7 @@ impl Coordinator {
         let report = if req.objective.is_front_served() {
             self.solve_via_front(&entry, req)?
         } else {
-            solve_one(&entry, req)?
+            self.solve_via_plan(&entry, req)?
         };
         if let Some(mon) = &monitor {
             let recal = self.health_recal(&req.platform, mon);
@@ -1004,6 +1128,108 @@ impl Coordinator {
         (self.front_hits.load(Ordering::Relaxed), self.front_misses.load(Ordering::Relaxed))
     }
 
+    /// The compiled [`SelectionPlan`] for (`platform`, `network`),
+    /// compiled lazily on first request and cached until the platform's
+    /// serving cache is replaced — the same lifecycle as
+    /// [`Self::pareto_front`]. Handy for embedding the warm fast path
+    /// directly (benchmarks, pinned-latency callers): solve it with a
+    /// caller-retained [`PlanScratch`].
+    pub fn selection_plan(&self, platform: &str, network: &Network) -> Result<Arc<SelectionPlan>> {
+        let entry = self.entry(platform)?;
+        Ok(self.plan_for(platform, &entry, network)?.0)
+    }
+
+    /// Lifetime `(hits, misses)` of the compiled-plan cache: every miss
+    /// compiled a plan (one graph build + solver template), every hit
+    /// solved warm out of frozen arenas.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        (self.plan_hits.load(Ordering::Relaxed), self.plan_misses.load(Ordering::Relaxed))
+    }
+
+    /// The plan for (`platform`, `net`) over `entry`'s cache plus
+    /// whether it was cached — the same generation-checked lookup as
+    /// [`Self::front_for`]: a slot only serves while it was compiled
+    /// over the cache *currently* serving the platform (`Arc::ptr_eq`),
+    /// so a plan compiled concurrently with a recalibration expires the
+    /// moment the new cache lands.
+    fn plan_for(
+        &self,
+        platform: &str,
+        entry: &Arc<PlatformEntry>,
+        net: &Network,
+    ) -> Result<(Arc<SelectionPlan>, bool)> {
+        let key = (platform.to_string(), network_fingerprint(net));
+        if let Some(slot) = sync::read(&self.plans).get(&key) {
+            if Arc::ptr_eq(&slot.cache, &entry.cache) {
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((Arc::clone(&slot.plan), true));
+            }
+        }
+        self.plan_misses.fetch_add(1, Ordering::Relaxed);
+        // compile outside the lock: the graph build is the expensive
+        // part and the map must stay available to other platforms
+        let plan = Arc::new(SelectionPlan::compile(net, entry.cache.as_ref())?);
+        let mut map = sync::write(&self.plans);
+        let slot = map.entry(key).or_insert_with(|| PlanSlot {
+            cache: Arc::clone(&entry.cache),
+            plan: Arc::clone(&plan),
+        });
+        if !Arc::ptr_eq(&slot.cache, &entry.cache) {
+            // the surviving slot belongs to a different cache generation
+            // than the one we compiled over; replace it with ours — if
+            // ours is the stale one, the next request through the new
+            // cache fails the pointer check above and recompiles
+            *slot = PlanSlot { cache: Arc::clone(&entry.cache), plan: Arc::clone(&plan) };
+        }
+        Ok((Arc::clone(&slot.plan), false))
+    }
+
+    /// Answer a solve-served objective through the compiled-plan cache.
+    /// Warm requests run the whole solve out of the thread-local
+    /// [`PlanScratch`]: the only heap allocations left are the report's
+    /// `Selection` vec and (under [`ReportDetail::Full`]) its name
+    /// strings — the solve core itself is allocation-free, pinned by
+    /// `rust/tests/alloc_counter.rs`.
+    fn solve_via_plan(
+        &self,
+        entry: &Arc<PlatformEntry>,
+        req: &SelectionRequest,
+    ) -> Result<SelectionReport> {
+        thread_local! {
+            static PLAN_SCRATCH: RefCell<PlanScratch> = RefCell::new(PlanScratch::default());
+        }
+        let t0 = Instant::now();
+        let (plan, _cached) = self.plan_for(&req.platform, entry, &req.network)?;
+        let mut report = PLAN_SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            let view = match req.objective {
+                Objective::MinTime => plan.min_time_into(scratch),
+                Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
+                    plan.with_budget_into(budget_bytes, lambda_ms_per_mb, scratch)
+                }
+                other => unreachable!("front objective routed to solve_via_plan: {other:?}"),
+            };
+            let (network, platform) = report_names(req);
+            SelectionReport {
+                network,
+                platform,
+                objective: req.objective,
+                provenance: entry.provenance.clone(),
+                selection: view.to_selection(),
+                // the plan's frozen times are exactly the cold path's
+                // cache rows (same generation), and the solver's
+                // objective sums them in evaluate()'s order — so this
+                // *is* the evaluated time, bit for bit, with no lookups
+                evaluated_ms: view.estimated_ms,
+                peak_workspace_bytes: view.peak_workspace_bytes,
+                front: None,
+                wall_ms: 0.0,
+            }
+        });
+        report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(report)
+    }
+
     /// The front for (`platform`, `net`) over `entry`'s cache plus
     /// whether it was cached. A slot only counts as a hit when it was
     /// computed over the cache *currently* serving the platform
@@ -1075,9 +1301,10 @@ impl Coordinator {
             }
             other => unreachable!("solve_via_front called with {other:?}"),
         };
+        let (network, platform) = report_names(req);
         Ok(SelectionReport {
-            network: req.network.name.clone(),
-            platform: req.platform.clone(),
+            network,
+            platform,
             objective: req.objective,
             provenance: entry.provenance.clone(),
             selection: point.selection.clone(),
@@ -1137,31 +1364,14 @@ fn flatten_off_diagonal(mats: &[[[f64; 3]; 3]]) -> Vec<Vec<f64>> {
         .collect()
 }
 
-fn solve_one(entry: &PlatformEntry, req: &SelectionRequest) -> Result<SelectionReport> {
-    let t0 = Instant::now();
-    let cache = entry.cache.as_ref();
-    let selection = match req.objective {
-        Objective::MinTime => selection::select(&req.network, cache)?,
-        Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
-            memory::select_with_budget(&req.network, cache, budget_bytes, lambda_ms_per_mb)?
-        }
-        Objective::FastestUnderBytes { .. } | Objective::SmallestWithinPct { .. } => {
-            unreachable!("front-served objectives route through solve_via_front")
-        }
-    };
-    let evaluated_ms = selection::evaluate(&req.network, &selection, cache)?;
-    let peak_workspace_bytes = memory::peak_workspace(&req.network, &selection);
-    Ok(SelectionReport {
-        network: req.network.name.clone(),
-        platform: req.platform.clone(),
-        objective: req.objective,
-        provenance: entry.provenance.clone(),
-        selection,
-        evaluated_ms,
-        peak_workspace_bytes,
-        front: None,
-        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-    })
+/// The report's name strings per the request's [`ReportDetail`]:
+/// `Minimal` defers them (two empty, capacity-free `String`s) for
+/// [`SelectionReport::render`] to fill if anyone asks.
+fn report_names(req: &SelectionRequest) -> (String, String) {
+    match req.detail {
+        ReportDetail::Full => (req.network.name.clone(), req.platform.clone()),
+        ReportDetail::Minimal => (String::new(), String::new()),
+    }
 }
 
 #[cfg(test)]
@@ -1217,15 +1427,102 @@ mod tests {
         assert_eq!(batch.reports.len(), 6);
         assert_eq!(batch.stats.len(), 1);
         let (_, s) = &batch.stats[0];
-        // six identical networks share rows: every request's evaluate
-        // pass re-reads keys its build pass inserted, so hits can never
-        // fall below misses even under the worst cold-key races
-        assert!(s.row_hits >= s.row_misses, "{s:?}");
-        assert!(s.row_hits > 0, "{s:?}");
+        // the six identical requests share one cache and one compiled
+        // plan: plan compiles (racing jobs may each compile once) are
+        // the only cache traffic, and every request answers identically
+        assert!(s.lookups() > 0, "first batch compiles through the cache: {s:?}");
+        let (hits, misses) = coord.plan_cache_stats();
+        assert_eq!(hits + misses, 6);
+        assert!(misses >= 1);
         for w in batch.reports.windows(2) {
             assert_eq!(w[0].selection.primitive, w[1].selection.primitive);
             assert_eq!(w[0].evaluated_ms, w[1].evaluated_ms);
         }
+        // a second identical batch is all plan hits: zero cache traffic
+        let warm = coord.submit_batch(&reqs).unwrap();
+        let (_, s) = &warm.stats[0];
+        assert_eq!(s.lookups(), 0, "warm batch is plan-served: {s:?}");
+        assert_eq!(coord.plan_cache_stats().0, hits + 6);
+        for (a, b) in batch.reports.iter().zip(&warm.reports) {
+            assert_eq!(a.selection.primitive, b.selection.primitive);
+            assert_eq!(a.evaluated_ms, b.evaluated_ms);
+        }
+    }
+
+    #[test]
+    fn minimal_detail_defers_names_and_render_fills_them() {
+        let coord = Coordinator::new();
+        let req = SelectionRequest::new(networks::alexnet(), "intel");
+        let full = coord.submit(&req).unwrap();
+        let min = coord
+            .submit(&req.clone().with_detail(ReportDetail::Minimal))
+            .unwrap();
+        assert!(min.network.is_empty() && min.platform.is_empty());
+        // everything numeric is identical regardless of detail
+        assert_eq!(min.selection.primitive, full.selection.primitive);
+        assert_eq!(min.selection.estimated_ms, full.selection.estimated_ms);
+        assert_eq!(min.evaluated_ms, full.evaluated_ms);
+        assert_eq!(min.peak_workspace_bytes, full.peak_workspace_bytes);
+        let rendered = min.render(&req);
+        assert_eq!(rendered.network, "alexnet");
+        assert_eq!(rendered.platform, "intel");
+        // render is idempotent on a Full report
+        assert_eq!(full.clone().render(&req).network, full.network);
+        // front-served reports honour detail too
+        let fr = coord
+            .submit(
+                &req.clone()
+                    .with_objective(Objective::FastestUnderBytes { budget_bytes: f64::INFINITY })
+                    .with_detail(ReportDetail::Minimal),
+            )
+            .unwrap();
+        assert!(fr.network.is_empty());
+        assert_eq!(fr.render(&req).platform, "intel");
+    }
+
+    #[test]
+    fn warm_requests_answer_from_the_cached_plan() {
+        let coord = Coordinator::new();
+        let net = networks::vgg(11);
+        let req = SelectionRequest::new(net.clone(), "intel");
+        let cold = coord.submit(&req).unwrap();
+        assert_eq!(coord.plan_cache_stats(), (0, 1));
+        let plan = coord.selection_plan("intel", &net).unwrap();
+        let warm = coord.submit(&req).unwrap();
+        assert_eq!(coord.plan_cache_stats(), (2, 1));
+        assert_eq!(warm.selection.primitive, cold.selection.primitive);
+        assert_eq!(warm.selection.estimated_ms, cold.selection.estimated_ms);
+        assert_eq!(warm.evaluated_ms, cold.evaluated_ms);
+        // budgeted objectives share the same plan (same fingerprint)
+        let tight = coord
+            .submit(&req.clone().with_objective(Objective::MinTimeWithMemoryBudget {
+                budget_bytes: cold.peak_workspace_bytes * 0.1,
+                lambda_ms_per_mb: 50.0,
+            }))
+            .unwrap();
+        assert_eq!(coord.plan_cache_stats(), (3, 1));
+        assert!(tight.peak_workspace_bytes < cold.peak_workspace_bytes);
+        assert!(Arc::ptr_eq(&plan, &coord.selection_plan("intel", &net).unwrap()));
+    }
+
+    #[test]
+    fn register_drops_cached_plans() {
+        let coord = Coordinator::new();
+        let net = networks::alexnet();
+        let sim: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+        coord.register("dev", Arc::clone(&sim));
+        let req = SelectionRequest::new(net.clone(), "dev");
+        let first = coord.submit(&req).unwrap();
+        let plan = coord.selection_plan("dev", &net).unwrap();
+        // re-registering (even the same source) swaps the serving cache,
+        // so the compiled plan must be recompiled — and the recompiled
+        // answer is bit-identical because the source is the same
+        coord.register("dev", sim);
+        let fresh_plan = coord.selection_plan("dev", &net).unwrap();
+        assert!(!Arc::ptr_eq(&plan, &fresh_plan));
+        let again = coord.submit(&req).unwrap();
+        assert_eq!(again.selection.primitive, first.selection.primitive);
+        assert_eq!(again.evaluated_ms, first.evaluated_ms);
     }
 
     #[test]

@@ -156,7 +156,7 @@ impl TableSource {
             out.push(']');
         }
         out.push_str("],\"dlt\":[");
-        for (i, ((c, im), m)) in self.dlt_entries().into_iter().enumerate() {
+        for (i, &((c, im), m)) in self.dlt_entries().iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }

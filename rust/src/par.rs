@@ -1,17 +1,27 @@
-//! Scoped-thread data parallelism for the embarrassingly-parallel sweeps
-//! (dataset profiling, per-platform experiment columns, bench warmups).
+//! Data parallelism for the embarrassingly-parallel sweeps (dataset
+//! profiling, per-platform experiment columns, bench warmups) and the
+//! per-request batch fan-out.
 //!
 //! The API is deliberately rayon-shaped (`par_map` ≈
 //! `par_iter().map().collect()`), but the implementation is
-//! `std::thread::scope` fan-out over contiguous chunks: the build
-//! environment is offline, so the rayon dependency is gated out (see the
-//! commented dependency block in Cargo.toml — swapping these bodies for
+//! dependency-free: the build environment is offline, so the rayon
+//! dependency is gated out (see the commented dependency block in
+//! Cargo.toml — swapping these bodies for
 //! `items.par_iter().map(f).collect()` is a two-line change once a
-//! registry is reachable). For the sweep shapes we have — thousands of
-//! independent, similarly-sized items — static chunking is within noise
-//! of a work-stealing pool.
+//! registry is reachable). [`par_map`]/[`par_map_coarse`] are
+//! `std::thread::scope` fan-out over chunks — for the sweep shapes we
+//! have, static chunking is within noise of a work-stealing pool.
+//! [`par_map_heavy`] instead routes through one process-wide persistent
+//! worker pool (lazily spawned, [`Pool`]-backed): batch-serving callers
+//! like [`Coordinator::submit_batch`](crate::coordinator::Coordinator::submit_batch)
+//! hit it per batch, and per-batch thread spawn/join cost is exactly
+//! the kind of warm-path overhead the compiled-plan work removes
+//! elsewhere.
 
 use std::num::NonZeroUsize;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Below this many items the spawn cost outweighs the win; run inline.
 const MIN_PAR_ITEMS: usize = 64;
@@ -79,12 +89,158 @@ where
     out
 }
 
+/// One submitted [`par_map_heavy`] batch, type-erased so differently
+/// typed batches share one queue. A batch is `lanes` independent units
+/// of work; any thread (pool worker or the submitter itself) claims
+/// lanes with a `fetch_add` ticket and runs them via the monomorphized
+/// `run_lane` shim.
+///
+/// Safety of the `Send + Sync` impls: `ctx` points into the submitting
+/// frame of `par_map_heavy`, which blocks until `done == lanes` before
+/// returning — so every dereference of `ctx` (only ever through
+/// `run_lane`, only for a claimed lane) happens while the frame is
+/// alive. Queue stragglers may hold the `Arc` (and thus the raw
+/// pointer) longer, but they can never claim a lane on an exhausted
+/// batch, so they never dereference it.
+struct HeavyBatch {
+    run_lane: unsafe fn(*const (), usize),
+    ctx: *const (),
+    lanes: usize,
+    /// Lane ticket dispenser: claims are `fetch_add` so a lane runs
+    /// exactly once no matter how many threads drain the batch.
+    next: AtomicUsize,
+    /// Lanes fully finished (ran or panicked) — the submitter's wait
+    /// condition, guarded so the condvar wake-up can't be missed.
+    done: Mutex<usize>,
+    all_done: Condvar,
+    panicked: AtomicBool,
+}
+
+unsafe impl Send for HeavyBatch {}
+unsafe impl Sync for HeavyBatch {}
+
+impl HeavyBatch {
+    /// Claim and run lanes until the ticket dispenser runs dry. Lane
+    /// panics are caught and recorded (the submitter re-raises), so a
+    /// panicking item never takes a persistent pool worker down.
+    fn run_claimed(&self) {
+        loop {
+            let lane = self.next.fetch_add(1, Ordering::Relaxed);
+            if lane >= self.lanes {
+                return;
+            }
+            let ok = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+                (self.run_lane)(self.ctx, lane)
+            }))
+            .is_ok();
+            if !ok {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut done = self.done.lock().expect("heavy batch poisoned");
+            *done += 1;
+            if *done == self.lanes {
+                self.all_done.notify_all();
+            }
+        }
+    }
+
+    /// Block until every lane has finished (not merely been claimed).
+    fn wait_done(&self) {
+        let mut done = self.done.lock().expect("heavy batch poisoned");
+        while *done < self.lanes {
+            done = self.all_done.wait(done).expect("heavy batch poisoned");
+        }
+    }
+
+    /// Whether every lane has already been claimed (the batch can be
+    /// dropped from the queue; in-flight lanes finish on whoever claimed
+    /// them).
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.lanes
+    }
+}
+
+/// The monomorphized lane runner behind [`HeavyBatch::run_lane`].
+///
+/// Safety: `ctx` must be the `&C` the batch was built over, still alive
+/// — guaranteed by the submitter blocking in [`HeavyBatch::wait_done`]
+/// until every claimed lane finishes.
+unsafe fn call_lane<C: Fn(usize) + Sync>(ctx: *const (), lane: usize) {
+    (*(ctx as *const C))(lane)
+}
+
+/// Recover the monomorphized [`call_lane`] for an unnameable closure
+/// type by inference.
+fn lane_fn_of<C: Fn(usize) + Sync>(_c: &C) -> unsafe fn(*const (), usize) {
+    call_lane::<C>
+}
+
+/// The process-wide persistent pool behind [`par_map_heavy`]: a queue
+/// of in-flight batches drained by `workers() - 1` long-lived threads
+/// (the submitting thread is always the +1 — see below).
+struct HeavyPool {
+    queue: Mutex<Vec<Arc<HeavyBatch>>>,
+    work: Condvar,
+}
+
+impl HeavyPool {
+    fn submit(&self, batch: &Arc<HeavyBatch>) {
+        self.queue.lock().expect("heavy pool poisoned").push(Arc::clone(batch));
+        self.work.notify_all();
+    }
+
+    /// A persistent worker's life: sleep until a batch shows up, drain
+    /// lanes from the oldest live batch, drop exhausted batches, repeat
+    /// forever (the pool is process-lived; threads park on the condvar
+    /// when idle and cost nothing).
+    fn worker_loop(&self) {
+        loop {
+            let batch = {
+                let mut q = self.queue.lock().expect("heavy pool poisoned");
+                loop {
+                    q.retain(|b| !b.exhausted());
+                    match q.first() {
+                        Some(b) => break Arc::clone(b),
+                        None => q = self.work.wait(q).expect("heavy pool poisoned"),
+                    }
+                }
+            };
+            batch.run_claimed();
+        }
+    }
+}
+
+/// The lazily-spawned singleton pool. Threads are spawned once, named
+/// `primsel-heavy-*`, and intentionally leaked — they idle on a condvar
+/// between batches and die with the process.
+fn heavy_pool() -> &'static HeavyPool {
+    static POOL: OnceLock<&'static HeavyPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool: &'static HeavyPool = Box::leak(Box::new(HeavyPool {
+            queue: Mutex::new(Vec::new()),
+            work: Condvar::new(),
+        }));
+        let n = workers().saturating_sub(1).max(1);
+        std::mem::forget(Pool::spawn(n, "primsel-heavy", move |_| pool.worker_loop()));
+        pool
+    })
+}
+
 /// Parallel map for batches of heavy, possibly uneven items (selection
 /// requests, per-network sweeps): always fans out — no `MIN_PAR_ITEMS`
-/// threshold — but bounds the fleet at [`workers()`] threads. Items are
-/// dealt round-robin (worker `w` takes `w, w + T, w + 2T, …`), so a run
-/// of expensive requests spreads across workers instead of landing in
-/// one contiguous chunk; results are stitched back in input order.
+/// threshold — over the process-wide **persistent** worker pool, so a
+/// serving loop calling this per batch pays zero thread spawn/join per
+/// call. Concurrency is bounded at [`workers()`]: `workers() - 1` pool
+/// threads plus the submitting thread, which always claims lanes
+/// itself. That self-service is also what makes the call re-entrant —
+/// a lane that itself calls `par_map_heavy` still makes progress even
+/// if every pool thread is busy.
+///
+/// Items are dealt round-robin across `min(workers(), n)` lanes (lane
+/// `w` takes items `w, w + L, w + 2L, …`), so a run of expensive
+/// requests spreads across workers instead of landing in one contiguous
+/// chunk; results are stitched back in input order. Panics in `f` are
+/// re-raised on the submitting thread; persistent workers survive them.
 pub fn par_map_heavy<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -92,32 +248,46 @@ where
     F: Fn(&T) -> R + Sync,
 {
     let n = items.len();
-    let threads = workers().min(n);
-    if threads <= 1 {
+    let lanes = workers().min(n);
+    if lanes <= 1 {
         return items.iter().map(f).collect();
     }
-    let f = &f;
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|w| {
-                s.spawn(move || {
-                    items
-                        .iter()
-                        .enumerate()
-                        .skip(w)
-                        .step_by(threads)
-                        .map(|(i, it)| (i, f(it)))
-                        .collect::<Vec<(usize, R)>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, r) in h.join().expect("par_map_heavy worker panicked") {
-                slots[i] = Some(r);
-            }
+    // one output bin per lane: a lane is claimed by exactly one thread,
+    // so the mutexes are uncontended — they exist to hand the results
+    // (and a happens-before edge) back to the submitter
+    let outputs: Vec<Mutex<Vec<(usize, R)>>> =
+        (0..lanes).map(|_| Mutex::new(Vec::new())).collect();
+    let runner = |lane: usize| {
+        let mut out: Vec<(usize, R)> = Vec::new();
+        for (i, it) in items.iter().enumerate().skip(lane).step_by(lanes) {
+            out.push((i, f(it)));
         }
+        *outputs[lane].lock().expect("heavy lane poisoned") = out;
+    };
+    let batch = Arc::new(HeavyBatch {
+        run_lane: lane_fn_of(&runner),
+        ctx: &runner as *const _ as *const (),
+        lanes,
+        next: AtomicUsize::new(0),
+        done: Mutex::new(0),
+        all_done: Condvar::new(),
+        panicked: AtomicBool::new(false),
     });
+    heavy_pool().submit(&batch);
+    // claim lanes on this thread too, then wait for stragglers claimed
+    // by pool workers — only after that is it safe for `runner` (and
+    // `outputs`, and `items`) to leave scope
+    batch.run_claimed();
+    batch.wait_done();
+    if batch.panicked.load(Ordering::Relaxed) {
+        panic!("par_map_heavy worker panicked");
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for bin in &outputs {
+        for (i, r) in bin.lock().expect("heavy lane poisoned").drain(..) {
+            slots[i] = Some(r);
+        }
+    }
     slots.into_iter().map(|r| r.expect("every index visited")).collect()
 }
 
@@ -213,6 +383,37 @@ mod tests {
         let empty: [u64; 0] = [];
         assert!(par_map_heavy(&empty, |x| *x).is_empty());
         assert_eq!(par_map_heavy(&[7u64], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn heavy_is_reentrant() {
+        // a lane that itself fans out must complete even when every
+        // persistent pool thread is occupied — the submitting thread
+        // always claims its own lanes
+        let outer: Vec<u64> = (0..8).collect();
+        let got = par_map_heavy(&outer, |&x| {
+            let inner: Vec<u64> = (0..5).collect();
+            par_map_heavy(&inner, |&y| x * 10 + y).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = outer.iter().map(|&x| 5 * x * 10 + 10).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn heavy_propagates_panics_and_pool_survives() {
+        let items: Vec<u64> = (0..9).collect();
+        let r = std::panic::catch_unwind(|| {
+            par_map_heavy(&items, |&x| {
+                if x == 4 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(r.is_err(), "a panicking item must fail the whole map");
+        // the persistent workers caught the lane panic and live on:
+        // the next batch is served normally
+        assert_eq!(par_map_heavy(&items, |&x| x + 1), (1..10).collect::<Vec<u64>>());
     }
 
     #[test]

@@ -16,13 +16,20 @@
 //! degree-bucket worklists (see `solver.rs` for the representation notes);
 //! the public [`Graph`]/[`solve`] surface is unchanged. For callers that
 //! re-solve one topology under many node-cost re-pricings (the Pareto
-//! budget sweep), [`ReusableSolver`] keeps the merged-edge arena and
-//! elimination machinery across solves; [`solves_on_thread`] counts
-//! solves per thread so warm serving paths can assert they ran none.
+//! budget sweep, the coordinator's compiled selection plans),
+//! [`ReusableSolver`] keeps the merged-edge arena and elimination
+//! machinery across solves, and [`ReusableSolver::solve_flat_into`]
+//! runs a solve entirely out of a caller-retained [`SolveScratch`]
+//! (zero steady-state allocation); [`solves_on_thread`] counts solves
+//! per thread so warm serving paths can assert they ran none, and
+//! [`template_builds_on_thread`] counts working-graph constructions so
+//! plan-cache hits can assert they re-built nothing.
 
 mod solver;
 
-pub use solver::{solve, solves_on_thread, ReusableSolver, Solution};
+pub use solver::{
+    solve, solves_on_thread, template_builds_on_thread, ReusableSolver, Solution, SolveScratch,
+};
 
 /// Infinite cost marker for forbidden (node, choice) combinations.
 pub const INF: f64 = 1e30;

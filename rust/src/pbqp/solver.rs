@@ -1,14 +1,17 @@
 //! The reduction-based PBQP solver.
 //!
-//! Working representation: a **flat edge arena**. Each merged edge is
-//! stored once, in one orientation, with dead edges tombstoned — no
-//! per-node `HashMap` adjacency, no transposed duplicate matrices (the
-//! opposite orientation is an index swap at the access site). Node
-//! elimination is driven by **degree buckets**: candidate nodes of degree
-//! 0/1/2 sit in three lazily-validated worklists, so picking the next
-//! reducible node is O(1) instead of an O(n) rescan per elimination
-//! (O(n²) overall on the old representation — visible on the 1024-node
-//! bench chains). Degree-≥3 nodes (the RN heuristic) keep the original
+//! Working representation: **flat arenas**. Node costs live in one flat
+//! `Vec<f64>` with per-node offsets (row `u` spans `off[u]..off[u+1]`);
+//! each merged edge is stored once, in one orientation, with its dense
+//! cost matrix carved out of a flat matrix arena and dead edges
+//! tombstoned — no per-node `HashMap` adjacency, no transposed duplicate
+//! matrices (the opposite orientation is an index swap at the access
+//! site), and no per-node heap rows. Node elimination is driven by
+//! **degree buckets**: candidate nodes of degree 0/1/2 sit in three
+//! lazily-validated worklists, so picking the next reducible node is
+//! O(1) instead of an O(n) rescan per elimination (O(n²) overall on the
+//! old representation — visible on the 1024-node bench chains).
+//! Degree-≥3 nodes (the RN heuristic) keep the original
 //! min-degree/min-index scan, preserving the old solver's choice rule
 //! where reduction order can matter.
 //!
@@ -18,6 +21,14 @@
 //! graphs (pinned against `brute_force` in rust/tests/proptests.rs).
 //! Reductions eliminate nodes onto a stack; back-propagation resolves
 //! choices in reverse elimination order.
+//!
+//! For warm serving paths, [`ReusableSolver::solve_flat_into`] runs the
+//! whole solve out of a caller-owned [`SolveScratch`]: the working
+//! arena is `clone_from`-restored into retained buffers, elimination
+//! tables and RII deltas append to flat scratch arenas, and the choice
+//! vector is reused — after a warm-up solve the steady-state path
+//! performs **zero heap allocations** (pinned by the counting-allocator
+//! test in `rust/tests/alloc_counter.rs`).
 
 use super::{Edge, Graph, INF};
 use std::cell::Cell;
@@ -30,8 +41,12 @@ pub struct Solution {
 }
 
 thread_local! {
-    /// Per-thread count of PBQP solves ([`solve`] + [`ReusableSolver::solve_with`]).
+    /// Per-thread count of PBQP solves ([`solve`] + [`ReusableSolver::solve_with`]
+    /// + [`ReusableSolver::solve_flat_into`]).
     static SOLVES: Cell<u64> = const { Cell::new(0) };
+    /// Per-thread count of working-graph constructions ([`Work::from_graph`]):
+    /// one per fresh [`solve`] and one per [`ReusableSolver::new`].
+    static GRAPH_BUILDS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Number of PBQP solves run so far **on the calling thread**. The
@@ -42,30 +57,50 @@ pub fn solves_on_thread() -> u64 {
     SOLVES.with(|c| c.get())
 }
 
+/// Number of PBQP working-graph/template constructions so far **on the
+/// calling thread** — one per fresh [`solve`] and one per
+/// [`ReusableSolver::new`]. Same thread-local convention as
+/// [`solves_on_thread`]: warm plan-cache paths can assert they re-built
+/// zero templates while still counting their (cheap, arena-reusing)
+/// solves.
+pub fn template_builds_on_thread() -> u64 {
+    GRAPH_BUILDS.with(|c| c.get())
+}
+
 fn note_solve() {
     SOLVES.with(|c| c.set(c.get() + 1));
 }
 
-/// Records how an eliminated node's choice is recovered.
+fn note_graph_build() {
+    GRAPH_BUILDS.with(|c| c.set(c.get() + 1));
+}
+
+/// Records how an eliminated node's choice is recovered. Lookup tables
+/// are ranges into the flat `ReduceScratch::tables` arena (offset only;
+/// lengths are implied by the dependents' arities), keeping eliminations
+/// allocation-free.
+#[derive(Clone, Copy)]
 enum Elim {
     /// R0: choice independent of any neighbour.
     Free { node: usize },
     /// RI: choice depends on one neighbour's choice.
-    OneDep { node: usize, dep: usize, table: Vec<usize> },
+    OneDep { node: usize, dep: usize, table: usize },
     /// RII: choice depends on two neighbours.
-    TwoDep { node: usize, dep_a: usize, dep_b: usize, table: Vec<usize>, cols_b: usize },
+    TwoDep { node: usize, dep_a: usize, dep_b: usize, table: usize, cols_b: usize },
     /// RN: choice fixed heuristically during reduction.
     Fixed { node: usize, choice: usize },
 }
 
-/// One arena slot: a merged u–v edge with its dense cost matrix stored
-/// row-major as |choices_u| x |choices_v|. The v-major view is the index
-/// swap `mat[j * cols + i]`; see [`entry`].
-#[derive(Clone)]
+/// One arena slot: a merged u–v edge whose dense |choices_u| x
+/// |choices_v| cost matrix is stored row-major at `mat..` in the flat
+/// `Work::mats` arena. The v-major view is the index swap
+/// `mat[j * cols + i]`; see [`entry`].
+#[derive(Clone, Copy)]
 struct EdgeSlot {
     u: usize,
     v: usize,
-    mat: Vec<f64>,
+    /// Start of this edge's matrix in `Work::mats`.
+    mat: usize,
     alive: bool,
 }
 
@@ -82,7 +117,8 @@ impl EdgeSlot {
 
 /// Edge matrix entry for (choice `i` at `node`, choice `j` at the other
 /// endpoint), regardless of stored orientation. `cols` is the stored
-/// column count (= |choices of slot.v|).
+/// column count (= |choices of slot.v|); `mat` is the matrix's tail of
+/// the flat arena.
 #[inline]
 fn entry(mat: &[f64], node_is_u: bool, cols: usize, i: usize, j: usize) -> f64 {
     if node_is_u {
@@ -92,11 +128,16 @@ fn entry(mat: &[f64], node_is_u: bool, cols: usize, i: usize, j: usize) -> f64 {
     }
 }
 
-#[derive(Clone)]
+#[derive(Clone, Default)]
 struct Work {
-    costs: Vec<Vec<f64>>,
+    /// Flat node-cost arena; node u's row is costs[off[u]..off[u+1]].
+    costs: Vec<f64>,
+    /// n+1 row offsets into `costs`.
+    off: Vec<usize>,
     /// Flat edge arena; slots are tombstoned, never removed.
     edges: Vec<EdgeSlot>,
+    /// Flat backing store for every edge matrix (RII deltas append here).
+    mats: Vec<f64>,
     /// incident[u] -> arena ids (pruned lazily of dead slots).
     incident: Vec<Vec<usize>>,
     /// Live-edge count per node.
@@ -108,10 +149,20 @@ struct Work {
 
 impl Work {
     fn from_graph(g: &Graph) -> Self {
+        note_graph_build();
         let n = g.n_nodes();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0);
+        let mut costs = Vec::new();
+        for row in &g.node_costs {
+            costs.extend_from_slice(row);
+            off.push(costs.len());
+        }
         let mut w = Self {
-            costs: g.node_costs.clone(),
+            costs,
+            off,
             edges: Vec::with_capacity(g.edges.len()),
+            mats: Vec::new(),
             incident: vec![Vec::new(); n],
             deg: vec![0; n],
             alive: vec![true; n],
@@ -120,10 +171,10 @@ impl Work {
         for e in &g.edges {
             // merge parallel edges by summing
             if let Some(eid) = w.find_edge(e.u, e.v) {
-                let cols = w.costs[e.v].len();
+                let cols = w.arity(e.v);
                 w.accumulate(eid, e.u, &e.cost, cols);
             } else {
-                w.add_edge(e.u, e.v, e.cost.clone());
+                w.add_edge(e.u, e.v, &e.cost);
             }
         }
         // seed the worklists (reverse so pops start at low indices)
@@ -135,6 +186,51 @@ impl Work {
         w
     }
 
+    /// Restore `self` to a pristine copy of `src`, reusing every retained
+    /// buffer (field-wise `clone_from`; `Vec::clone_from` keeps capacity).
+    fn reset_from(&mut self, src: &Work) {
+        self.costs.clone_from(&src.costs);
+        self.off.clone_from(&src.off);
+        self.edges.clone_from(&src.edges);
+        self.mats.clone_from(&src.mats);
+        // `incident` is the one nested buffer: a plain `clone_from` would
+        // drop the tail's inner vectors whenever a smaller template follows
+        // a larger one and re-allocate them when the larger one returns, so
+        // a scratch hopping between plans would never reach the zero-alloc
+        // steady state. Overwrite the prefix element-wise and keep any
+        // surplus inner vectors alive as a capacity pool — every `incident`
+        // access is bounded by `off`'s node count, so entries past
+        // `src.n_nodes()` are never read.
+        for (dst, s) in self.incident.iter_mut().zip(&src.incident) {
+            dst.clone_from(s);
+        }
+        if self.incident.len() < src.incident.len() {
+            self.incident.extend(src.incident[self.incident.len()..].iter().cloned());
+        }
+        self.deg.clone_from(&src.deg);
+        self.alive.clone_from(&src.alive);
+        for (dst, s) in self.buckets.iter_mut().zip(&src.buckets) {
+            dst.clone_from(s);
+        }
+    }
+
+    #[inline]
+    fn n_nodes(&self) -> usize {
+        self.off.len() - 1
+    }
+
+    /// Choice count of node u.
+    #[inline]
+    fn arity(&self, u: usize) -> usize {
+        self.off[u + 1] - self.off[u]
+    }
+
+    /// Node u's cost row.
+    #[inline]
+    fn row(&self, u: usize) -> &[f64] {
+        &self.costs[self.off[u]..self.off[u + 1]]
+    }
+
     /// Live edge between a and b, if any (edges are merged, so unique).
     fn find_edge(&self, a: usize, b: usize) -> Option<usize> {
         self.incident[a]
@@ -143,18 +239,21 @@ impl Work {
             .find(|&e| self.edges[e].alive && (self.edges[e].u == b || self.edges[e].v == b))
     }
 
-    /// Live arena ids incident to `u`. Only called on the node being
-    /// eliminated this iteration, so its incident list is surrendered
-    /// rather than restored (a dead node's list is never read again).
-    fn live_edges(&mut self, u: usize) -> Vec<usize> {
-        let mut inc = std::mem::take(&mut self.incident[u]);
-        inc.retain(|&e| self.edges[e].alive);
-        inc
+    /// Collect the live arena ids incident to `u` into `out`. Only
+    /// called on the node being eliminated this iteration, so its
+    /// incident list is surrendered (cleared, capacity kept) rather than
+    /// restored — a dead node's list is never read again.
+    fn collect_live(&mut self, u: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.incident[u].iter().copied().filter(|&e| self.edges[e].alive));
+        self.incident[u].clear();
     }
 
-    fn add_edge(&mut self, a: usize, b: usize, mat: Vec<f64>) {
+    fn add_edge(&mut self, a: usize, b: usize, mat: &[f64]) {
         let id = self.edges.len();
-        self.edges.push(EdgeSlot { u: a, v: b, mat, alive: true });
+        let base = self.mats.len();
+        self.mats.extend_from_slice(mat);
+        self.edges.push(EdgeSlot { u: a, v: b, mat: base, alive: true });
         self.incident[a].push(id);
         self.incident[b].push(id);
         self.deg[a] += 1;
@@ -164,16 +263,17 @@ impl Work {
     /// Sum `mat` (oriented a-rows x other-cols, `cols` columns) into an
     /// existing slot, transposing if the slot is stored the other way.
     fn accumulate(&mut self, eid: usize, a: usize, mat: &[f64], cols: usize) {
-        let slot = &mut self.edges[eid];
+        let slot = self.edges[eid];
+        let dst = &mut self.mats[slot.mat..slot.mat + mat.len()];
         if slot.u == a {
-            for (x, y) in slot.mat.iter_mut().zip(mat) {
+            for (x, y) in dst.iter_mut().zip(mat) {
                 *x += *y;
             }
         } else {
             let rows = mat.len() / cols;
             for i in 0..rows {
                 for j in 0..cols {
-                    slot.mat[j * rows + i] += mat[i * cols + j];
+                    dst[j * rows + i] += mat[i * cols + j];
                 }
             }
         }
@@ -225,7 +325,7 @@ impl Work {
     /// the old solver's global scan rule).
     fn scan_min(&self) -> Option<(usize, usize)> {
         let mut best: Option<(usize, usize)> = None; // (node, degree)
-        for u in 0..self.costs.len() {
+        for u in 0..self.n_nodes() {
             if !self.alive[u] {
                 continue;
             }
@@ -236,6 +336,32 @@ impl Work {
         }
         best
     }
+}
+
+/// Retained buffers for one reduction pass: the live-edge list and cost
+/// row of the node being eliminated, the RII delta matrix, the
+/// elimination stack, and the flat arena backing every [`Elim`] lookup
+/// table. All reused across solves.
+#[derive(Default)]
+struct ReduceScratch {
+    live: Vec<usize>,
+    row: Vec<f64>,
+    delta: Vec<f64>,
+    stack: Vec<Elim>,
+    tables: Vec<usize>,
+}
+
+/// Per-caller (typically per-worker) scratch arenas for
+/// [`ReusableSolver::solve_flat_into`]: the `Work` clone target, the
+/// reduction buffers, and the output choice vector. The first solve
+/// primes the arenas (allocating); every later solve with the same
+/// solver reuses them — the steady state is allocation-free.
+#[derive(Default)]
+pub struct SolveScratch {
+    work: Work,
+    primed: bool,
+    reduce: ReduceScratch,
+    choice: Vec<usize>,
 }
 
 /// Solve a PBQP instance. Exact on graphs that reduce fully with R0–RII
@@ -260,52 +386,55 @@ pub fn solve(g: &Graph) -> Solution {
     }
     note_solve();
     let mut w = Work::from_graph(g);
-    let choice = reduce_and_backprop(&mut w);
+    let mut sc = ReduceScratch::default();
+    let mut choice = Vec::new();
+    reduce_and_backprop(&mut w, &mut sc, &mut choice);
     let cost = g.cost_of(&choice);
     Solution { choice, cost }
 }
 
 /// The reduction loop plus back-propagation, shared between [`solve`]
-/// and [`ReusableSolver::solve_with`]: eliminate nodes onto a stack
+/// and the [`ReusableSolver`] paths: eliminate nodes onto a stack
 /// (R0/RI/RII exactly, RN heuristically), then resolve choices in
 /// reverse elimination order. Consumes `w`'s worklists and mutates its
 /// node costs; the caller must compute the objective against pristine
-/// costs.
-fn reduce_and_backprop(w: &mut Work) -> Vec<usize> {
-    let n = w.costs.len();
-    let mut stack: Vec<Elim> = Vec::with_capacity(n);
+/// costs. `choice` is cleared and refilled (capacity reused).
+fn reduce_and_backprop(w: &mut Work, sc: &mut ReduceScratch, choice: &mut Vec<usize>) {
+    let n = w.n_nodes();
+    sc.stack.clear();
+    sc.tables.clear();
 
     loop {
         let next = w.next_bucket().or_else(|| w.scan_min());
         let Some((u, deg)) = next else { break };
         match deg {
-            0 => stack.push(Elim::Free { node: u }),
-            1 => reduce_ri(w, u, &mut stack),
-            2 => reduce_rii(w, u, &mut stack),
-            _ => reduce_rn(w, u, &mut stack),
+            0 => sc.stack.push(Elim::Free { node: u }),
+            1 => reduce_ri(w, u, sc),
+            2 => reduce_rii(w, u, sc),
+            _ => reduce_rn(w, u, sc),
         }
         w.alive[u] = false;
     }
 
     // back-propagate
-    let mut choice = vec![usize::MAX; n];
-    for elim in stack.iter().rev() {
-        match elim {
+    choice.clear();
+    choice.resize(n, usize::MAX);
+    for elim in sc.stack.iter().rev() {
+        match *elim {
             Elim::Free { node } => {
-                choice[*node] = argmin(&w.costs[*node]).0;
+                choice[node] = argmin(w.row(node)).0;
             }
             Elim::OneDep { node, dep, table } => {
-                choice[*node] = table[choice[*dep]];
+                choice[node] = sc.tables[table + choice[dep]];
             }
             Elim::TwoDep { node, dep_a, dep_b, table, cols_b } => {
-                choice[*node] = table[choice[*dep_a] * cols_b + choice[*dep_b]];
+                choice[node] = sc.tables[table + choice[dep_a] * cols_b + choice[dep_b]];
             }
             Elim::Fixed { node, choice: c } => {
-                choice[*node] = *c;
+                choice[node] = c;
             }
         }
     }
-    choice
 }
 
 /// A PBQP solver specialised to one graph *topology*, reusable across
@@ -319,8 +448,9 @@ fn reduce_and_backprop(w: &mut Work) -> Vec<usize> {
 /// only on the topology and the cost *values* (never on how the arena
 /// was built), a `solve_with` call is bit-identical to [`solve`] on a
 /// graph carrying the same node costs — the property the Pareto sweep
-/// (`selection::pareto`) relies on when it re-prices workspace
-/// penalties across budget levels without rebuilding the graph.
+/// (`selection::pareto`) and the coordinator's compiled selection plans
+/// (`selection::plan`) rely on when they re-price node costs without
+/// rebuilding the graph.
 ///
 /// ```
 /// use primsel::pbqp::{solve, Graph, ReusableSolver};
@@ -353,36 +483,105 @@ impl ReusableSolver {
         Self { template: Work::from_graph(g), edges: g.edges.clone() }
     }
 
+    /// Flat node-cost row offsets of this solver's template: node `u`'s
+    /// costs span `offsets()[u]..offsets()[u+1]` of a flat cost arena
+    /// (see [`Self::solve_flat_into`]). Length is `n_nodes + 1`.
+    pub fn offsets(&self) -> &[usize] {
+        &self.template.off
+    }
+
+    /// Total flat cost-arena length (= `offsets().last()`).
+    pub fn flat_len(&self) -> usize {
+        self.template.costs.len()
+    }
+
     /// Solve with `node_costs` in place of the graph's own. Each row
     /// must have the same length as the corresponding row the solver
     /// was built with.
     pub fn solve_with(&self, node_costs: &[Vec<f64>]) -> Solution {
-        assert_eq!(node_costs.len(), self.template.costs.len(), "node count mismatch");
-        for (u, (fresh, built)) in node_costs.iter().zip(&self.template.costs).enumerate() {
-            assert_eq!(fresh.len(), built.len(), "choice count mismatch at node {u}");
+        assert_eq!(node_costs.len(), self.template.n_nodes(), "node count mismatch");
+        for (u, fresh) in node_costs.iter().enumerate() {
+            assert_eq!(fresh.len(), self.template.arity(u), "choice count mismatch at node {u}");
         }
         if node_costs.is_empty() {
             return Solution { choice: vec![], cost: 0.0 };
         }
+        let mut flat = Vec::with_capacity(self.template.costs.len());
+        for row in node_costs {
+            flat.extend_from_slice(row);
+        }
+        let mut scratch = SolveScratch::default();
+        let (cost, choice) = self.solve_flat_into(&flat, &mut scratch);
+        Solution { choice: choice.to_vec(), cost }
+    }
+
+    /// Solve with a **flat** node-cost arena (row `u` at
+    /// `offsets()[u]..offsets()[u+1]`), running entirely out of
+    /// `scratch`'s retained buffers. Bit-identical to [`Self::solve_with`]
+    /// on the same costs; after the first (priming) call, the steady
+    /// state allocates nothing.
+    ///
+    /// Returns the objective and a borrow of the choice vector (one
+    /// choice index per node, valid until the next solve on `scratch`).
+    ///
+    /// ```
+    /// use primsel::pbqp::{solve, Graph, ReusableSolver, SolveScratch};
+    ///
+    /// let mut g = Graph::new(vec![vec![1.0, 3.0], vec![4.0, 1.0]]);
+    /// g.add_edge(0, 1, vec![0.0, 2.0, 2.0, 0.0]);
+    /// let solver = ReusableSolver::new(&g);
+    /// assert_eq!(solver.offsets(), &[0, 2, 4]);
+    ///
+    /// let mut scratch = SolveScratch::default();
+    /// let (cost, choice) = solver.solve_flat_into(&[1.0, 3.0, 4.0, 1.0], &mut scratch);
+    /// let fresh = solve(&g);
+    /// assert_eq!(choice, &fresh.choice[..]);
+    /// assert_eq!(cost, fresh.cost);
+    /// ```
+    pub fn solve_flat_into<'s>(
+        &self,
+        flat_costs: &[f64],
+        scratch: &'s mut SolveScratch,
+    ) -> (f64, &'s [usize]) {
+        assert_eq!(flat_costs.len(), self.template.costs.len(), "flat cost arena length mismatch");
+        if self.template.n_nodes() == 0 {
+            scratch.choice.clear();
+            return (0.0, &scratch.choice);
+        }
         note_solve();
-        let mut w = self.template.clone();
-        w.costs = node_costs.to_vec();
-        let choice = reduce_and_backprop(&mut w);
-        let cost = cost_of_with(node_costs, &self.edges, &choice);
-        Solution { choice, cost }
+        if scratch.primed {
+            scratch.work.reset_from(&self.template);
+        } else {
+            scratch.work = self.template.clone();
+            scratch.primed = true;
+        }
+        scratch.work.costs.copy_from_slice(flat_costs);
+        reduce_and_backprop(&mut scratch.work, &mut scratch.reduce, &mut scratch.choice);
+        let cost = cost_of_flat(flat_costs, &self.template.off, &self.edges, &scratch.choice);
+        (cost, &scratch.choice)
+    }
+
+    /// Total cost of `choice` under an explicit flat node-cost arena
+    /// (laid out per [`Self::offsets`]), in [`Graph::cost_of`]'s exact
+    /// summation order — so pricing a solve with one arena and costing
+    /// its choice under another (e.g. penalised vs true times) stays
+    /// bit-identical to the nested-`Vec` path.
+    pub fn cost_of_flat(&self, flat_costs: &[f64], choice: &[usize]) -> f64 {
+        cost_of_flat(flat_costs, &self.template.off, &self.edges, choice)
     }
 }
 
-/// Total assignment cost under explicit node costs — the same summation
-/// order as [`Graph::cost_of`] (nodes in index order, then edges in
-/// insertion order), so the two are bit-identical on equal inputs.
-fn cost_of_with(node_costs: &[Vec<f64>], edges: &[Edge], choice: &[usize]) -> f64 {
+/// Total assignment cost under an explicit flat node-cost arena — the
+/// same summation order as [`Graph::cost_of`] (nodes in index order,
+/// then edges in insertion order), so the two are bit-identical on
+/// equal inputs.
+fn cost_of_flat(flat: &[f64], off: &[usize], edges: &[Edge], choice: &[usize]) -> f64 {
     let mut total = 0.0;
     for (u, &i) in choice.iter().enumerate() {
-        total += node_costs[u][i];
+        total += flat[off[u] + i];
     }
     for e in edges {
-        let cols = node_costs[e.v].len();
+        let cols = off[e.v + 1] - off[e.v];
         total += e.at(choice[e.u], choice[e.v], cols);
     }
     total
@@ -400,59 +599,69 @@ fn argmin(v: &[f64]) -> (usize, f64) {
 
 /// RI: fold node u (degree 1) into its neighbour v:
 /// v_cost[j] += min_i (u_cost[i] + edge[i][j]).
-fn reduce_ri(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
-    let eid = w.live_edges(u)[0];
-    let v = w.edges[eid].other(u);
-    let u_first = w.edges[eid].u == u;
-    let ru = w.costs[u].len();
-    let rv = w.costs[v].len();
+fn reduce_ri(w: &mut Work, u: usize, sc: &mut ReduceScratch) {
+    w.collect_live(u, &mut sc.live);
+    let eid = sc.live[0];
+    let slot = w.edges[eid];
+    let v = slot.other(u);
+    let u_first = slot.u == u;
+    let ru = w.arity(u);
+    let rv = w.arity(v);
     let cols = if u_first { rv } else { ru };
-    let mut table = vec![0usize; rv];
-    let cu = w.costs[u].clone();
+    let t0 = sc.tables.len();
+    sc.tables.resize(t0 + rv, 0);
+    sc.row.clear();
+    sc.row.extend_from_slice(w.row(u));
+    let ov = w.off[v];
     for j in 0..rv {
-        let mat = &w.edges[eid].mat;
+        let mat = &w.mats[slot.mat..];
         let mut best_i = 0;
         let mut best = f64::INFINITY;
-        for (i, &cui) in cu.iter().enumerate() {
+        for (i, &cui) in sc.row.iter().enumerate() {
             let c = cui + entry(mat, u_first, cols, i, j);
             if c < best {
                 best = c;
                 best_i = i;
             }
         }
-        w.costs[v][j] += best;
-        table[j] = best_i;
+        w.costs[ov + j] += best;
+        sc.tables[t0 + j] = best_i;
     }
     w.kill_edge(eid);
     w.touch(v);
-    stack.push(Elim::OneDep { node: u, dep: v, table });
+    sc.stack.push(Elim::OneDep { node: u, dep: v, table: t0 });
 }
 
 /// RII: fold node u (degree 2, neighbours a and b) into a new a–b edge:
 /// delta[j][k] = min_i (u_cost[i] + e_a[i][j] + e_b[i][k]).
-fn reduce_rii(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
-    let live = w.live_edges(u);
-    let (ea, eb) = (live[0], live[1]);
-    let a = w.edges[ea].other(u);
-    let b = w.edges[eb].other(u);
-    let a_u_first = w.edges[ea].u == u;
-    let b_u_first = w.edges[eb].u == u;
-    let ru = w.costs[u].len();
-    let ra = w.costs[a].len();
-    let rb = w.costs[b].len();
+fn reduce_rii(w: &mut Work, u: usize, sc: &mut ReduceScratch) {
+    w.collect_live(u, &mut sc.live);
+    let (ea, eb) = (sc.live[0], sc.live[1]);
+    let sa = w.edges[ea];
+    let sb = w.edges[eb];
+    let a = sa.other(u);
+    let b = sb.other(u);
+    let a_u_first = sa.u == u;
+    let b_u_first = sb.u == u;
+    let ru = w.arity(u);
+    let ra = w.arity(a);
+    let rb = w.arity(b);
     let cols_a = if a_u_first { ra } else { ru };
     let cols_b = if b_u_first { rb } else { ru };
-    let cu = w.costs[u].clone();
-    let mut delta = vec![0.0; ra * rb];
-    let mut table = vec![0usize; ra * rb];
+    sc.row.clear();
+    sc.row.extend_from_slice(w.row(u));
+    sc.delta.clear();
+    sc.delta.resize(ra * rb, 0.0);
+    let t0 = sc.tables.len();
+    sc.tables.resize(t0 + ra * rb, 0);
     {
-        let mat_a = &w.edges[ea].mat;
-        let mat_b = &w.edges[eb].mat;
+        let mat_a = &w.mats[sa.mat..];
+        let mat_b = &w.mats[sb.mat..];
         for j in 0..ra {
             for k in 0..rb {
                 let mut best_i = 0;
                 let mut best = f64::INFINITY;
-                for (i, &cui) in cu.iter().enumerate() {
+                for (i, &cui) in sc.row.iter().enumerate() {
                     let c = cui
                         + entry(mat_a, a_u_first, cols_a, i, j)
                         + entry(mat_b, b_u_first, cols_b, i, k);
@@ -461,45 +670,47 @@ fn reduce_rii(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
                         best_i = i;
                     }
                 }
-                delta[j * rb + k] = best;
-                table[j * rb + k] = best_i;
+                sc.delta[j * rb + k] = best;
+                sc.tables[t0 + j * rb + k] = best_i;
             }
         }
     }
     w.kill_edge(ea);
     w.kill_edge(eb);
     if let Some(eid) = w.find_edge(a, b) {
-        w.accumulate(eid, a, &delta, rb);
+        w.accumulate(eid, a, &sc.delta, rb);
     } else {
-        w.add_edge(a, b, delta);
+        w.add_edge(a, b, &sc.delta);
     }
     w.touch(a);
     w.touch(b);
-    stack.push(Elim::TwoDep { node: u, dep_a: a, dep_b: b, table, cols_b: rb });
+    sc.stack.push(Elim::TwoDep { node: u, dep_a: a, dep_b: b, table: t0, cols_b: rb });
 }
 
 /// RN heuristic for degree >= 3: pick the locally best choice
 /// (node cost + sum over neighbours of the best-case edge+neighbour cost),
 /// commit it, and push the chosen row of each edge into the neighbour.
-fn reduce_rn(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
-    let live = w.live_edges(u);
-    let cu = w.costs[u].clone();
+fn reduce_rn(w: &mut Work, u: usize, sc: &mut ReduceScratch) {
+    w.collect_live(u, &mut sc.live);
+    sc.row.clear();
+    sc.row.extend_from_slice(w.row(u));
     let mut best_i = 0;
     let mut best = f64::INFINITY;
-    for (i, &cui) in cu.iter().enumerate() {
+    for (i, &cui) in sc.row.iter().enumerate() {
         if cui >= INF {
             continue;
         }
         let mut c = cui;
-        for &eid in &live {
-            let slot = &w.edges[eid];
+        for &eid in &sc.live {
+            let slot = w.edges[eid];
             let v = slot.other(u);
             let u_first = slot.u == u;
-            let rv = w.costs[v].len();
-            let cols = if u_first { rv } else { cu.len() };
+            let rv = w.arity(v);
+            let cols = if u_first { rv } else { sc.row.len() };
+            let mat = &w.mats[slot.mat..];
             let mut m = f64::INFINITY;
-            for (j, &cvj) in w.costs[v].iter().enumerate() {
-                let e = entry(&slot.mat, u_first, cols, i, j) + cvj;
+            for (j, &cvj) in w.row(v).iter().enumerate() {
+                let e = entry(mat, u_first, cols, i, j) + cvj;
                 if e < m {
                     m = e;
                 }
@@ -511,19 +722,21 @@ fn reduce_rn(w: &mut Work, u: usize, stack: &mut Vec<Elim>) {
             best_i = i;
         }
     }
-    for &eid in &live {
-        let v = w.edges[eid].other(u);
-        let u_first = w.edges[eid].u == u;
-        let rv = w.costs[v].len();
-        let cols = if u_first { rv } else { cu.len() };
+    for &eid in &sc.live {
+        let slot = w.edges[eid];
+        let v = slot.other(u);
+        let u_first = slot.u == u;
+        let rv = w.arity(v);
+        let cols = if u_first { rv } else { sc.row.len() };
+        let ov = w.off[v];
         for j in 0..rv {
-            let add = entry(&w.edges[eid].mat, u_first, cols, best_i, j);
-            w.costs[v][j] += add;
+            let add = entry(&w.mats[slot.mat..], u_first, cols, best_i, j);
+            w.costs[ov + j] += add;
         }
         w.kill_edge(eid);
         w.touch(v);
     }
-    stack.push(Elim::Fixed { node: u, choice: best_i });
+    sc.stack.push(Elim::Fixed { node: u, choice: best_i });
 }
 
 #[cfg(test)]
@@ -727,10 +940,52 @@ mod tests {
     }
 
     #[test]
+    fn flat_scratch_path_matches_solve_with_bit_for_bit() {
+        // one scratch reused across many graphs' worth of re-pricings:
+        // the clone_from-restored arena must keep matching the allocating
+        // path exactly (same choice, same cost bits)
+        let mut rng = SplitMix64::new(0xA7E4A);
+        for case in 0..25 {
+            let g = random_graph(&mut rng, 8, 3, 0.4);
+            let solver = ReusableSolver::new(&g);
+            let mut scratch = SolveScratch::default();
+            for round in 0..5 {
+                let costs: Vec<Vec<f64>> = g
+                    .node_costs
+                    .iter()
+                    .map(|row| row.iter().map(|_| rng.next_f64() * 12.0).collect())
+                    .collect();
+                let flat: Vec<f64> = costs.iter().flatten().copied().collect();
+                let boxed = solver.solve_with(&costs);
+                let (cost, choice) = solver.solve_flat_into(&flat, &mut scratch);
+                assert_eq!(choice, &boxed.choice[..], "case {case} round {round}");
+                assert_eq!(cost, boxed.cost, "case {case} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn offsets_describe_the_flat_layout() {
+        let g = Graph::new(vec![vec![1.0], vec![0.5, 9.0, 0.1], vec![2.0, 0.3]]);
+        let solver = ReusableSolver::new(&g);
+        assert_eq!(solver.offsets(), &[0, 1, 4, 6]);
+        assert_eq!(solver.flat_len(), 6);
+    }
+
+    #[test]
     #[should_panic(expected = "choice count mismatch")]
     fn reusable_solver_rejects_misshapen_costs() {
         let g = Graph::new(vec![vec![1.0, 2.0], vec![3.0]]);
         ReusableSolver::new(&g).solve_with(&[vec![1.0], vec![3.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "flat cost arena length mismatch")]
+    fn flat_path_rejects_wrong_arena_length() {
+        let g = Graph::new(vec![vec![1.0, 2.0], vec![3.0]]);
+        let solver = ReusableSolver::new(&g);
+        let mut scratch = SolveScratch::default();
+        solver.solve_flat_into(&[1.0, 2.0], &mut scratch);
     }
 
     #[test]
@@ -743,6 +998,21 @@ mod tests {
         assert_eq!(solves_on_thread(), before + 2);
         // other threads start from their own counter
         std::thread::spawn(|| assert_eq!(solves_on_thread(), 0)).join().unwrap();
+    }
+
+    #[test]
+    fn template_build_counter_counts_builds_not_reuse() {
+        let g = Graph::new(vec![vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let before = template_builds_on_thread();
+        let solver = ReusableSolver::new(&g); // one build
+        let _ = solve(&g); // a fresh solve builds its own working graph
+        assert_eq!(template_builds_on_thread(), before + 2);
+        // re-pricing through the reusable arena builds nothing
+        let mut scratch = SolveScratch::default();
+        let _ = solver.solve_with(&g.node_costs);
+        let _ = solver.solve_flat_into(&[3.0, 1.0, 1.0, 2.0], &mut scratch);
+        assert_eq!(template_builds_on_thread(), before + 2);
+        std::thread::spawn(|| assert_eq!(template_builds_on_thread(), 0)).join().unwrap();
     }
 
     #[test]

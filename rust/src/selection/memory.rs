@@ -7,19 +7,22 @@
 //! trade-off curve shape (time rises as the budget tightens).
 //!
 //! The budgeted instance is factored as a crate-internal
-//! `BudgetedProblem`: the graph topology, edge matrices, and unpenalised
-//! node times are built once and only the node costs are re-priced per
-//! budget level, via [`pbqp::ReusableSolver`]. A single point query
-//! ([`select_with_budget`]) and the full Pareto sweep
-//! ([`super::pareto::ParetoFront::compute`]) share this path, so a front
-//! point and a fresh per-budget solve are bit-identical by construction.
+//! `BudgetedProblem`: a compiled [`SelectionPlan`] (flat choice / time /
+//! workspace arenas plus the solver's merged-edge elimination template)
+//! paired with a retained [`PlanScratch`], so each budget level only
+//! re-prices the penalty terms and re-runs the reductions. A single
+//! point query ([`select_with_budget`]), the full Pareto sweep
+//! ([`super::pareto::ParetoFront::compute`]) and the coordinator's warm
+//! plan-cache solves all share this path, so a front point, a fresh
+//! per-budget solve, and a warm plan solve are bit-identical by
+//! construction.
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
-use crate::pbqp;
 use crate::primitives::{catalog, Family, Primitive};
+use crate::selection::plan::{PlanScratch, SelectionPlan};
 use crate::selection::{with_cache, CostSource, Selection};
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 /// Workspace bytes a primitive needs beyond input/weights/output.
 pub fn workspace_bytes(prim: &Primitive, cfg: &ConvConfig) -> f64 {
@@ -60,111 +63,41 @@ pub fn peak_workspace(net: &Network, sel: &Selection) -> f64 {
         .fold(0.0, f64::max)
 }
 
-/// A budgeted selection instance with the budget-independent parts
-/// (topology, edge matrices, unpenalised times, workspace table, and the
-/// solver's merged-edge arena) built once, so many budget levels re-price
-/// and re-solve without rebuilding anything.
+/// A budgeted selection instance: a compiled [`SelectionPlan`] (the
+/// budget-independent topology, edge matrices, unpenalised times and
+/// workspace table in flat arenas) plus a retained [`PlanScratch`], so
+/// many budget levels re-price and re-solve without rebuilding — or
+/// allocating — anything.
 pub(crate) struct BudgetedProblem {
-    /// choices[u] — catalog indices applicable at layer u, in row order.
-    choices: Vec<Vec<usize>>,
-    /// workspace[u][i] — workspace bytes of choices[u][i] at layer u.
-    workspace: Vec<Vec<f64>>,
-    /// Graph whose node costs are the *unpenalised* times; edges carry
-    /// the data-layout transformation matrices. `cost_of` on it yields
-    /// the true estimated time of an assignment.
-    graph: pbqp::Graph,
-    solver: pbqp::ReusableSolver,
+    plan: SelectionPlan,
+    scratch: PlanScratch,
 }
 
 impl BudgetedProblem {
     /// Build the budget-independent instance. `costs` should already be
     /// memoized (callers go through [`with_cache`]).
     pub(crate) fn build(net: &Network, costs: &dyn CostSource) -> Result<Self> {
-        let cat = catalog();
-        let mut node_costs = Vec::with_capacity(net.n_layers());
-        let mut choices = Vec::with_capacity(net.n_layers());
-        let mut workspace = Vec::with_capacity(net.n_layers());
-        for cfg in &net.layers {
-            let row = costs.layer_costs(cfg);
-            let mut ch = Vec::new();
-            let mut nc = Vec::new();
-            let mut ws = Vec::new();
-            for (p, t) in row.iter().enumerate() {
-                if let Some(t) = t {
-                    ch.push(p);
-                    nc.push(*t);
-                    ws.push(workspace_bytes(&cat[p], cfg));
-                }
-            }
-            ensure!(!ch.is_empty(), "no applicable primitive for {cfg:?}");
-            node_costs.push(nc);
-            choices.push(ch);
-            workspace.push(ws);
-        }
-        let mut graph = pbqp::Graph::new(node_costs);
-        for &(u, v) in &net.edges {
-            let c = net.layers[u].k;
-            let im = net.layers[v].im;
-            let m = costs.dlt_matrix3(c, im);
-            let cu = &choices[u];
-            let cv = &choices[v];
-            let mut mat = Vec::with_capacity(cu.len() * cv.len());
-            for &pu in cu {
-                for &pv in cv {
-                    mat.push(m[cat[pu].out_layout.index()][cat[pv].in_layout.index()]);
-                }
-            }
-            graph.add_edge(u, v, mat);
-        }
-        let solver = pbqp::ReusableSolver::new(&graph);
-        Ok(Self { choices, workspace, graph, solver })
+        Ok(Self {
+            plan: SelectionPlan::compile_inner(net, costs)?,
+            scratch: PlanScratch::default(),
+        })
     }
 
     /// Workspace values over all (layer, applicable primitive) pairs —
     /// the distinct budget levels worth sweeping.
     pub(crate) fn workspace_levels(&self) -> impl Iterator<Item = f64> + '_ {
-        self.workspace.iter().flatten().copied()
-    }
-
-    /// Node costs penalised for `budget_bytes` at `lambda_ms_per_mb`
-    /// (TASO-style soft constraint: overshoot charged per MiB).
-    fn priced(&self, budget_bytes: f64, lambda_ms_per_mb: f64) -> Vec<Vec<f64>> {
-        self.graph
-            .node_costs
-            .iter()
-            .zip(&self.workspace)
-            .map(|(times, ws)| {
-                times
-                    .iter()
-                    .zip(ws)
-                    .map(|(t, w)| {
-                        let over = (*w - budget_bytes).max(0.0);
-                        *t + over / (1024.0 * 1024.0) * lambda_ms_per_mb
-                    })
-                    .collect()
-            })
-            .collect()
+        self.plan.workspace_levels()
     }
 
     /// Solve at one budget level. `objective_ms` is the penalised PBQP
     /// objective; `estimated_ms` is the true (unpenalised) time of the
     /// chosen assignment over the same cost tables.
     pub(crate) fn solve_at(
-        &self,
+        &mut self,
         budget_bytes: f64,
         lambda_ms_per_mb: f64,
     ) -> Selection {
-        let sol = self.solver.solve_with(&self.priced(budget_bytes, lambda_ms_per_mb));
-        Selection {
-            primitive: sol
-                .choice
-                .iter()
-                .enumerate()
-                .map(|(u, &ci)| self.choices[u][ci])
-                .collect(),
-            objective_ms: sol.cost,
-            estimated_ms: self.graph.cost_of(&sol.choice),
-        }
+        self.plan.with_budget_into(budget_bytes, lambda_ms_per_mb, &mut self.scratch).to_selection()
     }
 }
 
@@ -187,7 +120,8 @@ fn select_with_budget_inner(
     budget_bytes: f64,
     lambda_ms_per_mb: f64,
 ) -> Result<Selection> {
-    Ok(BudgetedProblem::build(net, costs)?.solve_at(budget_bytes, lambda_ms_per_mb))
+    let mut prob = BudgetedProblem::build(net, costs)?;
+    Ok(prob.solve_at(budget_bytes, lambda_ms_per_mb))
 }
 
 #[cfg(test)]

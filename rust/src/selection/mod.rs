@@ -14,11 +14,13 @@ pub mod faulty;
 pub mod memory;
 pub mod modeled;
 pub mod pareto;
+pub mod plan;
 
 pub use cache::{CacheStats, CostCache};
 pub use faulty::FaultySource;
 pub use modeled::ModeledSource;
 pub use pareto::{ParetoFront, ParetoPoint};
+pub use plan::{PlanScratch, PlanSelection, SelectionPlan};
 
 use crate::layers::ConvConfig;
 use crate::networks::Network;
@@ -95,8 +97,11 @@ pub struct TableSource {
     /// cfg -> row index (first occurrence wins for duplicate configs,
     /// matching the old linear-scan semantics).
     by_cfg: HashMap<ConvConfig, usize>,
-    /// (c, im) -> 3x3 DLT matrix.
-    dlt: HashMap<(u32, u32), [[f64; 3]; 3]>,
+    /// DLT entries `((c, im), matrix)` sorted by key — [`Self::dlt_entries`]
+    /// hands this out as a borrow.
+    dlt: Vec<((u32, u32), [[f64; 3]; 3])>,
+    /// (c, im) -> index into `dlt`.
+    by_dlt: HashMap<(u32, u32), usize>,
 }
 
 impl TableSource {
@@ -112,8 +117,14 @@ impl TableSource {
         for (i, cfg) in configs.iter().enumerate() {
             by_cfg.entry(*cfg).or_insert(i);
         }
-        let dlt = dlt_keys.into_iter().zip(dlt_mats).collect();
-        Self { configs, prim, by_cfg, dlt }
+        // collect through a map first so duplicate keys keep the old
+        // last-insert-wins semantics, then freeze a sorted entry list
+        let map: HashMap<(u32, u32), [[f64; 3]; 3]> =
+            dlt_keys.into_iter().zip(dlt_mats).collect();
+        let mut dlt: Vec<((u32, u32), [[f64; 3]; 3])> = map.into_iter().collect();
+        dlt.sort_unstable_by_key(|(k, _)| *k);
+        let by_dlt = dlt.iter().enumerate().map(|(i, (k, _))| (*k, i)).collect();
+        Self { configs, prim, by_cfg, dlt, by_dlt }
     }
 
     /// The configs this table covers, in insertion order.
@@ -126,18 +137,17 @@ impl TableSource {
         self.by_cfg.get(cfg).map(|&i| self.prim[i].as_slice())
     }
 
-    /// All DLT entries `((c, im), matrix)`, sorted by key — the
+    /// All DLT entries `((c, im), matrix)`, sorted by key — a borrow of
+    /// the table's own sorted storage (no per-call allocation). The
     /// persistence layer (`dataset::persist`) walks the table through
     /// this and [`Self::configs`]/[`Self::row`].
-    pub fn dlt_entries(&self) -> Vec<((u32, u32), [[f64; 3]; 3])> {
-        let mut out: Vec<((u32, u32), [[f64; 3]; 3])> =
-            self.dlt.iter().map(|(k, m)| (*k, *m)).collect();
-        out.sort_unstable_by_key(|(k, _)| *k);
-        out
+    pub fn dlt_entries(&self) -> &[((u32, u32), [[f64; 3]; 3])] {
+        &self.dlt
     }
 
     fn dlt_lookup(&self, c: u32, im: u32) -> &[[f64; 3]; 3] {
-        self.dlt.get(&(c, im)).expect("dlt pair not in table")
+        let &i = self.by_dlt.get(&(c, im)).expect("dlt pair not in table");
+        &self.dlt[i].1
     }
 }
 

@@ -100,7 +100,7 @@ impl ParetoFront {
         costs: &dyn CostSource,
         lambda_ms_per_mb: f64,
     ) -> Result<Self> {
-        let prob = BudgetedProblem::build(net, costs)?;
+        let mut prob = BudgetedProblem::build(net, costs)?;
         let mut budgets: Vec<f64> = prob.workspace_levels().collect();
         budgets.push(0.0);
         budgets.sort_by(|a, b| a.total_cmp(b));

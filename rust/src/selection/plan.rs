@@ -1,0 +1,317 @@
+//! Compiled selection plans — the request-independent half of a
+//! (platform, network) selection, frozen once and reused by every warm
+//! request.
+//!
+//! [`SelectionPlan::compile`] walks the network exactly like
+//! [`build_problem`](crate::selection::build_problem) does, but keeps
+//! the result in **flat arenas**: the applicable catalog indices, the
+//! unpenalised times and the workspace bytes of every (layer, choice)
+//! pair live in dense `Vec`s laid out by the solver's row
+//! [`offsets`](crate::pbqp::ReusableSolver::offsets), and the PBQP
+//! topology — with its DLT edge matrices pre-assembled — lives in a
+//! [`pbqp::ReusableSolver`] elimination template. A warm solve then
+//! does zero graph construction and zero per-layer cost-cache lookups:
+//! [`SelectionPlan::min_time_into`] prices nothing (the frozen times
+//! *are* the node-cost arena) and [`SelectionPlan::with_budget_into`]
+//! re-prices only the penalty terms, into a caller-retained
+//! [`PlanScratch`]. After the first (priming) call on a scratch the
+//! steady state allocates nothing — pinned by the counting-allocator
+//! test in `rust/tests/alloc_counter.rs`.
+//!
+//! Bit-identity with the cold paths is by construction: the arenas hold
+//! exactly the values the cold builders produce, in the same order, the
+//! penalty arithmetic is the same expression, and the flat solve is
+//! pinned bit-identical to a fresh [`pbqp::solve`](crate::pbqp::solve).
+//! The differential suite in `rust/tests/plan.rs` re-checks all of it
+//! against [`select`](crate::selection::select) and
+//! [`select_with_budget`](crate::selection::memory::select_with_budget)
+//! across the network zoo.
+
+use crate::networks::Network;
+use crate::pbqp;
+use crate::primitives::catalog;
+use crate::selection::memory::workspace_bytes;
+use crate::selection::{with_cache, CostSource, Selection};
+use anyhow::{ensure, Result};
+
+/// Everything request-independent about selecting for one (network,
+/// cost source) pair, compiled once: flat choice/time/workspace arenas
+/// plus the solver's merged-edge elimination template. Immutable and
+/// `Send + Sync` — the coordinator shares one per (platform, network
+/// fingerprint) behind an `Arc`.
+///
+/// ```
+/// use primsel::networks;
+/// use primsel::selection::{self, plan::{PlanScratch, SelectionPlan}};
+/// use primsel::simulator::{machine, Simulator};
+///
+/// let sim = Simulator::new(machine::intel_i9_9900k());
+/// let net = networks::alexnet();
+/// let plan = SelectionPlan::compile(&net, &sim).unwrap();
+///
+/// // warm solves run out of a retained scratch, no rebuilding
+/// let mut scratch = PlanScratch::default();
+/// let warm = plan.min_time_into(&mut scratch).to_selection();
+///
+/// // ... and are bit-identical to the cold path
+/// let cold = selection::select(&net, &sim).unwrap();
+/// assert_eq!(warm.primitive, cold.primitive);
+/// assert_eq!(warm.estimated_ms, cold.estimated_ms);
+/// ```
+pub struct SelectionPlan {
+    /// Flat applicable catalog indices: layer `u`'s choices span
+    /// `solver.offsets()[u]..solver.offsets()[u+1]`.
+    choices: Vec<usize>,
+    /// Flat unpenalised times, same layout — the min-time cost arena.
+    times: Vec<f64>,
+    /// Flat workspace bytes, same layout.
+    workspace: Vec<f64>,
+    /// Frozen topology: merged-edge arena, worklist seeds, original
+    /// edge matrices for the objective sum.
+    solver: pbqp::ReusableSolver,
+}
+
+/// Caller-retained warm-solve buffers: the PBQP scratch (working-graph
+/// clone target, elimination stack, choice buffer), the priced-cost
+/// arena and the mapped primitive buffer. Keep one per worker thread
+/// and reuse it across requests — and across plans; the buffers
+/// re-shape on the fly — that reuse is what makes the steady state
+/// allocation-free.
+#[derive(Default)]
+pub struct PlanScratch {
+    solve: pbqp::SolveScratch,
+    priced: Vec<f64>,
+    primitive: Vec<usize>,
+}
+
+/// A borrowed view of one warm solve's result — no owned allocations;
+/// valid until the next solve on the same scratch. Callers off the
+/// zero-alloc path materialise it with [`Self::to_selection`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlanSelection<'s> {
+    /// Catalog index per layer.
+    pub primitive: &'s [usize],
+    /// The value the solver minimised (penalised for budgeted solves).
+    pub objective_ms: f64,
+    /// True (unpenalised) network time of the assignment, ms.
+    pub estimated_ms: f64,
+    /// Peak per-layer workspace of the assignment, bytes.
+    pub peak_workspace_bytes: f64,
+}
+
+impl PlanSelection<'_> {
+    /// Materialise an owned [`Selection`] (allocates).
+    pub fn to_selection(&self) -> Selection {
+        Selection {
+            primitive: self.primitive.to_vec(),
+            objective_ms: self.objective_ms,
+            estimated_ms: self.estimated_ms,
+        }
+    }
+}
+
+impl SelectionPlan {
+    /// Compile the plan for `net` under `costs` (memoized transparently,
+    /// like every cost-consuming entry point).
+    pub fn compile(net: &Network, costs: &dyn CostSource) -> Result<Self> {
+        with_cache(costs, |c: &dyn CostSource| Self::compile_inner(net, c))
+    }
+
+    /// Compile against an already-memoized source (callers inside the
+    /// [`with_cache`] funnel).
+    pub(crate) fn compile_inner(net: &Network, costs: &dyn CostSource) -> Result<Self> {
+        let cat = catalog();
+        let mut node_costs = Vec::with_capacity(net.n_layers());
+        let mut choice_rows: Vec<Vec<usize>> = Vec::with_capacity(net.n_layers());
+        let mut choices = Vec::new();
+        let mut workspace = Vec::new();
+        for cfg in &net.layers {
+            let row = costs.layer_costs(cfg);
+            let mut ch = Vec::new();
+            let mut nc = Vec::new();
+            for (p, t) in row.iter().enumerate() {
+                if let Some(t) = t {
+                    ch.push(p);
+                    nc.push(*t);
+                    workspace.push(workspace_bytes(&cat[p], cfg));
+                }
+            }
+            ensure!(!ch.is_empty(), "no applicable primitive for {cfg:?}");
+            choices.extend_from_slice(&ch);
+            node_costs.push(nc);
+            choice_rows.push(ch);
+        }
+        let mut graph = pbqp::Graph::new(node_costs);
+        for &(u, v) in &net.edges {
+            // the tensor on this edge: u's output (k_u channels at v's
+            // input resolution) — same assembly as `build_problem`
+            let c = net.layers[u].k;
+            let im = net.layers[v].im;
+            let m = costs.dlt_matrix3(c, im);
+            let cu = &choice_rows[u];
+            let cv = &choice_rows[v];
+            let mut mat = Vec::with_capacity(cu.len() * cv.len());
+            for &pu in cu {
+                let out_l = cat[pu].out_layout;
+                for &pv in cv {
+                    mat.push(m[out_l.index()][cat[pv].in_layout.index()]);
+                }
+            }
+            graph.add_edge(u, v, mat);
+        }
+        let solver = pbqp::ReusableSolver::new(&graph);
+        let times = graph.node_costs.into_iter().flatten().collect();
+        Ok(Self { choices, times, workspace, solver })
+    }
+
+    /// Number of layers the plan was compiled for.
+    pub fn n_layers(&self) -> usize {
+        self.solver.offsets().len() - 1
+    }
+
+    /// Workspace values over all (layer, applicable primitive) pairs —
+    /// the distinct budget levels worth sweeping.
+    pub(crate) fn workspace_levels(&self) -> impl Iterator<Item = f64> + '_ {
+        self.workspace.iter().copied()
+    }
+
+    /// Warm min-time solve: the frozen times are the cost arena, so
+    /// this is one flat solve plus the choice mapping — zero graph
+    /// construction, zero cache lookups, zero steady-state allocation.
+    pub fn min_time_into<'s>(&self, scratch: &'s mut PlanScratch) -> PlanSelection<'s> {
+        let (cost, choice) = self.solver.solve_flat_into(&self.times, &mut scratch.solve);
+        let off = self.solver.offsets();
+        let mut peak = 0.0f64;
+        scratch.primitive.clear();
+        for (u, &ci) in choice.iter().enumerate() {
+            let slot = off[u] + ci;
+            scratch.primitive.push(self.choices[slot]);
+            peak = peak.max(self.workspace[slot]);
+        }
+        PlanSelection {
+            primitive: &scratch.primitive,
+            objective_ms: cost,
+            estimated_ms: cost,
+            peak_workspace_bytes: peak,
+        }
+    }
+
+    /// Warm budgeted solve: re-price the penalty terms
+    /// (`time + λ · max(0, workspace − budget) / MiB`, the same
+    /// expression as [`select_with_budget`]) into the scratch's priced
+    /// arena and solve flat. `objective_ms` is the penalised optimum;
+    /// `estimated_ms` the true time of the chosen assignment.
+    ///
+    /// [`select_with_budget`]: crate::selection::memory::select_with_budget
+    pub fn with_budget_into<'s>(
+        &self,
+        budget_bytes: f64,
+        lambda_ms_per_mb: f64,
+        scratch: &'s mut PlanScratch,
+    ) -> PlanSelection<'s> {
+        scratch.priced.clear();
+        scratch.priced.extend(self.times.iter().zip(&self.workspace).map(|(t, w)| {
+            let over = (*w - budget_bytes).max(0.0);
+            *t + over / (1024.0 * 1024.0) * lambda_ms_per_mb
+        }));
+        let (cost, choice) = self.solver.solve_flat_into(&scratch.priced, &mut scratch.solve);
+        let estimated = self.solver.cost_of_flat(&self.times, choice);
+        let off = self.solver.offsets();
+        let mut peak = 0.0f64;
+        scratch.primitive.clear();
+        for (u, &ci) in choice.iter().enumerate() {
+            let slot = off[u] + ci;
+            scratch.primitive.push(self.choices[slot]);
+            peak = peak.max(self.workspace[slot]);
+        }
+        PlanSelection {
+            primitive: &scratch.primitive,
+            objective_ms: cost,
+            estimated_ms: estimated,
+            peak_workspace_bytes: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks;
+    use crate::selection::memory::{peak_workspace, select_with_budget};
+    use crate::selection;
+    use crate::simulator::{machine, Simulator};
+
+    fn sim() -> Simulator {
+        Simulator::new(machine::intel_i9_9900k())
+    }
+
+    #[test]
+    fn warm_min_time_matches_cold_select_bit_for_bit() {
+        let s = sim();
+        let mut scratch = PlanScratch::default();
+        for net in networks::selection_networks() {
+            let plan = SelectionPlan::compile(&net, &s).unwrap();
+            assert_eq!(plan.n_layers(), net.n_layers());
+            let cold = selection::select(&net, &s).unwrap();
+            // several rounds on one scratch: reuse must not drift
+            for _ in 0..3 {
+                let warm = plan.min_time_into(&mut scratch);
+                assert_eq!(warm.primitive, &cold.primitive[..]);
+                assert_eq!(warm.objective_ms, cold.objective_ms);
+                assert_eq!(warm.estimated_ms, cold.estimated_ms);
+                assert_eq!(warm.peak_workspace_bytes, peak_workspace(&net, &cold));
+            }
+        }
+    }
+
+    #[test]
+    fn warm_budget_matches_cold_select_with_budget_bit_for_bit() {
+        let s = sim();
+        let net = networks::vgg(11);
+        let plan = SelectionPlan::compile(&net, &s).unwrap();
+        let mut scratch = PlanScratch::default();
+        let free = selection::select(&net, &s).unwrap();
+        let free_peak = peak_workspace(&net, &free);
+        for frac in [0.01, 0.1, 0.5, 1.0] {
+            let budget = free_peak * frac;
+            let cold = select_with_budget(&net, &s, budget, 50.0).unwrap();
+            let warm = plan.with_budget_into(budget, 50.0, &mut scratch);
+            assert_eq!(warm.primitive, &cold.primitive[..]);
+            assert_eq!(warm.objective_ms, cold.objective_ms);
+            assert_eq!(warm.estimated_ms, cold.estimated_ms);
+            assert_eq!(warm.peak_workspace_bytes, peak_workspace(&net, &cold));
+        }
+    }
+
+    #[test]
+    fn one_scratch_serves_many_plans() {
+        // buffers re-shape when the scratch moves between differently
+        // sized plans — interleave two networks on one scratch
+        let s = sim();
+        let a = networks::alexnet();
+        let b = networks::googlenet();
+        let plan_a = SelectionPlan::compile(&a, &s).unwrap();
+        let plan_b = SelectionPlan::compile(&b, &s).unwrap();
+        let cold_a = selection::select(&a, &s).unwrap();
+        let cold_b = selection::select(&b, &s).unwrap();
+        let mut scratch = PlanScratch::default();
+        for _ in 0..3 {
+            assert_eq!(plan_a.min_time_into(&mut scratch).primitive, &cold_a.primitive[..]);
+            assert_eq!(plan_b.min_time_into(&mut scratch).primitive, &cold_b.primitive[..]);
+        }
+    }
+
+    #[test]
+    fn to_selection_round_trips_the_view() {
+        let s = sim();
+        let net = networks::alexnet();
+        let plan = SelectionPlan::compile(&net, &s).unwrap();
+        let mut scratch = PlanScratch::default();
+        let view = plan.min_time_into(&mut scratch);
+        let (obj, est) = (view.objective_ms, view.estimated_ms);
+        let owned = view.to_selection();
+        assert_eq!(owned.objective_ms, obj);
+        assert_eq!(owned.estimated_ms, est);
+        assert_eq!(owned.primitive.len(), net.n_layers());
+    }
+}

