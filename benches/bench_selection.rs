@@ -127,6 +127,15 @@ fn main() {
         b.run("selection/select_one_warm_plan", 10, 100, || {
             let _ = coord.select_one(&req).unwrap();
         });
+        // the same warm solve with full telemetry live: a per-request
+        // trace, stage-histogram records, and a flight-recorder capture.
+        // The gate fails if this row drifts more than 5% off warm_plan —
+        // observability must stay effectively free
+        let traced = req.clone().with_trace();
+        let _ = coord.select_one(&traced).unwrap();
+        b.run("selection/select_one_warm_instrumented", 10, 100, || {
+            let _ = coord.select_one(&traced).unwrap();
+        });
         let cache = coord.cache("intel").unwrap();
         b.run("selection/select_one_cold", 1, 10, || {
             let _ = selection::select(&net, cache.as_ref()).unwrap();

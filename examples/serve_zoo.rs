@@ -20,6 +20,11 @@
 //!
 //! Run: `cargo run --release --example serve_zoo`
 //!
+//! With `--metrics`, serves a small mixed workload and dumps the
+//! unified telemetry (Prometheus exposition + JSON snapshot, delimited
+//! by `=== metrics: ... ===` markers) — the mode
+//! `python/tools/check_metrics.py` validates in CI.
+//!
 //! With `--inject-faults`, runs the self-healing demo instead: a
 //! transfer-onboarded platform over a seeded [`FaultySource`] is driven
 //! through drift → automatic recalibration → repeated recalibration
@@ -39,10 +44,64 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
+    if std::env::args().any(|a| a == "--metrics") {
+        return metrics_demo();
+    }
     if std::env::args().any(|a| a == "--inject-faults") {
         return inject_faults_demo();
     }
     serve_demo()
+}
+
+/// `--metrics`: serve a small mixed-tenant workload, then dump the
+/// unified telemetry — the Prometheus exposition and the JSON snapshot
+/// of the process metrics registry, delimited by `=== metrics: ... ===`
+/// markers so `python/tools/check_metrics.py` can split and validate
+/// them — followed by the flight recorder's tables.
+fn metrics_demo() -> anyhow::Result<()> {
+    let coord = Coordinator::shared();
+    // monitor one platform so the health gauges have a row to publish
+    let target: Arc<dyn CostSource> =
+        Arc::new(Simulator::new(machine::intel_i9_9900k()));
+    coord.monitor_platform("intel", target, HealthPolicy::default().with_sampling(0.25, 11))?;
+    let service = Service::new(
+        Arc::clone(&coord),
+        ServiceConfig::default().with_capacity(16).with_workers(2),
+    );
+    service.register_tenant("interactive", 4.0, 2)?;
+    service.register_tenant("batch", 1.0, 2)?;
+
+    let nets = networks::selection_networks();
+    let platforms = ["intel", "arm"];
+    let mut tickets = Vec::new();
+    for i in 0..12 {
+        let tenant = if i % 2 == 0 { "interactive" } else { "batch" };
+        let req =
+            SelectionRequest::new(nets[i % nets.len()].clone(), platforms[i % platforms.len()]);
+        tickets.push(
+            service
+                .submit(tenant, req)
+                .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?,
+        );
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    // one budget query so the Pareto-front cache has traffic too
+    let req = SelectionRequest::new(networks::vgg(16), "intel").with_objective(
+        Objective::FastestUnderBytes { budget_bytes: 8.0 * 1024.0 * 1024.0 },
+    );
+    coord.submit(&req)?;
+
+    let reg = service.metrics();
+    println!("=== metrics: prometheus ===");
+    print!("{}", reg.render_prometheus());
+    println!("=== metrics: json ===");
+    println!("{}", reg.snapshot_json().dump());
+    println!("=== metrics: end ===");
+    println!("\n{}", primsel::obs::flight_recorder().render());
+    service.shutdown();
+    Ok(())
 }
 
 /// Serve requests at `platform` until `done(health)` holds. Refused
@@ -158,6 +217,12 @@ fn inject_faults_demo() -> anyhow::Result<()> {
 
     // the instruments, health table included
     println!("{}", service.stats().render());
+    // the same story as structured telemetry: every health transition
+    // and recalibration outcome the demo drove, straight from the
+    // flight recorder, plus the health gauges the registry publishes
+    println!("{}", primsel::obs::flight_recorder().render());
+    service.metrics();
+    print!("{}", primsel::obs::registry().render_prometheus());
     service.shutdown();
     Ok(())
 }

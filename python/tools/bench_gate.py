@@ -24,6 +24,13 @@ state this file is committed in before any CI runner has produced real
 numbers) is filled from the current results and the baseline is written
 back, exiting 0 — the runner's first honest numbers become the baseline
 to commit, rather than numbers invented on a different machine.
+
+Instrumentation overhead: independent of the baseline, the gate compares
+``select_one_warm_instrumented`` against ``select_one_warm_plan`` within
+the same run and fails if tracing + metrics cost more than
+``OVERHEAD_CAP_PCT`` (both rows come from the same process minutes
+apart, so the comparison is machine-independent — it runs even on the
+self-seeding pass).
 """
 
 from __future__ import annotations
@@ -31,6 +38,11 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+
+# Max tolerated overhead of the fully-instrumented warm select over the
+# bare warm select, percent.
+OVERHEAD_CAP_PCT = 5.0
 
 
 def load(path: str) -> dict:
@@ -72,6 +84,10 @@ def main() -> int:
         print("       update gate.rows in the baseline deliberately instead)")
         return 1
 
+    # in-run instrumentation-overhead cap (machine-independent, so it
+    # applies on the self-seeding pass too)
+    overhead_ok = instrumentation_overhead(cur)
+
     # self-seed: fill null gated baselines from this run and write back
     to_seed = [r for r in gated if base.get(r) is None]
     if to_seed:
@@ -87,7 +103,7 @@ def main() -> int:
             json.dump(baseline, fh, indent=2, sort_keys=True)
             fh.write("\n")
         print(f"seeded baseline written to {args.baseline} — commit it to arm the gate")
-        return 0
+        return 0 if overhead_ok else 1
 
     failures = []
     print(f"bench gate: threshold +{threshold:.1f}% on {len(gated)} rows")
@@ -109,8 +125,32 @@ def main() -> int:
         for name, b, c, delta in failures:
             print(f"  {name}: {b:.4f} -> {c:.4f} ms ({delta:+.2f}%)")
         return 1
+    if not overhead_ok:
+        return 1
     print(f"bench gate passed{speedup_note(cur)}")
     return 0
+
+
+def instrumentation_overhead(cur: dict[str, float | None]) -> bool:
+    """Compare the instrumented warm select against the bare warm select
+    from the same run; print the overhead and return False if it exceeds
+    ``OVERHEAD_CAP_PCT``. Missing rows pass (older result files)."""
+    bare = cur.get("selection/select_one_warm_plan")
+    traced = cur.get("selection/select_one_warm_instrumented")
+    if not bare or traced is None or bare <= 0.0:
+        return True
+    overhead = (traced / bare - 1.0) * 100.0
+    print(
+        f"instrumentation overhead: warm_plan {bare:.4f} ms -> "
+        f"warm_instrumented {traced:.4f} ms ({overhead:+.2f}%, cap +{OVERHEAD_CAP_PCT:.1f}%)"
+    )
+    if overhead > OVERHEAD_CAP_PCT:
+        print(
+            f"FAIL: instrumented warm select is {overhead:.2f}% slower than the bare "
+            f"warm select (cap {OVERHEAD_CAP_PCT:.1f}%) — tracing must stay effectively free"
+        )
+        return False
+    return True
 
 
 def speedup_note(cur: dict[str, float | None]) -> str:

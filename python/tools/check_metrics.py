@@ -1,0 +1,239 @@
+#!/usr/bin/env python3
+"""Metrics-exposition check: run the serving stack's telemetry dump and
+validate both exporters — the Prometheus text exposition and the JSON
+snapshot — against the format rules and the required metric set.
+
+Usage:
+    python3 python/tools/check_metrics.py                # runs serve_zoo --metrics
+    python3 python/tools/check_metrics.py --from-file F  # validate a captured dump
+
+The producer (``cargo run --release --example serve_zoo -- --metrics``,
+or ``primsel metrics``) delimits the two payloads with markers:
+
+    === metrics: prometheus ===
+    <prometheus text exposition>
+    === metrics: json ===
+    <one-line JSON snapshot>
+    === metrics: end ===
+
+Checks, stdlib only:
+  * marker structure: all three markers present, in order, exactly once;
+  * every exposition line is a comment (# HELP / # TYPE) or a sample
+    matching ``name{labels} value``; names and label keys match the
+    Prometheus grammar; label values use only valid escapes;
+  * every sample's family has a # TYPE line, declared before samples;
+  * the required metric families for the serving stack are all present;
+  * summary families carry quantile/_sum/_count series;
+  * the JSON payload parses and matches the registry snapshot schema
+    ({"counters": [...], "gauges": [...], "histograms": [...]}, each
+    entry carrying name/labels plus its value fields).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+
+MARK_PROM = "=== metrics: prometheus ==="
+MARK_JSON = "=== metrics: json ==="
+MARK_END = "=== metrics: end ==="
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_KEY_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>-?(?:\d+(?:\.\d+)?(?:[eE][+-]?\d+)?|NaN|\+Inf|-Inf))$"
+)
+LABEL_RE = re.compile(r'^(?P<key>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<value>(?:[^"\\]|\\.)*)"$')
+
+# Every family the serving stack promises to export (underscore form;
+# summary families are matched by their base name).
+REQUIRED_FAMILIES = [
+    "primsel_queue_depth",
+    "primsel_queue_capacity",
+    "primsel_service_workers",
+    "primsel_tenant_admitted",
+    "primsel_tenant_rejected",
+    "primsel_tenant_served",
+    "primsel_cache_cost_hits",
+    "primsel_cache_cost_misses",
+    "primsel_cache_cost_hit_ratio",
+    "primsel_cache_plan_hits",
+    "primsel_cache_plan_misses",
+    "primsel_cache_plan_hit_ratio",
+    "primsel_cache_front_hits",
+    "primsel_cache_front_misses",
+    "primsel_cache_front_hit_ratio",
+    "primsel_health_state",
+    "primsel_health_drift",
+    "primsel_trace_stage_ms",
+    "primsel_recorder_requests",
+    "primsel_recorder_events",
+    "primsel_recorder_slow",
+]
+
+
+class CheckError(Exception):
+    pass
+
+
+def split_sections(text: str) -> tuple[str, str]:
+    lines = text.splitlines()
+    try:
+        i_prom = lines.index(MARK_PROM)
+        i_json = lines.index(MARK_JSON)
+        i_end = lines.index(MARK_END)
+    except ValueError as e:
+        raise CheckError(f"missing marker: {e}") from e
+    if not i_prom < i_json < i_end:
+        raise CheckError(
+            f"markers out of order: prometheus@{i_prom}, json@{i_json}, end@{i_end}"
+        )
+    for mark in (MARK_PROM, MARK_JSON, MARK_END):
+        if lines.count(mark) != 1:
+            raise CheckError(f"marker {mark!r} appears {lines.count(mark)} times")
+    prom = "\n".join(lines[i_prom + 1 : i_json])
+    blob = "\n".join(lines[i_json + 1 : i_end])
+    return prom, blob
+
+
+def family_of(name: str) -> str:
+    """Map a summary's _sum/_count series back to its base family."""
+    for suffix in ("_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def check_prometheus(text: str) -> dict[str, str]:
+    """Validate the exposition; return {family: type}."""
+    types: dict[str, str] = {}
+    samples: dict[str, int] = {}
+    summary_parts: dict[str, set[str]] = {}
+    for n, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge", "summary"):
+                raise CheckError(f"line {n}: malformed TYPE comment: {line!r}")
+            name = parts[2]
+            if not NAME_RE.match(name):
+                raise CheckError(f"line {n}: bad metric name {name!r}")
+            if name in types:
+                raise CheckError(f"line {n}: duplicate TYPE for {name}")
+            types[name] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP and other comments
+        m = SAMPLE_RE.match(line)
+        if not m:
+            raise CheckError(f"line {n}: not a valid sample line: {line!r}")
+        name = m.group("name")
+        quantile = False
+        if m.group("labels"):
+            for part in m.group("labels").split(","):
+                lm = LABEL_RE.match(part)
+                if not lm:
+                    raise CheckError(f"line {n}: bad label pair {part!r}")
+                if not LABEL_KEY_RE.match(lm.group("key")):
+                    raise CheckError(f"line {n}: bad label key {lm.group('key')!r}")
+                quantile = quantile or lm.group("key") == "quantile"
+        fam = family_of(name)
+        if fam not in types:
+            raise CheckError(f"line {n}: sample {name!r} precedes its # TYPE (family {fam})")
+        samples[fam] = samples.get(fam, 0) + 1
+        if types[fam] == "summary":
+            parts = summary_parts.setdefault(fam, set())
+            if name.endswith("_sum"):
+                parts.add("sum")
+            elif name.endswith("_count"):
+                parts.add("count")
+            elif quantile:
+                parts.add("quantile")
+    for fam, t in types.items():
+        if samples.get(fam, 0) == 0:
+            raise CheckError(f"family {fam} has a TYPE but no samples")
+        if t == "summary" and summary_parts.get(fam, set()) != {"quantile", "sum", "count"}:
+            raise CheckError(
+                f"summary {fam} is missing series: have {sorted(summary_parts.get(fam, set()))}"
+            )
+    missing = [f for f in REQUIRED_FAMILIES if f not in types]
+    if missing:
+        raise CheckError(f"required families absent from the exposition: {missing}")
+    return types
+
+
+def check_json(blob: str) -> None:
+    try:
+        doc = json.loads(blob)
+    except json.JSONDecodeError as e:
+        raise CheckError(f"JSON snapshot does not parse: {e}") from e
+    if not isinstance(doc, dict):
+        raise CheckError("JSON snapshot root must be an object")
+    for section in ("counters", "gauges", "histograms"):
+        arr = doc.get(section)
+        if not isinstance(arr, list):
+            raise CheckError(f"JSON snapshot missing array {section!r}")
+        for entry in arr:
+            if not isinstance(entry, dict):
+                raise CheckError(f"{section} entry is not an object: {entry!r}")
+            if not isinstance(entry.get("name"), str):
+                raise CheckError(f"{section} entry without a name: {entry!r}")
+            if not isinstance(entry.get("labels"), dict):
+                raise CheckError(f"{section} entry without labels: {entry!r}")
+            want = (
+                ("value",)
+                if section in ("counters", "gauges")
+                else ("count", "mean_ms", "p50_ms", "p95_ms", "max_ms", "sum_ms")
+            )
+            for field in want:
+                if not isinstance(entry.get(field), (int, float)):
+                    raise CheckError(f"{section} entry {entry['name']!r} missing {field!r}")
+    if not doc["counters"] or not doc["gauges"] or not doc["histograms"]:
+        raise CheckError("JSON snapshot has an empty section — the workload produced no metrics")
+
+
+def produce() -> str:
+    cmd = ["cargo", "run", "--release", "--example", "serve_zoo", "--", "--metrics"]
+    print(f"running: {' '.join(cmd)}")
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        raise CheckError(f"producer exited {proc.returncode}")
+    return proc.stdout
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--from-file",
+        help="validate a captured dump instead of running the example",
+    )
+    args = ap.parse_args()
+    try:
+        if args.from_file:
+            with open(args.from_file) as fh:
+                text = fh.read()
+        else:
+            text = produce()
+        prom, blob = split_sections(text)
+        types = check_prometheus(prom)
+        check_json(blob)
+    except CheckError as e:
+        print(f"FAIL: {e}")
+        return 1
+    print(
+        f"metrics check passed: {len(types)} families "
+        f"({sum(1 for t in types.values() if t == 'summary')} summaries), "
+        f"all {len(REQUIRED_FAMILIES)} required families present, JSON snapshot valid"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -95,6 +95,7 @@
 use crate::dataset::{self, calibration_sample};
 use crate::health::{self, HealthMonitor, HealthPolicy, PlatformHealth, PlatformMonitor};
 use crate::networks::Network;
+use crate::obs;
 use crate::par;
 use crate::perfmodel::model::{CostModel, FactorCorrected, LinCostModel};
 use crate::perfmodel::transfer::{robust_factors, MIN_CALIB_RATIOS};
@@ -214,6 +215,12 @@ pub struct SelectionRequest {
     /// How much of the report to assemble eagerly (default
     /// [`ReportDetail::Full`]).
     pub detail: ReportDetail,
+    /// Optional per-request trace: when set, the serving stack marks
+    /// per-stage timestamps into it (heap-free atomic stores, so the
+    /// instrumented warm path stays zero-alloc). `Service::admit`
+    /// attaches one automatically; direct callers opt in with
+    /// [`SelectionRequest::with_trace`].
+    pub trace: Option<obs::Trace>,
 }
 
 impl SelectionRequest {
@@ -224,6 +231,7 @@ impl SelectionRequest {
             platform: platform.to_string(),
             objective: Objective::MinTime,
             detail: ReportDetail::Full,
+            trace: None,
         }
     }
 
@@ -236,6 +244,12 @@ impl SelectionRequest {
     /// Override the report detail (builder style).
     pub fn with_detail(mut self, detail: ReportDetail) -> Self {
         self.detail = detail;
+        self
+    }
+
+    /// Attach a fresh [`obs::Trace`] (builder style).
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(obs::Trace::begin());
         self
     }
 }
@@ -279,6 +293,10 @@ pub struct SelectionReport {
     pub front: Option<FrontLookup>,
     /// Wall-clock this request spent inside its worker.
     pub wall_ms: f64,
+    /// The request's completed trace (a detached copy of the marks), when
+    /// the request carried one. Spans: [`obs::Stage::Admit`] →
+    /// [`obs::Stage::Done`].
+    pub trace: Option<obs::Trace>,
 }
 
 impl SelectionReport {
@@ -547,6 +565,23 @@ pub struct Coordinator {
     plan_hits: AtomicU64,
     /// Lifetime plan-cache misses (each one compiled a plan).
     plan_misses: AtomicU64,
+    /// Cached handles into the process-wide metrics registry (resolved
+    /// once here so the warm select path records lock-free).
+    obs: CoordObs,
+}
+
+/// Registry handles the coordinator records into on the hot path.
+struct CoordObs {
+    /// `primsel.trace.stage_ms{stage="solve"}`: SolveStart → SolveEnd.
+    solve_ms: obs::Histogram,
+}
+
+impl CoordObs {
+    fn resolve() -> Self {
+        Self {
+            solve_ms: obs::registry().histogram(obs::names::STAGE_MS, &[("stage", "solve")]),
+        }
+    }
 }
 
 impl Default for Coordinator {
@@ -567,6 +602,7 @@ impl Coordinator {
             plans: RwLock::new(HashMap::new()),
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
+            obs: CoordObs::resolve(),
         }
     }
 
@@ -1024,6 +1060,9 @@ impl Coordinator {
     /// cool-down has elapsed — and feeds the monitor's shadow sampler
     /// after solving.
     pub fn select_one(&self, req: &SelectionRequest) -> Result<SelectionReport> {
+        if let Some(t) = &req.trace {
+            t.mark(obs::Stage::SolveStart);
+        }
         let monitor = self.health.get(&req.platform);
         if let Some(mon) = &monitor {
             let recal = self.health_recal(&req.platform, mon);
@@ -1032,7 +1071,7 @@ impl Coordinator {
         // resolve the entry *after* admission: a successful quarantine
         // probe re-registers the serving cache
         let entry = self.entry(&req.platform)?;
-        let report = if req.objective.is_front_served() {
+        let mut report = if req.objective.is_front_served() {
             self.solve_via_front(&entry, req)?
         } else {
             self.solve_via_plan(&entry, req)?
@@ -1040,6 +1079,25 @@ impl Coordinator {
         if let Some(mon) = &monitor {
             let recal = self.health_recal(&req.platform, mon);
             mon.observe(&req.network, entry.cache.as_ref(), &recal);
+        }
+        if let Some(t) = &req.trace {
+            t.mark(obs::Stage::SolveEnd);
+            if let Some(ns) = t.span_ns(obs::Stage::SolveStart, obs::Stage::SolveEnd) {
+                self.obs.solve_ms.record_ns(ns);
+            }
+            // Service workers own the Done mark and the flight-recorder
+            // entry for queued requests; a trace with no Admit mark means
+            // a direct caller, so this request completes here.
+            if !t.has(obs::Stage::Admit) {
+                t.mark(obs::Stage::Done);
+                obs::flight_recorder().record_request(
+                    t,
+                    &req.platform,
+                    &req.network.name,
+                    "direct",
+                );
+            }
+            report.trace = Some(t.clone());
         }
         Ok(report)
     }
@@ -1200,6 +1258,9 @@ impl Coordinator {
         }
         let t0 = Instant::now();
         let (plan, _cached) = self.plan_for(&req.platform, entry, &req.network)?;
+        if let Some(t) = &req.trace {
+            t.mark(obs::Stage::PlanReady);
+        }
         let mut report = PLAN_SCRATCH.with(|cell| {
             let scratch = &mut *cell.borrow_mut();
             let view = match req.objective {
@@ -1209,6 +1270,9 @@ impl Coordinator {
                 }
                 other => unreachable!("front objective routed to solve_via_plan: {other:?}"),
             };
+            if let Some(t) = &req.trace {
+                t.mark(obs::Stage::Solved);
+            }
             let (network, platform) = report_names(req);
             SelectionReport {
                 network,
@@ -1224,6 +1288,7 @@ impl Coordinator {
                 peak_workspace_bytes: view.peak_workspace_bytes,
                 front: None,
                 wall_ms: 0.0,
+                trace: None,
             }
         });
         report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -1277,6 +1342,9 @@ impl Coordinator {
     ) -> Result<SelectionReport> {
         let t0 = Instant::now();
         let (front, cache_hit) = self.front_for(&req.platform, entry, &req.network)?;
+        if let Some(t) = &req.trace {
+            t.mark(obs::Stage::PlanReady);
+        }
         let point = match req.objective {
             Objective::FastestUnderBytes { budget_bytes } => {
                 front.fastest_under(budget_bytes).ok_or_else(|| {
@@ -1301,6 +1369,9 @@ impl Coordinator {
             }
             other => unreachable!("solve_via_front called with {other:?}"),
         };
+        if let Some(t) = &req.trace {
+            t.mark(obs::Stage::Solved);
+        }
         let (network, platform) = report_names(req);
         Ok(SelectionReport {
             network,
@@ -1318,6 +1389,7 @@ impl Coordinator {
                 front_points: front.len(),
             }),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            trace: None,
         })
     }
 }

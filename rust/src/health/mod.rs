@@ -92,16 +92,33 @@ impl HealthState {
     pub fn is_serving(self) -> bool {
         self != HealthState::Quarantined
     }
-}
 
-impl fmt::Display for HealthState {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(match self {
+    /// Stable lowercase name (rendered in stats tables and recorded in
+    /// flight-recorder transition events).
+    pub fn name(self) -> &'static str {
+        match self {
             HealthState::Healthy => "healthy",
             HealthState::Drifting => "drifting",
             HealthState::Recalibrating => "recalibrating",
             HealthState::Quarantined => "quarantined",
-        })
+        }
+    }
+
+    /// Numeric code for gauges (`primsel.health.state`): 0 healthy,
+    /// 1 drifting, 2 recalibrating, 3 quarantined.
+    pub fn code(self) -> u64 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Drifting => 1,
+            HealthState::Recalibrating => 2,
+            HealthState::Quarantined => 3,
+        }
+    }
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -435,7 +452,9 @@ impl PlatformMonitor {
                 && now >= s.not_before;
             if due {
                 s.busy = true;
+                let prev = s.health;
                 s.health = HealthState::Recalibrating;
+                self.note_transition(prev, s.health, s.drift);
                 s.attempt += 1;
             }
             (s.attempt - u64::from(due), due)
@@ -481,11 +500,13 @@ impl PlatformMonitor {
                     if !s.busy
                         && matches!(s.health, HealthState::Healthy | HealthState::Drifting)
                     {
+                        let prev = s.health;
                         s.health = if s.drift > self.policy.drift_band {
                             HealthState::Drifting
                         } else {
                             HealthState::Healthy
                         };
+                        self.note_transition(prev, s.health, s.drift);
                     }
                 }
             }
@@ -500,27 +521,32 @@ impl PlatformMonitor {
         let now = Instant::now();
         let mut s = sync::lock(&self.state);
         s.busy = false;
+        let prev = s.health;
         match outcome {
             Ok(()) => {
                 s.recalibrations += 1;
                 s.consecutive_failures = 0;
+                crate::obs::flight_recorder().record_recalibration(&self.platform, true, s.drift);
                 // the window compared against a model that no longer
                 // serves; its evidence is void
                 s.window.clear();
                 s.drift = 0.0;
                 s.health = HealthState::Healthy;
                 s.not_before = now;
+                self.note_transition(prev, s.health, s.drift);
                 Ok(())
             }
             Err(_msg) => {
                 s.recal_failures += 1;
                 s.consecutive_failures += 1;
+                crate::obs::flight_recorder().record_recalibration(&self.platform, false, s.drift);
                 if s.consecutive_failures >= self.policy.max_failures {
                     if s.consecutive_failures == self.policy.max_failures {
                         s.quarantines += 1;
                     }
                     s.health = HealthState::Quarantined;
                     s.not_before = now + self.policy.cool_down;
+                    self.note_transition(prev, s.health, s.drift);
                     Err(QuarantinedError {
                         platform: self.platform.clone(),
                         consecutive_failures: s.consecutive_failures,
@@ -530,9 +556,23 @@ impl PlatformMonitor {
                     s.health = HealthState::Drifting;
                     let shift = (s.consecutive_failures - 1).min(16);
                     s.not_before = now + self.policy.backoff * (1u32 << shift);
+                    self.note_transition(prev, s.health, s.drift);
                     Ok(())
                 }
             }
+        }
+    }
+
+    /// Record a health-state change as a structured flight-recorder
+    /// event (no-op when the state did not actually change).
+    fn note_transition(&self, from: HealthState, to: HealthState, drift: f64) {
+        if from != to {
+            crate::obs::flight_recorder().record_transition(
+                &self.platform,
+                from.name(),
+                to.name(),
+                drift,
+            );
         }
     }
 

@@ -25,6 +25,7 @@ pub mod health;
 pub mod layers;
 pub mod linalg;
 pub mod networks;
+pub mod obs;
 pub mod par;
 pub mod pbqp;
 pub mod perfmodel;

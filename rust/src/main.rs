@@ -7,6 +7,9 @@
 //!       run the full Figure-2 pipeline on one network
 //!   serve [--capacity N] [--workers N] [--heavy N] [--light N]
 //!       drive the admission-controlled service with a mixed-tenant workload
+//!   metrics
+//!       run a small serving workload, then print the Prometheus
+//!       exposition, the JSON snapshot, and the flight recorder
 //!   profile [--runs N]
 //!       time the real Pallas kernel artifacts on this host via PJRT
 //!   train --platform <p> --kind <nn1|nn2|dlt_nn1|dlt_nn2>
@@ -34,6 +37,7 @@ fn main() -> Result<()> {
         "exp" => cmd_exp(&flags),
         "select" => cmd_select(&flags),
         "serve" => cmd_serve(&flags),
+        "metrics" => cmd_metrics(&flags),
         "profile" => cmd_profile(&flags),
         "train" => cmd_train(&flags),
         "networks" => cmd_networks(),
@@ -76,6 +80,7 @@ fn print_usage() {
          \x20 select --network <name> --platform <p> [--source model|profile]\n\
          \x20 serve [--capacity N] [--workers N] [--heavy N] [--light N]\n\
          \x20                                                    mixed-tenant serving demo\n\
+         \x20 metrics [--requests N]                             serve a workload, dump telemetry\n\
          \x20 profile [--runs N]                                  time real kernels on this host\n\
          \x20 train --platform <p> --kind <kind>                  (re)train a model\n\
          \x20 networks                                            list the network zoo\n\
@@ -236,6 +241,68 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ticket.wait()?;
     }
     println!("{}", service.stats().render());
+    service.shutdown();
+    Ok(())
+}
+
+/// Serve a small mixed-tenant workload, then dump the unified
+/// telemetry: the Prometheus exposition and JSON snapshot of the
+/// process metrics registry (marker-delimited so tools can split the
+/// stream), followed by the flight recorder's slowest-request and
+/// health-event tables.
+fn cmd_metrics(flags: &HashMap<String, String>) -> Result<()> {
+    use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
+    use primsel::health::HealthPolicy;
+    use primsel::selection::CostSource;
+    use primsel::service::{Service, ServiceConfig};
+    use primsel::simulator::{machine, Simulator};
+    use std::sync::Arc;
+
+    let requests: usize = flags
+        .get("requests")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(12);
+    let coord = Coordinator::shared();
+    // monitor one platform so the health gauges have a row to publish
+    let target: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::intel_i9_9900k()));
+    coord.monitor_platform("intel", target, HealthPolicy::default().with_sampling(0.25, 11))?;
+    let service = Service::new(
+        Arc::clone(&coord),
+        ServiceConfig::default().with_capacity(16).with_workers(2),
+    );
+    service.register_tenant("interactive", 4.0, 2)?;
+    service.register_tenant("batch", 1.0, 2)?;
+
+    let nets = networks::selection_networks();
+    let platforms = ["intel", "arm"];
+    let mut tickets = Vec::new();
+    for i in 0..requests {
+        let tenant = if i % 2 == 0 { "interactive" } else { "batch" };
+        let req =
+            SelectionRequest::new(nets[i % nets.len()].clone(), platforms[i % platforms.len()]);
+        tickets.push(
+            service
+                .submit(tenant, req)
+                .map_err(|e| anyhow::anyhow!("admission failed: {e}"))?,
+        );
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    // one budget query so the Pareto-front cache has traffic too
+    let req = SelectionRequest::new(networks::vgg(16), "intel").with_objective(
+        Objective::FastestUnderBytes { budget_bytes: 8.0 * 1024.0 * 1024.0 },
+    );
+    coord.submit(&req)?;
+
+    let reg = service.metrics();
+    println!("=== metrics: prometheus ===");
+    print!("{}", reg.render_prometheus());
+    println!("=== metrics: json ===");
+    println!("{}", reg.snapshot_json().dump());
+    println!("=== metrics: end ===");
+    println!("\n{}", primsel::obs::flight_recorder().render());
     service.shutdown();
     Ok(())
 }

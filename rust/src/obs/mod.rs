@@ -1,0 +1,89 @@
+//! Unified observability for the serving stack: a process-wide metrics
+//! [`Registry`], heap-free per-request [`Trace`]s, and a lock-free
+//! [`FlightRecorder`] for postmortems.
+//!
+//! The three pieces cooperate: requests carry a [`Trace`] from admission
+//! through the DRR queue, worker pickup, and `Coordinator::select_one`;
+//! completed traces aggregate into per-stage histograms in the registry
+//! and land in the flight recorder (always keeping the slowest);
+//! platform health transitions and recalibration outcomes are recorded
+//! as structured events. `Service::metrics()` publishes scrape-time
+//! gauges (queue depth, cache hit ratios, health states) into the same
+//! registry, which exports as Prometheus text or a JSON snapshot.
+//!
+//! Everything on the warm path — marking a trace stage, recording a
+//! histogram sample, writing a flight record — is allocation-free and
+//! lock-free, pinned by `rust/tests/alloc_counter.rs`.
+
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use recorder::{FlightRecord, FlightRecorder, RecordKind};
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use trace::{Stage, Trace, N_STAGES};
+
+use std::sync::OnceLock;
+
+/// The process-wide metrics registry. Handles registered here aggregate
+/// across every `Service` / `Coordinator` in the process.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// The process-wide flight recorder (default ring shape, 10 ms slow
+/// threshold — adjustable via [`FlightRecorder::set_slow_threshold`]).
+pub fn flight_recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(FlightRecorder::with_defaults)
+}
+
+/// The stable dotted metric-name catalog. Every name the serving stack
+/// registers lives here so exporters, tools (`check_metrics.py`), and
+/// docs agree on one vocabulary.
+pub mod names {
+    /// Per-stage latency histograms, label `stage` ∈ {`queue`, `solve`, `e2e`}.
+    pub const STAGE_MS: &str = "primsel.trace.stage_ms";
+    /// Admission-queue depth at scrape time (gauge).
+    pub const QUEUE_DEPTH: &str = "primsel.queue.depth";
+    /// Admission-queue capacity (gauge).
+    pub const QUEUE_CAPACITY: &str = "primsel.queue.capacity";
+    /// Worker-pool size (gauge).
+    pub const WORKERS: &str = "primsel.service.workers";
+    /// Per-tenant admitted requests, label `tenant` (counter).
+    pub const TENANT_ADMITTED: &str = "primsel.tenant.admitted";
+    /// Per-tenant rejected requests, label `tenant` (counter).
+    pub const TENANT_REJECTED: &str = "primsel.tenant.rejected";
+    /// Per-tenant served requests, label `tenant` (counter).
+    pub const TENANT_SERVED: &str = "primsel.tenant.served";
+    /// Cost-cache hits since service start, label `platform` (counter).
+    pub const COST_HITS: &str = "primsel.cache.cost.hits";
+    /// Cost-cache misses since service start, label `platform` (counter).
+    pub const COST_MISSES: &str = "primsel.cache.cost.misses";
+    /// Cost-cache hit ratio, label `platform` (gauge, 0..1).
+    pub const COST_HIT_RATIO: &str = "primsel.cache.cost.hit_ratio";
+    /// Compiled-plan cache hits (counter).
+    pub const PLAN_HITS: &str = "primsel.cache.plan.hits";
+    /// Compiled-plan cache misses (counter).
+    pub const PLAN_MISSES: &str = "primsel.cache.plan.misses";
+    /// Compiled-plan cache hit ratio (gauge, 0..1).
+    pub const PLAN_HIT_RATIO: &str = "primsel.cache.plan.hit_ratio";
+    /// Pareto-front cache hits (counter).
+    pub const FRONT_HITS: &str = "primsel.cache.front.hits";
+    /// Pareto-front cache misses (counter).
+    pub const FRONT_MISSES: &str = "primsel.cache.front.misses";
+    /// Pareto-front cache hit ratio (gauge, 0..1).
+    pub const FRONT_HIT_RATIO: &str = "primsel.cache.front.hit_ratio";
+    /// Health state code, label `platform` (gauge: 0 healthy, 1
+    /// drifting, 2 recalibrating, 3 quarantined).
+    pub const HEALTH_STATE: &str = "primsel.health.state";
+    /// Latest drift score, label `platform` (gauge).
+    pub const HEALTH_DRIFT: &str = "primsel.health.drift";
+    /// Flight-recorder lifetime request count (counter).
+    pub const RECORDER_REQUESTS: &str = "primsel.recorder.requests";
+    /// Flight-recorder lifetime health-event count (counter).
+    pub const RECORDER_EVENTS: &str = "primsel.recorder.events";
+    /// Flight-recorder lifetime slow-capture count (counter).
+    pub const RECORDER_SLOW: &str = "primsel.recorder.slow";
+}

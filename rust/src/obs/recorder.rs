@@ -1,0 +1,616 @@
+//! Flight recorder: a lock-free fixed-capacity ring of completed
+//! request traces plus structured health events, with always-keep-slowest
+//! retention for postmortems.
+//!
+//! Records are encoded into a fixed `[u64; 17]` word block (kind, index,
+//! total span, the seven trace marks, three 16-byte inline tags, one
+//! value word) and written into per-slot seqlocks: the writer CAS-claims
+//! a slot (even → odd sequence), stores the words relaxed, and releases
+//! (odd → even); readers retry on a torn sequence. Recording therefore
+//! never allocates and never blocks, which keeps the instrumented warm
+//! select path inside the zero-allocation pin. The slow ring is the one
+//! exception: keep-slowest eviction needs a find-min, so it sits behind
+//! a `Mutex` — but its `Vec` is pre-reserved at construction and every
+//! insert is a push-within-capacity or an in-place replace, so even the
+//! slow path stays allocation-free.
+
+use crate::config::Json;
+use crate::obs::trace::{Stage, Trace, N_STAGES};
+use crate::report::Table;
+use crate::sync;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+use std::sync::atomic::{fence, AtomicU64};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed per-record word count (see the word layout constants below).
+const WORDS: usize = 17;
+const W_KIND: usize = 0;
+const W_INDEX: usize = 1;
+const W_TOTAL: usize = 2;
+const W_MARKS: usize = 3; // .. W_MARKS + N_STAGES
+const W_TAG_A: usize = 10; // platform
+const W_TAG_B: usize = 12; // network / previous state / outcome
+const W_TAG_C: usize = 14; // tenant / new state
+const W_VALUE: usize = 16; // f64 bits (drift score)
+
+/// What a [`FlightRecord`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// A completed selection request (trace marks populated).
+    Request = 0,
+    /// A platform health-state transition.
+    Transition = 1,
+    /// A recalibration outcome (ok / failed).
+    Recalibration = 2,
+}
+
+impl RecordKind {
+    /// Stable lowercase name for tables and JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecordKind::Request => "request",
+            RecordKind::Transition => "transition",
+            RecordKind::Recalibration => "recalibration",
+        }
+    }
+
+    fn from_word(w: u64) -> RecordKind {
+        match w {
+            0 => RecordKind::Request,
+            1 => RecordKind::Transition,
+            _ => RecordKind::Recalibration,
+        }
+    }
+}
+
+/// A decoded recorder entry. Field meaning depends on [`RecordKind`]:
+/// for requests, `network`/`tenant` are the request's network name and
+/// tenant lane; for transitions they hold the previous and new health
+/// state names; for recalibrations `network` holds `"ok"` / `"failed"`.
+#[derive(Debug, Clone)]
+pub struct FlightRecord {
+    pub kind: RecordKind,
+    /// Monotonic per-ring sequence number (drain watermarks key on it).
+    pub index: u64,
+    /// Wall span covered by the trace marks, nanoseconds (requests).
+    pub total_ns: u64,
+    /// Per-stage nanosecond offsets (requests; `None` = stage unset).
+    pub marks: [Option<u64>; N_STAGES],
+    pub platform: String,
+    pub network: String,
+    pub tenant: String,
+    /// Drift score at the event (transitions / recalibrations).
+    pub value: f64,
+}
+
+impl FlightRecord {
+    /// Nanosecond offset of `stage`, if marked.
+    pub fn stage_ns(&self, stage: Stage) -> Option<u64> {
+        self.marks[stage as usize]
+    }
+
+    /// Millisecond span between two marked stages (saturating).
+    pub fn span_ms(&self, from: Stage, to: Stage) -> Option<f64> {
+        let (a, b) = (self.stage_ns(from)?, self.stage_ns(to)?);
+        Some(b.saturating_sub(a) as f64 / 1e6)
+    }
+
+    fn decode(words: [u64; WORDS]) -> FlightRecord {
+        let mut marks = [None; N_STAGES];
+        for (i, m) in marks.iter_mut().enumerate() {
+            let w = words[W_MARKS + i];
+            *m = if w == 0 { None } else { Some(w - 1) };
+        }
+        FlightRecord {
+            kind: RecordKind::from_word(words[W_KIND]),
+            index: words[W_INDEX],
+            total_ns: words[W_TOTAL],
+            marks,
+            platform: tag_str(words[W_TAG_A], words[W_TAG_A + 1]),
+            network: tag_str(words[W_TAG_B], words[W_TAG_B + 1]),
+            tenant: tag_str(words[W_TAG_C], words[W_TAG_C + 1]),
+            value: f64::from_bits(words[W_VALUE]),
+        }
+    }
+
+    fn json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
+        obj.insert("index".to_string(), Json::Num(self.index as f64));
+        obj.insert("total_ms".to_string(), Json::Num(self.total_ns as f64 / 1e6));
+        obj.insert("platform".to_string(), Json::Str(self.platform.clone()));
+        obj.insert("network".to_string(), Json::Str(self.network.clone()));
+        obj.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
+        obj.insert("value".to_string(), Json::Num(self.value));
+        let mut marks = BTreeMap::new();
+        for s in Stage::ALL {
+            if let Some(ns) = self.stage_ns(s) {
+                marks.insert(s.name().to_string(), Json::Num(ns as f64 / 1e6));
+            }
+        }
+        obj.insert("marks_ms".to_string(), Json::Obj(marks));
+        Json::Obj(obj)
+    }
+}
+
+/// Inline 16-byte tag: truncate at a char boundary, little-endian pack.
+fn tag_words(s: &str) -> [u64; 2] {
+    let mut buf = [0u8; 16];
+    let mut n = s.len().min(16);
+    while !s.is_char_boundary(n) {
+        n -= 1;
+    }
+    buf[..n].copy_from_slice(&s.as_bytes()[..n]);
+    [
+        u64::from_le_bytes(buf[..8].try_into().unwrap()),
+        u64::from_le_bytes(buf[8..].try_into().unwrap()),
+    ]
+}
+
+fn tag_str(w0: u64, w1: u64) -> String {
+    let mut buf = [0u8; 16];
+    buf[..8].copy_from_slice(&w0.to_le_bytes());
+    buf[8..].copy_from_slice(&w1.to_le_bytes());
+    let n = buf.iter().position(|&b| b == 0).unwrap_or(16);
+    String::from_utf8_lossy(&buf[..n]).into_owned()
+}
+
+/// One seqlock-protected record slot.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn write(&self, words: &[u64; WORDS]) {
+        loop {
+            let s = self.seq.load(Acquire);
+            if s & 1 == 0
+                && self
+                    .seq
+                    .compare_exchange_weak(s, s + 1, Acquire, Relaxed)
+                    .is_ok()
+            {
+                for (w, v) in self.words.iter().zip(words.iter()) {
+                    w.store(*v, Relaxed);
+                }
+                self.seq.store(s + 2, Release);
+                return;
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    fn read(&self) -> Option<[u64; WORDS]> {
+        for _ in 0..8 {
+            let s1 = self.seq.load(Acquire);
+            if s1 == 0 {
+                return None; // never written
+            }
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue; // write in flight
+            }
+            let words: [u64; WORDS] = std::array::from_fn(|i| self.words[i].load(Relaxed));
+            fence(Acquire);
+            if self.seq.load(Relaxed) == s1 {
+                return Some(words);
+            }
+        }
+        None // persistently torn; skip this slot
+    }
+}
+
+/// The recorder proper. One process-wide instance lives behind
+/// [`crate::obs::flight_recorder`]; standalone instances serve tests.
+pub struct FlightRecorder {
+    /// Most recent completed requests (seqlock ring, overwrites oldest).
+    recent: Vec<Slot>,
+    head: AtomicU64,
+    /// Health transitions + recalibration outcomes (separate ring so
+    /// request traffic cannot evict rare events).
+    events: Vec<Slot>,
+    events_head: AtomicU64,
+    events_drained: AtomicU64,
+    /// Keep-slowest capture of requests at or above the threshold.
+    slow: Mutex<Vec<[u64; WORDS]>>,
+    slow_cap: usize,
+    slow_captured: AtomicU64,
+    slow_threshold_ns: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// Recorder with explicit ring capacities (each ≥ 1).
+    pub fn new(recent_cap: usize, slow_cap: usize, events_cap: usize) -> Self {
+        assert!(recent_cap >= 1 && slow_cap >= 1 && events_cap >= 1);
+        Self {
+            recent: (0..recent_cap).map(|_| Slot::empty()).collect(),
+            head: AtomicU64::new(0),
+            events: (0..events_cap).map(|_| Slot::empty()).collect(),
+            events_head: AtomicU64::new(0),
+            events_drained: AtomicU64::new(0),
+            slow: Mutex::new(Vec::with_capacity(slow_cap)),
+            slow_cap,
+            slow_captured: AtomicU64::new(0),
+            slow_threshold_ns: AtomicU64::new(10_000_000), // 10 ms
+        }
+    }
+
+    /// Default shape for the process-wide recorder: 256 recent requests,
+    /// 32 slowest, 256 health events, 10 ms slow threshold.
+    pub fn with_defaults() -> Self {
+        Self::new(256, 32, 256)
+    }
+
+    /// Requests recorded over the recorder's lifetime.
+    pub fn requests_recorded(&self) -> u64 {
+        self.head.load(Relaxed)
+    }
+
+    /// Health events recorded over the recorder's lifetime.
+    pub fn events_recorded(&self) -> u64 {
+        self.events_head.load(Relaxed)
+    }
+
+    /// Requests that crossed the slow threshold (including ones later
+    /// evicted by slower arrivals).
+    pub fn slow_captured(&self) -> u64 {
+        self.slow_captured.load(Relaxed)
+    }
+
+    /// Set the slow-capture threshold.
+    pub fn set_slow_threshold(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.slow_threshold_ns.store(ns, Relaxed);
+    }
+
+    /// Current slow-capture threshold.
+    pub fn slow_threshold(&self) -> Duration {
+        Duration::from_nanos(self.slow_threshold_ns.load(Relaxed))
+    }
+
+    fn push(ring: &[Slot], head: &AtomicU64, words: &mut [u64; WORDS]) -> u64 {
+        let idx = head.fetch_add(1, Relaxed);
+        words[W_INDEX] = idx;
+        ring[(idx % ring.len() as u64) as usize].write(words);
+        idx
+    }
+
+    /// Record a completed request trace. Lock-free and allocation-free;
+    /// requests whose total span meets the slow threshold are also
+    /// retained in the keep-slowest ring.
+    pub fn record_request(&self, trace: &Trace, platform: &str, network: &str, tenant: &str) {
+        let mut words = [0u64; WORDS];
+        words[W_KIND] = RecordKind::Request as u64;
+        let total = trace.total_ns();
+        words[W_TOTAL] = total;
+        let marks = trace.mark_words();
+        words[W_MARKS..W_MARKS + N_STAGES].copy_from_slice(&marks);
+        let [a0, a1] = tag_words(platform);
+        words[W_TAG_A] = a0;
+        words[W_TAG_A + 1] = a1;
+        let [b0, b1] = tag_words(network);
+        words[W_TAG_B] = b0;
+        words[W_TAG_B + 1] = b1;
+        let [c0, c1] = tag_words(tenant);
+        words[W_TAG_C] = c0;
+        words[W_TAG_C + 1] = c1;
+        Self::push(&self.recent, &self.head, &mut words);
+        if total >= self.slow_threshold_ns.load(Relaxed) {
+            self.keep_slow(words);
+        }
+    }
+
+    /// Record a platform health-state transition as a structured event.
+    pub fn record_transition(
+        &self,
+        platform: &str,
+        from: &'static str,
+        to: &'static str,
+        drift: f64,
+    ) {
+        let mut words = [0u64; WORDS];
+        words[W_KIND] = RecordKind::Transition as u64;
+        let [a0, a1] = tag_words(platform);
+        words[W_TAG_A] = a0;
+        words[W_TAG_A + 1] = a1;
+        let [b0, b1] = tag_words(from);
+        words[W_TAG_B] = b0;
+        words[W_TAG_B + 1] = b1;
+        let [c0, c1] = tag_words(to);
+        words[W_TAG_C] = c0;
+        words[W_TAG_C + 1] = c1;
+        words[W_VALUE] = drift.to_bits();
+        Self::push(&self.events, &self.events_head, &mut words);
+    }
+
+    /// Record a recalibration outcome as a structured event.
+    pub fn record_recalibration(&self, platform: &str, ok: bool, drift: f64) {
+        let mut words = [0u64; WORDS];
+        words[W_KIND] = RecordKind::Recalibration as u64;
+        let [a0, a1] = tag_words(platform);
+        words[W_TAG_A] = a0;
+        words[W_TAG_A + 1] = a1;
+        let [b0, b1] = tag_words(if ok { "ok" } else { "failed" });
+        words[W_TAG_B] = b0;
+        words[W_TAG_B + 1] = b1;
+        words[W_VALUE] = drift.to_bits();
+        Self::push(&self.events, &self.events_head, &mut words);
+    }
+
+    fn keep_slow(&self, words: [u64; WORDS]) {
+        self.slow_captured.fetch_add(1, Relaxed);
+        let mut slow = sync::lock(&self.slow);
+        if slow.len() < self.slow_cap {
+            slow.push(words); // within pre-reserved capacity: no alloc
+            return;
+        }
+        let (mut min_i, mut min_t) = (0usize, u64::MAX);
+        for (i, w) in slow.iter().enumerate() {
+            if w[W_TOTAL] < min_t {
+                min_t = w[W_TOTAL];
+                min_i = i;
+            }
+        }
+        if words[W_TOTAL] > min_t {
+            slow[min_i] = words;
+        }
+    }
+
+    /// Decode the recent-request ring, oldest first. Allocates; slots
+    /// torn by concurrent writers are skipped.
+    pub fn snapshot(&self) -> Vec<FlightRecord> {
+        let mut out: Vec<FlightRecord> = self
+            .recent
+            .iter()
+            .filter_map(Slot::read)
+            .map(FlightRecord::decode)
+            .collect();
+        out.sort_by_key(|r| r.index);
+        out
+    }
+
+    /// The retained slowest requests, slowest first.
+    pub fn slow_snapshot(&self) -> Vec<FlightRecord> {
+        let slow = sync::lock(&self.slow);
+        let mut out: Vec<FlightRecord> = slow.iter().copied().map(FlightRecord::decode).collect();
+        out.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.index.cmp(&b.index)));
+        out
+    }
+
+    /// Decode the health-event ring, oldest first.
+    pub fn events_snapshot(&self) -> Vec<FlightRecord> {
+        let mut out: Vec<FlightRecord> = self
+            .events
+            .iter()
+            .filter_map(Slot::read)
+            .map(FlightRecord::decode)
+            .collect();
+        out.sort_by_key(|r| r.index);
+        out
+    }
+
+    /// Health events recorded since the previous drain (watermark moves
+    /// forward; events evicted from the ring before a drain are lost).
+    pub fn drain_events(&self) -> Vec<FlightRecord> {
+        let mark = self
+            .events_drained
+            .swap(self.events_head.load(Relaxed), Relaxed);
+        self.events_snapshot()
+            .into_iter()
+            .filter(|r| r.index >= mark)
+            .collect()
+    }
+
+    /// Rendered tables: slowest retained requests + health events.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(
+            "flight recorder — slowest requests",
+            &["#", "platform", "network", "tenant", "total ms", "queue ms", "solve ms"],
+        );
+        for r in self.slow_snapshot() {
+            t.row(vec![
+                r.index.to_string(),
+                r.platform.clone(),
+                r.network.clone(),
+                r.tenant.clone(),
+                format!("{:.3}", r.total_ns as f64 / 1e6),
+                r.span_ms(Stage::Admit, Stage::Dispatch)
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                r.span_ms(Stage::SolveStart, Stage::SolveEnd)
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        out.push_str(&t.render());
+        let events = self.events_snapshot();
+        if !events.is_empty() {
+            let mut t = Table::new(
+                "flight recorder — health events",
+                &["#", "kind", "platform", "from/outcome", "to", "drift"],
+            );
+            for r in events {
+                t.row(vec![
+                    r.index.to_string(),
+                    r.kind.name().to_string(),
+                    r.platform.clone(),
+                    r.network.clone(),
+                    r.tenant.clone(),
+                    format!("{:.3}", r.value),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// JSON dump of all three rings plus lifetime counters.
+    pub fn snapshot_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert(
+            "recent".to_string(),
+            Json::Arr(self.snapshot().iter().map(FlightRecord::json).collect()),
+        );
+        root.insert(
+            "slow".to_string(),
+            Json::Arr(self.slow_snapshot().iter().map(FlightRecord::json).collect()),
+        );
+        root.insert(
+            "events".to_string(),
+            Json::Arr(self.events_snapshot().iter().map(FlightRecord::json).collect()),
+        );
+        let mut counts = BTreeMap::new();
+        counts.insert(
+            "requests".to_string(),
+            Json::Num(self.requests_recorded() as f64),
+        );
+        counts.insert(
+            "events".to_string(),
+            Json::Num(self.events_recorded() as f64),
+        );
+        counts.insert(
+            "slow".to_string(),
+            Json::Num(self.slow_captured() as f64),
+        );
+        root.insert("counts".to_string(), Json::Obj(counts));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip_and_truncate_at_char_boundaries() {
+        for s in ["", "intel", "a-platform-name!", "exactly-16-bytes"] {
+            let [w0, w1] = tag_words(s);
+            assert_eq!(tag_str(w0, w1), s);
+        }
+        // 17-byte string truncates to 16
+        let [w0, w1] = tag_words("seventeen-bytes-x");
+        assert_eq!(tag_str(w0, w1), "seventeen-bytes-");
+        // multibyte char straddling the cut is dropped whole
+        let s = "αβγδεζηrole"; // 2-byte greek letters
+        let [w0, w1] = tag_words(s);
+        let got = tag_str(w0, w1);
+        assert!(s.starts_with(&got));
+        assert!(got.len() <= 16);
+    }
+
+    #[test]
+    fn request_records_round_trip_through_the_ring() {
+        let rec = FlightRecorder::new(4, 2, 4);
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::Admit, 1_000);
+        t.mark_at_ns(Stage::Done, 2_000_000);
+        rec.record_request(&t, "intel", "vgg16", "interactive");
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 1);
+        let r = &snap[0];
+        assert_eq!(r.kind, RecordKind::Request);
+        assert_eq!(r.platform, "intel");
+        assert_eq!(r.network, "vgg16");
+        assert_eq!(r.tenant, "interactive");
+        assert_eq!(r.stage_ns(Stage::Admit), Some(1_000));
+        assert_eq!(r.stage_ns(Stage::Dispatch), None);
+        assert_eq!(r.total_ns, 1_999_000);
+    }
+
+    #[test]
+    fn recent_ring_overwrites_oldest_but_slow_ring_keeps_slowest() {
+        let rec = FlightRecorder::new(4, 3, 4);
+        rec.set_slow_threshold(Duration::ZERO);
+        let totals_ms = [10u64, 50, 20, 90, 30, 70, 40, 60];
+        for &ms in &totals_ms {
+            let t = Trace::begin();
+            t.mark_at_ns(Stage::Admit, 0);
+            t.mark_at_ns(Stage::Done, ms * 1_000_000);
+            rec.record_request(&t, "p", "n", "t");
+        }
+        // recent ring holds the last 4 records
+        let recent = rec.snapshot();
+        assert_eq!(recent.len(), 4);
+        let kept: Vec<u64> = recent.iter().map(|r| r.total_ns / 1_000_000).collect();
+        assert_eq!(kept, vec![30, 70, 40, 60]);
+        // slow ring holds the 3 slowest ever seen
+        let slow: Vec<u64> = rec
+            .slow_snapshot()
+            .iter()
+            .map(|r| r.total_ns / 1_000_000)
+            .collect();
+        assert_eq!(slow, vec![90, 70, 60]);
+        assert_eq!(rec.slow_captured(), totals_ms.len() as u64);
+        assert_eq!(rec.requests_recorded(), totals_ms.len() as u64);
+    }
+
+    #[test]
+    fn slow_threshold_filters_fast_requests() {
+        let rec = FlightRecorder::new(4, 4, 4);
+        rec.set_slow_threshold(Duration::from_millis(5));
+        for ms in [1u64, 9] {
+            let t = Trace::begin();
+            t.mark_at_ns(Stage::Admit, 0);
+            t.mark_at_ns(Stage::Done, ms * 1_000_000);
+            rec.record_request(&t, "p", "n", "t");
+        }
+        assert_eq!(rec.slow_captured(), 1);
+        assert_eq!(rec.slow_snapshot().len(), 1);
+        assert_eq!(rec.requests_recorded(), 2);
+    }
+
+    #[test]
+    fn events_record_and_drain_with_a_watermark() {
+        let rec = FlightRecorder::new(2, 2, 8);
+        rec.record_transition("arm-live", "healthy", "drifting", 1.25);
+        rec.record_recalibration("arm-live", false, 2.5);
+        let first = rec.drain_events();
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].kind, RecordKind::Transition);
+        assert_eq!(first[0].network, "healthy");
+        assert_eq!(first[0].tenant, "drifting");
+        assert!((first[0].value - 1.25).abs() < 1e-12);
+        assert_eq!(first[1].kind, RecordKind::Recalibration);
+        assert_eq!(first[1].network, "failed");
+        assert!(rec.drain_events().is_empty());
+        rec.record_transition("arm-live", "drifting", "quarantined", 9.0);
+        let second = rec.drain_events();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].tenant, "quarantined");
+        // full snapshot still shows everything
+        assert_eq!(rec.events_snapshot().len(), 3);
+        let rendered = rec.render();
+        assert!(rendered.contains("health events"));
+        assert!(rendered.contains("quarantined"));
+    }
+
+    #[test]
+    fn recorder_json_parses() {
+        let rec = FlightRecorder::new(2, 2, 2);
+        rec.set_slow_threshold(Duration::ZERO);
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::SolveStart, 0);
+        t.mark_at_ns(Stage::SolveEnd, 500_000);
+        rec.record_request(&t, "intel", "alexnet", "direct");
+        rec.record_transition("intel", "healthy", "drifting", 0.9);
+        let parsed = Json::parse(&rec.snapshot_json().dump()).expect("valid JSON");
+        assert_eq!(parsed.get("recent").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("events").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.get("counts").unwrap().get("requests").unwrap().as_f64().unwrap(),
+            1.0
+        );
+    }
+}

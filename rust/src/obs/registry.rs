@@ -1,0 +1,463 @@
+//! Process-wide metrics registry: counters, gauges, and latency
+//! histograms under stable dotted names with static label sets.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones; registration (`counter`/`gauge`/`histogram`) is get-or-create
+//! and may allocate, so hot paths cache their handles once and then
+//! update lock-free. Two exporters: Prometheus text exposition
+//! ([`Registry::render_prometheus`]) and a JSON snapshot
+//! ([`Registry::snapshot_json`] on the hand-rolled [`config::Json`]).
+
+use crate::config::Json;
+use crate::service::{HistogramSnapshot, LatencyHistogram};
+use crate::sync;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Monotonic counter handle. Cloning shares the underlying cell.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    /// Overwrite with an absolute value — scrape-time publishing of a
+    /// monotonic count maintained elsewhere (tenant counters, cache
+    /// hit/miss totals).
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Point-in-time gauge handle storing an `f64` as bits.
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+/// Latency histogram handle (shared [`LatencyHistogram`]). Recording is
+/// lock-free and allocation-free; snapshotting allocates.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<LatencyHistogram>);
+
+impl Histogram {
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        self.0.record(d);
+    }
+
+    /// Record a sample given in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.0.record(Duration::from_nanos(ns));
+    }
+
+    /// Quantile snapshot (count, mean, p50, p95, max).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.0.snapshot()
+    }
+}
+
+#[derive(Clone)]
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+impl Cell {
+    /// Prometheus type keyword for this cell.
+    fn kind(&self) -> &'static str {
+        match self {
+            Cell::Counter(_) => "counter",
+            Cell::Gauge(_) => "gauge",
+            Cell::Histogram(_) => "summary",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    cell: Cell,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<Entry>,
+    /// `name + labels` composite key → index into `entries`.
+    index: HashMap<String, usize>,
+    /// Per-name type pin: one dotted name is one metric type.
+    kinds: HashMap<String, &'static str>,
+}
+
+/// The registry proper. One process-wide instance lives behind
+/// [`crate::obs::registry`]; standalone instances serve unit tests.
+#[derive(Default)]
+pub struct Registry {
+    inner: RwLock<Inner>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> String {
+        let mut k = String::from(name);
+        for (lk, lv) in labels {
+            k.push('\u{1}');
+            k.push_str(lk);
+            k.push('\u{2}');
+            k.push_str(lv);
+        }
+        k
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Cell,
+    ) -> Cell {
+        let key = Self::key(name, labels);
+        {
+            let inner = sync::read(&self.inner);
+            if let Some(&i) = inner.index.get(&key) {
+                return inner.entries[i].cell.clone();
+            }
+        }
+        let mut inner = sync::write(&self.inner);
+        if let Some(&i) = inner.index.get(&key) {
+            return inner.entries[i].cell.clone();
+        }
+        let cell = make();
+        let prior = inner.kinds.entry(name.to_string()).or_insert_with(|| cell.kind());
+        assert_eq!(
+            *prior,
+            cell.kind(),
+            "metric {name:?} already registered as a {prior}"
+        );
+        let idx = inner.entries.len();
+        inner.entries.push(Entry {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            cell: cell.clone(),
+        });
+        inner.index.insert(key, idx);
+        cell
+    }
+
+    /// Get or register a counter under `name` + `labels`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.get_or_insert(name, labels, || Cell::Counter(Arc::new(AtomicU64::new(0)))) {
+            Cell::Counter(c) => Counter(c),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or register a gauge under `name` + `labels`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.get_or_insert(name, labels, || Cell::Gauge(Arc::new(AtomicU64::new(0)))) {
+            Cell::Gauge(g) => Gauge(g),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or register a latency histogram under `name` + `labels`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        match self.get_or_insert(name, labels, || {
+            Cell::Histogram(Arc::new(LatencyHistogram::new()))
+        }) {
+            Cell::Histogram(h) => Histogram(h),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Number of registered (name, labels) series.
+    pub fn len(&self) -> usize {
+        sync::read(&self.inner).entries.len()
+    }
+
+    /// Whether no series are registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Prometheus text exposition. Dotted names are sanitised to
+    /// underscore form (`primsel.queue.depth` → `primsel_queue_depth`);
+    /// histograms export as summaries (`quantile="0.5"|"0.95"|"1"` plus
+    /// `_sum` / `_count`, millisecond values).
+    pub fn render_prometheus(&self) -> String {
+        let inner = sync::read(&self.inner);
+        let mut by_name: BTreeMap<&str, Vec<&Entry>> = BTreeMap::new();
+        for e in &inner.entries {
+            by_name.entry(&e.name).or_default().push(e);
+        }
+        let mut out = String::new();
+        for (name, mut entries) in by_name {
+            entries.sort_by(|a, b| a.labels.cmp(&b.labels));
+            let prom = sanitize_name(name);
+            let kind = entries[0].cell.kind();
+            out.push_str(&format!("# HELP {prom} {name}\n# TYPE {prom} {kind}\n"));
+            for e in entries {
+                match &e.cell {
+                    Cell::Counter(c) => {
+                        let lbl = label_block(&e.labels, None);
+                        out.push_str(&format!("{prom}{lbl} {}\n", c.load(Relaxed)));
+                    }
+                    Cell::Gauge(g) => {
+                        let lbl = label_block(&e.labels, None);
+                        out.push_str(&format!(
+                            "{prom}{lbl} {}\n",
+                            fmt_f64(f64::from_bits(g.load(Relaxed)))
+                        ));
+                    }
+                    Cell::Histogram(h) => {
+                        let s = h.snapshot();
+                        for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("1", s.max_ms)] {
+                            let lbl = label_block(&e.labels, Some(("quantile", q)));
+                            out.push_str(&format!("{prom}{lbl} {}\n", fmt_f64(v)));
+                        }
+                        let lbl = label_block(&e.labels, None);
+                        out.push_str(&format!(
+                            "{prom}_sum{lbl} {}\n",
+                            fmt_f64(s.mean_ms * s.count as f64)
+                        ));
+                        out.push_str(&format!("{prom}_count{lbl} {}\n", s.count));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot: `{"counters": [...], "gauges": [...],
+    /// "histograms": [...]}`, each entry carrying its dotted `name`,
+    /// `labels` object, and value(s). Deterministic ordering.
+    pub fn snapshot_json(&self) -> Json {
+        let inner = sync::read(&self.inner);
+        let mut entries: Vec<&Entry> = inner.entries.iter().collect();
+        entries.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histograms = Vec::new();
+        for e in entries {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(e.name.clone()));
+            let labels: BTreeMap<String, Json> = e
+                .labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect();
+            obj.insert("labels".to_string(), Json::Obj(labels));
+            match &e.cell {
+                Cell::Counter(c) => {
+                    obj.insert("value".to_string(), Json::Num(c.load(Relaxed) as f64));
+                    counters.push(Json::Obj(obj));
+                }
+                Cell::Gauge(g) => {
+                    obj.insert(
+                        "value".to_string(),
+                        Json::Num(f64::from_bits(g.load(Relaxed))),
+                    );
+                    gauges.push(Json::Obj(obj));
+                }
+                Cell::Histogram(h) => {
+                    let s = h.snapshot();
+                    obj.insert("count".to_string(), Json::Num(s.count as f64));
+                    obj.insert("mean_ms".to_string(), Json::Num(s.mean_ms));
+                    obj.insert("p50_ms".to_string(), Json::Num(s.p50_ms));
+                    obj.insert("p95_ms".to_string(), Json::Num(s.p95_ms));
+                    obj.insert("max_ms".to_string(), Json::Num(s.max_ms));
+                    obj.insert(
+                        "sum_ms".to_string(),
+                        Json::Num(s.mean_ms * s.count as f64),
+                    );
+                    histograms.push(Json::Obj(obj));
+                }
+            }
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Arr(counters));
+        root.insert("gauges".to_string(), Json::Arr(gauges));
+        root.insert("histograms".to_string(), Json::Arr(histograms));
+        Json::Obj(root)
+    }
+}
+
+/// Prometheus metric names allow `[a-zA-Z_:][a-zA-Z0-9_:]*`; map dots
+/// (and anything else) to underscores.
+fn sanitize_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+fn sanitize_label(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+fn escape_label_value(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize_label(k), escape_label_value(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Prometheus floats: plain `Display` except NaN/∞ spelled the way the
+/// exposition format expects.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        (if v > 0.0 { "+Inf" } else { "-Inf" }).to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once_and_share_state() {
+        let reg = Registry::new();
+        let a = reg.counter("primsel.test.count", &[("tenant", "t0")]);
+        let b = reg.counter("primsel.test.count", &[("tenant", "t0")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.len(), 1);
+
+        let g = reg.gauge("primsel.test.gauge", &[]);
+        g.set(1.5);
+        assert_eq!(reg.gauge("primsel.test.gauge", &[]).get(), 1.5);
+        assert_eq!(reg.len(), 2);
+
+        // distinct label values are distinct series
+        reg.counter("primsel.test.count", &[("tenant", "t1")]).inc();
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn one_name_cannot_change_type() {
+        let reg = Registry::new();
+        reg.counter("primsel.test.mixed", &[]);
+        reg.gauge("primsel.test.mixed", &[]);
+    }
+
+    #[test]
+    fn prometheus_rendering_sanitises_names_and_types_each_family_once() {
+        let reg = Registry::new();
+        reg.counter("primsel.req.total", &[("tenant", "a")]).add(4);
+        reg.counter("primsel.req.total", &[("tenant", "b")]).add(6);
+        reg.gauge("primsel.queue.depth", &[]).set(2.0);
+        let h = reg.histogram("primsel.stage_ms", &[("stage", "solve")]);
+        h.record(Duration::from_millis(2));
+        h.record(Duration::from_millis(4));
+
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE primsel_req_total counter"));
+        assert_eq!(text.matches("# TYPE primsel_req_total").count(), 1);
+        assert!(text.contains("primsel_req_total{tenant=\"a\"} 4"));
+        assert!(text.contains("primsel_req_total{tenant=\"b\"} 6"));
+        assert!(text.contains("# TYPE primsel_queue_depth gauge"));
+        assert!(text.contains("primsel_queue_depth 2"));
+        assert!(text.contains("# TYPE primsel_stage_ms summary"));
+        assert!(text.contains("primsel_stage_ms{stage=\"solve\",quantile=\"0.5\"}"));
+        assert!(text.contains("primsel_stage_ms_count{stage=\"solve\"} 2"));
+        assert!(!text.contains("primsel.req.total{"), "dotted names must not leak");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter("primsel.esc", &[("p", "a\"b\\c\nd")]).inc();
+        let text = reg.render_prometheus();
+        assert!(text.contains("p=\"a\\\"b\\\\c\\nd\""));
+    }
+
+    #[test]
+    fn json_snapshot_round_trips_through_the_parser() {
+        let reg = Registry::new();
+        reg.counter("primsel.c", &[("tenant", "x")]).add(7);
+        reg.gauge("primsel.g", &[]).set(0.25);
+        reg.histogram("primsel.h", &[]).record(Duration::from_millis(3));
+
+        let snap = reg.snapshot_json();
+        let parsed = Json::parse(&snap.dump()).expect("snapshot must be valid JSON");
+        let counters = parsed.get("counters").unwrap().as_arr().unwrap();
+        assert_eq!(counters.len(), 1);
+        assert_eq!(counters[0].get("name").unwrap().as_str().unwrap(), "primsel.c");
+        assert_eq!(counters[0].get("value").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(
+            counters[0].get("labels").unwrap().get("tenant").unwrap().as_str().unwrap(),
+            "x"
+        );
+        let hists = parsed.get("histograms").unwrap().as_arr().unwrap();
+        assert_eq!(hists[0].get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(hists[0].get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Request tracing: heap-free per-stage timestamps carried on a
+//! [`SelectionRequest`](crate::coordinator::SelectionRequest).
+//!
+//! A [`Trace`] is a fixed-size array of atomic nanosecond offsets from a
+//! single origin instant — one slot per pipeline [`Stage`]. Marking a
+//! stage is one `Instant::elapsed` plus one relaxed store, so the
+//! instrumented warm select path stays zero-allocation (pinned by
+//! `rust/tests/alloc_counter.rs`). The atomics give interior mutability
+//! through the shared `&SelectionRequest` that `Coordinator::select_one`
+//! and `submit_batch` hand across threads.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::{Duration, Instant};
+
+/// Number of pipeline stages a trace can record (one mark slot each).
+pub const N_STAGES: usize = 7;
+
+/// Pipeline stages a request passes through, in nominal order. Each
+/// stage owns one slot in the fixed [`Trace`] mark array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Accepted into the admission queue (`Service::admit`).
+    Admit = 0,
+    /// Popped off the DRR queue by a service worker.
+    Dispatch = 1,
+    /// `Coordinator::select_one` entered.
+    SolveStart = 2,
+    /// Compiled plan / cached front resolved for the request.
+    PlanReady = 3,
+    /// PBQP solve or front lookup produced a selection.
+    Solved = 4,
+    /// `Coordinator::select_one` returning.
+    SolveEnd = 5,
+    /// Report handed back to the caller.
+    Done = 6,
+}
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Admit,
+        Stage::Dispatch,
+        Stage::SolveStart,
+        Stage::PlanReady,
+        Stage::Solved,
+        Stage::SolveEnd,
+        Stage::Done,
+    ];
+
+    /// Stable lowercase name (used in recorder tables and docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Dispatch => "dispatch",
+            Stage::SolveStart => "solve_start",
+            Stage::PlanReady => "plan_ready",
+            Stage::Solved => "solved",
+            Stage::SolveEnd => "solve_end",
+            Stage::Done => "done",
+        }
+    }
+}
+
+/// Per-request span recorder: a fixed inline array of atomic marks.
+///
+/// Marks are stored as `nanosecond offset + 1` so that `0` doubles as
+/// "unset" — the whole trace is plain words, no heap, no locks.
+#[derive(Debug)]
+pub struct Trace {
+    origin: Instant,
+    marks: [AtomicU64; N_STAGES],
+}
+
+impl Clone for Trace {
+    fn clone(&self) -> Self {
+        Self {
+            origin: self.origin,
+            marks: std::array::from_fn(|i| AtomicU64::new(self.marks[i].load(Relaxed))),
+        }
+    }
+}
+
+impl Trace {
+    /// Start a trace with its origin at "now" and every stage unset.
+    pub fn begin() -> Self {
+        Self {
+            origin: Instant::now(),
+            marks: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record `stage` at "now". Safe to call through a shared reference
+    /// from any thread; later marks overwrite earlier ones.
+    pub fn mark(&self, stage: Stage) {
+        let ns = self.origin.elapsed().as_nanos().min((u64::MAX - 1) as u128) as u64;
+        self.marks[stage as usize].store(ns + 1, Relaxed);
+    }
+
+    /// Deterministic mark for tests and benchmarks: record `stage` at an
+    /// explicit nanosecond offset from the origin.
+    pub fn mark_at_ns(&self, stage: Stage, ns: u64) {
+        self.marks[stage as usize].store(ns.saturating_add(1), Relaxed);
+    }
+
+    /// Nanosecond offset of `stage` from the origin, if marked.
+    pub fn stage_ns(&self, stage: Stage) -> Option<u64> {
+        match self.marks[stage as usize].load(Relaxed) {
+            0 => None,
+            v => Some(v - 1),
+        }
+    }
+
+    /// Whether `stage` has been marked.
+    pub fn has(&self, stage: Stage) -> bool {
+        self.marks[stage as usize].load(Relaxed) != 0
+    }
+
+    /// Saturating span between two marked stages (`to - from`).
+    pub fn span_ns(&self, from: Stage, to: Stage) -> Option<u64> {
+        Some(self.stage_ns(to)?.saturating_sub(self.stage_ns(from)?))
+    }
+
+    /// [`Trace::span_ns`] as a `Duration`.
+    pub fn span(&self, from: Stage, to: Stage) -> Option<Duration> {
+        self.span_ns(from, to).map(Duration::from_nanos)
+    }
+
+    /// Wall span covered by the trace: earliest mark to latest mark
+    /// (0 when fewer than one stage is marked).
+    pub fn total_ns(&self) -> u64 {
+        let mut lo = u64::MAX;
+        let mut hi = 0u64;
+        for m in &self.marks {
+            let v = m.load(Relaxed);
+            if v != 0 {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        if hi == 0 {
+            0
+        } else {
+            hi - lo
+        }
+    }
+
+    /// Raw mark words (`ns offset + 1`, `0` = unset) in stage order —
+    /// the fixed-width encoding the flight recorder stores.
+    pub fn mark_words(&self) -> [u64; N_STAGES] {
+        std::array::from_fn(|i| self.marks[i].load(Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_start_unset_and_record_in_order() {
+        let t = Trace::begin();
+        for s in Stage::ALL {
+            assert_eq!(t.stage_ns(s), None);
+            assert!(!t.has(s));
+        }
+        assert_eq!(t.total_ns(), 0);
+
+        for s in Stage::ALL {
+            t.mark(s);
+        }
+        let mut prev = 0u64;
+        for s in Stage::ALL {
+            let ns = t.stage_ns(s).expect("marked");
+            assert!(ns >= prev, "{} went backwards", s.name());
+            prev = ns;
+        }
+    }
+
+    #[test]
+    fn deterministic_marks_and_spans() {
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::Admit, 100);
+        t.mark_at_ns(Stage::Dispatch, 400);
+        t.mark_at_ns(Stage::Done, 1_100);
+        assert_eq!(t.span_ns(Stage::Admit, Stage::Dispatch), Some(300));
+        assert_eq!(t.span_ns(Stage::Admit, Stage::Done), Some(1_000));
+        assert_eq!(t.span_ns(Stage::Admit, Stage::SolveStart), None);
+        assert_eq!(t.total_ns(), 1_000);
+        assert_eq!(t.span(Stage::Admit, Stage::Done), Some(Duration::from_nanos(1_000)));
+        // saturating: out-of-order marks clamp to zero, never panic
+        assert_eq!(t.span_ns(Stage::Done, Stage::Admit), Some(0));
+    }
+
+    #[test]
+    fn clone_detaches_the_mark_array() {
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::Admit, 5);
+        let c = t.clone();
+        t.mark_at_ns(Stage::Done, 50);
+        assert_eq!(c.stage_ns(Stage::Admit), Some(5));
+        assert_eq!(c.stage_ns(Stage::Done), None);
+        assert_eq!(t.stage_ns(Stage::Done), Some(50));
+    }
+
+    #[test]
+    fn mark_words_round_trip_unset_encoding() {
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::SolveStart, 7);
+        let w = t.mark_words();
+        assert_eq!(w[Stage::SolveStart as usize], 8);
+        assert_eq!(w[Stage::Admit as usize], 0);
+    }
+}

@@ -101,6 +101,13 @@ impl CacheStats {
         self.hits() + self.misses()
     }
 
+    /// Fraction of lookups served from the cache (0.0 when idle). This
+    /// is the name the observability layer and `ServiceStats::render`
+    /// use; [`CacheStats::hit_rate`] is the original spelling.
+    pub fn hit_ratio(&self) -> f64 {
+        self.hit_rate()
+    }
+
     /// Fraction of lookups served from the cache (0.0 when idle).
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {

@@ -51,6 +51,7 @@ pub use stats::{HistogramSnapshot, LatencyHistogram, ServiceStats, TenantStats};
 pub use ticket::Ticket;
 
 use crate::coordinator::{Coordinator, SelectionRequest};
+use crate::obs;
 use crate::par;
 use crate::selection::CacheStats;
 use crate::sync;
@@ -120,6 +121,13 @@ pub(crate) struct TenantMeta {
     pub(crate) counters: TenantCounters,
 }
 
+impl TenantMeta {
+    /// Tenant lane name (tagged onto flight-recorder request entries).
+    pub(crate) fn name(&self) -> &str {
+        &self.name
+    }
+}
+
 #[derive(Default)]
 struct TenantTable {
     metas: Vec<Arc<TenantMeta>>,
@@ -136,6 +144,28 @@ pub(crate) struct ServiceShared {
     /// Per-platform cache counters at service start; stats() reports
     /// deltas against this.
     baseline: Vec<(String, CacheStats)>,
+    /// Registry handles the workers record into on the hot path.
+    pub(crate) obs: ServiceObs,
+}
+
+/// Pre-resolved handles into the process [`obs::Registry`]: looked up
+/// once at service construction so the worker hot path is a pure
+/// atomic-increment (no name hashing, no registry lock).
+pub(crate) struct ServiceObs {
+    /// `primsel.trace.stage_ms{stage="queue"}` — admit → dispatch.
+    pub(crate) queue_ms: obs::Histogram,
+    /// `primsel.trace.stage_ms{stage="e2e"}` — admit → done.
+    pub(crate) e2e_ms: obs::Histogram,
+}
+
+impl ServiceObs {
+    fn resolve() -> ServiceObs {
+        let reg = obs::registry();
+        ServiceObs {
+            queue_ms: reg.histogram(obs::names::STAGE_MS, &[("stage", "queue")]),
+            e2e_ms: reg.histogram(obs::names::STAGE_MS, &[("stage", "e2e")]),
+        }
+    }
 }
 
 impl ServiceShared {
@@ -207,6 +237,7 @@ impl Service {
             tenants: RwLock::new(TenantTable::default()),
             wait: LatencyHistogram::new(),
             service: LatencyHistogram::new(),
+            obs: ServiceObs::resolve(),
         });
         let pool = worker::spawn(&shared, config.workers);
         Service {
@@ -283,6 +314,8 @@ impl Service {
         let id = self.tenant_id(tenant);
         let meta = self.shared.tenant_meta(id);
         let (ticket, cell) = Ticket::pending();
+        let mut req = req;
+        req.trace.get_or_insert_with(obs::Trace::begin).mark(obs::Stage::Admit);
         let job = Job { req, admitted_at: Instant::now(), cell };
         let outcome = match mode {
             AdmitMode::Try => self.shared.queue.try_push(id, job),
@@ -381,8 +414,57 @@ impl Service {
             wait: self.shared.wait.snapshot(),
             service: self.shared.service.snapshot(),
             platforms,
+            plan_cache: self.shared.coord.plan_cache_stats(),
+            front_cache: self.shared.coord.front_cache_stats(),
             health: self.shared.coord.platform_health(),
         }
+    }
+
+    /// Publish a scrape-time snapshot of the service's state into the
+    /// process-wide [`obs::Registry`] and return it. Stage latencies
+    /// (`primsel.trace.stage_ms{stage=queue|solve|e2e}`) accumulate
+    /// live on the hot path; everything else — queue gauges, tenant
+    /// counters, cache hit ratios, platform health, flight-recorder
+    /// totals — is published here as absolute values, so calling this
+    /// right before [`obs::Registry::render_prometheus`] or
+    /// [`obs::Registry::snapshot_json`] yields a coherent exposition.
+    pub fn metrics(&self) -> &'static obs::Registry {
+        let stats = self.stats();
+        let reg = obs::registry();
+        reg.gauge(obs::names::QUEUE_DEPTH, &[]).set(stats.queue_depth as f64);
+        reg.gauge(obs::names::QUEUE_CAPACITY, &[]).set(stats.capacity as f64);
+        reg.gauge(obs::names::WORKERS, &[]).set(stats.workers as f64);
+        for t in &stats.tenants {
+            let lbl: &[(&str, &str)] = &[("tenant", t.tenant.as_str())];
+            reg.counter(obs::names::TENANT_ADMITTED, lbl).store(t.admitted);
+            reg.counter(obs::names::TENANT_REJECTED, lbl).store(t.rejected);
+            reg.counter(obs::names::TENANT_SERVED, lbl).store(t.served);
+        }
+        for (platform, s) in &stats.platforms {
+            let lbl: &[(&str, &str)] = &[("platform", platform.as_str())];
+            reg.counter(obs::names::COST_HITS, lbl).store(s.hits());
+            reg.counter(obs::names::COST_MISSES, lbl).store(s.misses());
+            reg.gauge(obs::names::COST_HIT_RATIO, lbl).set(s.hit_ratio());
+        }
+        let ratio = |h: u64, m: u64| if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 };
+        let (ph, pm) = stats.plan_cache;
+        reg.counter(obs::names::PLAN_HITS, &[]).store(ph);
+        reg.counter(obs::names::PLAN_MISSES, &[]).store(pm);
+        reg.gauge(obs::names::PLAN_HIT_RATIO, &[]).set(ratio(ph, pm));
+        let (fh, fm) = stats.front_cache;
+        reg.counter(obs::names::FRONT_HITS, &[]).store(fh);
+        reg.counter(obs::names::FRONT_MISSES, &[]).store(fm);
+        reg.gauge(obs::names::FRONT_HIT_RATIO, &[]).set(ratio(fh, fm));
+        for h in &stats.health {
+            let lbl: &[(&str, &str)] = &[("platform", h.platform.as_str())];
+            reg.gauge(obs::names::HEALTH_STATE, lbl).set(h.state.code() as f64);
+            reg.gauge(obs::names::HEALTH_DRIFT, lbl).set(h.drift);
+        }
+        let rec = obs::flight_recorder();
+        reg.counter(obs::names::RECORDER_REQUESTS, &[]).store(rec.requests_recorded());
+        reg.counter(obs::names::RECORDER_EVENTS, &[]).store(rec.events_recorded());
+        reg.counter(obs::names::RECORDER_SLOW, &[]).store(rec.slow_captured());
+        reg
     }
 
     /// Clean shutdown: close admission, drain every already-admitted

@@ -48,11 +48,12 @@ impl LatencyHistogram {
         idx.min(N_BUCKETS - 1)
     }
 
-    /// Geometric midpoint of a bucket, in milliseconds.
-    fn bucket_mid_ms(idx: usize) -> f64 {
+    /// Log-interpolated point within bucket `idx`, `frac` of the way
+    /// through it (0.5 = the geometric midpoint), in milliseconds.
+    fn bucket_point_ms(idx: usize, frac: f64) -> f64 {
         let lo = (idx as f64 / BUCKETS_PER_DOUBLING).exp2();
         let hi = ((idx + 1) as f64 / BUCKETS_PER_DOUBLING).exp2();
-        (lo * hi).sqrt() / 1e3
+        lo * (hi / lo).powf(frac.clamp(0.0, 1.0)) / 1e3
     }
 
     /// Record one latency sample.
@@ -75,12 +76,17 @@ impl LatencyHistogram {
             let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
             let mut seen = 0u64;
             for (i, &b) in buckets.iter().enumerate() {
-                seen += b;
-                if seen >= rank {
-                    return Self::bucket_mid_ms(i);
+                if b > 0 && seen + b >= rank {
+                    // Interpolate within the matched bucket, treating its
+                    // b samples as spread evenly through it in log space
+                    // (resolving to the bucket midpoint instead biases
+                    // quantiles by up to the ~19% bucket width).
+                    let frac = ((rank - seen) as f64 - 0.5) / b as f64;
+                    return Self::bucket_point_ms(i, frac);
                 }
+                seen += b;
             }
-            Self::bucket_mid_ms(N_BUCKETS - 1)
+            Self::bucket_point_ms(N_BUCKETS - 1, 0.5)
         };
         let (p50_ms, p95_ms) = (quantile(0.50), quantile(0.95));
         let sum_us = self.sum_us.load(Ordering::Relaxed);
@@ -95,7 +101,8 @@ impl LatencyHistogram {
 }
 
 /// Point-in-time summary of one [`LatencyHistogram`]. Quantiles are
-/// bucket-resolution estimates (≤ ~19% relative error by construction).
+/// log-interpolated within the matched bucket, so their error is a
+/// fraction of the ~19% bucket width rather than the full width.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HistogramSnapshot {
     pub count: u64,
@@ -151,6 +158,10 @@ pub struct ServiceStats {
     /// sorted by platform name (merged across all tenants' traffic —
     /// and any direct coordinator traffic sharing those caches).
     pub platforms: Vec<(String, CacheStats)>,
+    /// Compiled-plan cache (hits, misses) totals at snapshot time.
+    pub plan_cache: (u64, u64),
+    /// Pareto-front cache (hits, misses) totals at snapshot time.
+    pub front_cache: (u64, u64),
     /// Health snapshots for every monitored platform
     /// ([`Coordinator::monitor_platform`](crate::coordinator::Coordinator::monitor_platform)),
     /// sorted by platform name; empty when nothing is monitored.
@@ -195,17 +206,37 @@ impl ServiceStats {
         }
         let mut cache = Table::new(
             "per-platform cache deltas (service lifetime)",
-            &["platform", "hits", "misses", "hit rate"],
+            &["platform", "hits", "misses", "hit ratio"],
         );
         for (p, s) in &self.platforms {
             cache.row(vec![
                 p.clone(),
                 s.hits().to_string(),
                 s.misses().to_string(),
-                crate::report::fmt_pct(s.hit_rate()),
+                crate::report::fmt_pct(s.hit_ratio()),
             ]);
         }
-        let mut out = format!("{}\n{}\n{}", t.render(), lat.render(), cache.render());
+        let mut sel = Table::new(
+            "selection caches (coordinator lifetime)",
+            &["cache", "hits", "misses", "hit ratio"],
+        );
+        for (name, (hits, misses)) in [("plan", self.plan_cache), ("front", self.front_cache)] {
+            let total = hits + misses;
+            let ratio = if total == 0 { 0.0 } else { hits as f64 / total as f64 };
+            sel.row(vec![
+                name.to_string(),
+                hits.to_string(),
+                misses.to_string(),
+                crate::report::fmt_pct(ratio),
+            ]);
+        }
+        let mut out = format!(
+            "{}\n{}\n{}\n{}",
+            t.render(),
+            lat.render(),
+            cache.render(),
+            sel.render()
+        );
         if !self.health.is_empty() {
             let mut ht = Table::new(
                 "platform health (monitored platforms)",
@@ -274,6 +305,36 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_interpolate_within_the_matched_bucket() {
+        // uniform 1..=1000 µs: exact p50 = 0.5 ms, p95 = 0.95 ms. The
+        // pre-interpolation midpoint estimate was off by up to the full
+        // ~19% bucket width; interpolated estimates land much closer.
+        let h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert!((s.p50_ms - 0.5).abs() / 0.5 < 0.05, "p50 {}", s.p50_ms);
+        assert!((s.p95_ms - 0.95).abs() / 0.95 < 0.05, "p95 {}", s.p95_ms);
+
+        // a single sample resolves near itself, not a bucket boundary
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        let s = h.snapshot();
+        assert!((s.p50_ms - 0.1).abs() / 0.1 < 0.05, "p50 {}", s.p50_ms);
+
+        // identical samples: quantiles stay ordered and inside the bucket
+        let h = LatencyHistogram::new();
+        for _ in 0..64 {
+            h.record(Duration::from_micros(400));
+        }
+        let s = h.snapshot();
+        assert!(s.p50_ms <= s.p95_ms);
+        assert!((s.p50_ms - 0.4).abs() / 0.4 < 0.19, "p50 {}", s.p50_ms);
+        assert!((s.p95_ms - 0.4).abs() / 0.4 < 0.19, "p95 {}", s.p95_ms);
+    }
+
+    #[test]
     fn bucket_mapping_is_monotonic_and_bounded() {
         let mut last = 0;
         for us in [0u64, 1, 2, 3, 7, 100, 1_000, 1_000_000, u64::MAX] {
@@ -302,11 +363,16 @@ mod tests {
             wait: HistogramSnapshot::default(),
             service: HistogramSnapshot::default(),
             platforms: vec![("intel".into(), CacheStats::default())],
+            plan_cache: (3, 1),
+            front_cache: (0, 0),
             health: vec![],
         };
         let out = stats.render();
         assert!(out.contains("t0") && out.contains("rejected"));
         assert!(out.contains("p95") && out.contains("intel"));
+        // selection-cache hit ratios render as percentages
+        assert!(out.contains("selection caches"), "{out}");
+        assert!(out.contains("75.00%") && out.contains("0.00%"), "{out}");
         // no monitors → no health table
         assert!(!out.contains("platform health"));
 

@@ -133,6 +133,7 @@ mod tests {
             peak_workspace_bytes: 0.0,
             front: None,
             wall_ms: 0.0,
+            trace: None,
         }
     }
 

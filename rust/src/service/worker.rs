@@ -20,6 +20,7 @@ use super::ticket::Fulfiller;
 use super::ServiceShared;
 use crate::coordinator::{ReportDetail, SelectionRequest};
 use crate::health;
+use crate::obs::{self, Stage};
 use crate::par;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -42,6 +43,12 @@ pub(crate) struct Job {
 pub(crate) fn run(shared: &ServiceShared) {
     while let Some((tenant, mut job)) = shared.queue.pop() {
         shared.wait.record(job.admitted_at.elapsed());
+        if let Some(t) = &job.req.trace {
+            t.mark(Stage::Dispatch);
+            if let Some(ns) = t.span_ns(Stage::Admit, Stage::Dispatch) {
+                shared.obs.queue_ms.record_ns(ns);
+            }
+        }
         // solve with deferred name strings: the warm fast path stays
         // allocation-free, and render() restores them below — outside
         // the service-latency window — so tickets look identical to a
@@ -59,8 +66,26 @@ pub(crate) fn run(shared: &ServiceShared) {
             Err(anyhow::anyhow!("selection panicked: {}", health::panic_message(payload)))
         });
         shared.service.record(t0.elapsed());
-        shared.tenant_meta(tenant).counters.served.fetch_add(1, Ordering::Relaxed);
-        job.cell.fulfil(result.map(|r| r.render(&job.req)));
+        let meta = shared.tenant_meta(tenant);
+        meta.counters.served.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &job.req.trace {
+            t.mark(Stage::Done);
+            if let Some(ns) = t.span_ns(Stage::Admit, Stage::Done) {
+                shared.obs.e2e_ms.record_ns(ns);
+            }
+            obs::flight_recorder().record_request(
+                t,
+                &job.req.platform,
+                &job.req.network.name,
+                meta.name(),
+            );
+        }
+        job.cell.fulfil(result.map(|mut r| {
+            // re-clone after the Done mark so the caller's report carries
+            // the complete span set, not the copy select_one detached
+            r.trace = job.req.trace.clone();
+            r.render(&job.req)
+        }));
         shared.queue.complete(tenant);
     }
 }

@@ -6,11 +6,17 @@
 //! differently-shaped plans (every buffer grows to the high-water mark
 //! during priming and is only ever reused after).
 //!
+//! The measured window also runs fully instrumented — a live
+//! [`Trace`], stage-histogram records and flight-recorder captures on
+//! every round — pinning the observability layer's zero-allocation
+//! claim alongside the solver's.
+//!
 //! The binary holds exactly one `#[test]` on purpose: the counter is
 //! process-global, and a sibling test allocating concurrently would
 //! make the "zero since the snapshot" assertion racy.
 
 use primsel::networks;
+use primsel::obs::{self, Stage, Trace};
 use primsel::selection::{PlanScratch, SelectionPlan};
 use primsel::simulator::{machine, Simulator};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -75,6 +81,16 @@ fn warm_plan_solves_allocate_nothing_in_steady_state() {
     // sanity: the counter counts (compiling above certainly allocated)
     assert!(alloc_calls() > 0, "counting allocator must be live");
 
+    // observability pre-resolution: registry handles are looked up once
+    // (that allocates; so does registering), the recorder keeps every
+    // request (threshold zero) but its rings and slow buffer are
+    // pre-sized — so the measured window's marks, records and captures
+    // must all be pure atomic writes
+    let solve_ms = obs::registry().histogram(obs::names::STAGE_MS, &[("stage", "solve")]);
+    let recorder = obs::FlightRecorder::with_defaults();
+    recorder.set_slow_threshold(std::time::Duration::ZERO);
+    let trace = Trace::begin();
+
     // priming pass: every buffer reaches its high-water mark
     for _ in 0..2 {
         for (p, &b) in plans.iter().zip(&budgets) {
@@ -83,20 +99,30 @@ fn warm_plan_solves_allocate_nothing_in_steady_state() {
         }
     }
 
-    // the measured window: interleaved warm solves, zero allocations
+    // the measured window: interleaved warm solves, fully instrumented,
+    // zero allocations
     let before = alloc_calls();
     for _ in 0..50 {
         for ((p, &b), (fp, fe, tp)) in plans.iter().zip(&budgets).zip(&truth) {
+            trace.mark(Stage::SolveStart);
             let free = p.min_time_into(&mut scratch);
             assert_eq!(free.primitive, &fp[..]);
             assert_eq!(free.estimated_ms, *fe);
             let tight = p.with_budget_into(b, 50.0, &mut scratch);
             assert_eq!(tight.primitive, &tp[..]);
+            trace.mark(Stage::SolveEnd);
+            if let Some(ns) = trace.span_ns(Stage::SolveStart, Stage::SolveEnd) {
+                solve_ms.record_ns(ns);
+            }
+            recorder.record_request(&trace, "intel", "alexnet", "alloc-test");
         }
     }
     let delta = alloc_calls() - before;
     assert_eq!(
         delta, 0,
-        "warm plan solves must not allocate: {delta} allocation calls in the steady state"
+        "instrumented warm plan solves must not allocate: {delta} allocation calls \
+         in the steady state"
     );
+    assert_eq!(recorder.requests_recorded(), 100);
+    assert_eq!(solve_ms.snapshot().count, 100);
 }

@@ -1,0 +1,227 @@
+//! End-to-end observability: traces ride real served requests in stage
+//! order, the registry stays exact under concurrent hammering, the
+//! flight recorder's keep-slowest retention holds under contention, and
+//! a forced quarantine is visible as registry gauges *and* structured
+//! flight-recorder events — the full telemetry path the serving stack
+//! promises, driven through the public surface only.
+
+use primsel::config::Json;
+use primsel::coordinator::{Coordinator, OnboardSpec, SelectionRequest};
+use primsel::dataset::calibration_sample;
+use primsel::health::{HealthPolicy, HealthState};
+use primsel::networks;
+use primsel::obs::{self, FlightRecorder, RecordKind, Registry, Stage, Trace};
+use primsel::perfmodel::model::CostModel;
+use primsel::perfmodel::LinCostModel;
+use primsel::selection::{CostSource, FaultySource};
+use primsel::service::{Service, ServiceConfig};
+use primsel::simulator::{machine, Simulator};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn service_reports_carry_ordered_traces() {
+    let service = Service::new(
+        Coordinator::shared(),
+        ServiceConfig::default().with_capacity(8).with_workers(2),
+    );
+    let mut tickets = Vec::new();
+    for i in 0..6 {
+        let net = if i % 2 == 0 { networks::alexnet() } else { networks::vgg(11) };
+        tickets.push(service.submit("trace-test", SelectionRequest::new(net, "intel")).unwrap());
+    }
+    // every served report carries a trace with the full stage ladder,
+    // monotone in pipeline order
+    let order = [
+        Stage::Admit,
+        Stage::Dispatch,
+        Stage::SolveStart,
+        Stage::PlanReady,
+        Stage::Solved,
+        Stage::SolveEnd,
+        Stage::Done,
+    ];
+    for ticket in tickets {
+        let report = ticket.wait().unwrap();
+        let trace = report.trace.expect("service-served reports carry a trace");
+        let mut prev = 0u64;
+        for stage in order {
+            let ns = trace
+                .stage_ns(stage)
+                .unwrap_or_else(|| panic!("stage {stage:?} was never marked"));
+            assert!(ns >= prev, "stage {stage:?} at {ns} ns precedes its predecessor at {prev}");
+            prev = ns;
+        }
+        let admit = trace.stage_ns(Stage::Admit).unwrap();
+        let done = trace.stage_ns(Stage::Done).unwrap();
+        assert_eq!(trace.total_ns(), done - admit);
+    }
+    // the worker path fed the per-stage histograms and the recorder
+    let text = service.metrics().render_prometheus();
+    for stage in ["queue", "solve", "e2e"] {
+        assert!(
+            text.contains(&format!("primsel_trace_stage_ms_count{{stage=\"{stage}\"}}")),
+            "missing stage={stage} histogram in:\n{text}"
+        );
+    }
+    assert!(obs::flight_recorder().requests_recorded() >= 6);
+    service.shutdown();
+}
+
+#[test]
+fn registry_counts_exactly_under_concurrent_hammering() {
+    let reg = Registry::new();
+    let shared = reg.counter("obs.test.shared", &[]);
+    let hist = reg.histogram("obs.test.ms", &[]);
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let shared = shared.clone();
+            let hist = hist.clone();
+            let reg = &reg;
+            s.spawn(move || {
+                // per-thread registration races the other threads' reads
+                let label = t.to_string();
+                let own = reg.counter("obs.test.per_thread", &[("t", label.as_str())]);
+                for i in 0..10_000u64 {
+                    shared.inc();
+                    own.inc();
+                    if i % 100 == 0 {
+                        hist.record_ns((i + 1) * 1_000);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(shared.get(), 80_000);
+    for t in 0..8u64 {
+        let label = t.to_string();
+        assert_eq!(reg.counter("obs.test.per_thread", &[("t", label.as_str())]).get(), 10_000);
+    }
+    assert_eq!(hist.snapshot().count, 800);
+    // 1 shared + 8 per-thread counters; the snapshot is valid JSON
+    let parsed = Json::parse(&reg.snapshot_json().dump()).unwrap();
+    assert_eq!(parsed.get("counters").unwrap().as_arr().unwrap().len(), 9);
+    assert_eq!(parsed.get("histograms").unwrap().as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn flight_recorder_keeps_the_slowest_under_contention() {
+    let rec = FlightRecorder::new(64, 8, 16);
+    rec.set_slow_threshold(Duration::ZERO);
+    // 4 writers × 200 records with distinct totals 1µs..800µs
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let rec = &rec;
+            s.spawn(move || {
+                for i in 0..200u64 {
+                    let tr = Trace::begin();
+                    tr.mark_at_ns(Stage::Admit, 0);
+                    tr.mark_at_ns(Stage::Done, (t * 200 + i + 1) * 1_000);
+                    rec.record_request(&tr, "p", "n", "lane");
+                }
+            });
+        }
+    });
+    assert_eq!(rec.requests_recorded(), 800);
+    assert_eq!(rec.slow_captured(), 800);
+    // replace-the-minimum retention keeps exactly the global top 8,
+    // regardless of arrival interleaving
+    let slow: Vec<u64> = rec.slow_snapshot().iter().map(|r| r.total_ns).collect();
+    let want: Vec<u64> = (793..=800).rev().map(|us| us * 1_000).collect();
+    assert_eq!(slow, want);
+    // concurrent seqlock writes never yield torn records
+    for r in rec.snapshot() {
+        assert_eq!((r.platform.as_str(), r.network.as_str()), ("p", "n"));
+        assert_eq!(r.tenant, "lane");
+        assert!(r.total_ns >= 1_000 && r.total_ns <= 800_000);
+    }
+}
+
+/// An Intel-trained Lin source model for transfer onboarding (same
+/// recipe as `rust/tests/health.rs`).
+fn intel_lin() -> Arc<dyn CostModel + Send + Sync> {
+    let intel = Simulator::new(machine::intel_i9_9900k());
+    let (prim, dlt) = calibration_sample(&intel, 0.1, 3);
+    Arc::new(LinCostModel::fit(&prim, &dlt, "intel").unwrap())
+}
+
+#[test]
+fn quarantine_is_visible_in_registry_and_flight_recorder() {
+    let faulty = Arc::new(FaultySource::new(
+        Arc::new(Simulator::new(machine::arm_cortex_a73())),
+        42,
+    ));
+    let target: Arc<dyn CostSource> = Arc::clone(&faulty) as Arc<dyn CostSource>;
+    let coord = Coordinator::shared();
+    coord
+        .onboard_platform(
+            "obs-arm-live",
+            OnboardSpec::transfer(Arc::clone(&target), intel_lin(), 0.02, 5),
+        )
+        .unwrap();
+    coord
+        .monitor_platform(
+            "obs-arm-live",
+            target,
+            HealthPolicy::default()
+                .with_sampling(1.0, 7)
+                .with_window(16, 4)
+                .with_drift_band(0.5)
+                .with_quarantine(2, Duration::ZERO, Duration::from_millis(40)),
+        )
+        .unwrap();
+    let service = Service::new(Arc::clone(&coord), ServiceConfig::default().with_workers(2));
+    let net = networks::alexnet();
+
+    let drive_until = |done: &dyn Fn(HealthState) -> bool| {
+        for _ in 0..80 {
+            let ticket = service
+                .submit("ops", SelectionRequest::new(net.clone(), "obs-arm-live"))
+                .unwrap();
+            let _ = ticket.wait(); // quarantined refusals are expected
+            let state = coord.platform_health_of("obs-arm-live").unwrap().state;
+            if done(state) {
+                return;
+            }
+        }
+        panic!("health state not reached within 80 requests");
+    };
+
+    // drift past the band, then make every recalibration attempt fail:
+    // the platform burns its failure budget and quarantines
+    faulty.set_drift(9.0);
+    drive_until(&|s| s == HealthState::Drifting);
+    faulty.set_error_rate(1.0);
+    drive_until(&|s| s == HealthState::Quarantined);
+
+    // visible as a registry gauge (code 3 = quarantined, with drift)...
+    let reg = service.metrics();
+    assert_eq!(reg.gauge(obs::names::HEALTH_STATE, &[("platform", "obs-arm-live")]).get(), 3.0);
+    assert!(reg.gauge(obs::names::HEALTH_DRIFT, &[("platform", "obs-arm-live")]).get() > 0.5);
+    let text = reg.render_prometheus();
+    assert!(
+        text.contains("primsel_health_state{platform=\"obs-arm-live\"} 3"),
+        "quarantine gauge missing from:\n{text}"
+    );
+
+    // ...and as structured flight-recorder events: the transition into
+    // quarantine plus the failed recalibration attempts that caused it
+    let events: Vec<_> = obs::flight_recorder()
+        .events_snapshot()
+        .into_iter()
+        .filter(|e| e.platform == "obs-arm-live")
+        .collect();
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == RecordKind::Transition && e.tenant == "quarantined"),
+        "no transition-to-quarantined event in {events:?}"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == RecordKind::Recalibration && e.network == "failed"),
+        "no failed-recalibration event in {events:?}"
+    );
+    service.shutdown();
+}
