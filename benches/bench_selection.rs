@@ -15,6 +15,7 @@ use primsel::coordinator::{Coordinator, Objective, OnboardSpec, ReportDetail, Se
 use primsel::dataset;
 use primsel::experiments::Workbench;
 use primsel::networks;
+use primsel::obs::{self, Sampler, SamplerConfig, SystemClock};
 use primsel::par;
 use primsel::perfmodel::model::model_table;
 use primsel::perfmodel::LinCostModel;
@@ -23,6 +24,7 @@ use primsel::selection::pareto::DEFAULT_LAMBDA_MS_PER_MB;
 use primsel::selection::{self, CostCache, CostSource, ModeledSource, ParetoFront};
 use primsel::service::{Service, ServiceConfig};
 use primsel::simulator::{machine, Simulator};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn main() {
@@ -136,6 +138,37 @@ fn main() {
         b.run("selection/select_one_warm_instrumented", 10, 100, || {
             let _ = coord.select_one(&traced).unwrap();
         });
+        // the instrumented row again, but with the ops-plane sampler
+        // live: a background thread snapshotting the whole registry into
+        // its series rings at ~1 ms cadence (40x the production 25 ms
+        // demo cadence) while the traced selects run. The gate holds
+        // this row to the same 5% envelope around warm_plan — the
+        // time-series layer must not tax the hot path
+        {
+            let sampler = Arc::new(Sampler::new(SamplerConfig::default().with_capacity(256)));
+            let clock = Arc::new(SystemClock::new());
+            sampler.sample(obs::registry(), &*clock); // prime the rings
+            let stop = Arc::new(AtomicBool::new(false));
+            let thread = {
+                let (sampler, clock, stop) =
+                    (Arc::clone(&sampler), Arc::clone(&clock), Arc::clone(&stop));
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        sampler.sample(obs::registry(), &*clock);
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                })
+            };
+            b.run("selection/select_one_warm_sampled", 10, 100, || {
+                let _ = coord.select_one(&traced).unwrap();
+            });
+            stop.store(true, Ordering::Relaxed);
+            thread.join().unwrap();
+            println!(
+                "selection/select_one_warm_sampled: {} sampler ticks during row",
+                sampler.ticks()
+            );
+        }
         let cache = coord.cache("intel").unwrap();
         b.run("selection/select_one_cold", 1, 10, || {
             let _ = selection::select(&net, cache.as_ref()).unwrap();

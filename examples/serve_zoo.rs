@@ -30,11 +30,20 @@
 //! through drift → automatic recalibration → repeated recalibration
 //! failure → quarantine (typed refusals) → cool-down probe readmission,
 //! ending with the health section of the `ServiceStats` printout.
+//!
+//! Two ops-plane flags compose with either mode: `--dashboard` brings
+//! up the background sampler + burn-rate SLOs and prints the rolling
+//! time-series report (sparklines, alert table, recorder drop counts);
+//! `--timeline <path>` exports the flight recorder as Chrome
+//! trace-event JSON — load it in Perfetto or `chrome://tracing`.
+//! `python/tools/check_timeline.py` validates
+//! `--inject-faults --dashboard --timeline results/timeline.json` in CI.
 
 use primsel::coordinator::{Coordinator, Objective, OnboardSpec, SelectionRequest};
 use primsel::dataset::calibration_sample;
 use primsel::health::{HealthPolicy, HealthState, PlatformHealth, QuarantinedError};
 use primsel::networks::{self, Network};
+use primsel::obs::SloSpec;
 use primsel::perfmodel::{CostModel, LinCostModel};
 use primsel::report::{fmt_time_ms, Table};
 use primsel::selection::{CostSource, FaultySource};
@@ -44,20 +53,66 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    if std::env::args().any(|a| a == "--metrics") {
-        return metrics_demo();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dashboard = args.iter().any(|a| a == "--dashboard");
+    let timeline = args
+        .iter()
+        .position(|a| a == "--timeline")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let result = if args.iter().any(|a| a == "--metrics") {
+        metrics_demo()
+    } else if args.iter().any(|a| a == "--inject-faults") {
+        inject_faults_demo(dashboard)
+    } else {
+        serve_demo(dashboard)
+    };
+    result?;
+    if let Some(path) = timeline {
+        primsel::obs::write_chrome_trace(
+            primsel::obs::flight_recorder(),
+            std::path::Path::new(&path),
+        )?;
+        println!("chrome trace written to {path} (load in Perfetto / chrome://tracing)");
     }
-    if std::env::args().any(|a| a == "--inject-faults") {
-        return inject_faults_demo();
+    Ok(())
+}
+
+/// The demo SLO suite: a latency objective on the end-to-end stage, an
+/// admission error budget, queue pressure, and (when `platform` is
+/// monitored) a drift band whose Critical alerts nudge the platform's
+/// health monitor into shadow-sampling early. Windows are shrunk far
+/// below the production defaults so burn rates move within a demo run.
+fn demo_slos(config: ServiceConfig, drift_platform: Option<&str>) -> ServiceConfig {
+    let windows = |s: SloSpec| s.with_windows(Duration::from_millis(200), Duration::from_secs(2));
+    let mut config = config
+        .with_sampling(Duration::from_millis(25))
+        .with_slo(windows(SloSpec::latency_p95("e2e-latency", "e2e", 50.0)))
+        .with_slo(windows(SloSpec::error_rate("admission-errors", 0.05)))
+        .with_slo(windows(SloSpec::queue_depth("queue-pressure", 0.8)));
+    if let Some(p) = drift_platform {
+        config = config
+            .with_slo(windows(SloSpec::drift(&format!("{p}-drift"), p, 0.75)).with_nudge(16));
     }
-    serve_demo()
+    config
+}
+
+/// With `--dashboard`: force a final sampler tick and print the rolling
+/// ops report — series sparklines, SLO alert states, recorder counts.
+fn print_dashboard(service: &Service) {
+    service.ops_tick();
+    if let Some(report) = service.ops_report() {
+        println!("{}", report.render());
+    }
 }
 
 /// `--metrics`: serve a small mixed-tenant workload, then dump the
 /// unified telemetry — the Prometheus exposition and the JSON snapshot
 /// of the process metrics registry, delimited by `=== metrics: ... ===`
 /// markers so `python/tools/check_metrics.py` can split and validate
-/// them — followed by the flight recorder's tables.
+/// them — followed by the flight recorder's tables. The ops plane runs
+/// here too, so the SLO / series / drop-count metric families are part
+/// of the validated exposition.
 fn metrics_demo() -> anyhow::Result<()> {
     let coord = Coordinator::shared();
     // monitor one platform so the health gauges have a row to publish
@@ -66,7 +121,10 @@ fn metrics_demo() -> anyhow::Result<()> {
     coord.monitor_platform("intel", target, HealthPolicy::default().with_sampling(0.25, 11))?;
     let service = Service::new(
         Arc::clone(&coord),
-        ServiceConfig::default().with_capacity(16).with_workers(2),
+        demo_slos(
+            ServiceConfig::default().with_capacity(16).with_workers(2),
+            Some("intel"),
+        ),
     );
     service.register_tenant("interactive", 4.0, 2)?;
     service.register_tenant("batch", 1.0, 2)?;
@@ -93,6 +151,9 @@ fn metrics_demo() -> anyhow::Result<()> {
     );
     coord.submit(&req)?;
 
+    // one forced tick publishes the SLO / series families into the
+    // registry before the exposition is rendered
+    service.ops_tick();
     let reg = service.metrics();
     println!("=== metrics: prometheus ===");
     print!("{}", reg.render_prometheus());
@@ -128,7 +189,7 @@ fn drive_until(
     anyhow::bail!("demo did not reach the expected health state within 80 requests")
 }
 
-fn inject_faults_demo() -> anyhow::Result<()> {
+fn inject_faults_demo(dashboard: bool) -> anyhow::Result<()> {
     // the "live device": an ARM simulator wrapped in seeded fault
     // injection, serving as both calibration target and replay target
     let faulty = Arc::new(FaultySource::new(
@@ -155,7 +216,14 @@ fn inject_faults_demo() -> anyhow::Result<()> {
             .with_drift_band(0.75)
             .with_quarantine(2, Duration::ZERO, Duration::from_millis(100)),
     )?;
-    let service = Service::new(Arc::clone(&coord), ServiceConfig::default().with_workers(2));
+    let mut config = ServiceConfig::default().with_workers(2);
+    if dashboard {
+        // drift SLO over the same 0.75 band as the health policy: the
+        // injected 3x / 9x drifts burn it Critical, and the nudge pulls
+        // the monitor's shadow sampling forward
+        config = demo_slos(config, Some("arm-live"));
+    }
+    let service = Service::new(Arc::clone(&coord), config);
     let net = networks::alexnet();
 
     // phase 1 — healthy traffic: live replays agree with the served model
@@ -223,18 +291,22 @@ fn inject_faults_demo() -> anyhow::Result<()> {
     println!("{}", primsel::obs::flight_recorder().render());
     service.metrics();
     print!("{}", primsel::obs::registry().render_prometheus());
+    if dashboard {
+        print_dashboard(&service);
+    }
     service.shutdown();
     Ok(())
 }
 
-fn serve_demo() -> anyhow::Result<()> {
+fn serve_demo(dashboard: bool) -> anyhow::Result<()> {
     let platforms = ["intel", "amd", "arm"];
-    let service = Service::new(
-        Coordinator::shared(),
-        // a deliberately small admission queue so the sweep's flood can
-        // actually bounce off it
-        ServiceConfig::default().with_capacity(12),
-    );
+    // a deliberately small admission queue so the sweep's flood can
+    // actually bounce off it
+    let mut config = ServiceConfig::default().with_capacity(12);
+    if dashboard {
+        config = demo_slos(config, None);
+    }
+    let service = Service::new(Coordinator::shared(), config);
     service.register_tenant("batch-sweep", 1.0, 4)?;
     service.register_tenant("interactive", 4.0, 4)?;
 
@@ -352,6 +424,9 @@ fn serve_demo() -> anyhow::Result<()> {
     // the instruments: rejected counts, p50/p95 wait & service latency,
     // per-platform cache hit rates
     println!("{}", service.stats().render());
+    if dashboard {
+        print_dashboard(&service);
+    }
     service.shutdown();
     Ok(())
 }

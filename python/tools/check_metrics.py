@@ -48,7 +48,15 @@ SAMPLE_RE = re.compile(
     r"(?:\{(?P<labels>[^}]*)\})?"
     r" (?P<value>-?(?:\d+(?:\.\d+)?(?:[eE][+-]?\d+)?|NaN|\+Inf|-Inf))$"
 )
-LABEL_RE = re.compile(r'^(?P<key>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<value>(?:[^"\\]|\\.)*)"$')
+# Label values may use ONLY the three escapes the exposition format
+# defines (\\, \", \n) — a lone backslash or any other escape is a
+# producer bug (an unescaped value would round-trip wrong through
+# Prometheus ingestion).
+LABEL_RE = re.compile(
+    r'^(?P<key>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<value>(?:[^"\\]|\\\\|\\"|\\n)*)"$'
+)
+# HELP text may use only \\ and \n (quotes are not special there).
+HELP_TEXT_RE = re.compile(r"^(?:[^\\]|\\\\|\\n)*$")
 
 # Every family the serving stack promises to export (underscore form;
 # summary families are matched by their base name).
@@ -74,6 +82,12 @@ REQUIRED_FAMILIES = [
     "primsel_recorder_requests",
     "primsel_recorder_events",
     "primsel_recorder_slow",
+    "primsel_recorder_requests_dropped",
+    "primsel_recorder_events_dropped",
+    "primsel_slo_state",
+    "primsel_slo_burn_fast",
+    "primsel_slo_burn_slow",
+    "primsel_series_ticks",
 ]
 
 
@@ -128,8 +142,17 @@ def check_prometheus(text: str) -> dict[str, str]:
                 raise CheckError(f"line {n}: duplicate TYPE for {name}")
             types[name] = parts[3]
             continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not parts[3].strip():
+                raise CheckError(f"line {n}: malformed HELP comment: {line!r}")
+            if not NAME_RE.match(parts[2]):
+                raise CheckError(f"line {n}: bad metric name in HELP: {parts[2]!r}")
+            if not HELP_TEXT_RE.match(parts[3]):
+                raise CheckError(f"line {n}: invalid escape in HELP text: {parts[3]!r}")
+            continue
         if line.startswith("#"):
-            continue  # HELP and other comments
+            continue  # other comments
         m = SAMPLE_RE.match(line)
         if not m:
             raise CheckError(f"line {n}: not a valid sample line: {line!r}")

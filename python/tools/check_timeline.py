@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Timeline-export check: run the serving stack's fault-injection demo
+with the ops plane live, export the flight recorder as Chrome
+trace-event JSON, and validate the file against the subset of the trace
+format the Chrome tracing UI / Perfetto actually require to render it.
+
+Usage:
+    python3 python/tools/check_timeline.py                # runs serve_zoo
+    python3 python/tools/check_timeline.py --from-file F  # validate a file
+
+The default producer is
+
+    cargo run --release --example serve_zoo -- \
+        --inject-faults --dashboard --timeline results/timeline.json
+
+— fault injection guarantees health events land in the recorder (so the
+timeline must carry instants, not just request spans), and the dashboard
+flag brings up the sampler + SLO engine whose alert transitions ride the
+same event ring.
+
+Checks, stdlib only:
+  * the file parses as JSON with a non-empty ``traceEvents`` array;
+  * every event carries ``ph`` and ``pid``; phases are limited to the
+    ones the exporter emits ("X" complete spans, "i" instants, "M"
+    metadata);
+  * every "X" span has a non-empty ``name``, numeric ``ts``/``dur``
+    (``dur`` >= 0) and a ``tid``, and ``ts`` is monotone non-decreasing
+    per ``(pid, tid)`` in array order (the tracing UI's sort contract);
+  * every "i" instant is global-scoped (``s: "g"``) and has a ``ts``;
+  * at least one stage-ladder span (a name like ``admit->dispatch``) and
+    at least one health/alert instant are present — a timeline with no
+    stage breakdown or no events means the wiring regressed;
+  * ``process_name`` metadata covers every pid any event references.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+PRODUCER = [
+    "cargo",
+    "run",
+    "--release",
+    "--example",
+    "serve_zoo",
+    "--",
+    "--inject-faults",
+    "--dashboard",
+    "--timeline",
+    "results/timeline.json",
+]
+DEFAULT_PATH = "results/timeline.json"
+
+KNOWN_PHASES = {"X", "i", "M"}
+
+
+class CheckError(Exception):
+    pass
+
+
+def require_num(event: dict, key: str, where: str) -> float:
+    v = event.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        raise CheckError(f"{where}: field {key!r} missing or non-numeric: {v!r}")
+    return float(v)
+
+
+def check(doc: object) -> dict[str, int]:
+    if not isinstance(doc, dict):
+        raise CheckError("trace root must be an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise CheckError("traceEvents must be a non-empty array")
+
+    counts = {"X": 0, "i": 0, "M": 0}
+    stage_spans = 0
+    named_pids: set[float] = set()
+    seen_pids: set[float] = set()
+    last_ts: dict[tuple[float, float], float] = {}
+    for n, e in enumerate(events):
+        where = f"traceEvents[{n}]"
+        if not isinstance(e, dict):
+            raise CheckError(f"{where}: event is not an object")
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            raise CheckError(f"{where}: unexpected phase {ph!r}")
+        counts[ph] += 1
+        pid = require_num(e, "pid", where)
+        seen_pids.add(pid)
+        if ph == "X":
+            name = e.get("name")
+            if not isinstance(name, str) or not name:
+                raise CheckError(f"{where}: span without a name")
+            ts = require_num(e, "ts", where)
+            dur = require_num(e, "dur", where)
+            if dur < 0:
+                raise CheckError(f"{where}: negative duration {dur}")
+            tid = require_num(e, "tid", where)
+            key = (pid, tid)
+            if ts < last_ts.get(key, float("-inf")):
+                raise CheckError(
+                    f"{where}: ts {ts} regressed below {last_ts[key]} on pid/tid {key}"
+                )
+            last_ts[key] = ts
+            if "->" in name and ": " not in name:
+                stage_spans += 1
+        elif ph == "i":
+            require_num(e, "ts", where)
+            if e.get("s") != "g":
+                raise CheckError(f"{where}: instant must be global-scoped (s: 'g')")
+        elif ph == "M" and e.get("name") == "process_name":
+            named_pids.add(pid)
+
+    if counts["X"] == 0:
+        raise CheckError("no complete spans — no requests made it into the timeline")
+    if stage_spans == 0:
+        raise CheckError("no stage-ladder spans (e.g. 'admit->dispatch') in the timeline")
+    if counts["i"] == 0:
+        raise CheckError(
+            "no instant events — fault injection must produce health/alert instants"
+        )
+    unnamed = sorted(seen_pids - named_pids)
+    if unnamed:
+        raise CheckError(f"pids without process_name metadata: {unnamed}")
+    return counts
+
+
+def produce() -> None:
+    print(f"running: {' '.join(PRODUCER)}")
+    proc = subprocess.run(PRODUCER, capture_output=True, text=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        raise CheckError(f"producer exited {proc.returncode}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--from-file",
+        help="validate an existing trace file instead of running the example",
+    )
+    args = ap.parse_args()
+    path = args.from_file or DEFAULT_PATH
+    try:
+        if not args.from_file:
+            produce()
+        with open(path) as fh:
+            try:
+                doc = json.load(fh)
+            except json.JSONDecodeError as e:
+                raise CheckError(f"{path} does not parse as JSON: {e}") from e
+        counts = check(doc)
+    except CheckError as e:
+        print(f"FAIL: {e}")
+        return 1
+    except OSError as e:
+        print(f"FAIL: cannot read {path}: {e}")
+        return 1
+    print(
+        f"timeline check passed: {counts['X']} spans, {counts['i']} instants, "
+        f"{counts['M']} metadata events in {path}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

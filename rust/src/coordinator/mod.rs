@@ -984,6 +984,22 @@ impl Coordinator {
         self.health.get(platform).map(|m| m.snapshot())
     }
 
+    /// Ask `platform`'s health monitor to shadow-sample its next `n`
+    /// observations unconditionally, ahead of its deterministic
+    /// sampling coin — the ops plane calls this when a Critical drift
+    /// alert fires, pulling drift evidence forward instead of waiting
+    /// for the coin. Returns whether the platform is monitored.
+    pub fn boost_shadow_sampling(&self, platform: &str, n: u64) -> bool {
+        self.health.boost(platform, n)
+    }
+
+    /// [`Self::boost_shadow_sampling`] for every monitored platform
+    /// (Critical latency alerts, where no single platform is implied);
+    /// returns how many monitors were nudged.
+    pub fn boost_all_shadow_sampling(&self, n: u64) -> usize {
+        self.health.boost_all(n)
+    }
+
     /// Run one recalibration attempt for the health loop: any panic from
     /// a faulty target source (the [`CostSource`] trait has no error
     /// channel) is caught and reported as a failure message, never

@@ -331,6 +331,10 @@ struct MonitorState {
     /// A recalibration is in flight; transitions and further attempts
     /// hold off until its outcome lands.
     busy: bool,
+    /// Observations left to shadow-sample unconditionally, ahead of the
+    /// deterministic coin — set by an ops-plane alert nudge
+    /// ([`PlatformMonitor::boost`]).
+    boosted: u64,
 }
 
 /// One monitored platform: the live target to replay against, the
@@ -372,6 +376,7 @@ impl PlatformMonitor {
                 not_before: Instant::now(),
                 attempt: 0,
                 busy: false,
+                boosted: 0,
             }),
         }
     }
@@ -384,6 +389,14 @@ impl PlatformMonitor {
     /// calibration-draw seed, so retries draw different samples.
     pub(crate) fn attempt_seed(&self, attempt: u64) -> u64 {
         fnv1a_words(&[self.policy.seed, SALT_RECAL, attempt])
+    }
+
+    /// Shadow-sample the next `n` observations unconditionally (the
+    /// ops-plane alert nudge). Boosts don't stack beyond the largest
+    /// outstanding request, so repeated alerts can't pin sampling on.
+    pub(crate) fn boost(&self, n: u64) {
+        let mut s = sync::lock(&self.state);
+        s.boosted = s.boosted.max(n);
     }
 
     /// Deterministic sampling coin for the `n`-th observation.
@@ -442,7 +455,16 @@ impl PlatformMonitor {
         let (attempt, due) = {
             let mut s = sync::lock(&self.state);
             s.observed += 1;
-            if !self.sample_coin(s.observed) {
+            // an alert boost spends before the coin so early sampling is
+            // guaranteed; the coin sequence itself stays untouched (it
+            // keys on `observed`), so post-boost behaviour is identical
+            let take = if s.boosted > 0 {
+                s.boosted -= 1;
+                true
+            } else {
+                self.sample_coin(s.observed)
+            };
+            if !take {
                 return;
             }
             s.sampled += 1;
@@ -616,6 +638,29 @@ impl HealthMonitor {
     /// The monitor for `platform`, if one is attached.
     pub(crate) fn get(&self, platform: &str) -> Option<Arc<PlatformMonitor>> {
         sync::read(&self.monitors).get(platform).cloned()
+    }
+
+    /// Ask `platform`'s monitor to shadow-sample its next `n`
+    /// observations unconditionally. Returns whether a monitor exists.
+    pub(crate) fn boost(&self, platform: &str, n: u64) -> bool {
+        match self.get(platform) {
+            Some(m) => {
+                m.boost(n);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// [`Self::boost`] for every monitored platform; returns how many
+    /// monitors were nudged.
+    pub(crate) fn boost_all(&self, n: u64) -> usize {
+        let monitors: Vec<Arc<PlatformMonitor>> =
+            sync::read(&self.monitors).values().cloned().collect();
+        for m in &monitors {
+            m.boost(n);
+        }
+        monitors.len()
     }
 
     /// Snapshot every monitor, sorted by platform name.

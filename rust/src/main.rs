@@ -7,9 +7,11 @@
 //!       run the full Figure-2 pipeline on one network
 //!   serve [--capacity N] [--workers N] [--heavy N] [--light N]
 //!       drive the admission-controlled service with a mixed-tenant workload
-//!   metrics
+//!   metrics [--series] [--timeline <path>]
 //!       run a small serving workload, then print the Prometheus
-//!       exposition, the JSON snapshot, and the flight recorder
+//!       exposition, the JSON snapshot, and the flight recorder;
+//!       --series adds the ops-plane time-series + SLO report and
+//!       --timeline exports a Chrome trace for Perfetto
 //!   profile [--runs N]
 //!       time the real Pallas kernel artifacts on this host via PJRT
 //!   train --platform <p> --kind <nn1|nn2|dlt_nn1|dlt_nn2>
@@ -80,7 +82,9 @@ fn print_usage() {
          \x20 select --network <name> --platform <p> [--source model|profile]\n\
          \x20 serve [--capacity N] [--workers N] [--heavy N] [--light N]\n\
          \x20                                                    mixed-tenant serving demo\n\
-         \x20 metrics [--requests N]                             serve a workload, dump telemetry\n\
+         \x20 metrics [--requests N] [--series] [--timeline F]   serve a workload, dump telemetry\n\
+         \x20                                                    (--series: sampler + SLO report;\n\
+         \x20                                                     --timeline F: Chrome trace JSON)\n\
          \x20 profile [--runs N]                                  time real kernels on this host\n\
          \x20 train --platform <p> --kind <kind>                  (re)train a model\n\
          \x20 networks                                            list the network zoo\n\
@@ -249,28 +253,40 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 /// telemetry: the Prometheus exposition and JSON snapshot of the
 /// process metrics registry (marker-delimited so tools can split the
 /// stream), followed by the flight recorder's slowest-request and
-/// health-event tables.
+/// health-event tables. With `--series` the ops plane comes up too
+/// (background sampler + burn-rate SLOs) and the rolling time-series
+/// report is printed; `--timeline <path>` writes the flight recorder
+/// as Chrome trace-event JSON loadable in Perfetto.
 fn cmd_metrics(flags: &HashMap<String, String>) -> Result<()> {
     use primsel::coordinator::{Coordinator, Objective, SelectionRequest};
     use primsel::health::HealthPolicy;
+    use primsel::obs::SloSpec;
     use primsel::selection::CostSource;
     use primsel::service::{Service, ServiceConfig};
     use primsel::simulator::{machine, Simulator};
     use std::sync::Arc;
+    use std::time::Duration;
 
     let requests: usize = flags
         .get("requests")
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(12);
+    let series = flags.contains_key("series");
     let coord = Coordinator::shared();
     // monitor one platform so the health gauges have a row to publish
     let target: Arc<dyn CostSource> = Arc::new(Simulator::new(machine::intel_i9_9900k()));
     coord.monitor_platform("intel", target, HealthPolicy::default().with_sampling(0.25, 11))?;
-    let service = Service::new(
-        Arc::clone(&coord),
-        ServiceConfig::default().with_capacity(16).with_workers(2),
-    );
+    let mut config = ServiceConfig::default().with_capacity(16).with_workers(2);
+    if series {
+        config = config
+            .with_sampling(Duration::from_millis(25))
+            .with_slo(SloSpec::latency_p95("e2e-latency", "e2e", 50.0))
+            .with_slo(SloSpec::error_rate("admission-errors", 0.05))
+            .with_slo(SloSpec::queue_depth("queue-pressure", 0.8))
+            .with_slo(SloSpec::drift("intel-drift", "intel", 0.25).with_nudge(16));
+    }
+    let service = Service::new(Arc::clone(&coord), config);
     service.register_tenant("interactive", 4.0, 2)?;
     service.register_tenant("batch", 1.0, 2)?;
 
@@ -302,7 +318,24 @@ fn cmd_metrics(flags: &HashMap<String, String>) -> Result<()> {
     println!("=== metrics: json ===");
     println!("{}", reg.snapshot_json().dump());
     println!("=== metrics: end ===");
+    if series {
+        // force one final tick so the series include the drained workload
+        service.ops_tick();
+        if let Some(report) = service.ops_report() {
+            println!("=== ops: series ===");
+            println!("{}", report.to_json().dump());
+            println!("=== ops: end ===");
+            println!("\n{}", report.render());
+        }
+    }
     println!("\n{}", primsel::obs::flight_recorder().render());
+    if let Some(path) = flags.get("timeline") {
+        primsel::obs::write_chrome_trace(
+            primsel::obs::flight_recorder(),
+            std::path::Path::new(path),
+        )?;
+        println!("chrome trace written to {path} (load in Perfetto / chrome://tracing)");
+    }
     service.shutdown();
     Ok(())
 }

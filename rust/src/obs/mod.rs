@@ -11,16 +11,32 @@
 //! gauges (queue depth, cache hit ratios, health states) into the same
 //! registry, which exports as Prometheus text or a JSON snapshot.
 //!
+//! On top of those sits the ops plane: [`series`] samples the registry
+//! into rolling ring-buffer time-series on an injectable [`clock`],
+//! [`slo`] evaluates declarative burn-rate SLOs into an alert state
+//! machine, and [`timeline`] exports the recorder's rings as Chrome
+//! trace-event JSON for Perfetto.
+//!
 //! Everything on the warm path — marking a trace stage, recording a
-//! histogram sample, writing a flight record — is allocation-free and
-//! lock-free, pinned by `rust/tests/alloc_counter.rs`.
+//! histogram sample, writing a flight record, taking a series sample —
+//! is allocation-free and lock-free (the sampler excepted: it holds its
+//! own mutex, never the hot path's), pinned by
+//! `rust/tests/alloc_counter.rs`.
 
+pub mod clock;
 pub mod recorder;
 pub mod registry;
+pub mod series;
+pub mod slo;
+pub mod timeline;
 pub mod trace;
 
+pub use clock::{Clock, ManualClock, SystemClock};
 pub use recorder::{FlightRecord, FlightRecorder, RecordKind};
-pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use registry::{CellValue, Counter, Gauge, Histogram, Registry};
+pub use series::{OpsReport, RecorderCounts, Sampler, SamplerConfig, SeriesPoint, SeriesSnapshot};
+pub use slo::{Alert, AlertState, AlertTransition, Sli, SloEngine, SloInputs, SloSpec};
+pub use timeline::{chrome_trace, write_chrome_trace};
 pub use trace::{Stage, Trace, N_STAGES};
 
 use std::sync::OnceLock;
@@ -86,4 +102,17 @@ pub mod names {
     pub const RECORDER_EVENTS: &str = "primsel.recorder.events";
     /// Flight-recorder lifetime slow-capture count (counter).
     pub const RECORDER_SLOW: &str = "primsel.recorder.slow";
+    /// Requests overwritten out of the recorder's recent ring (counter).
+    pub const RECORDER_REQUESTS_DROPPED: &str = "primsel.recorder.requests_dropped";
+    /// Events overwritten out of the recorder's event ring (counter).
+    pub const RECORDER_EVENTS_DROPPED: &str = "primsel.recorder.events_dropped";
+    /// SLO alert state code, label `slo` (gauge: 0 ok, 1 warning, 2
+    /// critical).
+    pub const SLO_STATE: &str = "primsel.slo.state";
+    /// Fast-window burn rate, label `slo` (gauge).
+    pub const SLO_BURN_FAST: &str = "primsel.slo.burn_fast";
+    /// Slow-window burn rate, label `slo` (gauge).
+    pub const SLO_BURN_SLOW: &str = "primsel.slo.burn_slow";
+    /// Series-sampler ticks taken (counter).
+    pub const SERIES_TICKS: &str = "primsel.series.ticks";
 }

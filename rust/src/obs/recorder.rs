@@ -2,9 +2,10 @@
 //! request traces plus structured health events, with always-keep-slowest
 //! retention for postmortems.
 //!
-//! Records are encoded into a fixed `[u64; 17]` word block (kind, index,
+//! Records are encoded into a fixed `[u64; 18]` word block (kind, index,
 //! total span, the seven trace marks, three 16-byte inline tags, one
-//! value word) and written into per-slot seqlocks: the writer CAS-claims
+//! value word, one wall-offset word) and written into per-slot
+//! seqlocks: the writer CAS-claims
 //! a slot (even → odd sequence), stores the words relaxed, and releases
 //! (odd → even); readers retry on a torn sequence. Recording therefore
 //! never allocates and never blocks, which keeps the instrumented warm
@@ -22,18 +23,19 @@ use std::collections::BTreeMap;
 use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
 use std::sync::atomic::{fence, AtomicU64};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Fixed per-record word count (see the word layout constants below).
-const WORDS: usize = 17;
+const WORDS: usize = 18;
 const W_KIND: usize = 0;
 const W_INDEX: usize = 1;
 const W_TOTAL: usize = 2;
 const W_MARKS: usize = 3; // .. W_MARKS + N_STAGES
-const W_TAG_A: usize = 10; // platform
+const W_TAG_A: usize = 10; // platform / SLO name
 const W_TAG_B: usize = 12; // network / previous state / outcome
 const W_TAG_C: usize = 14; // tenant / new state
-const W_VALUE: usize = 16; // f64 bits (drift score)
+const W_VALUE: usize = 16; // f64 bits (drift score / burn rate)
+const W_WALL: usize = 17; // ns since the recorder's epoch
 
 /// What a [`FlightRecord`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +46,8 @@ pub enum RecordKind {
     Transition = 1,
     /// A recalibration outcome (ok / failed).
     Recalibration = 2,
+    /// An SLO alert state transition (ops plane).
+    Alert = 3,
 }
 
 impl RecordKind {
@@ -53,6 +57,7 @@ impl RecordKind {
             RecordKind::Request => "request",
             RecordKind::Transition => "transition",
             RecordKind::Recalibration => "recalibration",
+            RecordKind::Alert => "alert",
         }
     }
 
@@ -60,7 +65,8 @@ impl RecordKind {
         match w {
             0 => RecordKind::Request,
             1 => RecordKind::Transition,
-            _ => RecordKind::Recalibration,
+            2 => RecordKind::Recalibration,
+            _ => RecordKind::Alert,
         }
     }
 }
@@ -68,7 +74,9 @@ impl RecordKind {
 /// A decoded recorder entry. Field meaning depends on [`RecordKind`]:
 /// for requests, `network`/`tenant` are the request's network name and
 /// tenant lane; for transitions they hold the previous and new health
-/// state names; for recalibrations `network` holds `"ok"` / `"failed"`.
+/// state names; for recalibrations `network` holds `"ok"` / `"failed"`;
+/// for alerts `platform` is the SLO name and `network`/`tenant` the
+/// previous/new alert states.
 #[derive(Debug, Clone)]
 pub struct FlightRecord {
     pub kind: RecordKind,
@@ -81,8 +89,12 @@ pub struct FlightRecord {
     pub platform: String,
     pub network: String,
     pub tenant: String,
-    /// Drift score at the event (transitions / recalibrations).
+    /// Drift score (transitions / recalibrations) or burn rate (alerts).
     pub value: f64,
+    /// Nanoseconds between the recorder's construction and this record's
+    /// origin (a request's trace start; an event's recording moment).
+    /// Lets the timeline exporter place records on one shared axis.
+    pub wall_ns: u64,
 }
 
 impl FlightRecord {
@@ -112,6 +124,7 @@ impl FlightRecord {
             network: tag_str(words[W_TAG_B], words[W_TAG_B + 1]),
             tenant: tag_str(words[W_TAG_C], words[W_TAG_C + 1]),
             value: f64::from_bits(words[W_VALUE]),
+            wall_ns: words[W_WALL],
         }
     }
 
@@ -124,6 +137,7 @@ impl FlightRecord {
         obj.insert("network".to_string(), Json::Str(self.network.clone()));
         obj.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
         obj.insert("value".to_string(), Json::Num(self.value));
+        obj.insert("wall_ms".to_string(), Json::Num(self.wall_ns as f64 / 1e6));
         let mut marks = BTreeMap::new();
         for s in Stage::ALL {
             if let Some(ns) = self.stage_ns(s) {
@@ -213,6 +227,8 @@ impl Slot {
 /// The recorder proper. One process-wide instance lives behind
 /// [`crate::obs::flight_recorder`]; standalone instances serve tests.
 pub struct FlightRecorder {
+    /// Shared time origin for [`FlightRecord::wall_ns`].
+    epoch: Instant,
     /// Most recent completed requests (seqlock ring, overwrites oldest).
     recent: Vec<Slot>,
     head: AtomicU64,
@@ -233,6 +249,7 @@ impl FlightRecorder {
     pub fn new(recent_cap: usize, slow_cap: usize, events_cap: usize) -> Self {
         assert!(recent_cap >= 1 && slow_cap >= 1 && events_cap >= 1);
         Self {
+            epoch: Instant::now(),
             recent: (0..recent_cap).map(|_| Slot::empty()).collect(),
             head: AtomicU64::new(0),
             events: (0..events_cap).map(|_| Slot::empty()).collect(),
@@ -265,6 +282,19 @@ impl FlightRecorder {
     /// evicted by slower arrivals).
     pub fn slow_captured(&self) -> u64 {
         self.slow_captured.load(Relaxed)
+    }
+
+    /// Requests overwritten out of the recent ring over the recorder's
+    /// lifetime — how much the ring has forgotten, so "covered
+    /// everything" is never silently false.
+    pub fn requests_dropped(&self) -> u64 {
+        self.head.load(Relaxed).saturating_sub(self.recent.len() as u64)
+    }
+
+    /// Events overwritten out of the event ring over the recorder's
+    /// lifetime.
+    pub fn events_dropped(&self) -> u64 {
+        self.events_head.load(Relaxed).saturating_sub(self.events.len() as u64)
     }
 
     /// Set the slow-capture threshold.
@@ -304,10 +334,22 @@ impl FlightRecorder {
         let [c0, c1] = tag_words(tenant);
         words[W_TAG_C] = c0;
         words[W_TAG_C + 1] = c1;
+        // traces begun before the recorder existed saturate to wall 0
+        words[W_WALL] = trace
+            .origin()
+            .saturating_duration_since(self.epoch)
+            .as_nanos()
+            .min(u64::MAX as u128) as u64;
         Self::push(&self.recent, &self.head, &mut words);
         if total >= self.slow_threshold_ns.load(Relaxed) {
             self.keep_slow(words);
         }
+    }
+
+    /// Nanoseconds since the recorder's construction (the `wall_ns`
+    /// written on events recorded right now).
+    fn wall_now(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
     }
 
     /// Record a platform health-state transition as a structured event.
@@ -330,6 +372,7 @@ impl FlightRecorder {
         words[W_TAG_C] = c0;
         words[W_TAG_C + 1] = c1;
         words[W_VALUE] = drift.to_bits();
+        words[W_WALL] = self.wall_now();
         Self::push(&self.events, &self.events_head, &mut words);
     }
 
@@ -344,6 +387,27 @@ impl FlightRecorder {
         words[W_TAG_B] = b0;
         words[W_TAG_B + 1] = b1;
         words[W_VALUE] = drift.to_bits();
+        words[W_WALL] = self.wall_now();
+        Self::push(&self.events, &self.events_head, &mut words);
+    }
+
+    /// Record an SLO alert state transition as a structured event:
+    /// `slo` rides the platform tag, `from`/`to` are alert state names,
+    /// `burn` is the fast-window burn rate at the transition.
+    pub fn record_alert(&self, slo: &str, from: &'static str, to: &'static str, burn: f64) {
+        let mut words = [0u64; WORDS];
+        words[W_KIND] = RecordKind::Alert as u64;
+        let [a0, a1] = tag_words(slo);
+        words[W_TAG_A] = a0;
+        words[W_TAG_A + 1] = a1;
+        let [b0, b1] = tag_words(from);
+        words[W_TAG_B] = b0;
+        words[W_TAG_B + 1] = b1;
+        let [c0, c1] = tag_words(to);
+        words[W_TAG_C] = c0;
+        words[W_TAG_C + 1] = c1;
+        words[W_VALUE] = burn.to_bits();
+        words[W_WALL] = self.wall_now();
         Self::push(&self.events, &self.events_head, &mut words);
     }
 
@@ -437,8 +501,8 @@ impl FlightRecorder {
         let events = self.events_snapshot();
         if !events.is_empty() {
             let mut t = Table::new(
-                "flight recorder — health events",
-                &["#", "kind", "platform", "from/outcome", "to", "drift"],
+                "flight recorder — health + alert events",
+                &["#", "kind", "platform/slo", "from/outcome", "to", "value"],
             );
             for r in events {
                 t.row(vec![
@@ -453,6 +517,14 @@ impl FlightRecorder {
             out.push('\n');
             out.push_str(&t.render());
         }
+        out.push_str(&format!(
+            "\nlifetime: {} requests ({} dropped from ring), {} slow captured, {} events ({} dropped)\n",
+            self.requests_recorded(),
+            self.requests_dropped(),
+            self.slow_captured(),
+            self.events_recorded(),
+            self.events_dropped(),
+        ));
         out
     }
 
@@ -483,6 +555,14 @@ impl FlightRecorder {
         counts.insert(
             "slow".to_string(),
             Json::Num(self.slow_captured() as f64),
+        );
+        counts.insert(
+            "requests_dropped".to_string(),
+            Json::Num(self.requests_dropped() as f64),
+        );
+        counts.insert(
+            "events_dropped".to_string(),
+            Json::Num(self.events_dropped() as f64),
         );
         root.insert("counts".to_string(), Json::Obj(counts));
         Json::Obj(root)
@@ -592,8 +672,70 @@ mod tests {
         // full snapshot still shows everything
         assert_eq!(rec.events_snapshot().len(), 3);
         let rendered = rec.render();
-        assert!(rendered.contains("health events"));
+        assert!(rendered.contains("health + alert events"));
         assert!(rendered.contains("quarantined"));
+    }
+
+    #[test]
+    fn drop_accounting_counts_ring_overwrites() {
+        let rec = FlightRecorder::new(4, 2, 2);
+        assert_eq!(rec.requests_dropped(), 0);
+        assert_eq!(rec.events_dropped(), 0);
+        for _ in 0..7 {
+            let t = Trace::begin();
+            t.mark_at_ns(Stage::Admit, 0);
+            t.mark_at_ns(Stage::Done, 1_000);
+            rec.record_request(&t, "p", "n", "t");
+        }
+        assert_eq!(rec.requests_recorded(), 7);
+        assert_eq!(rec.requests_dropped(), 3, "ring of 4 forgot 3 of 7");
+        for i in 0..5 {
+            rec.record_transition("p", "healthy", "drifting", i as f64);
+        }
+        assert_eq!(rec.events_dropped(), 3, "ring of 2 forgot 3 of 5");
+        let rendered = rec.render();
+        assert!(rendered.contains("7 requests (3 dropped from ring)"));
+        assert!(rendered.contains("5 events (3 dropped)"));
+        let parsed = Json::parse(&rec.snapshot_json().dump()).unwrap();
+        let counts = parsed.get("counts").unwrap();
+        assert_eq!(counts.get("requests_dropped").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(counts.get("events_dropped").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn alert_records_round_trip() {
+        let rec = FlightRecorder::new(2, 2, 4);
+        rec.record_alert("queue-depth", "ok", "critical", 2.75);
+        let events = rec.events_snapshot();
+        assert_eq!(events.len(), 1);
+        let r = &events[0];
+        assert_eq!(r.kind, RecordKind::Alert);
+        assert_eq!(r.kind.name(), "alert");
+        assert_eq!(r.platform, "queue-depth");
+        assert_eq!(r.network, "ok");
+        assert_eq!(r.tenant, "critical");
+        assert!((r.value - 2.75).abs() < 1e-12);
+        assert!(rec.render().contains("alert"));
+    }
+
+    #[test]
+    fn wall_offsets_are_monotone_per_ring() {
+        let rec = FlightRecorder::new(4, 2, 4);
+        for i in 0..3 {
+            rec.record_transition("p", "healthy", "drifting", i as f64);
+        }
+        let events = rec.events_snapshot();
+        for pair in events.windows(2) {
+            assert!(pair[1].wall_ns >= pair[0].wall_ns);
+        }
+        let t = Trace::begin();
+        t.mark_at_ns(Stage::Admit, 0);
+        t.mark_at_ns(Stage::Done, 1_000);
+        rec.record_request(&t, "p", "n", "t");
+        // the trace began before the recorder's epoch-relative clock
+        // could go negative: offsets always decode, saturating at 0
+        let r = &rec.snapshot()[0];
+        assert!(r.wall_ns < u64::MAX);
     }
 
     #[test]

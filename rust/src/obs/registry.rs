@@ -60,8 +60,8 @@ impl Gauge {
     }
 }
 
-/// Latency histogram handle (shared [`LatencyHistogram`]). Recording is
-/// lock-free and allocation-free; snapshotting allocates.
+/// Latency histogram handle (shared [`LatencyHistogram`]). Recording
+/// and snapshotting are both lock-free and allocation-free.
 #[derive(Debug, Clone)]
 pub struct Histogram(Arc<LatencyHistogram>);
 
@@ -98,6 +98,20 @@ impl Cell {
             Cell::Histogram(_) => "summary",
         }
     }
+}
+
+/// One series' current value as seen by [`Registry::visit`]: counters
+/// and gauges as plain numbers, histograms pre-digested into a
+/// [`HistogramSnapshot`] (taken allocation-free via
+/// [`LatencyHistogram::snapshot_inline`]).
+#[derive(Debug, Clone, Copy)]
+pub enum CellValue {
+    /// Monotonic counter value.
+    Counter(u64),
+    /// Gauge level.
+    Gauge(f64),
+    /// Histogram quantile digest.
+    Summary(HistogramSnapshot),
 }
 
 struct Entry {
@@ -202,6 +216,25 @@ impl Registry {
         }
     }
 
+    /// Visit every registered series in registration order without
+    /// allocating: `f(entry_index, name, labels, value)`. Entry indices
+    /// are stable (the entry table is append-only), so callers — the
+    /// series [`Sampler`](crate::obs::series::Sampler) — can key
+    /// per-series state on them and stay allocation-free once every
+    /// live series has been seen. `f` runs under the registry read
+    /// lock: it must not register metrics.
+    pub fn visit(&self, mut f: impl FnMut(usize, &str, &[(String, String)], CellValue)) {
+        let inner = sync::read(&self.inner);
+        for (i, e) in inner.entries.iter().enumerate() {
+            let v = match &e.cell {
+                Cell::Counter(c) => CellValue::Counter(c.load(Relaxed)),
+                Cell::Gauge(g) => CellValue::Gauge(f64::from_bits(g.load(Relaxed))),
+                Cell::Histogram(h) => CellValue::Summary(h.snapshot_inline()),
+            };
+            f(i, &e.name, &e.labels, v);
+        }
+    }
+
     /// Number of registered (name, labels) series.
     pub fn len(&self) -> usize {
         sync::read(&self.inner).entries.len()
@@ -227,7 +260,10 @@ impl Registry {
             entries.sort_by(|a, b| a.labels.cmp(&b.labels));
             let prom = sanitize_name(name);
             let kind = entries[0].cell.kind();
-            out.push_str(&format!("# HELP {prom} {name}\n# TYPE {prom} {kind}\n"));
+            out.push_str(&format!(
+                "# HELP {prom} {}\n# TYPE {prom} {kind}\n",
+                escape_help_text(name)
+            ));
             for e in entries {
                 match &e.cell {
                     Cell::Counter(c) => {
@@ -349,6 +385,12 @@ fn escape_label_value(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
+/// HELP text escaping per the exposition format: only backslash and
+/// newline (double-quotes are legal in HELP text, unlike label values).
+fn escape_help_text(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
 fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
     if labels.is_empty() && extra.is_none() {
         return String::new();
@@ -437,6 +479,47 @@ mod tests {
         reg.counter("primsel.esc", &[("p", "a\"b\\c\nd")]).inc();
         let text = reg.render_prometheus();
         assert!(text.contains("p=\"a\\\"b\\\\c\\nd\""));
+    }
+
+    #[test]
+    fn help_text_escapes_backslash_and_newline() {
+        assert_eq!(escape_help_text("plain.name"), "plain.name");
+        assert_eq!(escape_help_text("a\\b\nc\"d"), "a\\\\b\\nc\"d");
+    }
+
+    #[test]
+    fn visit_reports_every_series_with_stable_indices() {
+        let reg = Registry::new();
+        let c = reg.counter("primsel.visit.count", &[("tenant", "t0")]);
+        c.add(5);
+        reg.gauge("primsel.visit.gauge", &[]).set(2.5);
+        let h = reg.histogram("primsel.visit.hist", &[]);
+        h.record(Duration::from_millis(4));
+
+        let mut seen = Vec::new();
+        reg.visit(|i, name, labels, v| {
+            seen.push((i, name.to_string(), labels.to_vec(), v));
+        });
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0].0, 0);
+        assert_eq!(seen[0].1, "primsel.visit.count");
+        assert_eq!(seen[0].2, vec![("tenant".to_string(), "t0".to_string())]);
+        assert!(matches!(seen[0].3, CellValue::Counter(5)));
+        assert!(matches!(seen[1].3, CellValue::Gauge(g) if g == 2.5));
+        match seen[2].3 {
+            CellValue::Summary(s) => {
+                assert_eq!(s.count, 1);
+                assert!(s.p50_ms > 0.0);
+            }
+            _ => panic!("histogram must visit as a summary"),
+        }
+
+        // registering more series appends; earlier indices are stable
+        reg.counter("primsel.visit.count", &[("tenant", "t1")]).inc();
+        let mut names = Vec::new();
+        reg.visit(|i, name, _, _| names.push((i, name.to_string())));
+        assert_eq!(names[0], (0, "primsel.visit.count".to_string()));
+        assert_eq!(names[3], (3, "primsel.visit.count".to_string()));
     }
 
     #[test]

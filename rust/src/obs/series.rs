@@ -1,0 +1,676 @@
+//! Rolling time-series over the metrics registry.
+//!
+//! A [`Sampler`] snapshots a [`Registry`] on a fixed cadence into
+//! fixed-capacity per-series ring buffers: counters become **rates**
+//! (delta per second between consecutive samples), gauges become
+//! **levels**, and histograms contribute two series each (**p50** and
+//! **p95** milliseconds, digested allocation-free via
+//! [`LatencyHistogram::snapshot_inline`](crate::service::LatencyHistogram::snapshot_inline)).
+//! Timestamps come through an injected [`Clock`], so tests drive a
+//! [`ManualClock`](super::clock::ManualClock) and replay bit-identical
+//! series; production uses the monotonic
+//! [`SystemClock`](super::clock::SystemClock) owned by the service's
+//! `primsel-sampler` thread.
+//!
+//! The steady-state sample path does not allocate: per-series state is
+//! keyed on stable registry entry indices and rings are pre-sized, so
+//! the heap is touched only when a *new* series appears. This is pinned
+//! (with the sampler thread live) by `rust/tests/alloc_counter.rs`.
+//!
+//! [`OpsReport`] bundles the drained series with SLO alert states and
+//! flight-recorder counts into a `ServiceStats`-style rendering with
+//! ASCII sparklines — what `serve_zoo --dashboard` prints.
+
+use super::clock::Clock;
+use super::registry::{CellValue, Registry};
+use super::slo::Alert;
+use crate::config::Json;
+use crate::report::Table;
+use crate::sync;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How the sampler runs: ring capacity per series and the cadence the
+/// owning thread ticks at (the sampler itself is cadence-agnostic —
+/// every [`Sampler::sample`] call is one tick).
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// Points retained per series; older points are overwritten.
+    pub capacity: usize,
+    /// Intended wall cadence between ticks (used by the service's
+    /// sampler thread; tests tick by hand).
+    pub cadence: Duration,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self { capacity: 240, cadence: Duration::from_secs(1) }
+    }
+}
+
+impl SamplerConfig {
+    /// Default capacity at the given cadence.
+    pub fn every(cadence: Duration) -> Self {
+        Self { cadence, ..Self::default() }
+    }
+
+    /// Override the per-series ring capacity.
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+}
+
+/// One sampled point: nanoseconds on the sampler's clock, value in the
+/// series' unit (rate per second, gauge level, or milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesPoint {
+    pub t_ns: u64,
+    pub value: f64,
+}
+
+/// Fixed-capacity overwrite ring of [`SeriesPoint`]s.
+#[derive(Debug)]
+struct Ring {
+    points: Box<[SeriesPoint]>,
+    /// Points ever pushed; the ring holds the last `capacity` of them.
+    pushed: u64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        Self {
+            points: vec![SeriesPoint { t_ns: 0, value: 0.0 }; capacity].into_boxed_slice(),
+            pushed: 0,
+        }
+    }
+
+    fn push(&mut self, p: SeriesPoint) {
+        let i = (self.pushed % self.points.len() as u64) as usize;
+        self.points[i] = p;
+        self.pushed += 1;
+    }
+
+    fn len(&self) -> usize {
+        (self.pushed as usize).min(self.points.len())
+    }
+
+    /// Oldest→newest copy (allocates; reporting path only).
+    fn drain_ordered(&self) -> Vec<SeriesPoint> {
+        let n = self.len();
+        let cap = self.points.len() as u64;
+        let start = self.pushed.saturating_sub(n as u64);
+        (0..n)
+            .map(|k| self.points[((start + k as u64) % cap) as usize])
+            .collect()
+    }
+}
+
+/// How raw registry values map onto series points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SeriesKind {
+    /// Counter delta per second between consecutive ticks.
+    Rate,
+    /// Gauge level as-is.
+    Level,
+    /// Histogram p50 in milliseconds.
+    P50,
+    /// Histogram p95 in milliseconds.
+    P95,
+}
+
+impl SeriesKind {
+    fn name(self) -> &'static str {
+        match self {
+            SeriesKind::Rate => "rate",
+            SeriesKind::Level => "level",
+            SeriesKind::P50 => "p50_ms",
+            SeriesKind::P95 => "p95_ms",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SeriesState {
+    name: String,
+    labels: Vec<(String, String)>,
+    kind: SeriesKind,
+    /// Last raw counter value (rate series only).
+    prev_raw: f64,
+    prev_t_ns: u64,
+    /// Whether `prev_*` holds a real prior sample.
+    primed: bool,
+    ring: Ring,
+}
+
+impl SeriesState {
+    fn observe(&mut self, t_ns: u64, raw: f64) {
+        match self.kind {
+            SeriesKind::Rate => {
+                if self.primed && t_ns > self.prev_t_ns && raw >= self.prev_raw {
+                    let dt_sec = (t_ns - self.prev_t_ns) as f64 / 1e9;
+                    self.ring.push(SeriesPoint { t_ns, value: (raw - self.prev_raw) / dt_sec });
+                }
+                // A counter that went backwards was reset (registry
+                // `Counter::store` republishing): re-prime silently.
+                self.prev_raw = raw;
+                self.prev_t_ns = t_ns;
+                self.primed = true;
+            }
+            _ => self.ring.push(SeriesPoint { t_ns, value: raw }),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct SamplerState {
+    /// Registry entry index → series indices (`[idx, usize::MAX]` for
+    /// counters/gauges, `[p50_idx, p95_idx]` for histograms). Registry
+    /// entries are append-only so this vector only ever grows.
+    by_entry: Vec<[usize; 2]>,
+    series: Vec<SeriesState>,
+    ticks: u64,
+}
+
+const NONE: usize = usize::MAX;
+
+/// The sampler proper: call [`Sampler::sample`] once per tick.
+#[derive(Debug)]
+pub struct Sampler {
+    cfg: SamplerConfig,
+    state: Mutex<SamplerState>,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Self::new(SamplerConfig::default())
+    }
+}
+
+impl Sampler {
+    /// A sampler with the given ring capacity / cadence.
+    pub fn new(cfg: SamplerConfig) -> Self {
+        Self { cfg, state: Mutex::new(SamplerState::default()) }
+    }
+
+    /// The configured cadence (the owning thread's tick interval).
+    pub fn cadence(&self) -> Duration {
+        self.cfg.cadence
+    }
+
+    /// Take one sample of every series in `reg` at `clock`'s current
+    /// time. Allocation-free once every live series has been seen;
+    /// allocates only to grow state for newly registered series.
+    pub fn sample(&self, reg: &Registry, clock: &dyn Clock) {
+        let mut guard = sync::lock(&self.state);
+        let st = &mut *guard;
+        let t_ns = clock.now_ns();
+        let capacity = self.cfg.capacity;
+        reg.visit(|i, name, labels, value| {
+            while st.by_entry.len() <= i {
+                st.by_entry.push([NONE, NONE]);
+            }
+            if st.by_entry[i][0] == NONE {
+                let kinds: &[SeriesKind] = match value {
+                    CellValue::Counter(_) => &[SeriesKind::Rate],
+                    CellValue::Gauge(_) => &[SeriesKind::Level],
+                    CellValue::Summary(_) => &[SeriesKind::P50, SeriesKind::P95],
+                };
+                for (slot, &kind) in kinds.iter().enumerate() {
+                    st.by_entry[i][slot] = st.series.len();
+                    st.series.push(SeriesState {
+                        name: name.to_string(),
+                        labels: labels.to_vec(),
+                        kind,
+                        prev_raw: 0.0,
+                        prev_t_ns: 0,
+                        primed: false,
+                        ring: Ring::new(capacity),
+                    });
+                }
+            }
+            match value {
+                CellValue::Counter(c) => {
+                    st.series[st.by_entry[i][0]].observe(t_ns, c as f64);
+                }
+                CellValue::Gauge(g) => {
+                    st.series[st.by_entry[i][0]].observe(t_ns, g);
+                }
+                CellValue::Summary(s) => {
+                    st.series[st.by_entry[i][0]].observe(t_ns, s.p50_ms);
+                    st.series[st.by_entry[i][1]].observe(t_ns, s.p95_ms);
+                }
+            }
+        });
+        st.ticks += 1;
+    }
+
+    /// Ticks taken so far.
+    pub fn ticks(&self) -> u64 {
+        sync::lock(&self.state).ticks
+    }
+
+    /// Copy out every series, oldest point first, sorted by
+    /// (name, labels, kind). Reporting path — allocates.
+    pub fn snapshot(&self) -> Vec<SeriesSnapshot> {
+        let st = sync::lock(&self.state);
+        let mut out: Vec<SeriesSnapshot> = st
+            .series
+            .iter()
+            .map(|s| SeriesSnapshot {
+                name: s.name.clone(),
+                labels: s.labels.clone(),
+                kind: s.kind.name(),
+                points: s.ring.drain_ordered(),
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.name, &a.labels, a.kind).cmp(&(&b.name, &b.labels, b.kind)));
+        out
+    }
+
+    /// JSON form of [`Sampler::snapshot`]:
+    /// `{"ticks": n, "series": [{name, labels, kind, points: [[t_ns, value], ...]}]}`.
+    pub fn snapshot_json(&self) -> Json {
+        let series = self.snapshot();
+        let ticks = self.ticks();
+        let mut arr = Vec::with_capacity(series.len());
+        for s in series {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(s.name));
+            let labels: BTreeMap<String, Json> = s
+                .labels
+                .into_iter()
+                .map(|(k, v)| (k, Json::Str(v)))
+                .collect();
+            obj.insert("labels".to_string(), Json::Obj(labels));
+            obj.insert("kind".to_string(), Json::Str(s.kind.to_string()));
+            obj.insert(
+                "points".to_string(),
+                Json::Arr(
+                    s.points
+                        .iter()
+                        .map(|p| Json::Arr(vec![Json::Num(p.t_ns as f64), Json::Num(p.value)]))
+                        .collect(),
+                ),
+            );
+            arr.push(Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("ticks".to_string(), Json::Num(ticks as f64));
+        root.insert("series".to_string(), Json::Arr(arr));
+        Json::Obj(root)
+    }
+}
+
+/// One drained series: dotted metric name, its labels, how raw values
+/// were mapped ([`kind`](SeriesSnapshot::kind) is `"rate"`, `"level"`,
+/// `"p50_ms"` or `"p95_ms"`), and the retained points oldest-first.
+#[derive(Debug, Clone)]
+pub struct SeriesSnapshot {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub kind: &'static str,
+    pub points: Vec<SeriesPoint>,
+}
+
+impl SeriesSnapshot {
+    /// Latest value, if any point was retained.
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.value)
+    }
+
+    /// ASCII sparkline over the last `width` points (min→max scaled to
+    /// eight block glyphs; flat series render as a mid-level bar).
+    pub fn sparkline(&self, width: usize) -> String {
+        sparkline(
+            self.points.iter().map(|p| p.value),
+            self.points.len().saturating_sub(width),
+        )
+    }
+}
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render `values[skip..]` as a block-glyph sparkline.
+fn sparkline(values: impl Iterator<Item = f64> + Clone, skip: usize) -> String {
+    let vals: Vec<f64> = values.skip(skip).filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return String::new();
+    }
+    let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = max - min;
+    vals.iter()
+        .map(|&v| {
+            let level = if span <= f64::EPSILON {
+                3
+            } else {
+                (((v - min) / span) * 7.0).round() as usize
+            };
+            SPARK[level.min(7)]
+        })
+        .collect()
+}
+
+/// Flight-recorder lifetime counts carried into an [`OpsReport`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecorderCounts {
+    pub requests: u64,
+    pub events: u64,
+    pub slow: u64,
+    pub requests_dropped: u64,
+    pub events_dropped: u64,
+}
+
+/// Point-in-time ops-plane digest: drained series with sparklines, SLO
+/// alert states, and flight-recorder coverage. Built by
+/// [`Service::ops_report`](crate::service::Service::ops_report);
+/// rendered by `serve_zoo --dashboard` and the `metrics --series`
+/// subcommand.
+#[derive(Debug, Clone)]
+pub struct OpsReport {
+    /// Sampler-clock time the report was assembled at.
+    pub at_ns: u64,
+    /// Sampler ticks taken so far.
+    pub ticks: u64,
+    pub series: Vec<SeriesSnapshot>,
+    pub alerts: Vec<Alert>,
+    pub recorder: RecorderCounts,
+}
+
+impl OpsReport {
+    /// ASCII tables in the `ServiceStats::render` style: one row per
+    /// series (last value + sparkline trend), one per SLO alert, and a
+    /// recorder coverage line.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "ops report — tick {} at {:.1}s",
+                self.ticks,
+                self.at_ns as f64 / 1e9
+            ),
+            &["series", "labels", "kind", "points", "last", "trend"],
+        );
+        for s in &self.series {
+            if s.points.is_empty() {
+                continue;
+            }
+            let labels = s
+                .labels
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            t.row(vec![
+                s.name.clone(),
+                labels,
+                s.kind.to_string(),
+                s.points.len().to_string(),
+                format!("{:.3}", s.last().unwrap_or(0.0)),
+                s.sparkline(24),
+            ]);
+        }
+        let mut out = t.render();
+        if !self.alerts.is_empty() {
+            let mut at = Table::new(
+                "slo alerts",
+                &["slo", "state", "burn fast", "burn slow", "value", "target"],
+            );
+            for a in &self.alerts {
+                at.row(vec![
+                    a.slo.clone(),
+                    a.state.name().to_string(),
+                    format!("{:.2}", a.burn_fast),
+                    format!("{:.2}", a.burn_slow),
+                    format!("{:.3}", a.value),
+                    format!("{:.3}", a.target),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&at.render());
+        }
+        out.push_str(&format!(
+            "\nrecorder: {} requests ({} dropped), {} slow, {} events ({} dropped)\n",
+            self.recorder.requests,
+            self.recorder.requests_dropped,
+            self.recorder.slow,
+            self.recorder.events,
+            self.recorder.events_dropped,
+        ));
+        out
+    }
+
+    /// JSON form (series as in [`Sampler::snapshot_json`], plus alert
+    /// states and recorder counts).
+    pub fn to_json(&self) -> Json {
+        let mut series = Vec::with_capacity(self.series.len());
+        for s in &self.series {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(s.name.clone()));
+            let labels: BTreeMap<String, Json> = s
+                .labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect();
+            obj.insert("labels".to_string(), Json::Obj(labels));
+            obj.insert("kind".to_string(), Json::Str(s.kind.to_string()));
+            obj.insert(
+                "points".to_string(),
+                Json::Arr(
+                    s.points
+                        .iter()
+                        .map(|p| Json::Arr(vec![Json::Num(p.t_ns as f64), Json::Num(p.value)]))
+                        .collect(),
+                ),
+            );
+            series.push(Json::Obj(obj));
+        }
+        let alerts = self
+            .alerts
+            .iter()
+            .map(|a| {
+                let mut obj = BTreeMap::new();
+                obj.insert("slo".to_string(), Json::Str(a.slo.clone()));
+                obj.insert("state".to_string(), Json::Str(a.state.name().to_string()));
+                obj.insert("burn_fast".to_string(), Json::Num(a.burn_fast));
+                obj.insert("burn_slow".to_string(), Json::Num(a.burn_slow));
+                obj.insert("value".to_string(), Json::Num(a.value));
+                obj.insert("target".to_string(), Json::Num(a.target));
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut rec = BTreeMap::new();
+        rec.insert("requests".to_string(), Json::Num(self.recorder.requests as f64));
+        rec.insert("events".to_string(), Json::Num(self.recorder.events as f64));
+        rec.insert("slow".to_string(), Json::Num(self.recorder.slow as f64));
+        rec.insert(
+            "requests_dropped".to_string(),
+            Json::Num(self.recorder.requests_dropped as f64),
+        );
+        rec.insert(
+            "events_dropped".to_string(),
+            Json::Num(self.recorder.events_dropped as f64),
+        );
+        let mut root = BTreeMap::new();
+        root.insert("at_ns".to_string(), Json::Num(self.at_ns as f64));
+        root.insert("ticks".to_string(), Json::Num(self.ticks as f64));
+        root.insert("series".to_string(), Json::Arr(series));
+        root.insert("alerts".to_string(), Json::Arr(alerts));
+        root.insert("recorder".to_string(), Json::Obj(rec));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::clock::ManualClock;
+    use super::*;
+
+    fn find<'a>(snaps: &'a [SeriesSnapshot], name: &str, kind: &str) -> &'a SeriesSnapshot {
+        snaps
+            .iter()
+            .find(|s| s.name == name && s.kind == kind)
+            .unwrap_or_else(|| panic!("missing series {name} kind {kind}"))
+    }
+
+    #[test]
+    fn counters_sample_as_rates_gauges_as_levels() {
+        let reg = Registry::new();
+        let c = reg.counter("primsel.s.count", &[]);
+        let g = reg.gauge("primsel.s.gauge", &[]);
+        let clock = ManualClock::new(0);
+        let sampler = Sampler::new(SamplerConfig::default());
+
+        c.add(10);
+        g.set(3.0);
+        sampler.sample(&reg, &clock); // primes the counter; gauge point lands
+        clock.advance(2_000_000_000); // 2 s
+        c.add(40);
+        g.set(5.0);
+        sampler.sample(&reg, &clock);
+
+        let snaps = sampler.snapshot();
+        let rate = find(&snaps, "primsel.s.count", "rate");
+        assert_eq!(rate.points.len(), 1, "first counter sample only primes");
+        assert!((rate.points[0].value - 20.0).abs() < 1e-9, "40 over 2s = 20/s");
+        let level = find(&snaps, "primsel.s.gauge", "level");
+        assert_eq!(level.points.len(), 2);
+        assert_eq!(level.points[1].value, 5.0);
+        assert_eq!(sampler.ticks(), 2);
+    }
+
+    #[test]
+    fn histograms_sample_as_p50_and_p95_series() {
+        let reg = Registry::new();
+        let h = reg.histogram("primsel.s.lat", &[("stage", "solve")]);
+        for _ in 0..20 {
+            h.record(Duration::from_millis(2));
+        }
+        let clock = ManualClock::new(0);
+        let sampler = Sampler::default();
+        sampler.sample(&reg, &clock);
+
+        let snaps = sampler.snapshot();
+        let p50 = find(&snaps, "primsel.s.lat", "p50_ms");
+        let p95 = find(&snaps, "primsel.s.lat", "p95_ms");
+        assert_eq!(p50.labels, vec![("stage".to_string(), "solve".to_string())]);
+        assert!(p50.points[0].value > 1.0 && p50.points[0].value < 4.0);
+        assert!(p95.points[0].value >= p50.points[0].value);
+    }
+
+    #[test]
+    fn rings_overwrite_oldest_points() {
+        let reg = Registry::new();
+        let g = reg.gauge("primsel.s.g", &[]);
+        let clock = ManualClock::new(0);
+        let sampler = Sampler::new(SamplerConfig::default().with_capacity(4));
+        for i in 0..10 {
+            g.set(i as f64);
+            sampler.sample(&reg, &clock);
+            clock.advance(1_000_000_000);
+        }
+        let snaps = sampler.snapshot();
+        let s = find(&snaps, "primsel.s.g", "level");
+        assert_eq!(s.points.len(), 4);
+        let vals: Vec<f64> = s.points.iter().map(|p| p.value).collect();
+        assert_eq!(vals, vec![6.0, 7.0, 8.0, 9.0], "oldest-first, last 4 kept");
+    }
+
+    #[test]
+    fn counter_resets_reprime_without_negative_rates() {
+        let reg = Registry::new();
+        let c = reg.counter("primsel.s.reset", &[]);
+        let clock = ManualClock::new(0);
+        let sampler = Sampler::default();
+        c.add(100);
+        sampler.sample(&reg, &clock);
+        clock.advance(1_000_000_000);
+        c.store(10); // went backwards: treated as a reset
+        sampler.sample(&reg, &clock);
+        clock.advance(1_000_000_000);
+        c.store(30);
+        sampler.sample(&reg, &clock);
+
+        let snaps = sampler.snapshot();
+        let s = find(&snaps, "primsel.s.reset", "rate");
+        assert_eq!(s.points.len(), 1, "reset tick emits no point");
+        assert!((s.points[0].value - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn manual_clock_sampling_is_deterministic() {
+        let run = || {
+            let reg = Registry::new();
+            let c = reg.counter("primsel.s.det", &[]);
+            let clock = ManualClock::new(0);
+            let sampler = Sampler::default();
+            for i in 0..16u64 {
+                c.add(i * 3 + 1);
+                sampler.sample(&reg, &clock);
+                clock.advance(500_000_000);
+            }
+            sampler.snapshot_json().dump()
+        };
+        assert_eq!(run(), run(), "same tick sequence must replay bit-identically");
+    }
+
+    #[test]
+    fn sparklines_scale_min_to_max() {
+        let s = SeriesSnapshot {
+            name: "x".into(),
+            labels: vec![],
+            kind: "level",
+            points: (0..8)
+                .map(|i| SeriesPoint { t_ns: i, value: i as f64 })
+                .collect(),
+        };
+        let line = s.sparkline(8);
+        assert_eq!(line.chars().count(), 8);
+        assert_eq!(line.chars().next().unwrap(), '▁');
+        assert_eq!(line.chars().last().unwrap(), '█');
+        // flat series: mid-level bar, not a panic
+        let flat = SeriesSnapshot {
+            name: "y".into(),
+            labels: vec![],
+            kind: "level",
+            points: vec![SeriesPoint { t_ns: 0, value: 2.0 }; 3],
+        };
+        assert_eq!(flat.sparkline(8), "▄▄▄");
+    }
+
+    #[test]
+    fn ops_report_renders_series_alerts_and_recorder_counts() {
+        let report = OpsReport {
+            at_ns: 2_500_000_000,
+            ticks: 5,
+            series: vec![SeriesSnapshot {
+                name: "primsel.queue.depth".into(),
+                labels: vec![],
+                kind: "level",
+                points: vec![
+                    SeriesPoint { t_ns: 0, value: 1.0 },
+                    SeriesPoint { t_ns: 1, value: 3.0 },
+                ],
+            }],
+            alerts: vec![],
+            recorder: RecorderCounts {
+                requests: 12,
+                events: 3,
+                slow: 1,
+                requests_dropped: 0,
+                events_dropped: 0,
+            },
+        };
+        let text = report.render();
+        assert!(text.contains("ops report — tick 5"));
+        assert!(text.contains("primsel.queue.depth"));
+        assert!(text.contains("12 requests (0 dropped)"));
+        let json = report.to_json().dump();
+        let parsed = Json::parse(&json).expect("ops report JSON must parse");
+        assert_eq!(
+            parsed.get("recorder").unwrap().get("requests").unwrap().as_f64().unwrap(),
+            12.0
+        );
+    }
+}

@@ -1,0 +1,536 @@
+//! Declarative SLOs with two-window burn-rate alerting.
+//!
+//! An [`SloSpec`] names a service-level indicator ([`Sli`]) and a
+//! target; the [`SloEngine`] folds one SLI sample per tick into two
+//! rolling windows (fast + slow) and compares the **burn rate** —
+//! `mean(samples in window) / target` — in both against thresholds. An
+//! alert fires only when *both* windows burn hot (the classic
+//! multiwindow pattern: the fast window makes alerts responsive, the
+//! slow window keeps one spike from paging), and clears with
+//! hysteresis: a state is only left once burn drops below
+//! `threshold × (1 - hysteresis)`, so boundary-riding values never
+//! flap. Down-transitions step one level per evaluation — recovery
+//! from [`AlertState::Critical`] always passes back through
+//! [`AlertState::Warning`].
+//!
+//! The engine is a pure function of the `(t_ns, SloInputs)` sequence —
+//! it never reads a wall clock — so under a
+//! [`ManualClock`](super::clock::ManualClock) its transitions are
+//! bit-deterministic (pinned by `rust/tests/slo.rs`). The service's
+//! sampler thread feeds it, publishes alert states as registry gauges,
+//! records every transition in the flight recorder, and on a Critical
+//! drift/latency alert can nudge the health monitor into early shadow
+//! sampling ([`SloSpec::with_nudge`]).
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Which signal an SLO watches. The service maps each variant onto its
+/// own stats when building [`SloInputs`] every tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Sli {
+    /// p95 latency (milliseconds) of a service stage: `"wait"`,
+    /// `"service"`, or `"e2e"`.
+    LatencyP95 { stage: String },
+    /// Rejected / (admitted + rejected) over the service lifetime.
+    ErrorRate,
+    /// Queue depth as a fraction of capacity.
+    QueueDepth,
+    /// Drift score of one monitored platform.
+    Drift { platform: String },
+}
+
+/// One declarative SLO: an indicator, a target, window lengths, and
+/// burn thresholds. Build with the named constructors and chain the
+/// `with_*` builders.
+#[derive(Debug, Clone)]
+pub struct SloSpec {
+    /// Unique alert name (label value on the published gauges).
+    pub name: String,
+    pub sli: Sli,
+    /// Target in the SLI's unit (ms, fraction, or drift score). Burn
+    /// rate is `mean / target`, so burn 1.0 means "exactly at target".
+    pub target: f64,
+    /// Responsive window; must be shorter than `slow_window`.
+    pub fast_window: Duration,
+    /// Smoothing window; an alert needs this hot too.
+    pub slow_window: Duration,
+    /// Burn at or above this in both windows → at least Warning.
+    pub warn_burn: f64,
+    /// Burn at or above this in both windows → Critical.
+    pub crit_burn: f64,
+    /// Fractional clear margin: a threshold crossed at `b ≥ thr` only
+    /// clears once `b < thr × (1 - hysteresis)`.
+    pub hysteresis: f64,
+    /// On entering Critical, ask the health monitor to shadow-sample
+    /// the next `n` observations unconditionally (drift / latency SLOs
+    /// only — closes the obs→health loop).
+    pub nudge: Option<u64>,
+}
+
+impl SloSpec {
+    fn new(name: &str, sli: Sli, target: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            sli,
+            target,
+            fast_window: Duration::from_secs(30),
+            slow_window: Duration::from_secs(300),
+            warn_burn: 1.0,
+            crit_burn: 2.0,
+            hysteresis: 0.1,
+            nudge: None,
+        }
+    }
+
+    /// SLO on a stage's p95 latency staying under `target_ms`.
+    pub fn latency_p95(name: &str, stage: &str, target_ms: f64) -> Self {
+        Self::new(name, Sli::LatencyP95 { stage: stage.to_string() }, target_ms)
+    }
+
+    /// SLO on the lifetime error (rejection) rate staying under
+    /// `target` (a fraction).
+    pub fn error_rate(name: &str, target: f64) -> Self {
+        Self::new(name, Sli::ErrorRate, target)
+    }
+
+    /// SLO on queue occupancy staying under `target_frac` of capacity.
+    pub fn queue_depth(name: &str, target_frac: f64) -> Self {
+        Self::new(name, Sli::QueueDepth, target_frac)
+    }
+
+    /// SLO on one platform's drift score staying under `band`.
+    pub fn drift(name: &str, platform: &str, band: f64) -> Self {
+        Self::new(name, Sli::Drift { platform: platform.to_string() }, band)
+    }
+
+    /// Override the fast/slow burn windows.
+    pub fn with_windows(mut self, fast: Duration, slow: Duration) -> Self {
+        self.fast_window = fast;
+        self.slow_window = slow;
+        self
+    }
+
+    /// Override the Warning / Critical burn thresholds.
+    pub fn with_burns(mut self, warn: f64, crit: f64) -> Self {
+        self.warn_burn = warn;
+        self.crit_burn = crit;
+        self
+    }
+
+    /// Override the clear hysteresis fraction.
+    pub fn with_hysteresis(mut self, h: f64) -> Self {
+        self.hysteresis = h;
+        self
+    }
+
+    /// Nudge the health monitor into `n` unconditional shadow samples
+    /// when this SLO goes Critical.
+    pub fn with_nudge(mut self, n: u64) -> Self {
+        self.nudge = Some(n);
+        self
+    }
+
+    /// Check the spec is internally consistent.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("SLO name must be non-empty".into());
+        }
+        if self.target.is_nan() || self.target <= 0.0 {
+            return Err(format!("SLO {:?}: target must be > 0", self.name));
+        }
+        if self.fast_window.is_zero() || self.slow_window < self.fast_window {
+            return Err(format!(
+                "SLO {:?}: need 0 < fast_window <= slow_window",
+                self.name
+            ));
+        }
+        if self.warn_burn.is_nan() || self.warn_burn <= 0.0 || self.crit_burn < self.warn_burn {
+            return Err(format!(
+                "SLO {:?}: need 0 < warn_burn <= crit_burn",
+                self.name
+            ));
+        }
+        if !(0.0..1.0).contains(&self.hysteresis) {
+            return Err(format!(
+                "SLO {:?}: hysteresis must be in [0, 1)",
+                self.name
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Alert severity ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AlertState {
+    Ok = 0,
+    Warning = 1,
+    Critical = 2,
+}
+
+impl AlertState {
+    /// Lowercase name (flight-recorder tags, report rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Ok => "ok",
+            AlertState::Warning => "warning",
+            AlertState::Critical => "critical",
+        }
+    }
+
+    /// Numeric code published on the state gauge (0 / 1 / 2).
+    pub fn code(self) -> f64 {
+        self as u8 as f64
+    }
+}
+
+/// One SLO's current standing.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    pub slo: String,
+    pub state: AlertState,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    /// Latest raw SLI sample.
+    pub value: f64,
+    pub target: f64,
+}
+
+/// A state change produced by one [`SloEngine::evaluate`] call.
+#[derive(Debug, Clone)]
+pub struct AlertTransition {
+    pub slo: String,
+    pub from: AlertState,
+    pub to: AlertState,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    pub sli: Sli,
+    /// Shadow-sample request carried from the spec when `to` is
+    /// Critical.
+    pub nudge: Option<u64>,
+}
+
+/// Snapshot of the signals the engine evaluates against, assembled by
+/// the service from its own stats each tick.
+#[derive(Debug, Clone, Default)]
+pub struct SloInputs {
+    /// (stage name, p95 ms) — typically wait / service / e2e.
+    pub latency_p95_ms: Vec<(String, f64)>,
+    pub error_rate: f64,
+    /// Queue depth / capacity.
+    pub queue_frac: f64,
+    /// (platform, drift score) for each monitored platform.
+    pub drift: Vec<(String, f64)>,
+}
+
+impl SloInputs {
+    /// Resolve one SLI against this snapshot. `None` when the referenced
+    /// stage/platform is absent this tick (the engine skips the sample).
+    pub fn value(&self, sli: &Sli) -> Option<f64> {
+        match sli {
+            Sli::LatencyP95 { stage } => self
+                .latency_p95_ms
+                .iter()
+                .find(|(s, _)| s == stage)
+                .map(|&(_, v)| v),
+            Sli::ErrorRate => Some(self.error_rate),
+            Sli::QueueDepth => Some(self.queue_frac),
+            Sli::Drift { platform } => {
+                self.drift.iter().find(|(p, _)| p == platform).map(|&(_, v)| v)
+            }
+        }
+    }
+}
+
+struct SloState {
+    spec: SloSpec,
+    /// (t_ns, value) samples inside the slow window, oldest first.
+    samples: VecDeque<(u64, f64)>,
+    state: AlertState,
+    burn_fast: f64,
+    burn_slow: f64,
+    last_value: f64,
+}
+
+impl SloState {
+    fn burn_over(&self, from_ns: u64) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        for &(t, v) in self.samples.iter().rev() {
+            if t < from_ns {
+                break;
+            }
+            sum += v;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            (sum / n as f64) / self.spec.target
+        }
+    }
+}
+
+/// The alert state machine over a set of [`SloSpec`]s. Feed it one
+/// `(t_ns, SloInputs)` per tick; read back transitions (to log/nudge)
+/// and [`SloEngine::alerts`] (to publish).
+pub struct SloEngine {
+    slos: Vec<SloState>,
+}
+
+impl SloEngine {
+    /// Build an engine after validating every spec. Duplicate names are
+    /// rejected — the name is the alert identity.
+    pub fn new(specs: Vec<SloSpec>) -> Result<Self, String> {
+        for (i, s) in specs.iter().enumerate() {
+            s.validate()?;
+            if specs[..i].iter().any(|p| p.name == s.name) {
+                return Err(format!("duplicate SLO name {:?}", s.name));
+            }
+        }
+        Ok(Self {
+            slos: specs
+                .into_iter()
+                .map(|spec| SloState {
+                    spec,
+                    samples: VecDeque::new(),
+                    state: AlertState::Ok,
+                    burn_fast: 0.0,
+                    burn_slow: 0.0,
+                    last_value: 0.0,
+                })
+                .collect(),
+        })
+    }
+
+    /// Whether any SLOs are configured.
+    pub fn is_empty(&self) -> bool {
+        self.slos.is_empty()
+    }
+
+    /// Fold one tick of inputs at time `t_ns` into every SLO and return
+    /// the state transitions it caused (empty when nothing changed).
+    /// Pure in `(t_ns, inputs)`: no clocks, no randomness.
+    pub fn evaluate(&mut self, t_ns: u64, inputs: &SloInputs) -> Vec<AlertTransition> {
+        let mut transitions = Vec::new();
+        for slo in &mut self.slos {
+            let Some(value) = inputs.value(&slo.spec.sli) else {
+                continue;
+            };
+            slo.last_value = value;
+            slo.samples.push_back((t_ns, value));
+            let slow_ns = slo.spec.slow_window.as_nanos().min(u64::MAX as u128) as u64;
+            let keep_from = t_ns.saturating_sub(slow_ns);
+            while slo.samples.front().is_some_and(|&(t, _)| t < keep_from) {
+                slo.samples.pop_front();
+            }
+            let fast_ns = slo.spec.fast_window.as_nanos().min(u64::MAX as u128) as u64;
+            slo.burn_fast = slo.burn_over(t_ns.saturating_sub(fast_ns));
+            slo.burn_slow = slo.burn_over(keep_from);
+
+            let spec = &slo.spec;
+            let (bf, bs) = (slo.burn_fast, slo.burn_slow);
+            let both_at_least = |thr: f64| bf >= thr && bs >= thr;
+            let clear = |thr: f64| thr * (1.0 - spec.hysteresis);
+            let next = match slo.state {
+                AlertState::Ok => {
+                    if both_at_least(spec.crit_burn) {
+                        AlertState::Critical
+                    } else if both_at_least(spec.warn_burn) {
+                        AlertState::Warning
+                    } else {
+                        AlertState::Ok
+                    }
+                }
+                AlertState::Warning => {
+                    if both_at_least(spec.crit_burn) {
+                        AlertState::Critical
+                    } else if bf < clear(spec.warn_burn) && bs < clear(spec.warn_burn) {
+                        AlertState::Ok
+                    } else {
+                        AlertState::Warning
+                    }
+                }
+                AlertState::Critical => {
+                    if bf >= clear(spec.crit_burn) || bs >= clear(spec.crit_burn) {
+                        AlertState::Critical
+                    } else {
+                        // one step down per evaluation: recovery goes
+                        // through Warning, never Critical → Ok
+                        AlertState::Warning
+                    }
+                }
+            };
+            if next != slo.state {
+                transitions.push(AlertTransition {
+                    slo: spec.name.clone(),
+                    from: slo.state,
+                    to: next,
+                    burn_fast: bf,
+                    burn_slow: bs,
+                    sli: spec.sli.clone(),
+                    nudge: if next == AlertState::Critical { spec.nudge } else { None },
+                });
+                slo.state = next;
+            }
+        }
+        transitions
+    }
+
+    /// Current standing of every SLO, in spec order.
+    pub fn alerts(&self) -> Vec<Alert> {
+        self.slos
+            .iter()
+            .map(|s| Alert {
+                slo: s.spec.name.clone(),
+                state: s.state,
+                burn_fast: s.burn_fast,
+                burn_slow: s.burn_slow,
+                value: s.last_value,
+                target: s.spec.target,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEC: u64 = 1_000_000_000;
+
+    fn engine_one(spec: SloSpec) -> SloEngine {
+        SloEngine::new(vec![spec]).expect("valid spec")
+    }
+
+    fn queue_inputs(frac: f64) -> SloInputs {
+        SloInputs { queue_frac: frac, ..SloInputs::default() }
+    }
+
+    #[test]
+    fn specs_are_validated() {
+        assert!(SloSpec::error_rate("e", 0.0).validate().is_err(), "zero target");
+        assert!(
+            SloSpec::error_rate("e", 0.1)
+                .with_windows(Duration::from_secs(60), Duration::from_secs(30))
+                .validate()
+                .is_err(),
+            "fast window longer than slow"
+        );
+        assert!(
+            SloSpec::error_rate("e", 0.1).with_burns(2.0, 1.0).validate().is_err(),
+            "crit below warn"
+        );
+        assert!(
+            SloSpec::error_rate("e", 0.1).with_hysteresis(1.0).validate().is_err(),
+            "hysteresis must stay below 1"
+        );
+        assert!(SloSpec::error_rate("e", 0.1).validate().is_ok());
+        assert!(
+            SloEngine::new(vec![
+                SloSpec::error_rate("dup", 0.1),
+                SloSpec::queue_depth("dup", 0.5),
+            ])
+            .is_err(),
+            "duplicate names rejected"
+        );
+    }
+
+    #[test]
+    fn alert_fires_only_when_both_windows_burn() {
+        // fast 2 s, slow 10 s: one hot tick heats the fast window but
+        // the slow window average stays below threshold.
+        let spec = SloSpec::queue_depth("q", 0.5)
+            .with_windows(Duration::from_secs(2), Duration::from_secs(10))
+            .with_burns(1.0, 2.0);
+        let mut eng = engine_one(spec);
+        let mut t = 0u64;
+        for _ in 0..9 {
+            assert!(eng.evaluate(t, &queue_inputs(0.05)).is_empty());
+            t += SEC;
+        }
+        // single spike: fast window hot, slow still cool → no alert
+        let tr = eng.evaluate(t, &queue_inputs(0.9));
+        assert!(tr.is_empty(), "one spike must not page: {tr:?}");
+        t += SEC;
+        // sustained heat: slow window catches up → Warning then Critical
+        let mut states = Vec::new();
+        for _ in 0..20 {
+            for tr in eng.evaluate(t, &queue_inputs(1.4)) {
+                states.push(tr.to);
+            }
+            t += SEC;
+        }
+        assert_eq!(states, vec![AlertState::Warning, AlertState::Critical]);
+    }
+
+    #[test]
+    fn recovery_steps_down_through_warning() {
+        let spec = SloSpec::queue_depth("q", 0.1)
+            .with_windows(Duration::from_secs(1), Duration::from_secs(3));
+        let mut eng = engine_one(spec);
+        let mut t = 0u64;
+        for _ in 0..5 {
+            eng.evaluate(t, &queue_inputs(0.5)); // burn 5 → Critical
+            t += SEC;
+        }
+        assert_eq!(eng.alerts()[0].state, AlertState::Critical);
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            for tr in eng.evaluate(t, &queue_inputs(0.0)) {
+                seen.push((tr.from, tr.to));
+            }
+            t += SEC;
+        }
+        assert_eq!(
+            seen,
+            vec![
+                (AlertState::Critical, AlertState::Warning),
+                (AlertState::Warning, AlertState::Ok),
+            ],
+            "recovery must pass through Warning"
+        );
+    }
+
+    #[test]
+    fn nudge_rides_only_critical_transitions() {
+        let spec = SloSpec::drift("d", "arm", 1.0)
+            .with_windows(Duration::from_secs(1), Duration::from_secs(2))
+            .with_burns(1.0, 2.0)
+            .with_nudge(16);
+        let mut eng = engine_one(spec);
+        let drift = |v: f64| SloInputs {
+            drift: vec![("arm".to_string(), v)],
+            ..SloInputs::default()
+        };
+        let mut t = 0u64;
+        let mut nudges = Vec::new();
+        for v in [0.5, 1.5, 1.5, 5.0, 5.0, 0.0, 0.0, 0.0] {
+            for tr in eng.evaluate(t, &drift(v)) {
+                nudges.push((tr.to, tr.nudge));
+            }
+            t += SEC;
+        }
+        assert!(nudges.contains(&(AlertState::Critical, Some(16))));
+        for (state, nudge) in &nudges {
+            if *state != AlertState::Critical {
+                assert_eq!(*nudge, None, "nudge must only ride Critical");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_sli_values_are_skipped_not_zeroed() {
+        let spec = SloSpec::drift("d", "ghost", 1.0)
+            .with_windows(Duration::from_secs(1), Duration::from_secs(2));
+        let mut eng = engine_one(spec);
+        for i in 0..5 {
+            let tr = eng.evaluate(i * SEC, &SloInputs::default());
+            assert!(tr.is_empty());
+        }
+        let a = &eng.alerts()[0];
+        assert_eq!(a.state, AlertState::Ok);
+        assert_eq!(a.burn_fast, 0.0, "no samples, no burn");
+    }
+}

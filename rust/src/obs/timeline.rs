@@ -1,0 +1,364 @@
+//! Chrome trace-event export of the flight recorder's rings.
+//!
+//! [`chrome_trace`] turns already-captured records into the JSON the
+//! Chrome tracing UI / Perfetto load: each recorded request becomes a
+//! complete `"X"` umbrella span plus one span per adjacent marked
+//! stage pair of its [`Trace`](super::trace::Trace) ladder, and each
+//! health / recalibration / SLO event becomes a global `"i"` instant.
+//! Processes (`pid`) map to platforms and threads (`tid`) to greedily
+//! assigned non-overlapping request lanes, with `"M"` metadata naming
+//! both. Timestamps are the records' [`wall_ns`](super::recorder::FlightRecord::wall_ns)
+//! offsets from the recorder's epoch, emitted in microseconds and
+//! sorted, so `ts` is monotone per `(pid, tid)` in array order (pinned
+//! by `rust/tests/timeline.rs` and CI's `check_timeline.py`).
+//!
+//! Export reads only the rings — it costs the serving hot path nothing.
+
+use super::recorder::{FlightRecord, FlightRecorder, RecordKind};
+use super::trace::Stage;
+use crate::config::Json;
+use crate::Result;
+use anyhow::Context as _;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Ops-plane events (alerts, events on unmapped platforms) land on this
+/// pid; request lanes start at 1.
+const OPS_PID: u64 = 0;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn span(
+    name: String,
+    cat: &str,
+    ts_us: f64,
+    dur_us: f64,
+    pid: u64,
+    tid: u64,
+    args: Json,
+) -> Json {
+    obj(vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("dur", Json::Num(dur_us)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", args),
+    ])
+}
+
+fn instant(name: String, ts_us: f64, pid: u64, args: Json) -> Json {
+    obj(vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str("event".to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("g".to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("args", args),
+    ])
+}
+
+fn metadata(name: &str, value: String, pid: u64, tid: u64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("ts", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value))])),
+    ])
+}
+
+/// A request's marked stages in ladder order: (stage, epoch-relative ns).
+fn marked_stages(r: &FlightRecord) -> Vec<(Stage, u64)> {
+    Stage::ALL
+        .iter()
+        .filter_map(|&s| r.stage_ns(s).map(|ns| (s, r.wall_ns.saturating_add(ns))))
+        .collect()
+}
+
+/// Build the Chrome trace-event JSON for everything the recorder
+/// currently holds: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn chrome_trace(rec: &FlightRecorder) -> Json {
+    // recent and slow overlap; the per-ring index identifies a request
+    let mut requests: BTreeMap<u64, FlightRecord> = BTreeMap::new();
+    for r in rec.snapshot().into_iter().chain(rec.slow_snapshot()) {
+        requests.entry(r.index).or_insert(r);
+    }
+    let events = rec.events_snapshot();
+
+    // pids: one per platform named by a request, sorted for stability
+    let mut pids: BTreeMap<String, u64> = BTreeMap::new();
+    for r in requests.values() {
+        let next = pids.len() as u64 + 1;
+        pids.entry(r.platform.clone()).or_insert(next);
+    }
+    for e in &events {
+        if e.kind != RecordKind::Alert {
+            let next = pids.len() as u64 + 1;
+            pids.entry(e.platform.clone()).or_insert(next);
+        }
+    }
+
+    // greedy lane (tid) assignment per pid over requests sorted by start
+    let mut ordered: Vec<&FlightRecord> = requests.values().collect();
+    ordered.sort_by_key(|r| {
+        let start = marked_stages(r).first().map(|&(_, ns)| ns).unwrap_or(r.wall_ns);
+        (start, r.index)
+    });
+    let mut lanes: BTreeMap<u64, Vec<u64>> = BTreeMap::new(); // pid → per-lane last end ns
+    let mut out = Vec::new();
+    let mut max_lane: BTreeMap<u64, usize> = BTreeMap::new();
+    for r in ordered {
+        let stages = marked_stages(r);
+        let start = stages.first().map(|&(_, ns)| ns).unwrap_or(r.wall_ns);
+        let end = start.saturating_add(r.total_ns);
+        let pid = pids[&r.platform];
+        let ends = lanes.entry(pid).or_default();
+        let lane = match ends.iter().position(|&e| e <= start) {
+            Some(i) => {
+                ends[i] = end;
+                i
+            }
+            None => {
+                ends.push(end);
+                ends.len() - 1
+            }
+        };
+        max_lane
+            .entry(pid)
+            .and_modify(|m| *m = (*m).max(lane))
+            .or_insert(lane);
+        let tid = lane as u64 + 1;
+        out.push(span(
+            r.network.clone(),
+            "request",
+            start as f64 / 1e3,
+            r.total_ns as f64 / 1e3,
+            pid,
+            tid,
+            obj(vec![
+                ("tenant", Json::Str(r.tenant.clone())),
+                ("index", Json::Num(r.index as f64)),
+                ("total_ms", Json::Num(r.total_ns as f64 / 1e6)),
+            ]),
+        ));
+        for pair in stages.windows(2) {
+            let [(from, a), (to, b)] = [pair[0], pair[1]];
+            out.push(span(
+                format!("{}->{}", from.name(), to.name()),
+                "stage",
+                a as f64 / 1e3,
+                b.saturating_sub(a) as f64 / 1e3,
+                pid,
+                tid,
+                obj(vec![("index", Json::Num(r.index as f64))]),
+            ));
+        }
+    }
+
+    for e in &events {
+        let (name, pid, args) = match e.kind {
+            RecordKind::Transition => (
+                format!("transition: {}->{}", e.network, e.tenant),
+                *pids.get(&e.platform).unwrap_or(&OPS_PID),
+                obj(vec![
+                    ("platform", Json::Str(e.platform.clone())),
+                    ("drift", Json::Num(e.value)),
+                ]),
+            ),
+            RecordKind::Recalibration => (
+                format!("recalibration: {}", e.network),
+                *pids.get(&e.platform).unwrap_or(&OPS_PID),
+                obj(vec![
+                    ("platform", Json::Str(e.platform.clone())),
+                    ("drift", Json::Num(e.value)),
+                ]),
+            ),
+            RecordKind::Alert => (
+                format!("alert: {}->{}", e.network, e.tenant),
+                OPS_PID,
+                obj(vec![
+                    ("slo", Json::Str(e.platform.clone())),
+                    ("burn", Json::Num(e.value)),
+                ]),
+            ),
+            RecordKind::Request => continue, // never lands in the event ring
+        };
+        out.push(instant(name, e.wall_ns as f64 / 1e3, pid, args));
+    }
+
+    // sorted by ts ⇒ ts is monotone per (pid, tid) in array order
+    out.sort_by(|a, b| {
+        let ts = |j: &Json| j.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        ts(a).partial_cmp(&ts(b)).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let mut head = vec![metadata("process_name", "ops".to_string(), OPS_PID, 0)];
+    for (platform, &pid) in &pids {
+        head.push(metadata("process_name", platform.clone(), pid, 0));
+        for lane in 0..=*max_lane.get(&pid).unwrap_or(&0) {
+            head.push(metadata(
+                "thread_name",
+                format!("lane-{lane}"),
+                pid,
+                lane as u64 + 1,
+            ));
+        }
+    }
+    head.extend(out);
+
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(head));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(root)
+}
+
+/// Render [`chrome_trace`] to `path` (parent directories are created).
+/// Load the file in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn write_chrome_trace(rec: &FlightRecorder, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace(rec).dump())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::Trace;
+    use super::*;
+
+    fn recorded_request(
+        rec: &FlightRecorder,
+        platform: &str,
+        network: &str,
+        marks: &[(Stage, u64)],
+    ) {
+        let t = Trace::begin();
+        for &(s, ns) in marks {
+            t.mark_at_ns(s, ns);
+        }
+        rec.record_request(&t, platform, network, "tenant");
+    }
+
+    fn field<'a>(e: &'a Json, key: &str) -> &'a str {
+        e.get(key).unwrap().as_str().unwrap()
+    }
+
+    fn num(e: &Json, key: &str) -> f64 {
+        e.get(key).unwrap().as_f64().unwrap()
+    }
+
+    #[test]
+    fn spans_cover_adjacent_marked_stage_pairs() {
+        let rec = FlightRecorder::new(8, 2, 8);
+        recorded_request(
+            &rec,
+            "intel",
+            "vgg16",
+            &[
+                (Stage::Admit, 0),
+                (Stage::Dispatch, 1_000),
+                (Stage::SolveStart, 2_000),
+                (Stage::SolveEnd, 7_000),
+                (Stage::Done, 8_000),
+            ],
+        );
+        let trace = chrome_trace(&rec);
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<&Json> = events.iter().filter(|e| field(e, "ph") == "X").collect();
+        // 1 umbrella + 4 adjacent stage pairs
+        assert_eq!(xs.len(), 5);
+        let names: Vec<&str> = xs.iter().map(|e| field(e, "name")).collect();
+        assert!(names.contains(&"vgg16"));
+        assert!(names.contains(&"admit->dispatch"));
+        assert!(names.contains(&"solve_start->solve_end"));
+        for e in &xs {
+            assert!(num(e, "dur") >= 0.0);
+            assert!(e.get("pid").is_ok() && e.get("tid").is_ok());
+        }
+    }
+
+    #[test]
+    fn overlapping_requests_fan_out_to_lanes() {
+        let rec = FlightRecorder::new(8, 2, 8);
+        // both requests begin traces "now", so their wall offsets are
+        // near-identical and the marked windows overlap
+        for net in ["alexnet", "vgg11"] {
+            recorded_request(&rec, "intel", net, &[(Stage::Admit, 0), (Stage::Done, 50_000_000)]);
+        }
+        let trace = chrome_trace(&rec);
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let tids: Vec<f64> = events
+            .iter()
+            .filter(|e| field(e, "ph") == "X" && field(e, "cat") == "request")
+            .map(|e| num(e, "tid"))
+            .collect();
+        assert_eq!(tids.len(), 2);
+        assert_ne!(tids[0], tids[1], "overlapping requests need distinct lanes");
+        // thread metadata names both lanes
+        let lanes: Vec<&str> = events
+            .iter()
+            .filter(|e| field(e, "name") == "thread_name")
+            .map(|e| field(e.get("args").unwrap(), "name"))
+            .collect();
+        assert!(lanes.contains(&"lane-0") && lanes.contains(&"lane-1"));
+    }
+
+    #[test]
+    fn health_and_alert_events_become_global_instants() {
+        let rec = FlightRecorder::new(4, 2, 8);
+        rec.record_transition("arm-live", "healthy", "drifting", 2.5);
+        rec.record_recalibration("arm-live", true, 0.3);
+        rec.record_alert("drift-band", "ok", "critical", 3.0);
+        let trace = chrome_trace(&rec);
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let instants: Vec<&Json> = events.iter().filter(|e| field(e, "ph") == "i").collect();
+        assert_eq!(instants.len(), 3);
+        let names: Vec<&str> = instants.iter().map(|e| field(e, "name")).collect();
+        assert!(names.contains(&"transition: healthy->drifting"));
+        assert!(names.contains(&"recalibration: ok"));
+        assert!(names.contains(&"alert: ok->critical"));
+        for e in &instants {
+            assert_eq!(field(e, "s"), "g");
+        }
+    }
+
+    #[test]
+    fn ts_is_monotone_per_pid_tid_in_array_order() {
+        let rec = FlightRecorder::new(16, 4, 8);
+        for (i, net) in ["a", "b", "c", "d"].iter().enumerate() {
+            recorded_request(
+                &rec,
+                if i % 2 == 0 { "intel" } else { "arm" },
+                net,
+                &[(Stage::Admit, (i as u64) * 10_000), (Stage::Done, (i as u64) * 10_000 + 5_000)],
+            );
+        }
+        rec.record_transition("intel", "healthy", "drifting", 1.0);
+        let trace = chrome_trace(&rec);
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        for e in events {
+            let key = (num(e, "pid") as u64, num(e, "tid") as u64);
+            let ts = num(e, "ts");
+            if let Some(&prev) = last.get(&key) {
+                assert!(ts >= prev, "ts regressed on pid/tid {key:?}");
+            }
+            last.insert(key, ts);
+        }
+        // and the whole document parses back
+        assert!(Json::parse(&trace.dump()).is_ok());
+    }
+}

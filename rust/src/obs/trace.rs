@@ -102,6 +102,12 @@ impl Trace {
         self.marks[stage as usize].store(ns.saturating_add(1), Relaxed);
     }
 
+    /// The instant marks are measured from. The flight recorder uses it
+    /// to place this trace on its own epoch-relative wall axis.
+    pub(crate) fn origin(&self) -> Instant {
+        self.origin
+    }
+
     /// Nanosecond offset of `stage` from the origin, if marked.
     pub fn stage_ns(&self, stage: Stage) -> Option<u64> {
         match self.marks[stage as usize].load(Relaxed) {

@@ -52,6 +52,7 @@ pub use ticket::Ticket;
 
 use crate::coordinator::{Coordinator, SelectionRequest};
 use crate::obs;
+use crate::obs::clock::Clock;
 use crate::par;
 use crate::selection::CacheStats;
 use crate::sync;
@@ -60,12 +61,13 @@ use sched::DrrScheduler;
 use stats::TenantCounters;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 use worker::Job;
 
-/// How a [`Service`] is shaped: admission bound, pool size, and the
-/// defaults for tenants that are not explicitly registered.
+/// How a [`Service`] is shaped: admission bound, pool size, the
+/// defaults for tenants that are not explicitly registered, and the
+/// optional ops plane (series sampler + SLO engine).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Max admitted-but-undispatched requests across all tenants; at
@@ -78,6 +80,12 @@ pub struct ServiceConfig {
     /// Max concurrently-served requests for tenants first seen via
     /// `submit` (caps how much of the pool one tenant can occupy).
     pub default_max_inflight: usize,
+    /// When set, the service owns a `primsel-sampler` thread that ticks
+    /// the ops plane at this sampler's cadence: publish metrics, take a
+    /// series sample, evaluate the SLOs.
+    pub sampling: Option<obs::SamplerConfig>,
+    /// SLOs the ops tick evaluates (ignored without `sampling`).
+    pub slos: Vec<obs::SloSpec>,
 }
 
 impl Default for ServiceConfig {
@@ -87,6 +95,8 @@ impl Default for ServiceConfig {
             workers: par::workers().clamp(2, 8),
             default_weight: 1.0,
             default_max_inflight: usize::MAX,
+            sampling: None,
+            slos: Vec::new(),
         }
     }
 }
@@ -109,6 +119,25 @@ impl ServiceConfig {
     pub fn with_tenant_defaults(mut self, weight: f64, max_inflight: usize) -> Self {
         self.default_weight = weight;
         self.default_max_inflight = max_inflight;
+        self
+    }
+
+    /// Enable the ops plane with the default sampler ring capacity at
+    /// `cadence` (builder style).
+    pub fn with_sampling(self, cadence: Duration) -> Self {
+        self.with_sampler(obs::SamplerConfig::every(cadence))
+    }
+
+    /// Enable the ops plane with an explicit sampler shape (builder
+    /// style).
+    pub fn with_sampler(mut self, cfg: obs::SamplerConfig) -> Self {
+        self.sampling = Some(cfg);
+        self
+    }
+
+    /// Add one SLO for the ops tick to evaluate (builder style).
+    pub fn with_slo(mut self, spec: obs::SloSpec) -> Self {
+        self.slos.push(spec);
         self
     }
 }
@@ -139,6 +168,7 @@ pub(crate) struct ServiceShared {
     pub(crate) queue: AdmissionQueue<Job, DrrScheduler>,
     pub(crate) coord: Arc<Coordinator>,
     tenants: RwLock<TenantTable>,
+    workers: usize,
     pub(crate) wait: LatencyHistogram,
     pub(crate) service: LatencyHistogram,
     /// Per-platform cache counters at service start; stats() reports
@@ -172,6 +202,69 @@ impl ServiceShared {
     pub(crate) fn tenant_meta(&self, id: usize) -> Arc<TenantMeta> {
         Arc::clone(&sync::read(&self.tenants).metas[id])
     }
+
+    /// A point-in-time [`ServiceStats`] snapshot. Lives on the shared
+    /// state so the `primsel-sampler` thread can take one per tick
+    /// without holding a `Service` reference.
+    fn stats(&self) -> ServiceStats {
+        let lanes = self.queue.lane_snapshot();
+        let table = sync::read(&self.tenants);
+        let tenants = table
+            .metas
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let (queued, inflight) = lanes.get(i).copied().unwrap_or((0, 0));
+                TenantStats {
+                    tenant: m.name.clone(),
+                    weight: m.weight,
+                    admitted: m.counters.admitted.load(Ordering::Relaxed),
+                    rejected: m.counters.rejected.load(Ordering::Relaxed),
+                    served: m.counters.served.load(Ordering::Relaxed),
+                    queued,
+                    inflight,
+                }
+            })
+            .collect();
+        drop(table);
+        let platforms = self
+            .coord
+            .cache_stats()
+            .into_iter()
+            .map(|(name, s)| {
+                let before = self
+                    .baseline
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, b)| *b)
+                    .unwrap_or_default();
+                (name, s.since(&before))
+            })
+            .collect();
+        ServiceStats {
+            queue_depth: self.queue.depth(),
+            capacity: self.queue.capacity(),
+            workers: self.workers,
+            tenants,
+            wait: self.wait.snapshot(),
+            service: self.service.snapshot(),
+            platforms,
+            plan_cache: self.coord.plan_cache_stats(),
+            front_cache: self.coord.front_cache_stats(),
+            health: self.coord.platform_health(),
+        }
+    }
+}
+
+/// Ops-plane state owned by the service and shared with its
+/// `primsel-sampler` thread: the series sampler, the SLO engine, the
+/// production clock they tick on, and the shutdown latch.
+struct OpsState {
+    sampler: obs::Sampler,
+    engine: Mutex<obs::SloEngine>,
+    clock: obs::SystemClock,
+    stop: Mutex<bool>,
+    wake: Condvar,
 }
 
 /// The admission-controlled serving layer over a shared
@@ -209,9 +302,11 @@ impl ServiceShared {
 pub struct Service {
     shared: Arc<ServiceShared>,
     pool: Option<par::Pool>,
-    workers: usize,
     default_weight: f64,
     default_max_inflight: usize,
+    /// Present when the config enabled sampling.
+    ops: Option<Arc<OpsState>>,
+    sampler_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
@@ -235,17 +330,53 @@ impl Service {
             baseline: coord.cache_stats(),
             coord,
             tenants: RwLock::new(TenantTable::default()),
+            workers: config.workers,
             wait: LatencyHistogram::new(),
             service: LatencyHistogram::new(),
             obs: ServiceObs::resolve(),
         });
         let pool = worker::spawn(&shared, config.workers);
+        let (ops, sampler_thread) = match config.sampling {
+            Some(sampler_cfg) => {
+                let engine = obs::SloEngine::new(config.slos)
+                    .unwrap_or_else(|e| panic!("invalid SLO config: {e}"));
+                let ops = Arc::new(OpsState {
+                    sampler: obs::Sampler::new(sampler_cfg),
+                    engine: Mutex::new(engine),
+                    clock: obs::SystemClock::new(),
+                    stop: Mutex::new(false),
+                    wake: Condvar::new(),
+                });
+                let thread = {
+                    let shared = Arc::clone(&shared);
+                    let ops = Arc::clone(&ops);
+                    std::thread::Builder::new()
+                        .name("primsel-sampler".to_string())
+                        .spawn(move || loop {
+                            ops_tick(&shared, &ops);
+                            let cadence = ops.sampler.cadence();
+                            let guard = sync::lock(&ops.stop);
+                            if *guard {
+                                break;
+                            }
+                            let (guard, _) = sync::wait_timeout(&ops.wake, guard, cadence);
+                            if *guard {
+                                break;
+                            }
+                        })
+                        .expect("spawning primsel-sampler")
+                };
+                (Some(ops), Some(thread))
+            }
+            None => (None, None),
+        };
         Service {
             shared,
             pool: Some(pool),
-            workers: config.workers,
             default_weight: config.default_weight,
             default_max_inflight: config.default_max_inflight,
+            ops,
+            sampler_thread,
         }
     }
 
@@ -370,54 +501,7 @@ impl Service {
 
     /// A point-in-time [`ServiceStats`] snapshot.
     pub fn stats(&self) -> ServiceStats {
-        let lanes = self.shared.queue.lane_snapshot();
-        let table = sync::read(&self.shared.tenants);
-        let tenants = table
-            .metas
-            .iter()
-            .enumerate()
-            .map(|(i, m)| {
-                let (queued, inflight) = lanes.get(i).copied().unwrap_or((0, 0));
-                TenantStats {
-                    tenant: m.name.clone(),
-                    weight: m.weight,
-                    admitted: m.counters.admitted.load(Ordering::Relaxed),
-                    rejected: m.counters.rejected.load(Ordering::Relaxed),
-                    served: m.counters.served.load(Ordering::Relaxed),
-                    queued,
-                    inflight,
-                }
-            })
-            .collect();
-        drop(table);
-        let platforms = self
-            .shared
-            .coord
-            .cache_stats()
-            .into_iter()
-            .map(|(name, s)| {
-                let before = self
-                    .shared
-                    .baseline
-                    .iter()
-                    .find(|(n, _)| *n == name)
-                    .map(|(_, b)| *b)
-                    .unwrap_or_default();
-                (name, s.since(&before))
-            })
-            .collect();
-        ServiceStats {
-            queue_depth: self.shared.queue.depth(),
-            capacity: self.shared.queue.capacity(),
-            workers: self.workers,
-            tenants,
-            wait: self.shared.wait.snapshot(),
-            service: self.shared.service.snapshot(),
-            platforms,
-            plan_cache: self.shared.coord.plan_cache_stats(),
-            front_cache: self.shared.coord.front_cache_stats(),
-            health: self.shared.coord.platform_health(),
-        }
+        self.shared.stats()
     }
 
     /// Publish a scrape-time snapshot of the service's state into the
@@ -429,57 +513,169 @@ impl Service {
     /// right before [`obs::Registry::render_prometheus`] or
     /// [`obs::Registry::snapshot_json`] yields a coherent exposition.
     pub fn metrics(&self) -> &'static obs::Registry {
-        let stats = self.stats();
-        let reg = obs::registry();
-        reg.gauge(obs::names::QUEUE_DEPTH, &[]).set(stats.queue_depth as f64);
-        reg.gauge(obs::names::QUEUE_CAPACITY, &[]).set(stats.capacity as f64);
-        reg.gauge(obs::names::WORKERS, &[]).set(stats.workers as f64);
-        for t in &stats.tenants {
-            let lbl: &[(&str, &str)] = &[("tenant", t.tenant.as_str())];
-            reg.counter(obs::names::TENANT_ADMITTED, lbl).store(t.admitted);
-            reg.counter(obs::names::TENANT_REJECTED, lbl).store(t.rejected);
-            reg.counter(obs::names::TENANT_SERVED, lbl).store(t.served);
-        }
-        for (platform, s) in &stats.platforms {
-            let lbl: &[(&str, &str)] = &[("platform", platform.as_str())];
-            reg.counter(obs::names::COST_HITS, lbl).store(s.hits());
-            reg.counter(obs::names::COST_MISSES, lbl).store(s.misses());
-            reg.gauge(obs::names::COST_HIT_RATIO, lbl).set(s.hit_ratio());
-        }
-        let ratio = |h: u64, m: u64| if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 };
-        let (ph, pm) = stats.plan_cache;
-        reg.counter(obs::names::PLAN_HITS, &[]).store(ph);
-        reg.counter(obs::names::PLAN_MISSES, &[]).store(pm);
-        reg.gauge(obs::names::PLAN_HIT_RATIO, &[]).set(ratio(ph, pm));
-        let (fh, fm) = stats.front_cache;
-        reg.counter(obs::names::FRONT_HITS, &[]).store(fh);
-        reg.counter(obs::names::FRONT_MISSES, &[]).store(fm);
-        reg.gauge(obs::names::FRONT_HIT_RATIO, &[]).set(ratio(fh, fm));
-        for h in &stats.health {
-            let lbl: &[(&str, &str)] = &[("platform", h.platform.as_str())];
-            reg.gauge(obs::names::HEALTH_STATE, lbl).set(h.state.code() as f64);
-            reg.gauge(obs::names::HEALTH_DRIFT, lbl).set(h.drift);
-        }
-        let rec = obs::flight_recorder();
-        reg.counter(obs::names::RECORDER_REQUESTS, &[]).store(rec.requests_recorded());
-        reg.counter(obs::names::RECORDER_EVENTS, &[]).store(rec.events_recorded());
-        reg.counter(obs::names::RECORDER_SLOW, &[]).store(rec.slow_captured());
-        reg
+        publish_metrics(&self.stats())
     }
 
-    /// Clean shutdown: close admission, drain every already-admitted
-    /// request (each ticket is fulfilled), join the pool. Idempotent
-    /// with the `Drop` impl.
+    /// Run one ops tick by hand: publish metrics, take a series sample,
+    /// evaluate the SLOs. The `primsel-sampler` thread calls the same
+    /// path on its cadence; this gives tests and CLI dumps a
+    /// deterministic "one more tick right now". No-op when the config
+    /// did not enable sampling.
+    pub fn ops_tick(&self) {
+        if let Some(ops) = &self.ops {
+            ops_tick(&self.shared, ops);
+        }
+    }
+
+    /// The ops-plane digest: drained series, SLO alert states, and
+    /// flight-recorder coverage. `None` when the config did not enable
+    /// sampling.
+    pub fn ops_report(&self) -> Option<obs::OpsReport> {
+        let ops = self.ops.as_ref()?;
+        let rec = obs::flight_recorder();
+        Some(obs::OpsReport {
+            at_ns: ops.clock.now_ns(),
+            ticks: ops.sampler.ticks(),
+            series: ops.sampler.snapshot(),
+            alerts: sync::lock(&ops.engine).alerts(),
+            recorder: obs::RecorderCounts {
+                requests: rec.requests_recorded(),
+                events: rec.events_recorded(),
+                slow: rec.slow_captured(),
+                requests_dropped: rec.requests_dropped(),
+                events_dropped: rec.events_dropped(),
+            },
+        })
+    }
+
+    /// Clean shutdown: stop the sampler thread, close admission, drain
+    /// every already-admitted request (each ticket is fulfilled), join
+    /// the pool. Idempotent with the `Drop` impl.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
+        if let Some(ops) = &self.ops {
+            *sync::lock(&ops.stop) = true;
+            ops.wake.notify_all();
+        }
+        if let Some(thread) = self.sampler_thread.take() {
+            let _ = thread.join();
+        }
         self.shared.queue.close();
         if let Some(pool) = self.pool.take() {
             pool.join();
         }
     }
+}
+
+/// Publish a scrape-time snapshot of `stats` into the process-wide
+/// [`obs::Registry`] and return it (see [`Service::metrics`]). Shared
+/// between scrape calls and the ops tick.
+fn publish_metrics(stats: &ServiceStats) -> &'static obs::Registry {
+    let reg = obs::registry();
+    reg.gauge(obs::names::QUEUE_DEPTH, &[]).set(stats.queue_depth as f64);
+    reg.gauge(obs::names::QUEUE_CAPACITY, &[]).set(stats.capacity as f64);
+    reg.gauge(obs::names::WORKERS, &[]).set(stats.workers as f64);
+    for t in &stats.tenants {
+        let lbl: &[(&str, &str)] = &[("tenant", t.tenant.as_str())];
+        reg.counter(obs::names::TENANT_ADMITTED, lbl).store(t.admitted);
+        reg.counter(obs::names::TENANT_REJECTED, lbl).store(t.rejected);
+        reg.counter(obs::names::TENANT_SERVED, lbl).store(t.served);
+    }
+    for (platform, s) in &stats.platforms {
+        let lbl: &[(&str, &str)] = &[("platform", platform.as_str())];
+        reg.counter(obs::names::COST_HITS, lbl).store(s.hits());
+        reg.counter(obs::names::COST_MISSES, lbl).store(s.misses());
+        reg.gauge(obs::names::COST_HIT_RATIO, lbl).set(s.hit_ratio());
+    }
+    let ratio = |h: u64, m: u64| if h + m == 0 { 0.0 } else { h as f64 / (h + m) as f64 };
+    let (ph, pm) = stats.plan_cache;
+    reg.counter(obs::names::PLAN_HITS, &[]).store(ph);
+    reg.counter(obs::names::PLAN_MISSES, &[]).store(pm);
+    reg.gauge(obs::names::PLAN_HIT_RATIO, &[]).set(ratio(ph, pm));
+    let (fh, fm) = stats.front_cache;
+    reg.counter(obs::names::FRONT_HITS, &[]).store(fh);
+    reg.counter(obs::names::FRONT_MISSES, &[]).store(fm);
+    reg.gauge(obs::names::FRONT_HIT_RATIO, &[]).set(ratio(fh, fm));
+    for h in &stats.health {
+        let lbl: &[(&str, &str)] = &[("platform", h.platform.as_str())];
+        reg.gauge(obs::names::HEALTH_STATE, lbl).set(h.state.code() as f64);
+        reg.gauge(obs::names::HEALTH_DRIFT, lbl).set(h.drift);
+    }
+    let rec = obs::flight_recorder();
+    reg.counter(obs::names::RECORDER_REQUESTS, &[]).store(rec.requests_recorded());
+    reg.counter(obs::names::RECORDER_EVENTS, &[]).store(rec.events_recorded());
+    reg.counter(obs::names::RECORDER_SLOW, &[]).store(rec.slow_captured());
+    reg.counter(obs::names::RECORDER_REQUESTS_DROPPED, &[]).store(rec.requests_dropped());
+    reg.counter(obs::names::RECORDER_EVENTS_DROPPED, &[]).store(rec.events_dropped());
+    reg
+}
+
+/// One ops-plane tick: publish the service's state into the registry,
+/// evaluate the SLOs against it (recording transitions in the flight
+/// recorder, publishing alert gauges, and nudging the health monitor on
+/// Critical drift/latency alerts), then take a series sample so the
+/// rings see the freshly published values.
+fn ops_tick(shared: &ServiceShared, ops: &OpsState) {
+    let stats = shared.stats();
+    let reg = publish_metrics(&stats);
+
+    let mut inputs = obs::SloInputs {
+        error_rate: {
+            let (adm, rej) = stats
+                .tenants
+                .iter()
+                .fold((0u64, 0u64), |(a, r), t| (a + t.admitted, r + t.rejected));
+            if adm + rej == 0 { 0.0 } else { rej as f64 / (adm + rej) as f64 }
+        },
+        queue_frac: if stats.capacity == 0 {
+            0.0
+        } else {
+            stats.queue_depth as f64 / stats.capacity as f64
+        },
+        ..obs::SloInputs::default()
+    };
+    inputs.latency_p95_ms.push(("wait".to_string(), stats.wait.p95_ms));
+    inputs.latency_p95_ms.push(("service".to_string(), stats.service.p95_ms));
+    inputs
+        .latency_p95_ms
+        .push(("e2e".to_string(), shared.obs.e2e_ms.snapshot().p95_ms));
+    for h in &stats.health {
+        inputs.drift.push((h.platform.clone(), h.drift));
+    }
+
+    let t_ns = ops.clock.now_ns();
+    let transitions = sync::lock(&ops.engine).evaluate(t_ns, &inputs);
+    let rec = obs::flight_recorder();
+    for tr in &transitions {
+        rec.record_alert(&tr.slo, tr.from.name(), tr.to.name(), tr.burn_fast);
+        if tr.to == obs::AlertState::Critical {
+            if let Some(n) = tr.nudge {
+                // close the obs→health loop: a Critical drift alert
+                // pulls that platform's shadow sampling forward; a
+                // Critical latency alert pulls every monitored platform
+                match &tr.sli {
+                    obs::Sli::Drift { platform } => {
+                        shared.coord.boost_shadow_sampling(platform, n);
+                    }
+                    obs::Sli::LatencyP95 { .. } => {
+                        shared.coord.boost_all_shadow_sampling(n);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    for a in sync::lock(&ops.engine).alerts() {
+        let lbl: &[(&str, &str)] = &[("slo", a.slo.as_str())];
+        reg.gauge(obs::names::SLO_STATE, lbl).set(a.state.code());
+        reg.gauge(obs::names::SLO_BURN_FAST, lbl).set(a.burn_fast);
+        reg.gauge(obs::names::SLO_BURN_SLOW, lbl).set(a.burn_slow);
+    }
+    ops.sampler.sample(obs::registry(), &ops.clock);
+    reg.counter(obs::names::SERIES_TICKS, &[]).store(ops.sampler.ticks());
 }
 
 impl Drop for Service {

@@ -67,7 +67,19 @@ impl LatencyHistogram {
 
     /// A consistent-enough copy of the counters for reporting.
     pub fn snapshot(&self) -> HistogramSnapshot {
-        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        self.snapshot_inline()
+    }
+
+    /// [`Self::snapshot`] without touching the heap: bucket counts are
+    /// copied into a stack array, so the series sampler can quantile
+    /// every registry histogram on its cadence without allocating in
+    /// steady state (pinned by `rust/tests/alloc_counter.rs` with the
+    /// sampler thread live).
+    pub fn snapshot_inline(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
         let count: u64 = buckets.iter().sum();
         let quantile = |q: f64| -> f64 {
             if count == 0 {

@@ -8,19 +8,25 @@
 //!
 //! The measured window also runs fully instrumented — a live
 //! [`Trace`], stage-histogram records and flight-recorder captures on
-//! every round — pinning the observability layer's zero-allocation
-//! claim alongside the solver's.
+//! every round, **and** a busy ops-plane sampler thread snapshotting
+//! the whole registry into its series rings the entire time — pinning
+//! the observability layer's zero-allocation claim (the sampler's
+//! steady state included) alongside the solver's.
 //!
 //! The binary holds exactly one `#[test]` on purpose: the counter is
 //! process-global, and a sibling test allocating concurrently would
-//! make the "zero since the snapshot" assertion racy.
+//! make the "zero since the snapshot" assertion racy. The sampler
+//! thread is that rule's one deliberate exception: it is *supposed* to
+//! run inside the measured window, and the assertion is exactly that it
+//! contributes nothing to the count.
 
 use primsel::networks;
-use primsel::obs::{self, Stage, Trace};
+use primsel::obs::{self, ManualClock, Sampler, SamplerConfig, Stage, Trace};
 use primsel::selection::{PlanScratch, SelectionPlan};
 use primsel::simulator::{machine, Simulator};
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// System allocator plus a count of every allocation-path call
 /// (`alloc`, `alloc_zeroed`, `realloc`). Deallocations are free to
@@ -99,8 +105,29 @@ fn warm_plan_solves_allocate_nothing_in_steady_state() {
         }
     }
 
+    // ops-plane sampler over the process registry: two priming samples
+    // allocate the per-series rings (first sight of each series), after
+    // which sampling is pure ring writes. The thread then busy-samples
+    // through the whole measured window on a hand-cranked clock.
+    let sampler = Arc::new(Sampler::new(SamplerConfig::default().with_capacity(64)));
+    let clock = Arc::new(ManualClock::new(0));
+    for _ in 0..2 {
+        clock.advance(1_000_000);
+        sampler.sample(obs::registry(), &*clock);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler_thread = {
+        let (sampler, clock, stop) = (Arc::clone(&sampler), Arc::clone(&clock), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                clock.advance(1_000_000);
+                sampler.sample(obs::registry(), &*clock);
+            }
+        })
+    };
+
     // the measured window: interleaved warm solves, fully instrumented,
-    // zero allocations
+    // zero allocations — the live sampler thread included
     let before = alloc_calls();
     for _ in 0..50 {
         for ((p, &b), (fp, fe, tp)) in plans.iter().zip(&budgets).zip(&truth) {
@@ -118,11 +145,15 @@ fn warm_plan_solves_allocate_nothing_in_steady_state() {
         }
     }
     let delta = alloc_calls() - before;
+    stop.store(true, Ordering::Relaxed);
+    sampler_thread.join().unwrap();
     assert_eq!(
         delta, 0,
         "instrumented warm plan solves must not allocate: {delta} allocation calls \
-         in the steady state"
+         in the steady state (sampler thread live)"
     );
     assert_eq!(recorder.requests_recorded(), 100);
     assert_eq!(solve_ms.snapshot().count, 100);
+    // the sampler really ran concurrently with the measured window
+    assert!(sampler.ticks() >= 2, "sampler must have ticked");
 }

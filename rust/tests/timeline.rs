@@ -1,0 +1,139 @@
+//! Golden tests for the Chrome trace-event timeline export: the file
+//! `write_chrome_trace` produces must parse as JSON, carry the fields
+//! the Chrome tracing UI / Perfetto require (`ph`, `ts`, `dur`, `pid`,
+//! `tid`), keep `ts` monotone per `(pid, tid)` in array order, and name
+//! every process it references — the same contract CI's
+//! `check_timeline.py` enforces on a real `serve_zoo` run.
+
+use primsel::config::Json;
+use primsel::coordinator::{Coordinator, SelectionRequest};
+use primsel::networks;
+use primsel::obs::{self, chrome_trace, write_chrome_trace, FlightRecorder, Stage, Trace};
+use primsel::service::{Service, ServiceConfig};
+use std::collections::{BTreeMap, BTreeSet};
+
+fn field<'a>(e: &'a Json, key: &str) -> &'a str {
+    e.get(key).unwrap().as_str().unwrap()
+}
+
+fn num(e: &Json, key: &str) -> f64 {
+    e.get(key).unwrap().as_f64().unwrap()
+}
+
+/// The shared golden checks: Chrome-required fields on every event,
+/// non-negative durations, per-(pid, tid) ts monotonicity in array
+/// order, and process_name metadata covering every referenced pid.
+fn assert_loadable(trace: &Json) {
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "timeline must contain events");
+    assert_eq!(trace.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+
+    let mut named_pids = BTreeSet::new();
+    let mut seen_pids = BTreeSet::new();
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for e in events {
+        let ph = field(e, "ph");
+        let pid = num(e, "pid") as u64;
+        seen_pids.insert(pid);
+        match ph {
+            "X" => {
+                assert!(!field(e, "name").is_empty());
+                assert!(num(e, "dur") >= 0.0, "negative span duration");
+                let key = (pid, num(e, "tid") as u64);
+                let ts = num(e, "ts");
+                if let Some(&prev) = last_ts.get(&key) {
+                    assert!(ts >= prev, "ts regressed on pid/tid {key:?}");
+                }
+                last_ts.insert(key, ts);
+            }
+            "i" => {
+                assert_eq!(field(e, "s"), "g", "instants must be global-scoped");
+                assert!(e.get("ts").is_ok());
+            }
+            "M" => {
+                if field(e, "name") == "process_name" {
+                    named_pids.insert(pid);
+                }
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    for pid in &seen_pids {
+        assert!(named_pids.contains(pid), "pid {pid} has no process_name metadata");
+    }
+}
+
+/// A deterministic ladder through a private recorder, written to disk
+/// and read back — the full export path, no service involved.
+#[test]
+fn written_timeline_round_trips_through_disk() {
+    let rec = FlightRecorder::new(8, 4, 8);
+    for (i, net) in ["alexnet", "vgg11", "googlenet"].iter().enumerate() {
+        let t = Trace::begin();
+        let base = i as u64 * 50_000;
+        t.mark_at_ns(Stage::Admit, base);
+        t.mark_at_ns(Stage::Dispatch, base + 10_000);
+        t.mark_at_ns(Stage::SolveStart, base + 20_000);
+        t.mark_at_ns(Stage::SolveEnd, base + 30_000);
+        t.mark_at_ns(Stage::Done, base + 40_000);
+        rec.record_request(&t, if i % 2 == 0 { "intel" } else { "arm" }, net, "golden");
+    }
+    rec.record_transition("intel", "healthy", "drifting", 1.5);
+    rec.record_alert("queue-pressure", "ok", "warning", 1.2);
+
+    let path = std::env::temp_dir().join(format!("primsel_timeline_{}.json", std::process::id()));
+    write_chrome_trace(&rec, &path).expect("export writes");
+    let text = std::fs::read_to_string(&path).expect("file exists");
+    std::fs::remove_file(&path).ok();
+    let trace = Json::parse(&text).expect("timeline must be valid JSON");
+    assert_loadable(&trace);
+
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = events.iter().map(|e| field(e, "name")).collect();
+    assert!(names.contains(&"alexnet"), "umbrella span per request");
+    assert!(
+        names.iter().any(|n| n.contains("->") && !n.contains(": ")),
+        "adjacent stage pairs become spans: {names:?}"
+    );
+    assert!(names.contains(&"transition: healthy->drifting"));
+    assert!(names.contains(&"alert: ok->warning"));
+    // both platforms became processes, alerts ride the ops pid 0
+    let alert = events.iter().find(|e| field(e, "name").starts_with("alert:")).unwrap();
+    assert_eq!(num(alert, "pid"), 0.0, "alerts belong to the ops process");
+}
+
+/// Real traffic: a service workload fills the process recorder, and the
+/// export of *that* passes the same golden checks — what
+/// `serve_zoo --timeline` ships.
+#[test]
+fn service_workload_exports_a_loadable_timeline() {
+    let service = Service::new(
+        Coordinator::shared(),
+        ServiceConfig::default().with_capacity(8).with_workers(2),
+    );
+    let tickets: Vec<_> = (0..6)
+        .map(|i| {
+            let net = if i % 2 == 0 { networks::alexnet() } else { networks::vgg(11) };
+            service
+                .submit("timeline", SelectionRequest::new(net, "intel"))
+                .expect("admission")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("served");
+    }
+    obs::flight_recorder().record_transition("intel", "healthy", "drifting", 0.5);
+
+    let trace = chrome_trace(obs::flight_recorder());
+    assert_loadable(&trace);
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events.iter().any(|e| field(e, "ph") == "X" && field(e, "cat") == "request"),
+        "served requests must appear as umbrella spans"
+    );
+    assert!(
+        events.iter().any(|e| field(e, "ph") == "i"),
+        "health events must appear as instants"
+    );
+    service.shutdown();
+}
